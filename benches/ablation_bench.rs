@@ -1,0 +1,139 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A. **LARS in the decentralized setting** — the paper's §4.2 future
+//!     work: does layer-wise adaptive rate scaling recover large-batch
+//!     accuracy for Ada and the static graphs?
+//!  B. **Shard heterogeneity (Dirichlet α)** — the mechanism knob behind
+//!     graph sensitivity: with iid shards, graphs barely matter; the
+//!     skewier the shards, the bigger the ring↔complete gap.
+//!  C. **Metrics cadence** — DBench's every-iteration variance capture
+//!     costs O(nP); what does it cost end-to-end?
+//!
+//! Run: `cargo bench --bench ablation_bench`.
+
+use ada_dist::coordinator::surrogate::SoftmaxRegression;
+use ada_dist::coordinator::{LarsWrapped, LrPolicy, SgdFlavor, TrainConfig, Trainer};
+use ada_dist::data::{ShardStrategy, SyntheticClassification};
+use ada_dist::optim::LrSchedule;
+use ada_dist::util::bench::{env_usize, Table};
+
+fn base_config(n: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(n, epochs);
+    cfg.lr = LrPolicy::Fixed {
+        schedule: LrSchedule::Constant { lr: 0.05 },
+    };
+    cfg
+}
+
+fn main() {
+    let n = env_usize("ADA_BENCH_SCALE", 16);
+    let epochs = env_usize("ADA_BENCH_EPOCHS", 6);
+    let data = SyntheticClassification::generate(4096, 32, 10, 2.5, 42);
+    let k0 = n - 1;
+    let gamma_k = k0 as f64 / (epochs as f64 * 0.75);
+
+    // --- A: LARS ------------------------------------------------------
+    println!("== ablation A: LARS in decentralized training (§4.2 future work) ==");
+    let mut t = Table::new(&["flavor", "optimizer", "final acc", "diverged"]);
+    for flavor in [
+        SgdFlavor::Ada { k0, gamma_k },
+        SgdFlavor::DecentralizedRing,
+        SgdFlavor::DecentralizedComplete,
+    ] {
+        // Plain momentum SGD at a deliberately aggressive LR (the
+        // large-batch regime the paper worries about at 1008 GPUs).
+        let mut cfg = base_config(n, epochs);
+        cfg.lr = LrPolicy::Fixed {
+            schedule: LrSchedule::Constant { lr: 3.0 },
+        };
+        let mut plain = SoftmaxRegression::new(32, 10, 16, 64, n, 0.9);
+        let (_, s) = Trainer::new(&mut plain, cfg.clone())
+            .run(&data, &flavor)
+            .expect("plain");
+        t.row(vec![
+            s.flavor.clone(),
+            "sgd+momentum lr=3.0".into(),
+            format!("{:.4}", s.final_eval.metric),
+            s.diverged.to_string(),
+        ]);
+        // LARS at the same nominal LR: trust ratios normalize per layer.
+        let mut cfg = base_config(n, epochs);
+        cfg.lr = LrPolicy::Fixed {
+            schedule: LrSchedule::Constant { lr: 3.0 },
+        };
+        let mut lars = LarsWrapped::new(
+            SoftmaxRegression::new(32, 10, 16, 64, n, 0.0),
+            n,
+            0.05,
+            0.9,
+            1e-4,
+        );
+        let (_, s) = Trainer::new(&mut lars, cfg).run(&data, &flavor).expect("lars");
+        t.row(vec![
+            s.flavor.clone(),
+            "LARS lr=3.0".into(),
+            format!("{:.4}", s.final_eval.metric),
+            s.diverged.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "reading: at this (convex, miniature) scale LARS is neutral-to-positive\n\
+         for the densest averaging (D_complete — the large-batch regime LARS\n\
+         was designed for) and neutral for sparse graphs; the paper proposes\n\
+         exactly this experiment at 1008 GPUs as future work.\n"
+    );
+
+    // --- B: shard heterogeneity ---------------------------------------
+    println!("== ablation B: Dirichlet α vs graph sensitivity ==");
+    let mut t = Table::new(&["alpha", "D_ring", "D_complete", "gap"]);
+    for alpha in [10.0, 1.0, 0.3, 0.1] {
+        let acc = |flavor: &SgdFlavor| {
+            let mut cfg = base_config(n, 3);
+            cfg.shard = ShardStrategy::LabelSkew { alpha };
+            let mut model = SoftmaxRegression::new(32, 10, 16, 64, n, 0.9);
+            Trainer::new(&mut model, cfg)
+                .run(&data, flavor)
+                .expect("run")
+                .1
+                .final_eval
+                .metric
+        };
+        let ring = acc(&SgdFlavor::DecentralizedRing);
+        let complete = acc(&SgdFlavor::DecentralizedComplete);
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{ring:.4}"),
+            format!("{complete:.4}"),
+            format!("{:+.4}", complete - ring),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected: the complete−ring gap widens as α shrinks (shards grow\n\
+         non-iid); at extreme skew both collapse within the epoch budget —\n\
+         the unconvergence regime of the paper's large-scale cells.\n"
+    );
+
+    // --- C: metrics cadence --------------------------------------------
+    println!("== ablation C: DBench metrics-capture overhead ==");
+    let mut t = Table::new(&["metrics_every", "wall time", "iters"]);
+    let big = SyntheticClassification::generate(8192, 64, 20, 2.0, 9);
+    for every in [1usize, 4, 16, 0] {
+        let mut cfg = base_config(32, 4);
+        cfg.metrics_every = every;
+        let mut model = ada_dist::coordinator::surrogate::MlpClassifier::new(
+            64, 128, 20, 16, 64, 32, 0.9,
+        );
+        let t0 = std::time::Instant::now();
+        let (rec, _) = Trainer::new(&mut model, cfg)
+            .run(&big, &SgdFlavor::DecentralizedTorus)
+            .expect("run");
+        t.row(vec![
+            if every == 0 { "off".into() } else { every.to_string() },
+            format!("{:.1?}", t0.elapsed()),
+            rec.records().len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

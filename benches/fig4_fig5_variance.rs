@@ -1,0 +1,78 @@
+//! Figures 4 & 5 — the white-box variance analysis (§3.3).
+//!
+//! Fig 4: gini coefficients of individual parameter tensors across
+//! iterations, per SGD implementation. Paper shape: early in training
+//! `D_ring` shows the highest variance and `C/D_complete` the lowest;
+//! the cross-graph differences diminish as training progresses.
+//!
+//! Fig 5: the variance *rank* summary — per iteration each
+//! implementation gets rank 1..m by gini; mean ranks reproduce the
+//! ordering (C_complete lowest … D_ring highest).
+//!
+//! Run: `cargo bench --bench fig4_fig5_variance`.
+
+use ada_dist::dbench::{rank_analysis, run_experiment, ExperimentSpec};
+use ada_dist::util::bench::{env_flag, env_usize, Table};
+
+fn main() {
+    let full = env_flag("ADA_BENCH_FULL");
+    let scale = env_usize("ADA_BENCH_SCALE", if full { 32 } else { 16 });
+    let mut spec = ExperimentSpec::resnet20_analog();
+    spec.scales = vec![scale];
+    spec.epochs = env_usize("ADA_BENCH_EPOCHS", if full { 12 } else { 6 });
+    spec.metrics_every = 1; // DBench captures every iteration
+    spec.track_layers = vec![0, 1];
+
+    let t0 = std::time::Instant::now();
+    let cells = run_experiment(&spec).expect("sweep");
+    println!(
+        "== Fig 4: per-tensor gini across iterations ({} @ {scale} workers, {:.1?}) ==",
+        spec.name,
+        t0.elapsed()
+    );
+
+    // Report the gini of tracked tensor 0 in windows across the run.
+    let total = cells
+        .iter()
+        .map(|c| c.recorder.records().len())
+        .min()
+        .unwrap();
+    let window = (total / 5).max(1);
+    let mut t = Table::new(&["flavor", "iters 1..w", "mid", "late", "whole-model late"]);
+    for c in &cells {
+        let tensor_gini = |range: std::ops::Range<usize>| -> f64 {
+            let vals: Vec<f64> = c.recorder.records()[range.start..range.end.min(total)]
+                .iter()
+                .filter_map(|r| r.per_tensor_gini.first().copied())
+                .collect();
+            if vals.is_empty() {
+                0.0
+            } else {
+                vals.iter().sum::<f64>() / vals.len() as f64
+            }
+        };
+        t.row(vec![
+            c.flavor.clone(),
+            format!("{:.6}", tensor_gini(1..window + 1)),
+            format!("{:.6}", tensor_gini(total / 2..total / 2 + window)),
+            format!("{:.6}", tensor_gini(total - window..total)),
+            format!("{:.6}", c.summary.late_gini),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: D_ring largest early gini, C/D_complete smallest;\n\
+         all columns shrink left→right and converge across flavors.\n"
+    );
+
+    // Fig 5: rank summary over the whole run.
+    let ranks = rank_analysis(&cells);
+    println!("== Fig 5: variance rank summary (1 = lowest variance) ==");
+    let mut t = Table::new(&["flavor", "mean rank", "observations"]);
+    for (name, mean) in ranks.ordering() {
+        let count = ranks.count(&name);
+        t.row(vec![name, format!("{mean:.2}"), count.to_string()]);
+    }
+    println!("{}", t.render());
+    println!("expected shape: ascending mean rank ≈ C_complete, D_complete, D_exponential/D_torus, D_ring.");
+}

@@ -1,0 +1,115 @@
+//! Figure 7 + Table 4 — Ada vs centralized / static decentralized
+//! baselines on all four applications, plus the 1008-GPU scale analysis
+//! of Fig 7(d).
+//!
+//! Paper shape to reproduce: `D_adaptive` (Ada) converges at least as
+//! fast as the best baseline and lands within noise of `C_complete`'s
+//! final accuracy, while `D_ring`/`D_torus` trail (catastrophically at
+//! the largest scales); Ada's communication cost sits far below
+//! `D_complete`'s and decays toward ring cost as `k` shrinks.
+//!
+//! Fig 7(d) ran on 1008 GPUs — infeasible wall-clock here, but the
+//! quantities the argument rests on (graph degree, spectral gap, Summit
+//! comm cost) are *exact* at n = 1008 and printed below.
+//!
+//! Run: `cargo bench --bench fig7_ada` (ADA_BENCH_FULL=1: 64 workers,
+//! all four apps, more epochs).
+
+use ada_dist::coordinator::SgdFlavor;
+use ada_dist::dbench::{format_table, run_experiment, ExperimentSpec};
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::simnet::{ClusterSpec, SimNet};
+use ada_dist::topology::{AdaSchedule, TopologySchedule};
+use ada_dist::util::bench::{env_flag, env_usize, Table};
+
+fn main() {
+    let full = env_flag("ADA_BENCH_FULL");
+    let workers = env_usize("ADA_BENCH_SCALE", if full { 64 } else { 16 });
+    let epochs = env_usize("ADA_BENCH_EPOCHS", if full { 14 } else { 8 });
+    // Table 4: (k0, γk) — scaled from (10, 0.02)@96 GPUs to this run's
+    // scale and epoch budget (k must traverse dense → sparse in-run).
+    let k0 = (workers * 10 / 96).max(workers / 2).min(workers - 1).max(4);
+    let gamma_k = k0 as f64 / (epochs as f64 * 0.75);
+    println!("== Table 4: Ada tuning parameters ==");
+    println!(
+        "paper:   k0=10, γk=0.02 @ 96 GPUs (300 epochs); k0=112, γk=1 @ 1008 GPUs (90 epochs)"
+    );
+    println!("this run: k0={k0}, γk={gamma_k:.2} @ {workers} workers ({epochs} epochs)\n");
+
+    let mut apps = ExperimentSpec::four_applications();
+    if !full {
+        apps.truncate(2);
+    }
+    for mut spec in apps {
+        spec.scales = vec![workers];
+        spec.epochs = epochs;
+        spec.metrics_every = 2;
+        spec.flavors = vec![
+            SgdFlavor::CentralizedComplete,
+            SgdFlavor::DecentralizedRing,
+            SgdFlavor::DecentralizedTorus,
+            SgdFlavor::Ada { k0, gamma_k },
+            SgdFlavor::OnePeer,
+        ];
+        let t0 = std::time::Instant::now();
+        let cells = run_experiment(&spec).expect("sweep");
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig 7: {} @ {workers} workers ({:.1?})", spec.name, t0.elapsed()),
+                &cells
+            )
+        );
+    }
+
+    // --- Fig 7(d) scale analysis at n = 1008 (exact) ------------------
+    println!("== Fig 7(d) scale analysis @ n = 1008, ResNet50 (25.56M params) ==");
+    let n = 1008;
+    let p = 25_560_000;
+    let net = SimNet::new(ClusterSpec::summit());
+    let ada = AdaSchedule::new(n, 112, 1.0); // Table 4's exact values
+    let mut t = Table::new(&["topology", "degree", "spectral gap", "round cost (ms)"]);
+    for kind in [GraphKind::Ring, GraphKind::Torus, GraphKind::Exponential] {
+        let g = CommGraph::build(kind, n).unwrap();
+        t.row(vec![
+            kind.to_string(),
+            g.degree().to_string(),
+            format!("{:.6}", g.spectral_gap()),
+            format!("{:.2}", net.gossip_round(&g, p).time_s * 1e3),
+        ]);
+    }
+    for epoch in [0usize, 30, 60, 90] {
+        let g = ada.graph_for_epoch(epoch).unwrap();
+        t.row(vec![
+            format!("ada @ epoch {epoch} (k={})", ada.k_for_epoch(epoch)),
+            g.degree().to_string(),
+            format!("{:.6}", g.spectral_gap()),
+            format!("{:.2}", net.gossip_round(&g, p).time_s * 1e3),
+        ]);
+    }
+    let ar = net.allreduce(n, p);
+    t.row(vec![
+        "C_complete (allreduce)".into(),
+        (n - 1).to_string(),
+        "-".into(),
+        format!("{:.2}", ar.time_s * 1e3),
+    ]);
+    println!("{}", t.render());
+
+    // Total comm budget over the 90-epoch ResNet50 recipe.
+    let iters_per_epoch = 1_281_167 / 16 / n; // ImageNet, batch 16/GPU
+    let ada_bytes = ada.comm_bytes_per_node(90, iters_per_epoch, p).unwrap();
+    let ring = CommGraph::build(GraphKind::Ring, n).unwrap();
+    let ring_bytes = ring.bytes_sent_per_node(p) * (90 * iters_per_epoch) as u64;
+    let complete = CommGraph::build(GraphKind::Complete, n).unwrap();
+    let complete_bytes = complete.bytes_sent_per_node(p) * (90 * iters_per_epoch) as u64;
+    println!(
+        "90-epoch comm per node — ring: {:.1} TB, Ada: {:.1} TB, D_complete: {:.1} TB\n\
+         (Ada @ {:.1}% of D_complete; paper's claim: complete-graph accuracy at a\n\
+         fraction of its communication)",
+        ring_bytes as f64 / 1e12,
+        ada_bytes as f64 / 1e12,
+        complete_bytes as f64 / 1e12,
+        100.0 * ada_bytes as f64 / complete_bytes as f64,
+    );
+}

@@ -1,0 +1,102 @@
+//! Gossip mixing engine benchmarks — the L3 hot path.
+//!
+//! Three execution paths over identical inputs:
+//!   * `native`   — the sparse row-wise engine (production path)
+//!   * `dense`    — the O(n²P) dense reference (baseline)
+//!   * `hlo`      — the L1 Pallas kernel via PJRT (when artifacts exist)
+//!
+//! Prints per-round latency and effective bandwidth (bytes touched/s).
+//! Run: `cargo bench --bench gossip_bench`.
+
+use ada_dist::gossip::{mix_dense_reference, GossipEngine};
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::runtime::{GossipKernel, PjRtRuntime};
+use ada_dist::util::bench::{bench, env_usize, fmt_duration, Table};
+use ada_dist::util::rng::Rng;
+
+fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect()
+}
+
+fn main() {
+    let iters = env_usize("ADA_BENCH_ITERS", 30);
+    println!("== gossip mixing: native vs dense reference ==");
+    let mut t = Table::new(&["graph", "n", "P", "path", "median/round", "GB/s"]);
+    for (n, p) in [(8, 2762), (16, 72000), (32, 72000), (64, 1_000_000)] {
+        for kind in [GraphKind::Ring, GraphKind::Exponential, GraphKind::Complete] {
+            let g = CommGraph::build(kind, n).unwrap();
+            // Bytes read+written per round on the sparse path.
+            let touched = ((g.degree() + 2) * n * p * 4) as f64;
+            let src = replicas(n, p, 1);
+            let mut engine = GossipEngine::new();
+            let mut reps = src.clone();
+            let tm = bench(2, iters, || {
+                engine.mix(&g, &mut reps);
+            });
+            t.row(vec![
+                kind.to_string(),
+                n.to_string(),
+                p.to_string(),
+                "native".into(),
+                fmt_duration(tm.median),
+                format!("{:.2}", touched / tm.median.as_secs_f64() / 1e9),
+            ]);
+            if p <= 100_000 {
+                let tm = bench(1, (iters / 3).max(3), || {
+                    std::hint::black_box(mix_dense_reference(&g, &src));
+                });
+                t.row(vec![
+                    kind.to_string(),
+                    n.to_string(),
+                    p.to_string(),
+                    "dense-ref".into(),
+                    fmt_duration(tm.median),
+                    format!("{:.2}", touched / tm.median.as_secs_f64() / 1e9),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // HLO kernel path (requires artifacts).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("gossip/manifest.json").exists() {
+        println!("== gossip mixing: L1 Pallas kernel via PJRT ==");
+        let rt = PjRtRuntime::cpu(&dir).expect("pjrt");
+        let mut t = Table::new(&["graph", "n", "P", "median/round", "vs native"]);
+        for (n, p) in [(8, 2762), (8, 72000), (32, 72000)] {
+            let Ok(kernel) = GossipKernel::load(&rt, n, p) else {
+                continue;
+            };
+            for kind in [GraphKind::Ring, GraphKind::Complete] {
+                let g = CommGraph::build(kind, n).unwrap();
+                let mut reps = replicas(n, p, 2);
+                let tm = bench(2, (iters / 3).max(3), || {
+                    kernel.mix(&g, &mut reps).unwrap();
+                });
+                let mut engine = GossipEngine::new();
+                let mut reps2 = replicas(n, p, 2);
+                let tn = bench(2, iters, || {
+                    engine.mix(&g, &mut reps2);
+                });
+                t.row(vec![
+                    kind.to_string(),
+                    n.to_string(),
+                    p.to_string(),
+                    fmt_duration(tm.median),
+                    format!("{:.1}x slower", tm.median.as_secs_f64() / tn.median.as_secs_f64()),
+                ]);
+            }
+        }
+        println!("{}", t.render());
+        println!(
+            "(the HLO path pays PJRT dispatch + H2D/D2H copies per call; on real TPU\n\
+             hardware the same kernel runs from VMEM — see EXPERIMENTS.md §Perf)"
+        );
+    } else {
+        println!("(artifacts missing — skipping HLO kernel path; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime benchmarks — the per-iteration budget of the production
+//! (HLO) path: executable load+compile time, `init`/`step`/`eval`
+//! latency per model, and coordinator overhead (everything around the
+//! PJRT call in a training iteration).
+//!
+//! Run: `cargo bench --bench runtime_bench` (needs `make artifacts`).
+
+use ada_dist::coordinator::{HloModel, LocalModel};
+use ada_dist::data::{Dataset, SyntheticClassification, SyntheticLm};
+use ada_dist::runtime::PjRtRuntime;
+use ada_dist::util::bench::{bench, env_usize, fmt_duration, Table};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("mlp/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let iters = env_usize("ADA_BENCH_ITERS", 20);
+    let rt = PjRtRuntime::cpu(&dir).expect("pjrt client");
+    println!("platform: {}\n", rt.platform());
+
+    println!("== artifact load + XLA compile ==");
+    let mut t = Table::new(&["model", "load+compile (median)"]);
+    for name in ["mlp", "cnn", "lstm", "transformer"] {
+        let tm = bench(1, 3, || {
+            std::hint::black_box(rt.load_model(name).unwrap());
+        });
+        t.row(vec![name.into(), fmt_duration(tm.median)]);
+    }
+    println!("{}", t.render());
+
+    println!("== per-call latency (one worker-iteration = one `step`) ==");
+    let mut t = Table::new(&["model", "P", "init", "step", "eval", "steps/s"]);
+    for name in ["mlp", "cnn", "lstm", "transformer"] {
+        let mut model = HloModel::new(rt.load_model(name).unwrap());
+        let m = model.bundle().manifest.clone();
+        let (bx, ex): (Box<dyn Dataset>, Box<dyn Dataset>) = match m.kind {
+            ada_dist::runtime::ModelKind::Classification => (
+                Box::new(SyntheticClassification::generate(
+                    512, m.x_dim, m.num_outputs, 3.0, 1,
+                )),
+                Box::new(SyntheticClassification::generate(
+                    512, m.x_dim, m.num_outputs, 3.0, 2,
+                )),
+            ),
+            ada_dist::runtime::ModelKind::Lm => (
+                Box::new(SyntheticLm::generate(512, m.x_dim, m.num_outputs, 2, 1)),
+                Box::new(SyntheticLm::generate(512, m.x_dim, m.num_outputs, 2, 2)),
+            ),
+        };
+        let train_batch = bx.batch(&(0..m.batch_size).collect::<Vec<_>>());
+        let eval_batch = ex.batch(&(0..m.eval_batch_size).collect::<Vec<_>>());
+        let mut params = model.init_params(0).unwrap();
+
+        let t_init = bench(1, iters.min(10), || {
+            std::hint::black_box(model.init_params(1).unwrap());
+        });
+        let t_step = bench(2, iters, || {
+            model.local_step(0, &mut params, &train_batch, 0.01).unwrap();
+        });
+        let t_eval = bench(1, iters.min(10), || {
+            std::hint::black_box(model.eval_sums(&params, &eval_batch).unwrap());
+        });
+        t.row(vec![
+            name.into(),
+            m.param_count.to_string(),
+            fmt_duration(t_init.median),
+            fmt_duration(t_step.median),
+            fmt_duration(t_eval.median),
+            format!("{:.0}", 1.0 / t_step.median.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== coordinator overhead around the PJRT call ==");
+    // Measure a full n-worker iteration and subtract n × step latency.
+    use ada_dist::coordinator::{SgdFlavor, TrainConfig, Trainer};
+    let n = 4;
+    let data = SyntheticClassification::generate(1024, 32, 10, 3.0, 5);
+    let mut model = HloModel::new(rt.load_model("mlp").unwrap());
+    let step_only = {
+        let batch = data.batch(&(0..model.batch_size()).collect::<Vec<_>>());
+        let mut params = model.init_params(0).unwrap();
+        bench(2, iters, || {
+            model.local_step(0, &mut params, &batch, 0.01).unwrap();
+        })
+        .median
+    };
+    let mut cfg = TrainConfig::quick(n, 1);
+    cfg.max_iters_per_epoch = Some(8);
+    cfg.eval_every_epochs = 0;
+    let mut run_model = HloModel::new(rt.load_model("mlp").unwrap());
+    let whole = bench(1, 5, || {
+        let mut trainer = Trainer::new(&mut run_model, cfg.clone());
+        std::hint::black_box(trainer.run(&data, &SgdFlavor::DecentralizedRing).unwrap());
+    });
+    // The run performs 8 iterations plus one final full-test-set eval.
+    let per_iter = whole.median / 8;
+    let overhead = per_iter
+        .checked_sub(step_only * n as u32)
+        .unwrap_or_default();
+    println!(
+        "n={n} workers: full iteration {} ({} per worker slot);\n\
+         pure PJRT step {}; coordinator overhead (mixing + metrics + data + final\n\
+         eval amortized) ≈ {} per iteration",
+        fmt_duration(per_iter),
+        fmt_duration(per_iter / n as u32),
+        fmt_duration(step_only),
+        fmt_duration(overhead),
+    );
+}

@@ -1,0 +1,108 @@
+//! Table 1 — characteristics of the representative communication graphs
+//! — regenerated from the graph substrate, plus build/spectral micro-
+//! benchmarks of the graph layer (the coordinator rebuilds lattices on
+//! every Ada decay step, so construction cost matters).
+//!
+//! Run: `cargo bench --bench table1_graphs` (ADA_BENCH_FULL=1 adds n=1008).
+
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::util::bench::{bench, env_flag, fmt_duration, Table};
+
+fn paper_degree(kind: GraphKind, n: usize) -> String {
+    match kind {
+        GraphKind::Ring => "2".into(),
+        GraphKind::Torus => "4".into(),
+        GraphKind::RingLattice { k } => format!("2k={}", 2 * k),
+        GraphKind::AdaLattice { k } => format!("k={k}"),
+        GraphKind::Exponential => {
+            format!("⌊log2(n-1)⌋+1={}", ((n - 1) as f64).log2().floor() as usize + 1)
+        }
+        GraphKind::Complete => format!("n-1={}", n - 1),
+        GraphKind::Hypercube => format!("log2(n)={}", n.trailing_zeros()),
+        GraphKind::RandomRegular { d, .. } => format!("d={d}"),
+    }
+}
+
+fn paper_edges(kind: GraphKind, n: usize) -> String {
+    match kind {
+        GraphKind::Ring => format!("n={n}"),
+        GraphKind::Torus => format!("2n={}", 2 * n),
+        GraphKind::RingLattice { k } => format!("kn={}", k * n),
+        GraphKind::AdaLattice { k } => format!("≈kn/2={}", k * n / 2),
+        GraphKind::Exponential => format!(
+            "n(⌊log2(n-1)⌋+1)={}",
+            n * (((n - 1) as f64).log2().floor() as usize + 1)
+        ),
+        GraphKind::Complete => format!("n(n-1)/2={}", n * (n - 1) / 2),
+        GraphKind::Hypercube => format!("n·log2(n)/2={}", n * n.trailing_zeros() as usize / 2),
+        GraphKind::RandomRegular { d, .. } => format!("dn/2={}", d * n / 2),
+    }
+}
+
+fn main() {
+    let mut ns = vec![12, 24, 48, 96];
+    if env_flag("ADA_BENCH_FULL") {
+        ns.push(1008);
+    }
+    for &n in &ns {
+        println!("== Table 1 @ n = {n} ==");
+        let mut t = Table::new(&[
+            "graph", "degree", "paper", "edges", "paper", "directed", "gap(1-σ2)",
+        ]);
+        for kind in [
+            GraphKind::Ring,
+            GraphKind::Torus,
+            GraphKind::RingLattice { k: 3 },
+            GraphKind::Exponential,
+            GraphKind::Complete,
+        ] {
+            let g = match CommGraph::build(kind, n) {
+                Ok(g) => g,
+                Err(e) => {
+                    println!("  {kind}: {e}");
+                    continue;
+                }
+            };
+            t.row(vec![
+                kind.to_string(),
+                g.degree().to_string(),
+                paper_degree(kind, n),
+                g.edge_count().to_string(),
+                paper_edges(kind, n),
+                g.is_directed().to_string(),
+                format!("{:.6}", g.spectral_gap()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // Micro-benchmarks: construction + spectral gap (Ada's per-epoch cost).
+    println!("== graph-layer micro-benchmarks (n = 96) ==");
+    let mut t = Table::new(&["operation", "median", "min"]);
+    for kind in [
+        GraphKind::Ring,
+        GraphKind::Torus,
+        GraphKind::Exponential,
+        GraphKind::AdaLattice { k: 10 },
+        GraphKind::Complete,
+    ] {
+        let timing = bench(3, 20, || {
+            std::hint::black_box(CommGraph::build(kind, 96).unwrap());
+        });
+        t.row(vec![
+            format!("build {kind}"),
+            fmt_duration(timing.median),
+            fmt_duration(timing.min),
+        ]);
+    }
+    let g = CommGraph::build(GraphKind::Torus, 96).unwrap();
+    let timing = bench(1, 5, || {
+        std::hint::black_box(g.spectral_gap());
+    });
+    t.row(vec![
+        "spectral_gap torus@96".into(),
+        fmt_duration(timing.median),
+        fmt_duration(timing.min),
+    ]);
+    println!("{}", t.render());
+}

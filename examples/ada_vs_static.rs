@@ -1,0 +1,82 @@
+//! Ada vs static topologies on one workload: the accuracy /
+//! communication trade-off of Fig 7 in one table, plus the per-epoch
+//! variance trace that motivates the adaptive schedule (Observation 4).
+//!
+//!     cargo run --release --example ada_vs_static -- [workers] [epochs]
+
+use ada_dist::coordinator::SgdFlavor;
+use ada_dist::dbench::{run_cell, ExperimentSpec};
+use ada_dist::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let workers: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let epochs: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let mut spec = ExperimentSpec::densenet_analog();
+    spec.epochs = epochs;
+    spec.metrics_every = 1;
+
+    let k0 = (workers - 1).max(4);
+    let flavors = vec![
+        SgdFlavor::CentralizedComplete,
+        SgdFlavor::DecentralizedComplete,
+        SgdFlavor::DecentralizedRing,
+        SgdFlavor::DecentralizedTorus,
+        SgdFlavor::Ada { k0, gamma_k: k0 as f64 / (epochs as f64 * 0.75) },
+        SgdFlavor::VarianceAdaptive { k0, step: 2, threshold: 0.002, patience: 1 },
+    ];
+
+    println!(
+        "== {} @ {workers} workers, {epochs} epochs ==",
+        spec.workload.name()
+    );
+    let mut t = Table::new(&[
+        "flavor",
+        "final acc",
+        "MB/node",
+        "acc per GB",
+        "gini e1",
+        "gini mid",
+        "gini end",
+    ]);
+    let mut curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    for flavor in flavors {
+        let cell = run_cell(&spec, workers, &flavor)?;
+        let rec = &cell.recorder;
+        let total = rec.records().len();
+        let w = (total / 6).max(1);
+        let gini = |r: std::ops::Range<usize>| rec.mean_gini(r);
+        let mb = cell.summary.bytes_per_node as f64 / 1e6;
+        t.row(vec![
+            cell.flavor.clone(),
+            format!("{:.4}", cell.summary.final_eval.metric),
+            format!("{mb:.1}"),
+            format!("{:.3}", cell.summary.final_eval.metric / (mb / 1e3).max(1e-9)),
+            format!("{:.6}", gini(1..w + 1)),
+            format!("{:.6}", gini(total / 2..total / 2 + w)),
+            format!("{:.6}", gini(total - w..total)),
+        ]);
+        curves.push((cell.flavor.clone(), rec.metric_series()));
+    }
+    println!("{}", t.render());
+
+    println!("accuracy curves (iteration: flavor=acc):");
+    let max_pts = curves.iter().map(|(_, c)| c.len()).max().unwrap_or(0);
+    for i in 0..max_pts {
+        let mut line = String::new();
+        for (name, c) in &curves {
+            if let Some((it, acc)) = c.get(i) {
+                line.push_str(&format!("{name}@{it}={acc:.3}  "));
+            }
+        }
+        println!("  {line}");
+    }
+    println!(
+        "\nreading: Ada should match the complete graphs' accuracy at a fraction\n\
+         of the MB/node; the static ring is cheapest but trails in accuracy;\n\
+         the variance-triggered variant adapts on the measured gini instead of\n\
+         an epoch clock."
+    );
+    Ok(())
+}

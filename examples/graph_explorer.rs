@@ -1,0 +1,75 @@
+//! Graph explorer: the topology design space at a chosen scale —
+//! degree, edge count, spectral gap (mixing speed), and Summit-model
+//! communication cost per gossip round, including the full Ada lattice
+//! k-sweep. The tool behind DESIGN.md's topology discussion.
+//!
+//!     cargo run --release --example graph_explorer -- 96
+//!     cargo run --release --example graph_explorer -- 1008 25560000
+
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::simnet::{ClusterSpec, SimNet};
+use ada_dist::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let params: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(1_000_000);
+    let net = SimNet::new(ClusterSpec::summit());
+
+    println!(
+        "== topology design space @ n = {n}, {params} params ({} Summit nodes) ==",
+        n.div_ceil(6)
+    );
+    let mut t = Table::new(&[
+        "graph",
+        "degree",
+        "edges",
+        "gap(1-σ2)",
+        "round ms",
+        "inter-node MB",
+        "rounds→consensus*",
+    ]);
+    let mut kinds = vec![
+        GraphKind::Ring,
+        GraphKind::Torus,
+        GraphKind::RingLattice { k: 3 },
+        GraphKind::Exponential,
+        GraphKind::Hypercube,
+        GraphKind::RandomRegular { d: 4, seed: 7 },
+        GraphKind::Complete,
+    ];
+    // Ada lattice k-sweep: powers of two up to n/2.
+    let mut k = 2;
+    while k < n / 2 {
+        kinds.push(GraphKind::AdaLattice { k });
+        k *= 2;
+    }
+    for kind in kinds {
+        let Ok(g) = CommGraph::build(kind, n) else { continue };
+        let gap = g.spectral_gap();
+        let cost = net.gossip_round(&g, params);
+        // Rounds for the disagreement to contract by 1e3: σ2^r = 1e-3.
+        let rounds = if gap >= 1.0 - 1e-9 {
+            "1".to_string()
+        } else {
+            format!("{:.0}", (1e-3f64).ln() / (1.0 - gap).ln())
+        };
+        t.row(vec![
+            kind.to_string(),
+            g.degree().to_string(),
+            g.edge_count().to_string(),
+            format!("{gap:.6}"),
+            format!("{:.3}", cost.time_s * 1e3),
+            format!("{:.1}", cost.inter_node_bytes as f64 / 1e6),
+            rounds,
+        ]);
+    }
+    println!("{}", t.render());
+    println!("* rounds for cross-replica disagreement to shrink 1000× (σ2^r = 1e-3)");
+    println!(
+        "\nreading: Ada exploits the left-to-right sweep of this table — start where\n\
+         the gap is large (fast consensus, expensive rounds), finish where rounds\n\
+         are cheap (small k) once replicas agree."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: train a small model with Ada's adaptive decentralized
+//! SGD on 8 simulated workers and print the result.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the AOT-compiled HLO model (the production path) when
+//! `artifacts/` exists, else falls back to the pure-Rust surrogate so
+//! the example always runs.
+
+use ada_dist::coordinator::{HloModel, LocalModel, SgdFlavor, TrainConfig, Trainer};
+use ada_dist::coordinator::surrogate::MlpClassifier;
+use ada_dist::data::SyntheticClassification;
+use ada_dist::runtime::PjRtRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let workers = 8;
+    let epochs = 6;
+
+    // 1. A dataset: synthetic CIFAR-like class clusters, sharded
+    //    non-iid across workers by the trainer.
+    let data = SyntheticClassification::generate(4096, 32, 10, 2.5, 42);
+
+    // 2. A model: the AOT JAX/Pallas `mlp` via PJRT, or the surrogate.
+    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut model: Box<dyn LocalModel> = if artifact_dir.join("mlp/manifest.json").exists() {
+        let rt = PjRtRuntime::cpu(&artifact_dir)?;
+        println!("using HLO artifacts via PJRT ({})", rt.platform());
+        Box::new(HloModel::new(rt.load_model("mlp")?))
+    } else {
+        println!("artifacts not built — using the pure-Rust surrogate");
+        Box::new(MlpClassifier::new(32, 64, 10, 16, 64, workers, 0.9))
+    };
+
+    // 3. Ada: start near-complete (k0 = 7) and decay one step per epoch.
+    let flavor = SgdFlavor::Ada { k0: 7, gamma_k: 1.0 };
+
+    let mut trainer = Trainer::new(model.as_mut(), TrainConfig::quick(workers, epochs));
+    let t0 = std::time::Instant::now();
+    let (recorder, summary) = trainer.run(&data, &flavor)?;
+
+    println!(
+        "\ntrained {} for {} iterations in {:.1?}",
+        summary.flavor,
+        recorder.records().len(),
+        t0.elapsed()
+    );
+    println!("final test accuracy: {:.3}", summary.final_eval.metric);
+    println!("communication: {:.2} MB sent per worker", summary.bytes_per_node as f64 / 1e6);
+    println!("accuracy curve (iteration, accuracy):");
+    for (it, acc) in recorder.metric_series() {
+        println!("  {it:>5}  {acc:.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time Python: JAX models (L2) + Pallas kernels (L1), AOT-lowered
+to HLO text artifacts executed from the Rust coordinator via PJRT.
+Never imported at runtime."""

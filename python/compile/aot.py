@@ -1,0 +1,114 @@
+"""AOT lowering: JAX functions -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the runtime's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly.
+
+Usage (from `python/`):
+    python -m compile.aot --out-dir ../artifacts
+    python -m compile.aot --out-dir ../artifacts --models mlp,transformer_e2e
+    python -m compile.aot --out-dir ../artifacts --gossip-ns 4,8,16,32
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import gossip_mix
+from compile.models import DEFAULT_MODELS, get_spec
+
+# Replica counts the gossip kernel is lowered for (one artifact per
+# (n, param_count) pair; n <= 128 keeps W in one MXU tile).
+DEFAULT_GOSSIP_NS = [4, 8, 16, 32]
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e3:.1f} kB)")
+
+
+def lower_model(name: str, out_dir: str) -> int:
+    """Lower one model's init/step/eval + manifest. Returns param count."""
+    print(f"model {name}:")
+    spec = get_spec(name)
+    init_fn, step_fn, eval_fn, manifest = model_lib.build_functions(spec)
+    args = model_lib.example_args(spec, manifest["param_count"])
+    mdir = os.path.join(out_dir, name)
+    write(os.path.join(mdir, "init.hlo.txt"), to_hlo_text(init_fn, args["init"]))
+    write(os.path.join(mdir, "step.hlo.txt"), to_hlo_text(step_fn, args["step"]))
+    write(os.path.join(mdir, "eval.hlo.txt"), to_hlo_text(eval_fn, args["eval"]))
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  manifest: {manifest['param_count']} params, kind {manifest['kind']}")
+    return manifest["param_count"]
+
+
+def lower_gossip(ns, param_counts, out_dir: str):
+    """Lower the gossip_mix kernel for every (n, p) pair."""
+    gdir = os.path.join(out_dir, "gossip")
+    variants = []
+    for n in ns:
+        for p in sorted(set(param_counts)):
+            f32 = jnp.float32
+            w = jax.ShapeDtypeStruct((n, n), f32)
+            theta = jax.ShapeDtypeStruct((n, p), f32)
+            text = to_hlo_text(lambda w, t: (gossip_mix(w, t),), (w, theta))
+            write(os.path.join(gdir, f"mix_n{n}_p{p}.hlo.txt"), text)
+            variants.append([n, p])
+    with open(os.path.join(gdir, "manifest.json"), "w") as f:
+        json.dump({"variants": variants}, f)
+    print(f"gossip: {len(variants)} variants")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated registry names",
+    )
+    ap.add_argument(
+        "--gossip-ns",
+        default=",".join(str(n) for n in DEFAULT_GOSSIP_NS),
+        help="replica counts to lower gossip kernels for ('' = skip)",
+    )
+    args = ap.parse_args()
+
+    models = [m for m in args.models.split(",") if m]
+    param_counts = []
+    for name in models:
+        param_counts.append(lower_model(name, args.out_dir))
+
+    if args.gossip_ns:
+        ns = [int(x) for x in args.gossip_ns.split(",")]
+        # Gossip kernels sized for the *small* models (the ones the
+        # mixed-path benches use); giant transformers mix natively.
+        small = [p for p in param_counts if p <= 2_000_000]
+        if small:
+            lower_gossip(ns, small, args.out_dir)
+
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels: the compute hot-spots of the decentralized
+training stack, written against the TPU-shaped Pallas model and lowered
+(interpret=True) into the same HLO artifacts as the L2 models.
+
+- ``gossip_mix``: the paper's neighbor-averaging step as a mixing matmul
+  ``Theta' = W @ Theta`` (DESIGN.md §Hardware-Adaptation).
+- ``fused_sgd``: single-pass parameter update ``p' = p - lr * g``.
+- ``ref``: pure-jnp oracles used by pytest.
+"""
+
+from compile.kernels.fused_sgd import fused_sgd
+from compile.kernels.gossip_mix import gossip_mix, vmem_report
+
+__all__ = ["fused_sgd", "gossip_mix", "vmem_report"]

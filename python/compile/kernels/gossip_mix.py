@@ -1,0 +1,96 @@
+"""The gossip averaging step as a Pallas kernel: ``Theta' = W @ Theta``.
+
+The paper's communication hot-spot — each GPU averaging parameter
+tensors with its graph neighbors (``sum_j E_ij theta_j``, §2.2) — maps
+onto TPU-shaped hardware as a *mixing matmul*: ``W`` is the dense
+``n x n`` mixing matrix (sparsity of the graph encoded as zeros) and
+``Theta`` stacks the ``n`` replicas' flat parameters as an ``n x P``
+matrix. For ``n <= 128`` all of ``W`` fits in a single MXU tile, so the
+kernel keeps ``W`` resident in VMEM and streams ``Theta`` through it in
+``TILE_P``-wide column blocks (the BlockSpec grid replaces the paper's
+per-link message chunking).
+
+VMEM budget per grid step (f32): ``n*n + 2 * n * TILE_P`` words. With
+``n = 64`` and ``TILE_P = 4096`` that is 16 KiB + 2 MiB — comfortably
+double-bufferable inside a 16 MiB VMEM (see EXPERIMENTS.md §Perf for
+the full table).
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO (a while-loop
+over the grid) — numerically identical, structurally the same schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-block width for streaming Theta through VMEM. The §Perf tile
+# sweep (EXPERIMENTS.md) picks the largest block whose double-buffered
+# footprint still fits a 16 MiB VMEM at n = 64: 8192 f32 columns
+# (2 × 4.02 MiB), cutting grid steps 4× vs the 2048 starting point.
+TILE_P = 8192
+
+
+def _mix_kernel(w_ref, theta_ref, out_ref):
+    """One grid step: out[:, tile] = W @ theta[:, tile] (MXU matmul)."""
+    out_ref[...] = jnp.dot(
+        w_ref[...], theta_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p",))
+def gossip_mix(w, theta, tile_p: int = TILE_P):
+    """Mix replica parameters: ``theta' = w @ theta``.
+
+    Args:
+      w: ``(n, n)`` f32 mixing matrix (rows sum to 1).
+      theta: ``(n, p)`` f32 stacked replica parameters.
+      tile_p: column-block width (static).
+
+    Returns:
+      ``(n, p)`` f32 mixed parameters.
+    """
+    n, p = theta.shape
+    if w.shape != (n, n):
+        raise ValueError(f"w must be ({n},{n}), got {w.shape}")
+    tile = min(tile_p, p)
+    # Pad P to a tile multiple; padded columns are zeros and mix to zero.
+    p_pad = (tile - p % tile) % tile
+    theta_padded = jnp.pad(theta, ((0, 0), (0, p_pad)))
+    grid = (theta_padded.shape[1] // tile,)
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),  # W resident
+            pl.BlockSpec((n, tile), lambda j: (0, j)),  # stream Theta
+        ],
+        out_specs=pl.BlockSpec((n, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(theta_padded.shape, jnp.float32),
+        interpret=True,
+    )(w, theta_padded)
+    return out[:, :p]
+
+
+def vmem_report(n: int, p: int, tile_p: int = TILE_P) -> dict:
+    """Analytic VMEM/MXU estimate for a (n, p) mixing call — the L1
+    profile used in EXPERIMENTS.md §Perf (interpret=True gives no real
+    TPU timings, so the kernel is profiled structurally)."""
+    tile = min(tile_p, p)
+    vmem_words = n * n + 2 * n * tile
+    grid_steps = -(-p // tile)
+    flops = 2 * n * n * p  # dense mixing matmul
+    # MXU does 128x128 f32-accumulate tiles; utilization is the fraction
+    # of each 128-lane tile actually filled by n rows.
+    mxu_fill = min(n, 128) / 128.0
+    return {
+        "n": n,
+        "p": p,
+        "tile_p": tile,
+        "vmem_bytes": vmem_words * 4,
+        "grid_steps": grid_steps,
+        "flops": flops,
+        "mxu_row_fill": mxu_fill,
+    }

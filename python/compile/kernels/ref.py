@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for the L1 kernels (pytest compares against these)."""
+
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(w, theta):
+    """Reference mixing: plain dense matmul."""
+    return jnp.dot(w, theta)
+
+
+def fused_sgd_ref(params, grads, lr, weight_decay: float = 0.0):
+    """Reference SGD update."""
+    return params - lr * (grads + weight_decay * params)

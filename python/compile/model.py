@@ -1,0 +1,82 @@
+"""L2 assembly: turn a ModelSpec into the three jitted functions the
+Rust coordinator executes (`init`, `step`, `eval`), all over the flat
+f32 parameter layout, with the L1 `fused_sgd` Pallas kernel performing
+the parameter update *inside* `step` — one PJRT call per worker per
+iteration, fwd + bwd + update fused into a single executable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_sgd
+from compile.models.common import ModelSpec, flatten_info
+
+
+def build_functions(spec: ModelSpec):
+    """Returns ``(init_fn, step_fn, eval_fn, manifest_dict)``.
+
+    Signatures (matching `rust/src/runtime/bundle.rs`):
+      * ``init(seed: i32[]) -> (flat_params: f32[P],)``
+      * ``step(params: f32[P], x: f32[B,D], y: i32[...], lr: f32[])
+         -> (params': f32[P], loss: f32[])``
+      * ``eval(params: f32[P], x: f32[Be,D], y: i32[...])
+         -> (loss_sum: f32[], metric_sum: f32[])``
+    """
+    param_count, layer_ranges, unravel = flatten_info(spec)
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params = spec.init_raw(key)
+        flat, _ = jax.flatten_util.ravel_pytree(params)
+        return (flat,)
+
+    def loss_flat(flat, x, y):
+        return spec.loss_fn(unravel(flat), x, y)
+
+    def step_fn(flat, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_flat)(flat, x, y)
+        new_flat = fused_sgd(flat, grads, lr, weight_decay=spec.weight_decay)
+        return new_flat, loss
+
+    def eval_fn(flat, x, y):
+        loss_sum, metric_sum = spec.eval_fn(unravel(flat), x, y)
+        return loss_sum, metric_sum
+
+    manifest = {
+        "name": spec.name,
+        "kind": spec.kind,
+        "param_count": param_count,
+        "x_dim": spec.x_dim,
+        "y_dim": spec.y_dim,
+        "batch_size": spec.batch_size,
+        "eval_batch_size": spec.eval_batch_size,
+        "num_outputs": spec.num_outputs,
+        "layer_ranges": [list(r) for r in layer_ranges],
+        "files": {
+            "init": "init.hlo.txt",
+            "step": "step.hlo.txt",
+            "eval": "eval.hlo.txt",
+        },
+    }
+    return init_fn, step_fn, eval_fn, manifest
+
+
+def example_args(spec: ModelSpec, param_count: int):
+    """ShapeDtypeStructs for lowering each function."""
+    f32, i32 = jnp.float32, jnp.int32
+    p = jax.ShapeDtypeStruct((param_count,), f32)
+    x_tr = jax.ShapeDtypeStruct((spec.batch_size, spec.x_dim), f32)
+    x_ev = jax.ShapeDtypeStruct((spec.eval_batch_size, spec.x_dim), f32)
+    if spec.y_dim == 1:
+        y_tr = jax.ShapeDtypeStruct((spec.batch_size,), i32)
+        y_ev = jax.ShapeDtypeStruct((spec.eval_batch_size,), i32)
+    else:
+        y_tr = jax.ShapeDtypeStruct((spec.batch_size, spec.y_dim), i32)
+        y_ev = jax.ShapeDtypeStruct((spec.eval_batch_size, spec.y_dim), i32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    seed = jax.ShapeDtypeStruct((), i32)
+    return {
+        "init": (seed,),
+        "step": (p, x_tr, y_tr, lr),
+        "eval": (p, x_ev, y_ev),
+    }

@@ -1,0 +1,26 @@
+"""Model registry: name -> ModelSpec factory."""
+
+from compile.models import cnn, lstm, mlp, transformer
+
+REGISTRY = {
+    "mlp": mlp.spec,
+    "cnn": cnn.spec,
+    "lstm": lstm.spec,
+    "transformer": lambda: transformer.spec("transformer"),
+    "transformer_e2e": lambda: transformer.spec("transformer_e2e"),
+    "transformer_100m": lambda: transformer.spec(
+        "transformer_100m", batch_size=2, eval_batch_size=2
+    ),
+}
+
+# The models `make artifacts` lowers by default (the big transformers
+# are lowered on demand: `python -m compile.aot --models transformer_e2e`).
+DEFAULT_MODELS = ["mlp", "cnn", "lstm", "transformer"]
+
+
+def get_spec(name: str):
+    """Look up a ModelSpec by registry name."""
+    try:
+        return REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; known: {sorted(REGISTRY)}") from None

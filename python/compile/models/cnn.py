@@ -1,0 +1,85 @@
+"""Small convnet — the ResNet20/CIFAR10 analog (Table 2 row 1).
+
+Input is a flat 64-wide vector interpreted as an 8x8x1 image; two 3x3
+conv+relu stages with 2x2 mean-pooling, then a dense classifier. Small
+enough that a worker step through PJRT is sub-millisecond, but it
+exercises real conv lowering in the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (
+    ModelSpec,
+    cross_entropy_mean,
+    cross_entropy_sum_and_correct,
+    uniform_init,
+)
+
+SIDE = 8
+DIM = SIDE * SIDE
+C1 = 8
+C2 = 16
+CLASSES = 10
+
+
+def _init_raw(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (
+        uniform_init(k1, (3, 3, 1, C1), (1.0 / 9.0) ** 0.5),
+        jnp.zeros((C1,), jnp.float32),
+        uniform_init(k2, (3, 3, C1, C2), (1.0 / (9.0 * C1)) ** 0.5),
+        jnp.zeros((C2,), jnp.float32),
+        uniform_init(k3, (CLASSES, (SIDE // 4) ** 2 * C2), (1.0 / 64.0) ** 0.5),
+        jnp.zeros((CLASSES,), jnp.float32),
+    )
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(out + b)
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def _forward(params, x):
+    w1, b1, w2, b2, wd, bd = params
+    img = x.reshape((-1, SIDE, SIDE, 1))
+    h = _pool2(_conv(img, w1, b1))
+    h = _pool2(_conv(h, w2, b2))
+    flat = h.reshape((h.shape[0], -1))
+    return flat @ wd.T + bd
+
+
+def _loss(params, x, y):
+    return cross_entropy_mean(_forward(params, x), y)
+
+
+def _eval(params, x, y):
+    return cross_entropy_sum_and_correct(_forward(params, x), y)
+
+
+def spec(batch_size: int = 16, eval_batch_size: int = 64) -> ModelSpec:
+    """The `cnn` model spec."""
+    return ModelSpec(
+        name="cnn",
+        kind="classification",
+        x_dim=DIM,
+        y_dim=1,
+        batch_size=batch_size,
+        eval_batch_size=eval_batch_size,
+        num_outputs=CLASSES,
+        init_raw=_init_raw,
+        loss_fn=_loss,
+        eval_fn=_eval,
+    )

@@ -1,0 +1,89 @@
+"""Shared L2 model machinery: flat-parameter packing, loss helpers, and
+the ModelSpec protocol every model module implements.
+
+Parameter layout contract with the Rust coordinator: a model's state is
+ONE flat f32 vector. Models define their parameters as a *tuple* of
+arrays (tuple order = flat order; ``jax.flatten_util.ravel_pytree`` on
+tuples preserves order), and the manifest's ``layer_ranges`` are the
+cumulative leaf offsets, so Rust-side per-tensor variance tracking and
+LARS address the same slices Python defined.
+"""
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything `model.py` needs to assemble init/step/eval functions.
+
+    Attributes:
+      name: artifact directory name.
+      kind: "classification" or "lm".
+      x_dim: feature width (seq_len for LM; tokens arrive as f32).
+      y_dim: target width (1 for classification, seq_len for LM).
+      batch_size: training batch rows.
+      eval_batch_size: eval batch rows.
+      num_outputs: classes, or vocab size for LM.
+      init_raw: PRNGKey -> params pytree (a tuple of arrays).
+      loss_fn: (params_pytree, x, y) -> scalar mean loss.
+      eval_fn: (params_pytree, x, y) -> (loss_sum, metric_sum).
+      weight_decay: decoupled L2 folded into the fused update.
+    """
+
+    name: str
+    kind: str
+    x_dim: int
+    y_dim: int
+    batch_size: int
+    eval_batch_size: int
+    num_outputs: int
+    init_raw: Callable
+    loss_fn: Callable
+    eval_fn: Callable
+    weight_decay: float = 0.0
+
+
+def flatten_info(spec: ModelSpec):
+    """(param_count, layer_ranges, unravel) for a spec's parameters."""
+    params = spec.init_raw(jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    ranges = []
+    off = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.size
+        ranges.append((off, off + n))
+        off += n
+    assert off == flat.shape[0]
+    return int(flat.shape[0]), ranges, unravel
+
+
+def cross_entropy_mean(logits, y):
+    """Mean softmax cross-entropy; y: int class labels, last-dim logits."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def cross_entropy_sum_and_correct(logits, y):
+    """(sum CE, count of argmax==y) over all leading dims."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return -jnp.sum(picked), correct
+
+
+def token_nll_sum(logits, y):
+    """(sum token NLL, token count) for LM eval."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.sum(picked), jnp.asarray(picked.size, jnp.float32)
+
+
+def uniform_init(key, shape, scale):
+    """U(-scale, scale) f32 initializer (matches the Rust surrogates)."""
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)

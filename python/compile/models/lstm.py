@@ -1,0 +1,83 @@
+"""LSTM language model — the LSTM/WikiText2 analog (Table 2 row 4).
+
+Single-layer LSTM (lax.scan over time) with tied input embedding size,
+next-token softmax over the vocabulary. Tokens arrive as f32 (the Rust
+batch layout is model-agnostic) and are cast to int32 for the embedding
+lookup.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (
+    ModelSpec,
+    cross_entropy_mean,
+    token_nll_sum,
+    uniform_init,
+)
+
+VOCAB = 32
+EMBED = 32
+HIDDEN = 64
+SEQ = 16
+
+
+def _init_raw(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    se = (1.0 / EMBED) ** 0.5
+    sh = (1.0 / HIDDEN) ** 0.5
+    return (
+        uniform_init(k1, (VOCAB, EMBED), se),  # embedding
+        uniform_init(k2, (4 * HIDDEN, EMBED + HIDDEN), sh),  # gates W
+        jnp.zeros((4 * HIDDEN,), jnp.float32),  # gates b
+        uniform_init(k3, (VOCAB, HIDDEN), sh),  # output proj
+        uniform_init(k4, (VOCAB,), 0.01),  # output bias
+    )
+
+
+def _forward(params, x):
+    """x: (B, SEQ) f32 token ids -> logits (B, SEQ, VOCAB)."""
+    emb, wg, bg, wo, bo = params
+    tokens = x.astype(jnp.int32)
+    inputs = emb[tokens]  # (B, T, E)
+    b = inputs.shape[0]
+    h0 = jnp.zeros((b, HIDDEN), jnp.float32)
+    c0 = jnp.zeros((b, HIDDEN), jnp.float32)
+
+    def cell(carry, x_t):
+        h, c = carry
+        zcat = jnp.concatenate([x_t, h], axis=-1)
+        gates = zcat @ wg.T + bg
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        return (h_new, c_new), h_new
+
+    xs = jnp.swapaxes(inputs, 0, 1)  # (T, B, E)
+    _, hs = jax.lax.scan(cell, (h0, c0), xs)
+    hs = jnp.swapaxes(hs, 0, 1)  # (B, T, H)
+    return hs @ wo.T + bo
+
+
+def _loss(params, x, y):
+    return cross_entropy_mean(_forward(params, x), y)
+
+
+def _eval(params, x, y):
+    return token_nll_sum(_forward(params, x), y)
+
+
+def spec(batch_size: int = 8, eval_batch_size: int = 32) -> ModelSpec:
+    """The `lstm` model spec."""
+    return ModelSpec(
+        name="lstm",
+        kind="lm",
+        x_dim=SEQ,
+        y_dim=SEQ,
+        batch_size=batch_size,
+        eval_batch_size=eval_batch_size,
+        num_outputs=VOCAB,
+        init_raw=_init_raw,
+        loss_fn=_loss,
+        eval_fn=_eval,
+    )

@@ -1,0 +1,63 @@
+"""MLP classifier — the DenseNet100/CIFAR10 analog (Table 2 row 3).
+
+Architecture and flat layout deliberately mirror the Rust surrogate
+``MlpClassifier`` (``W1(h x d) | b1(h) | W2(c x h) | b2(c)``, tanh
+hidden, mean softmax CE), so the Rust integration test can check that
+one HLO step equals the surrogate's analytic step on identical inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (
+    ModelSpec,
+    cross_entropy_mean,
+    cross_entropy_sum_and_correct,
+    uniform_init,
+)
+
+DIM = 32
+HIDDEN = 64
+CLASSES = 10
+
+
+def _init_raw(key, dim=DIM, hidden=HIDDEN, classes=CLASSES):
+    k1, k2 = jax.random.split(key)
+    s1 = (1.0 / dim) ** 0.5
+    s2 = (1.0 / hidden) ** 0.5
+    return (
+        uniform_init(k1, (hidden, dim), s1),
+        jnp.zeros((hidden,), jnp.float32),
+        uniform_init(k2, (classes, hidden), s2),
+        jnp.zeros((classes,), jnp.float32),
+    )
+
+
+def _forward(params, x):
+    w1, b1, w2, b2 = params
+    h = jnp.tanh(x @ w1.T + b1)
+    return h @ w2.T + b2
+
+
+def _loss(params, x, y):
+    return cross_entropy_mean(_forward(params, x), y)
+
+
+def _eval(params, x, y):
+    return cross_entropy_sum_and_correct(_forward(params, x), y)
+
+
+def spec(batch_size: int = 16, eval_batch_size: int = 64) -> ModelSpec:
+    """The `mlp` model spec."""
+    return ModelSpec(
+        name="mlp",
+        kind="classification",
+        x_dim=DIM,
+        y_dim=1,
+        batch_size=batch_size,
+        eval_batch_size=eval_batch_size,
+        num_outputs=CLASSES,
+        init_raw=_init_raw,
+        loss_fn=_loss,
+        eval_fn=_eval,
+    )

@@ -1,0 +1,154 @@
+"""Decoder-only transformer LM — the scalable workload for the
+end-to-end driver (ResNet50/ImageNet stands in at benchmark scale; this
+is the model the e2e example trains for a few hundred steps).
+
+Pre-norm blocks, causal attention, learned positional embeddings.
+Presets:
+  * ``transformer``       — tiny (tests/benches; ~0.2M params)
+  * ``transformer_e2e``   — ~14M params, the loss-curve driver
+  * ``transformer_100m``  — ~101M params, executability proof
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (
+    ModelSpec,
+    cross_entropy_mean,
+    token_nll_sum,
+    uniform_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Architecture hyperparameters."""
+
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq: int
+    d_ff: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "transformer": TransformerConfig(
+        vocab=64, d_model=64, n_heads=4, n_layers=2, seq=32, d_ff=128
+    ),
+    "transformer_e2e": TransformerConfig(
+        vocab=4096, d_model=384, n_heads=6, n_layers=6, seq=64, d_ff=1536
+    ),
+    "transformer_100m": TransformerConfig(
+        vocab=16384, d_model=768, n_heads=12, n_layers=12, seq=128, d_ff=3072
+    ),
+}
+
+
+def _init_raw(key, cfg: TransformerConfig):
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    sd = (1.0 / cfg.d_model) ** 0.5
+    params = [
+        uniform_init(keys[0], (cfg.vocab, cfg.d_model), sd),  # tok emb
+        uniform_init(keys[1], (cfg.seq, cfg.d_model), sd),  # pos emb
+    ]
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 6)
+        sff = (1.0 / cfg.d_ff) ** 0.5
+        params.extend(
+            [
+                uniform_init(lk[0], (3 * cfg.d_model, cfg.d_model), sd),  # qkv
+                uniform_init(lk[1], (cfg.d_model, cfg.d_model), sd),  # attn out
+                jnp.ones((cfg.d_model,), jnp.float32),  # ln1 scale
+                uniform_init(lk[2], (cfg.d_ff, cfg.d_model), sd),  # ff in
+                uniform_init(lk[3], (cfg.d_model, cfg.d_ff), sff),  # ff out
+                jnp.ones((cfg.d_model,), jnp.float32),  # ln2 scale
+            ]
+        )
+    params.append(jnp.ones((cfg.d_model,), jnp.float32))  # final ln
+    return tuple(params)
+
+
+def _rms_norm(x, scale):
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _block(x, layer_params, cfg: TransformerConfig, mask):
+    wqkv, wo, ln1, wff1, wff2, ln2 = layer_params
+    b, t, d = x.shape
+    h = _rms_norm(x, ln1)
+    qkv = h @ wqkv.T  # (B, T, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / (cfg.head_dim**0.5)
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1) @ v  # (B, H, T, hd)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + attn @ wo.T
+    h = _rms_norm(x, ln2)
+    x = x + jax.nn.relu(h @ wff1.T) @ wff2.T
+    return x
+
+
+def _forward(params, x, cfg: TransformerConfig):
+    tokens = x.astype(jnp.int32)
+    b, t = tokens.shape
+    tok_emb, pos_emb = params[0], params[1]
+    h = tok_emb[tokens] + pos_emb[None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None, :, :]
+    for i in range(cfg.n_layers):
+        layer = params[2 + 6 * i : 2 + 6 * (i + 1)]
+        h = _block(h, layer, cfg, mask)
+    h = _rms_norm(h, params[-1])
+    return h @ params[0].T  # tied embedding
+
+
+def spec(
+    preset: str = "transformer",
+    batch_size: int = 8,
+    eval_batch_size: int = 16,
+) -> ModelSpec:
+    """A transformer model spec by preset name."""
+    cfg = PRESETS[preset]
+    return ModelSpec(
+        name=preset,
+        kind="lm",
+        x_dim=cfg.seq,
+        y_dim=cfg.seq,
+        batch_size=batch_size,
+        eval_batch_size=eval_batch_size,
+        num_outputs=cfg.vocab,
+        init_raw=functools.partial(_init_raw, cfg=cfg),
+        loss_fn=lambda p, x, y: cross_entropy_mean(_forward(p, x, cfg), y),
+        eval_fn=lambda p, x, y: token_nll_sum(_forward(p, x, cfg), y),
+    )
+
+
+def param_count(preset: str) -> int:
+    """Analytic parameter count of a preset."""
+    cfg = PRESETS[preset]
+    per_layer = (
+        3 * cfg.d_model * cfg.d_model
+        + cfg.d_model * cfg.d_model
+        + cfg.d_model
+        + cfg.d_ff * cfg.d_model
+        + cfg.d_model * cfg.d_ff
+        + cfg.d_model
+    )
+    return (
+        cfg.vocab * cfg.d_model
+        + cfg.seq * cfg.d_model
+        + cfg.n_layers * per_layer
+        + cfg.d_model
+    )

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles, with hypothesis
+sweeping shapes and dtypes-adjacent parameters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_sgd, gossip_mix, vmem_report
+from compile.kernels.ref import fused_sgd_ref, gossip_mix_ref
+
+
+def mixing_matrix(n: int, seed: int) -> np.ndarray:
+    """A random row-stochastic mixing matrix."""
+    rng = np.random.RandomState(seed)
+    w = rng.rand(n, n).astype(np.float32) + 0.1
+    return w / w.sum(axis=1, keepdims=True)
+
+
+class TestGossipMix:
+    @pytest.mark.parametrize("n", [2, 4, 8, 32])
+    @pytest.mark.parametrize("p", [1, 7, 2048, 5000])
+    def test_matches_reference(self, n, p):
+        w = mixing_matrix(n, seed=n)
+        theta = np.random.RandomState(p).randn(n, p).astype(np.float32)
+        got = gossip_mix(w, theta)
+        want = gossip_mix_ref(w, theta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_non_divisible_padding(self):
+        # p deliberately not a multiple of the tile width.
+        n, p = 4, 2048 + 129
+        w = mixing_matrix(n, 0)
+        theta = np.random.RandomState(0).randn(n, p).astype(np.float32)
+        np.testing.assert_allclose(
+            gossip_mix(w, theta), gossip_mix_ref(w, theta), rtol=1e-5, atol=1e-6
+        )
+
+    def test_identity_matrix_is_noop(self):
+        n, p = 8, 100
+        theta = np.random.RandomState(1).randn(n, p).astype(np.float32)
+        got = gossip_mix(np.eye(n, dtype=np.float32), theta)
+        np.testing.assert_allclose(got, theta, rtol=1e-6)
+
+    def test_uniform_matrix_reaches_consensus(self):
+        n, p = 8, 50
+        theta = np.random.RandomState(2).randn(n, p).astype(np.float32)
+        w = np.full((n, n), 1.0 / n, np.float32)
+        got = np.asarray(gossip_mix(w, theta))
+        mean = theta.mean(axis=0)
+        for i in range(n):
+            np.testing.assert_allclose(got[i], mean, rtol=1e-4, atol=1e-5)
+
+    def test_preserves_global_mean(self):
+        # Doubly stochastic W => column means invariant.
+        n, p = 6, 333
+        w = mixing_matrix(n, 3)
+        w = (w + w.T) / 2.0
+        w = w / w.sum(axis=1, keepdims=True)  # approx doubly stochastic
+        # Sinkhorn a few rounds to make it properly doubly stochastic.
+        for _ in range(50):
+            w = w / w.sum(axis=0, keepdims=True)
+            w = w / w.sum(axis=1, keepdims=True)
+        theta = np.random.RandomState(4).randn(n, p).astype(np.float32)
+        got = np.asarray(gossip_mix(w.astype(np.float32), theta))
+        np.testing.assert_allclose(
+            got.mean(axis=0), theta.mean(axis=0), rtol=1e-3, atol=1e-5
+        )
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            gossip_mix(np.eye(3, dtype=np.float32), np.zeros((4, 10), np.float32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=16),
+        p=st.integers(min_value=1, max_value=600),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        tile=st.sampled_from([64, 128, 2048]),
+    )
+    def test_hypothesis_shape_sweep(self, n, p, seed, tile):
+        w = mixing_matrix(n, seed % 1000)
+        theta = np.random.RandomState(seed % 1000 + 1).randn(n, p).astype(np.float32)
+        got = gossip_mix(w, theta, tile_p=tile)
+        np.testing.assert_allclose(got, gossip_mix_ref(w, theta), rtol=2e-5, atol=1e-5)
+
+    def test_vmem_report_within_budget(self):
+        # DESIGN.md §Hardware-Adaptation: the default tiling must fit a
+        # 16 MiB VMEM with room for double-buffering at n = 64.
+        rep = vmem_report(64, 25_560_000)
+        assert rep["vmem_bytes"] * 2 < 16 * 2**20
+        assert rep["mxu_row_fill"] == 0.5
+        assert rep["grid_steps"] == -(-25_560_000 // rep["tile_p"])
+
+
+class TestFusedSgd:
+    @pytest.mark.parametrize("p", [1, 100, 8192, 8193, 50_000])
+    def test_matches_reference(self, p):
+        params = np.random.RandomState(p).randn(p).astype(np.float32)
+        grads = np.random.RandomState(p + 1).randn(p).astype(np.float32)
+        got = fused_sgd(params, grads, jnp.float32(0.05))
+        np.testing.assert_allclose(
+            got, fused_sgd_ref(params, grads, 0.05), rtol=1e-6, atol=1e-7
+        )
+
+    def test_weight_decay(self):
+        p = 1000
+        params = np.random.RandomState(0).randn(p).astype(np.float32)
+        grads = np.zeros(p, np.float32)
+        got = fused_sgd(params, grads, jnp.float32(1.0), weight_decay=0.1)
+        np.testing.assert_allclose(got, params * 0.9, rtol=1e-6)
+
+    def test_zero_lr_is_identity(self):
+        p = 500
+        params = np.random.RandomState(1).randn(p).astype(np.float32)
+        grads = np.random.RandomState(2).randn(p).astype(np.float32)
+        got = fused_sgd(params, grads, jnp.float32(0.0))
+        np.testing.assert_allclose(got, params, rtol=0, atol=0)
+
+    def test_lr_is_traced_not_baked(self):
+        # One artifact must serve every LR schedule value.
+        p = 64
+        params = np.zeros(p, np.float32)
+        grads = np.ones(p, np.float32)
+        a = np.asarray(fused_sgd(params, grads, jnp.float32(0.1)))
+        b = np.asarray(fused_sgd(params, grads, jnp.float32(0.2)))
+        assert not np.allclose(a, b)
+        np.testing.assert_allclose(b, 2 * a, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p=st.integers(min_value=1, max_value=20_000),
+        lr=st.floats(min_value=0.0, max_value=10.0, width=32),
+        wd=st.sampled_from([0.0, 1e-4, 0.1]),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    def test_hypothesis_sweep(self, p, lr, wd, seed):
+        params = np.random.RandomState(seed).randn(p).astype(np.float32)
+        grads = np.random.RandomState(seed + 1).randn(p).astype(np.float32)
+        got = fused_sgd(params, grads, jnp.float32(lr), weight_decay=wd)
+        want = fused_sgd_ref(params, grads, np.float32(lr), wd)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_mismatched_shapes(self):
+        with pytest.raises(ValueError):
+            fused_sgd(np.zeros(4, np.float32), np.zeros(5, np.float32), 0.1)

@@ -1,0 +1,174 @@
+"""L2 model correctness: shapes, determinism, learnability, gradient
+validity, and the flat-layout contract with the Rust coordinator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.models import DEFAULT_MODELS, get_spec
+from compile.models import transformer as transformer_mod
+
+
+def make_batch(spec, batch_size, seed=0):
+    rng = np.random.RandomState(seed)
+    if spec.kind == "classification":
+        x = rng.randn(batch_size, spec.x_dim).astype(np.float32)
+        y = rng.randint(0, spec.num_outputs, (batch_size,)).astype(np.int32)
+    else:
+        x = rng.randint(0, spec.num_outputs, (batch_size, spec.x_dim)).astype(
+            np.float32
+        )
+        y = rng.randint(0, spec.num_outputs, (batch_size, spec.y_dim)).astype(np.int32)
+    return x, y
+
+
+@pytest.fixture(scope="module", params=DEFAULT_MODELS)
+def built(request):
+    spec = get_spec(request.param)
+    fns = model_lib.build_functions(spec)
+    return request.param, spec, fns
+
+
+class TestAllModels:
+    def test_init_is_deterministic_in_seed(self, built):
+        _, _, (init_fn, _, _, _) = built
+        (a,) = init_fn(jnp.int32(7))
+        (b,) = init_fn(jnp.int32(7))
+        (c,) = init_fn(jnp.int32(8))
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_param_count_matches_manifest(self, built):
+        _, _, (init_fn, _, _, manifest) = built
+        (flat,) = init_fn(jnp.int32(0))
+        assert flat.shape == (manifest["param_count"],)
+        assert flat.dtype == jnp.float32
+
+    def test_layer_ranges_tile_param_vector(self, built):
+        _, _, (_, _, _, manifest) = built
+        ranges = manifest["layer_ranges"]
+        assert ranges[0][0] == 0
+        assert ranges[-1][1] == manifest["param_count"]
+        for (a0, a1), (b0, _) in zip(ranges, ranges[1:]):
+            assert a1 == b0, "ranges must be contiguous"
+            assert a0 < a1
+
+    def test_step_reduces_loss_on_fixed_batch(self, built):
+        _, spec, (init_fn, step_fn, _, _) = built
+        (flat,) = init_fn(jnp.int32(0))
+        x, y = make_batch(spec, spec.batch_size)
+        lr = jnp.float32(0.1)
+        _, loss0 = step_fn(flat, x, y, lr)
+        for _ in range(5):
+            flat, loss = step_fn(flat, x, y, lr)
+        assert float(loss) < float(loss0), "5 steps on one batch must overfit"
+
+    def test_step_loss_is_finite_and_positive(self, built):
+        _, spec, (init_fn, step_fn, _, _) = built
+        (flat,) = init_fn(jnp.int32(3))
+        x, y = make_batch(spec, spec.batch_size, seed=3)
+        new, loss = step_fn(flat, x, y, jnp.float32(0.05))
+        assert np.isfinite(float(loss)) and float(loss) > 0
+        assert np.all(np.isfinite(np.asarray(new)))
+
+    def test_eval_sums_scale_with_batch(self, built):
+        _, spec, (init_fn, _, eval_fn, _) = built
+        (flat,) = init_fn(jnp.int32(1))
+        x, y = make_batch(spec, spec.eval_batch_size, seed=5)
+        loss_sum, metric_sum = eval_fn(flat, x, y)
+        assert np.isfinite(float(loss_sum))
+        if spec.kind == "classification":
+            assert 0.0 <= float(metric_sum) <= spec.eval_batch_size
+        else:
+            assert float(metric_sum) == spec.eval_batch_size * spec.y_dim
+
+    def test_zero_lr_step_keeps_params(self, built):
+        _, spec, (init_fn, step_fn, _, _) = built
+        (flat,) = init_fn(jnp.int32(2))
+        x, y = make_batch(spec, spec.batch_size, seed=2)
+        new, _ = step_fn(flat, x, y, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(flat))
+
+    def test_step_matches_manual_grad_descent(self, built):
+        # The fused pallas update inside step == params - lr * grad.
+        _, spec, (init_fn, step_fn, _, manifest) = built
+        (flat,) = init_fn(jnp.int32(4))
+        x, y = make_batch(spec, spec.batch_size, seed=4)
+        _, _, unravel = __import__(
+            "compile.models.common", fromlist=["flatten_info"]
+        ).flatten_info(spec)
+
+        def loss_flat(f):
+            return spec.loss_fn(unravel(f), x, y)
+
+        grads = jax.grad(loss_flat)(flat)
+        lr = jnp.float32(0.05)
+        want = np.asarray(flat) - 0.05 * np.asarray(grads)
+        got, _ = step_fn(flat, x, y, lr)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+class TestMlpMatchesRustSurrogate:
+    """The `mlp` flat layout is a contract with the Rust MlpClassifier."""
+
+    def test_flat_layout_is_w1_b1_w2_b2(self):
+        spec = get_spec("mlp")
+        _, _, _, manifest = model_lib.build_functions(spec)
+        d, h, c = 32, 64, 10
+        assert manifest["layer_ranges"] == [
+            [0, h * d],
+            [h * d, h * d + h],
+            [h * d + h, h * d + h + c * h],
+            [h * d + h + c * h, h * d + h + c * h + c],
+        ]
+
+    def test_forward_formula(self):
+        # logits = W2 tanh(W1 x + b1) + b2 with row-major W blocks —
+        # exactly the Rust surrogate's formula.
+        spec = get_spec("mlp")
+        init_fn, step_fn, _, manifest = model_lib.build_functions(spec)
+        (flat,) = init_fn(jnp.int32(0))
+        flat_np = np.asarray(flat)
+        d, h, c = 32, 64, 10
+        w1 = flat_np[: h * d].reshape(h, d)
+        b1 = flat_np[h * d : h * d + h]
+        w2 = flat_np[h * d + h : h * d + h + c * h].reshape(c, h)
+        b2 = flat_np[h * d + h + c * h :]
+        x, y = make_batch(spec, spec.batch_size, seed=9)
+        logits = np.tanh(x @ w1.T + b1) @ w2.T + b2
+        logp = logits - np.log(np.exp(logits - logits.max(1, keepdims=True)).sum(1, keepdims=True)) - logits.max(1, keepdims=True)
+        want_loss = -logp[np.arange(len(y)), y].mean()
+        _, got_loss = step_fn(flat, x, y, jnp.float32(0.0))
+        np.testing.assert_allclose(float(got_loss), want_loss, rtol=1e-5)
+
+
+class TestTransformerPresets:
+    def test_param_count_formula_matches(self):
+        for preset in ["transformer", "transformer_e2e"]:
+            spec = transformer_mod.spec(preset)
+            _, _, _, manifest = model_lib.build_functions(spec)
+            assert manifest["param_count"] == transformer_mod.param_count(preset)
+
+    def test_100m_preset_is_100m(self):
+        # Executability-proof preset really is ~100M params.
+        assert transformer_mod.param_count("transformer_100m") > 95_000_000
+
+    def test_causality(self):
+        # Changing a future token must not change past logits.
+        spec = get_spec("transformer")
+        cfg = transformer_mod.PRESETS["transformer"]
+        params = spec.init_raw(jax.random.PRNGKey(0))
+        x = np.zeros((1, cfg.seq), np.float32)
+        base = transformer_mod._forward(params, jnp.asarray(x), cfg)
+        x2 = x.copy()
+        x2[0, -1] = 5.0
+        pert = transformer_mod._forward(params, jnp.asarray(x2), cfg)
+        np.testing.assert_allclose(
+            np.asarray(base)[0, : cfg.seq - 1],
+            np.asarray(pert)[0, : cfg.seq - 1],
+            rtol=1e-5,
+            atol=1e-6,
+        )
+        assert not np.allclose(np.asarray(base)[0, -1], np.asarray(pert)[0, -1])

@@ -1,0 +1,153 @@
+//! `dbench` — the benchmarking-framework CLI of §3: runs the controlled
+//! experiment grids (workload × scale × SGD implementation), writes
+//! per-iteration JSONL plus summary tables, and prints the §3.3 variance
+//! ranking analysis.
+//!
+//! ```text
+//! dbench list                                   # available specs
+//! dbench run --app resnet20 --scales 8,16 --epochs 4
+//! dbench run --spec configs/fig3_resnet20.toml  # from TOML
+//! dbench ada --app densenet --workers 16        # Fig 7-style comparison
+//! ```
+
+use ada_dist::config::LauncherConfig;
+use ada_dist::coordinator::SgdFlavor;
+use ada_dist::dbench::{format_table, rank_analysis, run_experiment, ExperimentSpec};
+use ada_dist::optim::ScalingRule;
+use ada_dist::util::cli::Args;
+use anyhow::{anyhow, bail, Context};
+use std::io::Write as _;
+
+const USAGE: &str = "\
+dbench <command> [options]
+  list   built-in application specs
+  run    experiment grid (Fig 2/3/4/5-style)
+    --app resnet20|resnet50|densenet|lstm | --spec FILE.toml
+    --scales 8,16,32 --epochs N --max-iters N --sqrt-scaling --save-records
+  ada    Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
+    --app NAME --workers N --epochs N --k0 N --gamma-k F
+  (global) --config PATH   launcher TOML";
+
+fn builtin(app: &str) -> anyhow::Result<ExperimentSpec> {
+    Ok(match app {
+        "resnet20" => ExperimentSpec::resnet20_analog(),
+        "resnet50" => ExperimentSpec::resnet50_analog(),
+        "densenet" => ExperimentSpec::densenet_analog(),
+        "lstm" => ExperimentSpec::lstm_analog(),
+        other => bail!("unknown app {other} (resnet20|resnet50|densenet|lstm)"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["sqrt-scaling", "save-records", "help"],
+    )
+    .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let cfg = match args.get("config") {
+        Some(p) => LauncherConfig::from_file(std::path::Path::new(p))
+            .context("loading launcher config")?,
+        None => LauncherConfig::default(),
+    };
+
+    match args.command.as_deref() {
+        Some("list") => {
+            for spec in ExperimentSpec::four_applications() {
+                println!(
+                    "{:<28} workload={:<16} scales={:?} epochs={}",
+                    spec.name,
+                    spec.workload.name(),
+                    spec.scales,
+                    spec.epochs
+                );
+            }
+            Ok(())
+        }
+        Some("run") => cmd_run(&args, &cfg),
+        Some("ada") => cmd_ada(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
+    let mut spec = match (args.get("app"), args.get("spec")) {
+        (Some(app), None) => builtin(app)?,
+        (None, Some(path)) => ExperimentSpec::from_toml_file(std::path::Path::new(path))?,
+        _ => bail!("pass exactly one of --app or --spec\n\n{USAGE}"),
+    };
+    if let Some(scales) = args.get_list::<usize>("scales").map_err(|e| anyhow!(e))? {
+        spec.scales = scales;
+    }
+    if let Some(e) = args.get_opt::<usize>("epochs").map_err(|e| anyhow!(e))? {
+        spec.epochs = e;
+    }
+    if let Some(m) = args.get_opt::<usize>("max-iters").map_err(|e| anyhow!(e))? {
+        spec.max_iters_per_epoch = Some(m);
+    }
+    if args.has_flag("sqrt-scaling") {
+        spec.scaling = ScalingRule::Sqrt;
+    }
+    let t0 = std::time::Instant::now();
+    let cells = run_experiment(&spec)?;
+    println!(
+        "{}",
+        format_table(&format!("{} ({:.1?})", spec.name, t0.elapsed()), &cells)
+    );
+    // Per-scale ranking analysis (Fig. 5).
+    for &scale in &spec.scales {
+        let scale_cells: Vec<_> = cells.iter().filter(|c| c.scale == scale).collect();
+        if scale_cells.len() < 2 {
+            continue;
+        }
+        let rank = rank_analysis(scale_cells.iter().copied());
+        println!("variance ranks @ {scale} workers (1 = lowest variance):");
+        for (name, mean) in rank.ordering() {
+            println!("  {name:<16} mean rank {mean:.2}");
+        }
+    }
+    if args.has_flag("save-records") {
+        let out = cfg.ensure_output_dir()?;
+        for c in &cells {
+            let path = out.join(format!("{}_{}_{}.jsonl", spec.name, c.scale, c.flavor));
+            let mut file = std::fs::File::create(&path)?;
+            for r in c.recorder.records() {
+                writeln!(file, "{}", r.to_json().to_string())?;
+            }
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ada(args: &Args) -> anyhow::Result<()> {
+    let app = args.get_or("app", "resnet20");
+    let workers: usize = args.get_parse("workers", 16).map_err(|e| anyhow!(e))?;
+    let epochs: usize = args.get_parse("epochs", 8).map_err(|e| anyhow!(e))?;
+    let k0: Option<usize> = args.get_opt("k0").map_err(|e| anyhow!(e))?;
+    let gamma_k: f64 = args.get_parse("gamma-k", 1.0).map_err(|e| anyhow!(e))?;
+    let mut spec = builtin(app)?;
+    spec.scales = vec![workers];
+    spec.epochs = epochs;
+    spec.flavors = vec![
+        SgdFlavor::CentralizedComplete,
+        SgdFlavor::DecentralizedRing,
+        SgdFlavor::DecentralizedTorus,
+        SgdFlavor::Ada {
+            k0: k0.unwrap_or(workers.saturating_sub(1).max(2)),
+            gamma_k,
+        },
+    ];
+    let t0 = std::time::Instant::now();
+    let cells = run_experiment(&spec)?;
+    println!(
+        "{}",
+        format_table(
+            &format!("Ada comparison: {} @ {workers} ({:.1?})", spec.name, t0.elapsed()),
+            &cells
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Launcher configuration: the process-level settings shared by the
+//! `ada` and `dbench` binaries (artifact root, output directory),
+//! loadable from TOML and overridable from the CLI.
+
+use crate::error::Result;
+use crate::util::tomlmini::{TomlDoc, TomlValue};
+use std::path::{Path, PathBuf};
+
+/// Process-level configuration.
+#[derive(Debug, Clone)]
+pub struct LauncherConfig {
+    /// Root of AOT artifacts (`make artifacts` output).
+    pub artifact_dir: PathBuf,
+    /// Where run records / tables are written.
+    pub output_dir: PathBuf,
+}
+
+impl Default for LauncherConfig {
+    fn default() -> Self {
+        LauncherConfig {
+            artifact_dir: PathBuf::from("artifacts"),
+            output_dir: PathBuf::from("out"),
+        }
+    }
+}
+
+impl LauncherConfig {
+    /// Load from a TOML file (`artifact_dir` / `output_dir` keys).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = LauncherConfig::default();
+        if let Some(v) = doc.get("artifact_dir").and_then(TomlValue::as_str) {
+            cfg.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get("output_dir").and_then(TomlValue::as_str) {
+            cfg.output_dir = PathBuf::from(v);
+        }
+        Ok(cfg)
+    }
+
+    /// Ensure the output directory exists and return it.
+    pub fn ensure_output_dir(&self) -> Result<&Path> {
+        std::fs::create_dir_all(&self.output_dir)?;
+        Ok(&self.output_dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = LauncherConfig::default();
+        assert_eq!(c.artifact_dir, PathBuf::from("artifacts"));
+        assert_eq!(c.output_dir, PathBuf::from("out"));
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let c = LauncherConfig::from_toml_str("artifact_dir = \"/x\"\n").unwrap();
+        assert_eq!(c.artifact_dir, PathBuf::from("/x"));
+        assert_eq!(c.output_dir, PathBuf::from("out"), "default kept");
+    }
+
+    #[test]
+    fn ensure_output_dir_creates() {
+        let dir = crate::util::scratch_dir("config").unwrap();
+        let c = LauncherConfig {
+            output_dir: dir.join("nested/out"),
+            ..Default::default()
+        };
+        assert!(c.ensure_output_dir().is_ok());
+        assert!(dir.join("nested/out").is_dir());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,79 @@
+//! [`LocalModel`] over an AOT-compiled [`ModelBundle`] — the production
+//! path: every local step is one PJRT execution of the fused
+//! fwd+bwd+update HLO, and Python is nowhere in sight.
+
+use super::LocalModel;
+use crate::data::Batch;
+use crate::error::{AdaError, Result};
+use crate::runtime::{ModelBundle, ModelKind};
+
+/// HLO-backed model replica compute.
+#[derive(Debug)]
+pub struct HloModel {
+    bundle: ModelBundle,
+}
+
+impl HloModel {
+    /// Wrap a loaded bundle.
+    pub fn new(bundle: ModelBundle) -> Self {
+        HloModel { bundle }
+    }
+
+    /// The underlying bundle.
+    pub fn bundle(&self) -> &ModelBundle {
+        &self.bundle
+    }
+}
+
+impl LocalModel for HloModel {
+    fn param_count(&self) -> usize {
+        self.bundle.manifest.param_count
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.bundle.manifest.kind
+    }
+
+    fn batch_size(&self) -> usize {
+        self.bundle.manifest.batch_size
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.bundle.manifest.eval_batch_size
+    }
+
+    fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        self.bundle.manifest.layer_ranges.clone()
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        self.bundle.init_params(seed)
+    }
+
+    fn local_step(
+        &mut self,
+        _worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        Ok(self.bundle.local_step(params, batch, lr)?.loss)
+    }
+
+    fn loss_and_grad(&self, _params: &[f32], _batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        // The HLO step is fused (fwd+bwd+update in one executable by
+        // design); raw gradients never leave the device. Centralized
+        // gradient averaging therefore runs on the surrogate models —
+        // see DESIGN.md §3. (For plain SGD, C_complete is mathematically
+        // identical to D_complete, which the HLO path does support.)
+        Err(AdaError::Coordinator(
+            "HLO models expose only the fused step; use D_* algorithms \
+             (or a surrogate model for C_complete)"
+                .into(),
+        ))
+    }
+
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        self.bundle.eval_batch(params, batch)
+    }
+}

@@ -1,0 +1,134 @@
+//! LARS-wrapped models — the paper's proposed future work (§4.2):
+//! "The application of layer-wise adaptive rate scaling (LARS) to the
+//! decentralized setting might be an option to further improve the
+//! performance of our approach."
+//!
+//! [`LarsWrapped`] turns any gradient-exposing [`LocalModel`] into one
+//! whose local step applies per-worker LARS (layer-wise trust ratios +
+//! momentum) instead of plain momentum SGD, so every decentralized
+//! flavor — including Ada — can train large-batch with LARS. Benchmarked
+//! in `benches/ablation_bench.rs`.
+
+use super::LocalModel;
+use crate::data::Batch;
+use crate::error::Result;
+use crate::optim::Lars;
+use crate::runtime::ModelKind;
+
+/// A [`LocalModel`] whose update rule is LARS.
+pub struct LarsWrapped<M: LocalModel> {
+    inner: M,
+    states: Vec<Lars>,
+}
+
+impl<M: LocalModel> LarsWrapped<M> {
+    /// Wrap `inner` with per-worker LARS state (`eta` trust coefficient).
+    pub fn new(inner: M, n_workers: usize, eta: f32, momentum: f32, weight_decay: f32) -> Self {
+        let ranges = inner.layer_ranges();
+        let p = inner.param_count();
+        let states = (0..n_workers)
+            .map(|_| Lars::new(p, ranges.clone(), eta, momentum, weight_decay))
+            .collect();
+        LarsWrapped { inner, states }
+    }
+
+    /// The wrapped model.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: LocalModel> LocalModel for LarsWrapped<M> {
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.inner.kind()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.inner.eval_batch_size()
+    }
+
+    fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        self.inner.layer_ranges()
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        self.inner.init_params(seed)
+    }
+
+    fn local_step(
+        &mut self,
+        worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let (loss, grads) = self.inner.loss_and_grad(params, batch)?;
+        self.states
+            .get_mut(worker)
+            .ok_or_else(|| {
+                crate::AdaError::Coordinator(format!("no LARS slot for worker {worker}"))
+            })?
+            .step(params, &grads, lr);
+        Ok(loss)
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        self.inner.loss_and_grad(params, batch)
+    }
+
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        self.inner.eval_sums(params, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::surrogate::SoftmaxRegression;
+    use crate::coordinator::{SgdFlavor, TrainConfig, Trainer};
+    use crate::data::{Dataset, SyntheticClassification};
+
+    #[test]
+    fn lars_wrapped_trains_decentralized() {
+        let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 19);
+        let base = SoftmaxRegression::new(8, 4, 16, 32, 8, 0.0);
+        let mut model = LarsWrapped::new(base, 8, 0.02, 0.9, 1e-4);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.lr = crate::coordinator::LrPolicy::Fixed {
+            schedule: crate::optim::LrSchedule::Constant { lr: 1.0 },
+        };
+        let mut trainer = Trainer::new(&mut model, cfg);
+        let (_, summary) = trainer
+            .run(&data, &SgdFlavor::Ada { k0: 7, gamma_k: 1.5 })
+            .unwrap();
+        assert!(!summary.diverged);
+        assert!(
+            summary.final_eval.metric > 0.5,
+            "LARS + Ada must learn: {}",
+            summary.final_eval.metric
+        );
+    }
+
+    #[test]
+    fn lars_step_differs_from_plain_sgd() {
+        let data = SyntheticClassification::generate(64, 8, 4, 3.0, 5);
+        let batch = data.batch(&(0..16).collect::<Vec<_>>());
+        let base = SoftmaxRegression::new(8, 4, 16, 32, 1, 0.0);
+        let p0 = base.init_params(1).unwrap();
+        let mut plain = SoftmaxRegression::new(8, 4, 16, 32, 1, 0.0);
+        let mut a = p0.clone();
+        plain.local_step(0, &mut a, &batch, 0.1).unwrap();
+        let mut lars = LarsWrapped::new(SoftmaxRegression::new(8, 4, 16, 32, 1, 0.0), 1, 0.001, 0.0, 0.0);
+        let mut b = p0.clone();
+        lars.local_step(0, &mut b, &batch, 0.1).unwrap();
+        assert_ne!(a, b, "trust-ratio scaling must change the update");
+    }
+}

@@ -1,0 +1,80 @@
+//! The decentralized training coordinator — the paper's L3 contribution.
+//!
+//! [`Trainer`] owns `n` worker slots (each a model replica as a flat f32
+//! parameter vector plus a data shard) and drives the §2.1 iteration
+//! structure: local fwd/bwd/update on every worker, **pre-averaging
+//! metric capture** (the DBench instrumentation point), then a gossip
+//! round over the epoch's communication graph. Centralized SGD
+//! (`C_complete`) instead averages *gradients* globally with a shared
+//! momentum buffer — the PyTorch-DDP baseline of §3.1.2.
+//!
+//! Models plug in through [`LocalModel`]: either [`HloModel`] (the AOT
+//! JAX/Pallas artifacts run via PJRT — the production path) or the pure
+//! Rust [`surrogate`] models (fast, used by the large DBench sweeps; see
+//! EXPERIMENTS.md for where each is used).
+
+pub mod checkpoint;
+mod hlo_model;
+mod lars_model;
+pub mod surrogate;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use hlo_model::HloModel;
+pub use lars_model::LarsWrapped;
+pub use trainer::{LrPolicy, RunSummary, SgdFlavor, TrainConfig, Trainer};
+
+use crate::data::Batch;
+use crate::error::Result;
+use crate::runtime::ModelKind;
+
+/// A model replica's compute: everything the coordinator needs to train
+/// and evaluate one worker's copy.
+pub trait LocalModel {
+    /// Flat parameter-vector length.
+    fn param_count(&self) -> usize;
+    /// Task family (decides metric interpretation).
+    fn kind(&self) -> ModelKind;
+    /// Training batch rows per step.
+    fn batch_size(&self) -> usize;
+    /// Eval batch rows per eval call.
+    fn eval_batch_size(&self) -> usize;
+    /// Flat-vector layer boundaries (for LARS and per-tensor variance).
+    fn layer_ranges(&self) -> Vec<(usize, usize)>;
+    /// Fresh parameters from a seed (identical across workers at start,
+    /// like the paper's identical model replicas).
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
+    /// Fused local step (fwd + bwd + update) for `worker`; `params`
+    /// updated in place; returns the batch mean loss.
+    fn local_step(
+        &mut self,
+        worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32>;
+    /// Loss and gradient without updating (needed by centralized SGD).
+    /// Models that only expose a fused step (the HLO bundles) return an
+    /// error, restricting them to the decentralized algorithms.
+    fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)>;
+    /// `(loss_sum, metric_sum)` over one eval batch: metric_sum is the
+    /// correct-prediction count (classification) or token count (LM,
+    /// where loss_sum is the summed token NLL).
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)>;
+}
+
+/// Final evaluation numbers of a model on a test set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    /// Mean loss per example (classification) or per token (LM).
+    pub loss: f64,
+    /// Accuracy in [0,1] (classification) or perplexity (LM).
+    pub metric: f64,
+}
+
+impl EvalResult {
+    /// Whether a higher metric is better (accuracy yes, perplexity no).
+    pub fn higher_is_better(kind: ModelKind) -> bool {
+        matches!(kind, ModelKind::Classification)
+    }
+}

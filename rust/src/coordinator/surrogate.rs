@@ -1,0 +1,670 @@
+//! Pure-Rust surrogate models with hand-derived gradients.
+//!
+//! The big DBench sweeps run 5 SGD implementations × 4 scales × hundreds
+//! of iterations × up to 64 workers; driving every one of those steps
+//! through PJRT would spend the benchmark budget on dispatch overhead.
+//! These surrogates implement the same [`LocalModel`] contract with the
+//! same flat-parameter layout conventions, exact analytic gradients, and
+//! per-worker momentum (which is what makes centralized vs decentralized
+//! *genuinely different* — momentum buffers are local in decentralized
+//! SGD). The HLO bundles remain the production path and are
+//! cross-validated against these in `rust/tests/`.
+
+use super::LocalModel;
+use crate::data::Batch;
+use crate::error::{AdaError, Result};
+use crate::optim::SgdState;
+use crate::runtime::ModelKind;
+use crate::util::rng::Rng;
+
+/// Numerically stable log-softmax over a logits row, in place.
+fn log_softmax(row: &mut [f32]) {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v -= max;
+        sum += v.exp();
+    }
+    let lse = sum.ln();
+    for v in row.iter_mut() {
+        *v -= lse;
+    }
+}
+
+/// Multinomial logistic regression (`W: classes × dim`, `b: classes`) —
+/// the smallest member of the workload family (ResNet20 stand-in scale).
+#[derive(Debug)]
+pub struct SoftmaxRegression {
+    dim: usize,
+    classes: usize,
+    batch_size: usize,
+    eval_batch_size: usize,
+    momentum: Vec<SgdState>,
+    momentum_coef: f32,
+}
+
+impl SoftmaxRegression {
+    /// Build for `n_workers` worker slots.
+    pub fn new(
+        dim: usize,
+        classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        n_workers: usize,
+        momentum: f32,
+    ) -> Self {
+        let p = dim * classes + classes;
+        SoftmaxRegression {
+            dim,
+            classes,
+            batch_size,
+            eval_batch_size,
+            momentum: (0..n_workers)
+                .map(|_| SgdState::new(p, momentum, 0.0))
+                .collect(),
+            momentum_coef: momentum,
+        }
+    }
+
+    /// Logits for one example.
+    fn logits(&self, params: &[f32], x: &[f32], out: &mut [f32]) {
+        let (w, b) = params.split_at(self.dim * self.classes);
+        for c in 0..self.classes {
+            let row = &w[c * self.dim..(c + 1) * self.dim];
+            let mut acc = b[c];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[c] = acc;
+        }
+    }
+
+    fn grad_impl(&self, params: &[f32], batch: &Batch) -> (f32, Vec<f32>) {
+        let mut grads = vec![0.0f32; params.len()];
+        let mut loss = 0.0f32;
+        let mut logit = vec![0.0f32; self.classes];
+        let bsz = batch.batch_size;
+        let (gw, gb) = grads.split_at_mut(self.dim * self.classes);
+        for i in 0..bsz {
+            let x = &batch.x[i * self.dim..(i + 1) * self.dim];
+            let y = batch.y[i] as usize;
+            self.logits(params, x, &mut logit);
+            log_softmax(&mut logit);
+            loss -= logit[y];
+            for c in 0..self.classes {
+                let p = logit[c].exp();
+                let err = p - if c == y { 1.0 } else { 0.0 };
+                let row = &mut gw[c * self.dim..(c + 1) * self.dim];
+                for (g, xi) in row.iter_mut().zip(x) {
+                    *g += err * xi;
+                }
+                gb[c] += err;
+            }
+        }
+        let inv = 1.0 / bsz as f32;
+        for g in grads.iter_mut() {
+            *g *= inv;
+        }
+        (loss * inv, grads)
+    }
+}
+
+impl LocalModel for SoftmaxRegression {
+    fn param_count(&self) -> usize {
+        self.dim * self.classes + self.classes
+    }
+
+    fn kind(&self) -> ModelKind {
+        ModelKind::Classification
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch_size
+    }
+
+    fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        let wb = self.dim * self.classes;
+        vec![(0, wb), (wb, wb + self.classes)]
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed as u64);
+        let scale = (1.0 / self.dim as f32).sqrt();
+        let mut p: Vec<f32> = (0..self.dim * self.classes)
+            .map(|_| rng.range_f32(-scale, scale))
+            .collect();
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        Ok(p)
+    }
+
+    fn local_step(
+        &mut self,
+        worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let (loss, grads) = self.grad_impl(params, batch);
+        self.momentum
+            .get_mut(worker)
+            .ok_or_else(|| AdaError::Coordinator(format!("no momentum slot for worker {worker}")))?
+            .step(params, &grads, lr);
+        Ok(loss)
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        Ok(self.grad_impl(params, batch))
+    }
+
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut logit = vec![0.0f32; self.classes];
+        for i in 0..batch.batch_size {
+            let x = &batch.x[i * self.dim..(i + 1) * self.dim];
+            let y = batch.y[i] as usize;
+            self.logits(params, x, &mut logit);
+            log_softmax(&mut logit);
+            loss_sum -= logit[y];
+            let argmax = logit
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("NaN logit"))
+                .map(|(c, _)| c)
+                .expect("nonempty logits");
+            if argmax == y {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
+impl SoftmaxRegression {
+    /// Reset all workers' momentum (used between DBench runs).
+    pub fn reset_momentum(&mut self) {
+        for m in self.momentum.iter_mut() {
+            m.reset();
+        }
+    }
+
+    /// Momentum coefficient.
+    pub fn momentum_coef(&self) -> f32 {
+        self.momentum_coef
+    }
+}
+
+/// One-hidden-layer tanh MLP classifier — the mid-sized workload
+/// (DenseNet100 stand-in scale). Layout: `W1(h×d) ‖ b1(h) ‖ W2(c×h) ‖ b2(c)`.
+#[derive(Debug)]
+pub struct MlpClassifier {
+    dim: usize,
+    hidden: usize,
+    classes: usize,
+    batch_size: usize,
+    eval_batch_size: usize,
+    momentum: Vec<SgdState>,
+}
+
+impl MlpClassifier {
+    /// Build for `n_workers` worker slots.
+    pub fn new(
+        dim: usize,
+        hidden: usize,
+        classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        n_workers: usize,
+        momentum: f32,
+    ) -> Self {
+        let p = hidden * dim + hidden + classes * hidden + classes;
+        MlpClassifier {
+            dim,
+            hidden,
+            classes,
+            batch_size,
+            eval_batch_size,
+            momentum: (0..n_workers)
+                .map(|_| SgdState::new(p, momentum, 0.0))
+                .collect(),
+        }
+    }
+
+    fn split<'a>(&self, params: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let (w1, rest) = params.split_at(h * d);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(c * h);
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward one example; fills `hid` (tanh activations) and `logit`.
+    fn forward(&self, params: &[f32], x: &[f32], hid: &mut [f32], logit: &mut [f32]) {
+        let (w1, b1, w2, b2) = self.split(params);
+        for j in 0..self.hidden {
+            let row = &w1[j * self.dim..(j + 1) * self.dim];
+            let mut acc = b1[j];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            hid[j] = acc.tanh();
+        }
+        for c in 0..self.classes {
+            let row = &w2[c * self.hidden..(c + 1) * self.hidden];
+            let mut acc = b2[c];
+            for (wi, hi) in row.iter().zip(hid.iter()) {
+                acc += wi * hi;
+            }
+            logit[c] = acc;
+        }
+    }
+
+    fn grad_impl(&self, params: &[f32], batch: &Batch) -> (f32, Vec<f32>) {
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let mut grads = vec![0.0f32; params.len()];
+        let mut loss = 0.0f32;
+        let mut hid = vec![0.0f32; h];
+        let mut logit = vec![0.0f32; c];
+        let mut dh = vec![0.0f32; h];
+        let (_, _, w2, _) = self.split(params);
+        let w2 = w2.to_vec(); // borrow dance: params vs grads
+        for i in 0..batch.batch_size {
+            let x = &batch.x[i * d..(i + 1) * d];
+            let y = batch.y[i] as usize;
+            self.forward(params, x, &mut hid, &mut logit);
+            log_softmax(&mut logit);
+            loss -= logit[y];
+            dh.iter_mut().for_each(|v| *v = 0.0);
+            {
+                let (gw1, rest) = grads.split_at_mut(h * d);
+                let (gb1, rest) = rest.split_at_mut(h);
+                let (gw2, gb2) = rest.split_at_mut(c * h);
+                for cc in 0..c {
+                    let p = logit[cc].exp();
+                    let err = p - if cc == y { 1.0 } else { 0.0 };
+                    let row = &mut gw2[cc * h..(cc + 1) * h];
+                    for (g, hi) in row.iter_mut().zip(hid.iter()) {
+                        *g += err * hi;
+                    }
+                    gb2[cc] += err;
+                    let wrow = &w2[cc * h..(cc + 1) * h];
+                    for (dv, wi) in dh.iter_mut().zip(wrow) {
+                        *dv += err * wi;
+                    }
+                }
+                for j in 0..h {
+                    let dz = dh[j] * (1.0 - hid[j] * hid[j]); // tanh'
+                    let row = &mut gw1[j * d..(j + 1) * d];
+                    for (g, xi) in row.iter_mut().zip(x) {
+                        *g += dz * xi;
+                    }
+                    gb1[j] += dz;
+                }
+            }
+        }
+        let inv = 1.0 / batch.batch_size as f32;
+        for g in grads.iter_mut() {
+            *g *= inv;
+        }
+        (loss * inv, grads)
+    }
+}
+
+impl LocalModel for MlpClassifier {
+    fn param_count(&self) -> usize {
+        self.hidden * self.dim + self.hidden + self.classes * self.hidden + self.classes
+    }
+
+    fn kind(&self) -> ModelKind {
+        ModelKind::Classification
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch_size
+    }
+
+    fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let a = h * d;
+        let b = a + h;
+        let e = b + c * h;
+        vec![(0, a), (a, b), (b, e), (e, e + c)]
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed as u64 ^ 0x4D4C50);
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let s1 = (1.0 / d as f32).sqrt();
+        let s2 = (1.0 / h as f32).sqrt();
+        let mut p: Vec<f32> = (0..h * d).map(|_| rng.range_f32(-s1, s1)).collect();
+        p.extend(std::iter::repeat(0.0f32).take(h));
+        p.extend((0..c * h).map(|_| rng.range_f32(-s2, s2)));
+        p.extend(std::iter::repeat(0.0f32).take(c));
+        Ok(p)
+    }
+
+    fn local_step(
+        &mut self,
+        worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let (loss, grads) = self.grad_impl(params, batch);
+        self.momentum
+            .get_mut(worker)
+            .ok_or_else(|| AdaError::Coordinator(format!("no momentum slot for worker {worker}")))?
+            .step(params, &grads, lr);
+        Ok(loss)
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        Ok(self.grad_impl(params, batch))
+    }
+
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut hid = vec![0.0f32; self.hidden];
+        let mut logit = vec![0.0f32; self.classes];
+        for i in 0..batch.batch_size {
+            let x = &batch.x[i * self.dim..(i + 1) * self.dim];
+            let y = batch.y[i] as usize;
+            self.forward(params, x, &mut hid, &mut logit);
+            log_softmax(&mut logit);
+            loss_sum -= logit[y];
+            let argmax = logit
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("NaN logit"))
+                .map(|(cc, _)| cc)
+                .expect("nonempty");
+            if argmax == y {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
+/// Bigram language model: logits for the next token are a learned row
+/// per current token (`W: vocab × vocab`) — the LM-family surrogate
+/// (LSTM/WikiText2 stand-in; perplexity-metric workload).
+#[derive(Debug)]
+pub struct BigramLm {
+    vocab: usize,
+    seq_len: usize,
+    batch_size: usize,
+    eval_batch_size: usize,
+    momentum: Vec<SgdState>,
+}
+
+impl BigramLm {
+    /// Build for `n_workers` worker slots.
+    pub fn new(
+        vocab: usize,
+        seq_len: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        n_workers: usize,
+        momentum: f32,
+    ) -> Self {
+        BigramLm {
+            vocab,
+            seq_len,
+            batch_size,
+            eval_batch_size,
+            momentum: (0..n_workers)
+                .map(|_| SgdState::new(vocab * vocab, momentum, 0.0))
+                .collect(),
+        }
+    }
+
+    fn grad_impl(&self, params: &[f32], batch: &Batch) -> (f32, Vec<f32>) {
+        let v = self.vocab;
+        let mut grads = vec![0.0f32; params.len()];
+        let mut loss = 0.0f32;
+        let mut logit = vec![0.0f32; v];
+        let tokens = batch.batch_size * self.seq_len;
+        for i in 0..batch.batch_size {
+            for t in 0..self.seq_len {
+                let cur = batch.x[i * self.seq_len + t] as usize;
+                let next = batch.y[i * self.seq_len + t] as usize;
+                logit.copy_from_slice(&params[cur * v..(cur + 1) * v]);
+                log_softmax(&mut logit);
+                loss -= logit[next];
+                let grow = &mut grads[cur * v..(cur + 1) * v];
+                for (c, g) in grow.iter_mut().enumerate() {
+                    let p = logit[c].exp();
+                    *g += p - if c == next { 1.0 } else { 0.0 };
+                }
+            }
+        }
+        let inv = 1.0 / tokens as f32;
+        for g in grads.iter_mut() {
+            *g *= inv;
+        }
+        (loss * inv, grads)
+    }
+}
+
+impl LocalModel for BigramLm {
+    fn param_count(&self) -> usize {
+        self.vocab * self.vocab
+    }
+
+    fn kind(&self) -> ModelKind {
+        ModelKind::Lm
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch_size
+    }
+
+    fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        // One row per token is the natural tensor granularity.
+        let v = self.vocab;
+        (0..v.min(8)).map(|r| (r * v, (r + 1) * v)).collect()
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed as u64 ^ 0x4C4D);
+        let s = 0.01f32;
+        Ok((0..self.vocab * self.vocab)
+            .map(|_| rng.range_f32(-s, s))
+            .collect())
+    }
+
+    fn local_step(
+        &mut self,
+        worker: usize,
+        params: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let (loss, grads) = self.grad_impl(params, batch);
+        self.momentum
+            .get_mut(worker)
+            .ok_or_else(|| AdaError::Coordinator(format!("no momentum slot for worker {worker}")))?
+            .step(params, &grads, lr);
+        Ok(loss)
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        Ok(self.grad_impl(params, batch))
+    }
+
+    fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let v = self.vocab;
+        let mut nll = 0.0f32;
+        let mut logit = vec![0.0f32; v];
+        let tokens = batch.batch_size * self.seq_len;
+        for i in 0..batch.batch_size {
+            for t in 0..self.seq_len {
+                let cur = batch.x[i * self.seq_len + t] as usize;
+                let next = batch.y[i * self.seq_len + t] as usize;
+                logit.copy_from_slice(&params[cur * v..(cur + 1) * v]);
+                log_softmax(&mut logit);
+                nll -= logit[next];
+            }
+        }
+        Ok((nll, tokens as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, SyntheticClassification, SyntheticLm};
+
+    fn finite_diff_check(
+        model: &dyn LocalModel,
+        params: &[f32],
+        batch: &Batch,
+        indices: &[usize],
+    ) {
+        let (_, grads) = model.loss_and_grad(params, batch).unwrap();
+        let eps = 1e-3f32;
+        for &i in indices {
+            let mut plus = params.to_vec();
+            plus[i] += eps;
+            let (lp, _) = model.loss_and_grad(&plus, batch).unwrap();
+            let mut minus = params.to_vec();
+            minus[i] -= eps;
+            let (lm, _) = model.loss_and_grad(&minus, batch).unwrap();
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - grads[i]).abs() < 2e-2_f32.max(0.1 * numeric.abs()),
+                "grad[{i}]: analytic {} vs numeric {numeric}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_gradient_matches_finite_differences() {
+        let data = SyntheticClassification::generate(64, 6, 3, 2.0, 1);
+        let m = SoftmaxRegression::new(6, 3, 16, 16, 1, 0.0);
+        let params = m.init_params(7).unwrap();
+        let batch = data.batch(&(0..16).collect::<Vec<_>>());
+        finite_diff_check(&m, &params, &batch, &[0, 5, 10, 17, 20]);
+    }
+
+    #[test]
+    fn mlp_gradient_matches_finite_differences() {
+        let data = SyntheticClassification::generate(64, 5, 3, 2.0, 2);
+        let m = MlpClassifier::new(5, 7, 3, 8, 8, 1, 0.0);
+        let params = m.init_params(3).unwrap();
+        let batch = data.batch(&(0..8).collect::<Vec<_>>());
+        let p = m.param_count();
+        finite_diff_check(&m, &params, &batch, &[0, 11, 35, 42, p - 1]);
+    }
+
+    #[test]
+    fn bigram_gradient_matches_finite_differences() {
+        let data = SyntheticLm::generate(16, 6, 8, 2, 3);
+        let m = BigramLm::new(8, 6, 4, 4, 1, 0.0);
+        let params = m.init_params(5).unwrap();
+        let batch = data.batch(&[0, 1, 2, 3]);
+        finite_diff_check(&m, &params, &batch, &[0, 9, 30, 63]);
+    }
+
+    #[test]
+    fn softmax_learns_separable_data() {
+        let data = SyntheticClassification::generate(512, 8, 4, 4.0, 11);
+        let mut m = SoftmaxRegression::new(8, 4, 32, 128, 1, 0.9);
+        let mut params = m.init_params(0).unwrap();
+        for epoch in 0..20 {
+            for b in 0..16 {
+                let idx: Vec<usize> = (0..32).map(|i| (b * 32 + i) % 512).collect();
+                let batch = data.batch(&idx);
+                m.local_step(0, &mut params, &batch, 0.1).unwrap();
+                let _ = epoch;
+            }
+        }
+        let test = data.batch(&(0..128).collect::<Vec<_>>());
+        let (_, correct) = m.eval_sums(&params, &test).unwrap();
+        let acc = correct / 128.0;
+        assert!(acc > 0.9, "separable data must be learnable, acc={acc}");
+    }
+
+    #[test]
+    fn mlp_learns_better_than_chance() {
+        let data = SyntheticClassification::generate(512, 8, 4, 3.0, 13);
+        let mut m = MlpClassifier::new(8, 16, 4, 32, 128, 1, 0.9);
+        let mut params = m.init_params(1).unwrap();
+        for _ in 0..15 {
+            for b in 0..16 {
+                let idx: Vec<usize> = (0..32).map(|i| (b * 32 + i) % 512).collect();
+                m.local_step(0, &mut params, &data.batch(&idx), 0.05).unwrap();
+            }
+        }
+        let test = data.batch(&(0..128).collect::<Vec<_>>());
+        let (_, correct) = m.eval_sums(&params, &test).unwrap();
+        assert!(correct / 128.0 > 0.6, "acc={}", correct / 128.0);
+    }
+
+    #[test]
+    fn bigram_reduces_perplexity() {
+        let data = SyntheticLm::generate(256, 16, 12, 2, 17);
+        let mut m = BigramLm::new(12, 16, 16, 64, 1, 0.9);
+        let mut params = m.init_params(2).unwrap();
+        let test = data.batch(&(0..64).collect::<Vec<_>>());
+        let (nll0, tok0) = m.eval_sums(&params, &test).unwrap();
+        let ppl0 = (nll0 / tok0).exp();
+        for _ in 0..10 {
+            for b in 0..16 {
+                let idx: Vec<usize> = (0..16).map(|i| (b * 16 + i) % 256).collect();
+                m.local_step(0, &mut params, &data.batch(&idx), 0.5).unwrap();
+            }
+        }
+        let (nll1, tok1) = m.eval_sums(&params, &test).unwrap();
+        let ppl1 = (nll1 / tok1).exp();
+        assert!(
+            ppl1 < ppl0 * 0.8,
+            "training must reduce perplexity: {ppl0} → {ppl1}"
+        );
+        assert!(ppl1 < 12.0, "below uniform-vocab perplexity: {ppl1}");
+    }
+
+    #[test]
+    fn layer_ranges_cover_params() {
+        let m = MlpClassifier::new(5, 7, 3, 8, 8, 1, 0.0);
+        let ranges = m.layer_ranges();
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, m.param_count());
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges must tile");
+        }
+    }
+
+    #[test]
+    fn per_worker_momentum_is_isolated() {
+        let data = SyntheticClassification::generate(64, 4, 2, 3.0, 5);
+        let mut m = SoftmaxRegression::new(4, 2, 8, 8, 2, 0.9);
+        let p0 = m.init_params(9).unwrap();
+        let batch = data.batch(&(0..8).collect::<Vec<_>>());
+        // Worker 0 steps twice (momentum builds); worker 1 steps once
+        // from the same start — their params must differ after w0's 2nd.
+        let mut a = p0.clone();
+        m.local_step(0, &mut a, &batch, 0.1).unwrap();
+        let mut b = p0.clone();
+        m.local_step(1, &mut b, &batch, 0.1).unwrap();
+        assert_eq!(a, b, "first steps identical (same grads, fresh momentum)");
+        m.local_step(0, &mut a, &batch, 0.1).unwrap();
+        m.local_step(1, &mut b, &batch, 0.1).unwrap();
+        assert_eq!(a, b, "parallel workers with same data stay in lockstep");
+    }
+}

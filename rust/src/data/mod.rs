@@ -1,0 +1,180 @@
+//! Datasets and sharding for the simulated cluster.
+//!
+//! The paper trains on CIFAR10, ImageNet-1K and WikiText2 on Summit; we
+//! substitute deterministic synthetic equivalents (see DESIGN.md §2) that
+//! preserve what matters for decentralized-SGD behaviour: a learnable
+//! signal, controllable class structure, and **controllable per-worker
+//! heterogeneity** (the non-iid-ness of shards is what makes sparse
+//! gossip graphs diverge from the complete graph at scale).
+
+mod shard;
+mod synthetic;
+
+pub use shard::{heterogeneity, shard_indices, ShardStrategy};
+pub use synthetic::{SyntheticClassification, SyntheticLm};
+
+/// One minibatch in the model-agnostic layout the runtime feeds to HLO
+/// executables: `x` is `batch × x_dim` f32 (pixels for classification,
+/// token ids for LM — the model casts), `y` is `batch × y_dim` i32
+/// (class label, or next-token targets for LM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Flat row-major features, `len = batch_size * x_dim`.
+    pub x: Vec<f32>,
+    /// Flat targets, `len = batch_size * y_dim`.
+    pub y: Vec<i32>,
+    /// Rows in this batch.
+    pub batch_size: usize,
+    /// Feature width.
+    pub x_dim: usize,
+    /// Target width (1 for classification, seq_len for LM).
+    pub y_dim: usize,
+}
+
+/// A dataset that can materialize arbitrary index sets as batches.
+pub trait Dataset: Send + Sync {
+    /// Number of examples.
+    fn len(&self) -> usize;
+    /// True when empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Feature width of a single example.
+    fn x_dim(&self) -> usize;
+    /// Target width of a single example.
+    fn y_dim(&self) -> usize;
+    /// Class labels if this is a labeled classification set (used by
+    /// label-skew sharding); `None` for LM data.
+    fn labels(&self) -> Option<&[u32]>;
+    /// Materialize the examples at `indices` into a batch.
+    fn batch(&self, indices: &[usize]) -> Batch;
+}
+
+/// Deterministic per-worker epoch loader: owns a shard of dataset
+/// indices, reshuffles them each epoch (seeded by `worker`, `epoch`), and
+/// yields fixed-size batches. Drops the trailing partial batch, matching
+/// the paper's equal-sized-batch setup (§2.1).
+#[derive(Debug, Clone)]
+pub struct ShardLoader {
+    indices: Vec<usize>,
+    batch_size: usize,
+    worker: usize,
+    base_seed: u64,
+}
+
+impl ShardLoader {
+    /// Create a loader over `indices` for `worker`.
+    pub fn new(indices: Vec<usize>, batch_size: usize, worker: usize, base_seed: u64) -> Self {
+        assert!(batch_size > 0, "batch_size must be positive");
+        ShardLoader {
+            indices,
+            batch_size,
+            worker,
+            base_seed,
+        }
+    }
+
+    /// Number of batches per epoch: full batches, but at least one when
+    /// the shard is non-empty (heavily label-skewed shards can be smaller
+    /// than a batch; those cycle their examples — see
+    /// [`ShardLoader::batch_indices`]).
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.indices.len() / self.batch_size).max(usize::from(!self.indices.is_empty()))
+    }
+
+    /// The shuffled index order for `epoch` (deterministic).
+    pub fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        let mut order = self.indices.clone();
+        let seed = self
+            .base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((self.worker as u64) << 32)
+            .wrapping_add(epoch as u64);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// The index set of batch `b` (0-based) within `epoch`. Wraps modulo
+    /// the shard length, so shards smaller than a batch resample their
+    /// examples (with the epoch's shuffled order).
+    pub fn batch_indices(&self, epoch: usize, b: usize) -> Vec<usize> {
+        let order = self.epoch_order(epoch);
+        let len = order.len();
+        assert!(len > 0, "empty shard");
+        (0..self.batch_size)
+            .map(|i| order[(b * self.batch_size + i) % len])
+            .collect()
+    }
+
+    /// Number of examples in the shard.
+    pub fn shard_len(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Split `len` indices into train/test deterministically (test = every
+/// `1/test_frac`-th example), so train/test never overlap.
+pub fn train_test_split(len: usize, test_frac: f64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let period = if test_frac > 0.0 {
+        (1.0 / test_frac).round() as usize
+    } else {
+        usize::MAX
+    };
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for i in 0..len {
+        if period != usize::MAX && i % period == period - 1 {
+            test.push(i);
+        } else {
+            train.push(i);
+        }
+    }
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loader_is_deterministic_and_partitions() {
+        let loader = ShardLoader::new((0..100).collect(), 8, 3, 42);
+        assert_eq!(loader.batches_per_epoch(), 12);
+        let a = loader.epoch_order(5);
+        let b = loader.epoch_order(5);
+        assert_eq!(a, b, "same epoch ⇒ same order");
+        let c = loader.epoch_order(6);
+        assert_ne!(a, c, "different epoch ⇒ reshuffled");
+        // Batches tile the epoch order without overlap.
+        let b0 = loader.batch_indices(5, 0);
+        let b1 = loader.batch_indices(5, 1);
+        assert_eq!(b0, a[0..8].to_vec());
+        assert_eq!(b1, a[8..16].to_vec());
+    }
+
+    #[test]
+    fn different_workers_shuffle_differently() {
+        let l0 = ShardLoader::new((0..64).collect(), 4, 0, 7);
+        let l1 = ShardLoader::new((0..64).collect(), 4, 1, 7);
+        assert_ne!(l0.epoch_order(0), l1.epoch_order(0));
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let (train, test) = train_test_split(100, 0.2);
+        assert_eq!(train.len() + test.len(), 100);
+        assert_eq!(test.len(), 20);
+        let mut all: Vec<usize> = train.iter().chain(test.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_test_frac_keeps_all_train() {
+        let (train, test) = train_test_split(10, 0.0);
+        assert_eq!(train.len(), 10);
+        assert!(test.is_empty());
+    }
+}

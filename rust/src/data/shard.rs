@@ -1,0 +1,259 @@
+//! Sharding training data across workers.
+//!
+//! Decentralized SGD's sensitivity to the communication graph is driven
+//! by *shard heterogeneity*: with perfectly iid shards all replicas see
+//! statistically identical gradients and even a ring stays close to the
+//! complete graph. DBench therefore supports a label-skew strategy
+//! (Dirichlet over class proportions, the standard non-iid benchmark
+//! protocol) alongside iid round-robin.
+
+use crate::error::{AdaError, Result};
+use crate::util::rng::Rng;
+
+/// How training indices are distributed across workers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShardStrategy {
+    /// Shuffle once, deal round-robin: statistically identical shards.
+    Iid,
+    /// Dirichlet(α) label skew: each class's examples are split across
+    /// workers with Dirichlet-distributed proportions. Small α ⇒ each
+    /// worker sees few classes (highly non-iid); α → ∞ ⇒ iid.
+    LabelSkew {
+        /// Dirichlet concentration.
+        alpha: f64,
+    },
+    /// Contiguous blocks (for sequence data, preserves locality).
+    Contiguous,
+}
+
+/// Partition `indices` (0..len) into `n_workers` shards.
+///
+/// `labels` is required for [`ShardStrategy::LabelSkew`]. Every index is
+/// assigned to exactly one worker; shards are non-empty for sane inputs
+/// (`len ≥ n_workers`).
+pub fn shard_indices(
+    len: usize,
+    labels: Option<&[u32]>,
+    n_workers: usize,
+    strategy: ShardStrategy,
+    seed: u64,
+) -> Result<Vec<Vec<usize>>> {
+    if n_workers == 0 {
+        return Err(AdaError::Data("n_workers must be positive".into()));
+    }
+    if len < n_workers {
+        return Err(AdaError::Data(format!(
+            "cannot shard {len} examples across {n_workers} workers"
+        )));
+    }
+    let mut rng = Rng::seed_from_u64(seed ^ 0xA5A5_5A5A_DEAD_BEEF);
+    match strategy {
+        ShardStrategy::Iid => {
+            let mut order: Vec<usize> = (0..len).collect();
+            rng.shuffle(&mut order);
+            let mut shards = vec![Vec::with_capacity(len / n_workers + 1); n_workers];
+            for (i, idx) in order.into_iter().enumerate() {
+                shards[i % n_workers].push(idx);
+            }
+            Ok(shards)
+        }
+        ShardStrategy::Contiguous => {
+            let mut shards = Vec::with_capacity(n_workers);
+            let base = len / n_workers;
+            let extra = len % n_workers;
+            let mut start = 0;
+            for w in 0..n_workers {
+                let size = base + usize::from(w < extra);
+                shards.push((start..start + size).collect());
+                start += size;
+            }
+            Ok(shards)
+        }
+        ShardStrategy::LabelSkew { alpha } => {
+            let labels = labels.ok_or_else(|| {
+                AdaError::Data("label-skew sharding requires labels".into())
+            })?;
+            if labels.len() != len {
+                return Err(AdaError::Data(format!(
+                    "labels length {} ≠ dataset length {len}",
+                    labels.len()
+                )));
+            }
+            if alpha <= 0.0 {
+                return Err(AdaError::Data("Dirichlet alpha must be > 0".into()));
+            }
+            label_skew(labels, n_workers, alpha, &mut rng)
+        }
+    }
+}
+
+fn label_skew(
+    labels: &[u32],
+    n_workers: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Result<Vec<Vec<usize>>> {
+    let num_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    // Group indices by class, shuffled within class.
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    for c in by_class.iter_mut() {
+        rng.shuffle(c);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+    for class in by_class {
+        if class.is_empty() {
+            continue;
+        }
+        // Dirichlet proportions via normalized Gammas.
+        let props = rng.dirichlet(alpha, n_workers);
+        // Convert to cumulative cut points over the class's examples.
+        let m = class.len();
+        let mut cum = 0.0;
+        let mut start = 0;
+        for (w, &p) in props.iter().enumerate() {
+            cum += p;
+            let end = if w == n_workers - 1 {
+                m
+            } else {
+                (cum * m as f64).round() as usize
+            }
+            .min(m);
+            shards[w].extend_from_slice(&class[start..end.max(start)]);
+            start = end.max(start);
+        }
+    }
+    // Rebalance: guarantee no empty shard by stealing from the largest.
+    for w in 0..n_workers {
+        if shards[w].is_empty() {
+            let donor = (0..n_workers)
+                .max_by_key(|&i| shards[i].len())
+                .expect("nonempty worker set");
+            let moved = shards[donor].pop().ok_or_else(|| {
+                AdaError::Data("cannot rebalance empty shards".into())
+            })?;
+            shards[w].push(moved);
+        }
+    }
+    Ok(shards)
+}
+
+/// Shard heterogeneity score in [0, 1]: mean total-variation distance
+/// between each shard's label distribution and the global one. 0 = iid.
+pub fn heterogeneity(shards: &[Vec<usize>], labels: &[u32]) -> f64 {
+    let num_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut global = vec![0.0f64; num_classes];
+    for &l in labels {
+        global[l as usize] += 1.0;
+    }
+    let n = labels.len() as f64;
+    for g in global.iter_mut() {
+        *g /= n;
+    }
+    let mut tv_sum = 0.0;
+    for shard in shards {
+        if shard.is_empty() {
+            continue;
+        }
+        let mut local = vec![0.0f64; num_classes];
+        for &i in shard {
+            local[labels[i] as usize] += 1.0;
+        }
+        let m = shard.len() as f64;
+        let tv: f64 = local
+            .iter()
+            .zip(&global)
+            .map(|(l, g)| (l / m - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels_balanced(n: usize, classes: u32) -> Vec<u32> {
+        (0..n).map(|i| (i as u32) % classes).collect()
+    }
+
+    fn assert_partition(shards: &[Vec<usize>], len: usize) {
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..len).collect::<Vec<_>>(), "must partition exactly");
+    }
+
+    #[test]
+    fn iid_partitions_evenly() {
+        let shards = shard_indices(100, None, 8, ShardStrategy::Iid, 1).unwrap();
+        assert_partition(&shards, 100);
+        for s in &shards {
+            assert!(s.len() == 12 || s.len() == 13);
+        }
+    }
+
+    #[test]
+    fn contiguous_blocks() {
+        let shards = shard_indices(10, None, 3, ShardStrategy::Contiguous, 0).unwrap();
+        assert_eq!(shards[0], vec![0, 1, 2, 3]);
+        assert_eq!(shards[1], vec![4, 5, 6]);
+        assert_eq!(shards[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn label_skew_partitions_and_is_nonempty() {
+        let labels = labels_balanced(400, 10);
+        let shards =
+            shard_indices(400, Some(&labels), 16, ShardStrategy::LabelSkew { alpha: 0.1 }, 3)
+                .unwrap();
+        assert_partition(&shards, 400);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn small_alpha_is_more_heterogeneous() {
+        let labels = labels_balanced(2000, 10);
+        let skewed =
+            shard_indices(2000, Some(&labels), 8, ShardStrategy::LabelSkew { alpha: 0.05 }, 9)
+                .unwrap();
+        let mild =
+            shard_indices(2000, Some(&labels), 8, ShardStrategy::LabelSkew { alpha: 100.0 }, 9)
+                .unwrap();
+        let iid = shard_indices(2000, Some(&labels), 8, ShardStrategy::Iid, 9).unwrap();
+        let h_skew = heterogeneity(&skewed, &labels);
+        let h_mild = heterogeneity(&mild, &labels);
+        let h_iid = heterogeneity(&iid, &labels);
+        assert!(
+            h_skew > 5.0 * h_mild && h_skew > 5.0 * h_iid,
+            "small alpha must dominate: {h_skew} vs mild {h_mild} / iid {h_iid}"
+        );
+        assert!(h_skew > 0.3, "alpha=0.05 should be strongly non-iid: {h_skew}");
+        assert!(h_mild < 0.1, "alpha=100 should be near-iid: {h_mild}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let labels = labels_balanced(300, 5);
+        let a = shard_indices(300, Some(&labels), 4, ShardStrategy::LabelSkew { alpha: 0.5 }, 7)
+            .unwrap();
+        let b = shard_indices(300, Some(&labels), 4, ShardStrategy::LabelSkew { alpha: 0.5 }, 7)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(shard_indices(10, None, 0, ShardStrategy::Iid, 0).is_err());
+        assert!(shard_indices(3, None, 8, ShardStrategy::Iid, 0).is_err());
+        assert!(shard_indices(10, None, 2, ShardStrategy::LabelSkew { alpha: 0.5 }, 0).is_err());
+        let labels = labels_balanced(10, 2);
+        assert!(
+            shard_indices(10, Some(&labels), 2, ShardStrategy::LabelSkew { alpha: -1.0 }, 0)
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! DBench — the controlled-experiment harness of §3.
+//!
+//! An [`ExperimentSpec`] names a workload (one of the paper's four
+//! application analogs, or an HLO artifact model), a set of training
+//! scales, and a set of SGD flavors; [`run_experiment`] executes the
+//! full grid with a shared seed and returns per-cell records + summaries
+//! — the data behind Figures 2–5 and 7.
+
+mod spec;
+
+pub use spec::{ExperimentSpec, Workload};
+
+use crate::coordinator::{SgdFlavor, TrainConfig, Trainer};
+use crate::error::Result;
+use crate::metrics::{RankSummary, RunRecorder};
+use crate::coordinator::trainer::RunSummary;
+
+/// One grid cell: a workload trained at one scale with one SGD flavor.
+#[derive(Debug)]
+pub struct CellResult {
+    /// Training scale (worker count).
+    pub scale: usize,
+    /// Flavor name (`C_complete`, `D_ring`, …).
+    pub flavor: String,
+    /// Per-iteration records.
+    pub recorder: RunRecorder,
+    /// Run summary.
+    pub summary: RunSummary,
+}
+
+/// Run the full grid of `spec`. Cells run sequentially (each cell's
+/// workers already parallelize internally); the same seed is reused so
+/// all flavors at a scale see identical data, sharding, and init — the
+/// controlled-experiment discipline of §3.1.
+pub fn run_experiment(spec: &ExperimentSpec) -> Result<Vec<CellResult>> {
+    let mut cells = Vec::new();
+    for &scale in &spec.scales {
+        for flavor in &spec.flavors {
+            cells.push(run_cell(spec, scale, flavor)?);
+        }
+    }
+    Ok(cells)
+}
+
+/// Run a single cell.
+pub fn run_cell(spec: &ExperimentSpec, scale: usize, flavor: &SgdFlavor) -> Result<CellResult> {
+    let dataset = spec.workload.dataset(spec.seed)?;
+    let mut model = spec.workload.model(scale)?;
+    let config: TrainConfig = spec.train_config(scale);
+    let mut trainer = Trainer::new(model.as_mut(), config);
+    let (recorder, summary) = trainer.run(dataset.as_ref(), flavor)?;
+    Ok(CellResult {
+        scale,
+        flavor: flavor.name(),
+        recorder,
+        summary,
+    })
+}
+
+/// The §3.3 ranking analysis over the cells of one scale: for every
+/// iteration where all flavors have a gini sample, rank them 1..m and
+/// accumulate. Returns the Fig. 5-style summary.
+pub fn rank_analysis<'a>(cells: impl IntoIterator<Item = &'a CellResult>) -> RankSummary {
+    let cells: Vec<&CellResult> = cells.into_iter().collect();
+    let mut summary = RankSummary::new();
+    if cells.is_empty() {
+        return summary;
+    }
+    let min_len = cells
+        .iter()
+        .map(|c| c.recorder.records().len())
+        .min()
+        .unwrap_or(0);
+    for i in 0..min_len {
+        let entries: Vec<(&str, f64)> = cells
+            .iter()
+            .map(|c| (c.flavor.as_str(), c.recorder.records()[i].variance.gini))
+            .collect();
+        summary.record(&entries);
+    }
+    summary
+}
+
+/// Render cells as an aligned text table (the bench harness output).
+pub fn format_table(title: &str, cells: &[CellResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<8} {:<16} {:>10} {:>10} {:>12} {:>12} {:>14}\n",
+        "scale", "flavor", "metric", "loss", "early_gini", "late_gini", "MB/node"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<8} {:<16} {:>10.4} {:>10.4} {:>12.6} {:>12.6} {:>14.2}{}\n",
+            c.scale,
+            c.flavor,
+            c.summary.final_eval.metric,
+            c.summary.final_eval.loss,
+            c.summary.early_gini,
+            c.summary.late_gini,
+            c.summary.bytes_per_node as f64 / 1e6,
+            if c.summary.diverged { "  DIVERGED" } else { "" },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ExperimentSpec {
+        let mut s = ExperimentSpec::resnet20_analog();
+        s.scales = vec![4];
+        s.epochs = 2;
+        s.max_iters_per_epoch = Some(4);
+        s.flavors = vec![
+            SgdFlavor::DecentralizedRing,
+            SgdFlavor::DecentralizedComplete,
+        ];
+        s
+    }
+
+    #[test]
+    fn grid_runs_all_cells() {
+        let spec = tiny_spec();
+        let cells = run_experiment(&spec).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].flavor, "D_ring");
+        assert_eq!(cells[1].flavor, "D_complete");
+        for c in &cells {
+            assert!(!c.recorder.records().is_empty());
+        }
+    }
+
+    #[test]
+    fn same_seed_same_data_across_flavors() {
+        // Controlled experiment: both flavors must see the same initial
+        // loss (identical init + identical first batches).
+        let spec = tiny_spec();
+        let cells = run_experiment(&spec).unwrap();
+        let l0 = cells[0].recorder.records()[0].train_loss;
+        let l1 = cells[1].recorder.records()[0].train_loss;
+        assert!((l0 - l1).abs() < 1e-9, "{l0} vs {l1}");
+    }
+
+    #[test]
+    fn rank_analysis_produces_full_counts() {
+        let spec = tiny_spec();
+        let cells = run_experiment(&spec).unwrap();
+        let ranks = rank_analysis(&cells);
+        assert!(ranks.count("D_ring") > 0);
+        assert_eq!(ranks.count("D_ring"), ranks.count("D_complete"));
+    }
+
+    #[test]
+    fn table_formatting_contains_rows() {
+        let spec = tiny_spec();
+        let cells = run_experiment(&spec).unwrap();
+        let table = format_table("test", &cells);
+        assert!(table.contains("D_ring"));
+        assert!(table.contains("MB/node"));
+    }
+}

@@ -1,0 +1,572 @@
+//! Experiment specifications: the four application analogs of Table 2/3
+//! plus HLO-artifact workloads, with TOML-loadable parameters.
+
+use crate::coordinator::surrogate::{BigramLm, MlpClassifier, SoftmaxRegression};
+use crate::coordinator::{HloModel, LocalModel, SgdFlavor};
+use crate::coordinator::trainer::{LrPolicy, TrainConfig};
+use crate::data::{Dataset, ShardStrategy, SyntheticClassification, SyntheticLm};
+use crate::error::{AdaError, Result};
+use crate::optim::ScalingRule;
+use crate::runtime::PjRtRuntime;
+use crate::util::tomlmini::{TomlDoc, TomlValue};
+
+/// The workload of an experiment: which model family + synthetic dataset.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// ResNet20/CIFAR10 analog: linear softmax classifier on Gaussian
+    /// class clusters (smallest model of the family).
+    SoftmaxImage {
+        /// Dataset size.
+        n_examples: usize,
+        /// Feature width.
+        dim: usize,
+        /// Classes.
+        classes: usize,
+        /// Class separation (difficulty dial).
+        separation: f32,
+        /// Train batch rows per worker.
+        batch: usize,
+        /// Eval batch rows.
+        eval_batch: usize,
+        /// Momentum coefficient.
+        momentum: f32,
+    },
+    /// DenseNet100/ResNet50 analog: one-hidden-layer MLP.
+    MlpImage {
+        /// Dataset size.
+        n_examples: usize,
+        /// Feature width.
+        dim: usize,
+        /// Hidden width.
+        hidden: usize,
+        /// Classes.
+        classes: usize,
+        /// Class separation.
+        separation: f32,
+        /// Train batch rows per worker.
+        batch: usize,
+        /// Eval batch rows.
+        eval_batch: usize,
+        /// Momentum coefficient.
+        momentum: f32,
+    },
+    /// LSTM/WikiText2 analog: bigram LM on Markov-chain text.
+    BigramText {
+        /// Number of sequences.
+        n_seq: usize,
+        /// Tokens per sequence.
+        seq_len: usize,
+        /// Vocabulary.
+        vocab: usize,
+        /// Markov branching factor.
+        branching: usize,
+        /// Train batch rows per worker.
+        batch: usize,
+        /// Eval batch rows.
+        eval_batch: usize,
+        /// Momentum coefficient.
+        momentum: f32,
+    },
+    /// An AOT-compiled HLO model from `artifacts/<name>/` (the
+    /// production path; dataset synthesized to match its manifest).
+    Hlo {
+        /// Artifact model name.
+        name: String,
+        /// Dataset size to synthesize.
+        n_examples: usize,
+        /// Artifact root (default `artifacts`).
+        artifact_dir: String,
+    },
+}
+
+impl Workload {
+    /// Construct the synthetic dataset for this workload.
+    pub fn dataset(&self, seed: u64) -> Result<Box<dyn Dataset>> {
+        Ok(match self {
+            Workload::SoftmaxImage {
+                n_examples,
+                dim,
+                classes,
+                separation,
+                ..
+            } => Box::new(SyntheticClassification::generate(
+                *n_examples,
+                *dim,
+                *classes,
+                *separation,
+                seed,
+            )),
+            Workload::MlpImage {
+                n_examples,
+                dim,
+                classes,
+                separation,
+                ..
+            } => Box::new(SyntheticClassification::generate(
+                *n_examples,
+                *dim,
+                *classes,
+                *separation,
+                seed,
+            )),
+            Workload::BigramText {
+                n_seq,
+                seq_len,
+                vocab,
+                branching,
+                ..
+            } => Box::new(SyntheticLm::generate(
+                *n_seq, *seq_len, *vocab, *branching, seed,
+            )),
+            Workload::Hlo {
+                name,
+                n_examples,
+                artifact_dir,
+            } => {
+                let manifest = crate::runtime::ModelBundle::read_manifest(
+                    &std::path::Path::new(artifact_dir)
+                        .join(name)
+                        .join("manifest.json"),
+                )?;
+                match manifest.kind {
+                    crate::runtime::ModelKind::Classification => {
+                        Box::new(SyntheticClassification::generate(
+                            *n_examples,
+                            manifest.x_dim,
+                            manifest.num_outputs,
+                            3.0,
+                            seed,
+                        ))
+                    }
+                    crate::runtime::ModelKind::Lm => Box::new(SyntheticLm::generate(
+                        *n_examples,
+                        manifest.x_dim,
+                        manifest.num_outputs,
+                        2,
+                        seed,
+                    )),
+                }
+            }
+        })
+    }
+
+    /// Construct the model for `n_workers` worker slots.
+    pub fn model(&self, n_workers: usize) -> Result<Box<dyn LocalModel>> {
+        Ok(match self {
+            Workload::SoftmaxImage {
+                dim,
+                classes,
+                batch,
+                eval_batch,
+                momentum,
+                ..
+            } => Box::new(SoftmaxRegression::new(
+                *dim, *classes, *batch, *eval_batch, n_workers, *momentum,
+            )),
+            Workload::MlpImage {
+                dim,
+                hidden,
+                classes,
+                batch,
+                eval_batch,
+                momentum,
+                ..
+            } => Box::new(MlpClassifier::new(
+                *dim, *hidden, *classes, *batch, *eval_batch, n_workers, *momentum,
+            )),
+            Workload::BigramText {
+                vocab,
+                seq_len,
+                batch,
+                eval_batch,
+                momentum,
+                ..
+            } => Box::new(BigramLm::new(
+                *vocab, *seq_len, *batch, *eval_batch, n_workers, *momentum,
+            )),
+            Workload::Hlo {
+                name, artifact_dir, ..
+            } => {
+                let rt = PjRtRuntime::cpu(artifact_dir)?;
+                Box::new(HloModel::new(rt.load_model(name)?))
+            }
+        })
+    }
+
+    /// Short identifier for reports.
+    pub fn name(&self) -> String {
+        match self {
+            Workload::SoftmaxImage { .. } => "softmax_image".into(),
+            Workload::MlpImage { .. } => "mlp_image".into(),
+            Workload::BigramText { .. } => "bigram_text".into(),
+            Workload::Hlo { name, .. } => format!("hlo:{name}"),
+        }
+    }
+}
+
+/// A full DBench experiment: workload × scales × flavors.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Experiment name (used in output paths and tables).
+    pub name: String,
+    /// Workload.
+    pub workload: Workload,
+    /// Training scales (the paper uses 12/24/48/96).
+    pub scales: Vec<usize>,
+    /// SGD flavors to run.
+    pub flavors: Vec<SgdFlavor>,
+    /// Epochs per run.
+    pub epochs: usize,
+    /// Shared seed (controlled experiments).
+    pub seed: u64,
+    /// Dirichlet alpha for label-skew sharding (`None` = iid).
+    pub skew_alpha: Option<f64>,
+    /// Peak base LR for the scaled policy.
+    pub peak_lr: f64,
+    /// LR scaling rule (linear conventional / sqrt tuned).
+    pub scaling: ScalingRule,
+    /// Table-2 divisor.
+    pub lr_divisor: f64,
+    /// Eval cadence in epochs.
+    pub eval_every_epochs: usize,
+    /// Metric capture cadence in iterations.
+    pub metrics_every: usize,
+    /// Iteration cap per epoch (benches subsample).
+    pub max_iters_per_epoch: Option<usize>,
+    /// Tracked layer indices for per-tensor gini (Fig. 4).
+    pub track_layers: Vec<usize>,
+}
+
+impl ExperimentSpec {
+    /// The five §3.1.2 SGD implementations.
+    pub fn five_sgd_implementations() -> Vec<SgdFlavor> {
+        vec![
+            SgdFlavor::CentralizedComplete,
+            SgdFlavor::DecentralizedComplete,
+            SgdFlavor::DecentralizedRing,
+            SgdFlavor::DecentralizedTorus,
+            SgdFlavor::DecentralizedExponential,
+        ]
+    }
+
+    fn base(name: &str, workload: Workload) -> Self {
+        ExperimentSpec {
+            name: name.into(),
+            workload,
+            scales: vec![8, 16, 32, 64],
+            flavors: Self::five_sgd_implementations(),
+            epochs: 6,
+            seed: 42,
+            skew_alpha: Some(0.3),
+            peak_lr: 0.05,
+            scaling: ScalingRule::Linear,
+            lr_divisor: 256.0,
+            eval_every_epochs: 1,
+            metrics_every: 1,
+            max_iters_per_epoch: None,
+            track_layers: vec![0, 1],
+        }
+    }
+
+    /// ResNet20/CIFAR10 analog (Table 2 row 1).
+    pub fn resnet20_analog() -> Self {
+        Self::base(
+            "resnet20_cifar_analog",
+            Workload::SoftmaxImage {
+                n_examples: 4096,
+                dim: 32,
+                classes: 10,
+                separation: 2.5,
+                batch: 16,
+                eval_batch: 64,
+                momentum: 0.9,
+            },
+        )
+    }
+
+    /// ResNet50/ImageNet analog (Table 2 row 2) — bigger MLP, harder data.
+    pub fn resnet50_analog() -> Self {
+        let mut s = Self::base(
+            "resnet50_imagenet_analog",
+            Workload::MlpImage {
+                n_examples: 8192,
+                dim: 64,
+                hidden: 128,
+                classes: 20,
+                separation: 2.0,
+                batch: 16,
+                eval_batch: 64,
+                momentum: 0.9,
+            },
+        );
+        s.peak_lr = 0.03;
+        s
+    }
+
+    /// DenseNet100/CIFAR10 analog (Table 2 row 3).
+    pub fn densenet_analog() -> Self {
+        let mut s = Self::base(
+            "densenet_cifar_analog",
+            Workload::MlpImage {
+                n_examples: 4096,
+                dim: 32,
+                hidden: 64,
+                classes: 10,
+                separation: 2.5,
+                batch: 16,
+                eval_batch: 64,
+                momentum: 0.9,
+            },
+        );
+        s.peak_lr = 0.04;
+        s
+    }
+
+    /// LSTM/WikiText2 analog (Table 2 row 4).
+    pub fn lstm_analog() -> Self {
+        let mut s = Self::base(
+            "lstm_wikitext_analog",
+            Workload::BigramText {
+                n_seq: 2048,
+                seq_len: 16,
+                vocab: 32,
+                branching: 2,
+                batch: 8,
+                eval_batch: 32,
+                momentum: 0.9,
+            },
+        );
+        s.peak_lr = 0.8;
+        s.lr_divisor = 24.0;
+        s
+    }
+
+    /// All four application analogs (the Fig. 3 grid).
+    pub fn four_applications() -> Vec<ExperimentSpec> {
+        vec![
+            Self::resnet20_analog(),
+            Self::resnet50_analog(),
+            Self::densenet_analog(),
+            Self::lstm_analog(),
+        ]
+    }
+
+    /// Translate into a per-run [`TrainConfig`] at `scale`.
+    pub fn train_config(&self, scale: usize) -> TrainConfig {
+        TrainConfig {
+            n_workers: scale,
+            epochs: self.epochs,
+            seed: self.seed,
+            lr: LrPolicy::Scaled {
+                peak: self.peak_lr,
+                rule: self.scaling,
+                divisor: self.lr_divisor,
+                warmup: (self.epochs as f64 * 0.15).max(0.5),
+            },
+            shard: match self.skew_alpha {
+                Some(alpha) if self.supports_label_skew() => ShardStrategy::LabelSkew { alpha },
+                _ => ShardStrategy::Iid,
+            },
+            test_frac: 0.15,
+            eval_every_epochs: self.eval_every_epochs,
+            metrics_every: self.metrics_every,
+            max_iters_per_epoch: self.max_iters_per_epoch,
+            track_layers: self.track_layers.clone(),
+            central_momentum: 0.9,
+            drop_prob: 0.0,
+            record_path: None,
+        }
+    }
+
+    fn supports_label_skew(&self) -> bool {
+        !matches!(self.workload, Workload::BigramText { .. })
+    }
+
+    /// Load a spec from a TOML file: a built-in app named by `base`, with
+    /// any top-level field overridden. See `configs/*.toml`.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+            .map_err(|e| AdaError::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// Parse from TOML text (see [`ExperimentSpec::from_toml_file`]).
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let base = doc
+            .get("base")
+            .and_then(TomlValue::as_str)
+            .ok_or_else(|| {
+                AdaError::Config("spec needs `base = \"resnet20|resnet50|densenet|lstm\"`".into())
+            })?;
+        let mut spec = match base {
+            "resnet20" => Self::resnet20_analog(),
+            "resnet50" => Self::resnet50_analog(),
+            "densenet" => Self::densenet_analog(),
+            "lstm" => Self::lstm_analog(),
+            other => {
+                return Err(AdaError::Config(format!("unknown base app {other:?}")))
+            }
+        };
+        if let Some(v) = doc.get("name").and_then(TomlValue::as_str) {
+            spec.name = v.to_string();
+        }
+        if let Some(v) = doc.get("scales").and_then(TomlValue::as_usize_array) {
+            spec.scales = v;
+        }
+        if let Some(v) = doc.get("epochs").and_then(TomlValue::as_int) {
+            spec.epochs = v as usize;
+        }
+        if let Some(v) = doc.get("seed").and_then(TomlValue::as_int) {
+            spec.seed = v as u64;
+        }
+        if let Some(v) = doc.get("skew_alpha").and_then(TomlValue::as_float) {
+            spec.skew_alpha = if v > 0.0 { Some(v) } else { None };
+        }
+        if let Some(v) = doc.get("peak_lr").and_then(TomlValue::as_float) {
+            spec.peak_lr = v;
+        }
+        if let Some(v) = doc.get("scaling").and_then(TomlValue::as_str) {
+            spec.scaling = match v {
+                "linear" => ScalingRule::Linear,
+                "sqrt" => ScalingRule::Sqrt,
+                "none" => ScalingRule::None,
+                other => {
+                    return Err(AdaError::Config(format!("unknown scaling {other:?}")))
+                }
+            };
+        }
+        if let Some(v) = doc.get("lr_divisor").and_then(TomlValue::as_float) {
+            spec.lr_divisor = v;
+        }
+        if let Some(v) = doc.get("eval_every_epochs").and_then(TomlValue::as_int) {
+            spec.eval_every_epochs = v as usize;
+        }
+        if let Some(v) = doc.get("metrics_every").and_then(TomlValue::as_int) {
+            spec.metrics_every = v as usize;
+        }
+        if let Some(v) = doc.get("max_iters_per_epoch").and_then(TomlValue::as_int) {
+            spec.max_iters_per_epoch = if v > 0 { Some(v as usize) } else { None };
+        }
+        if let Some(v) = doc.get("track_layers").and_then(TomlValue::as_usize_array) {
+            spec.track_layers = v;
+        }
+        if let Some(TomlValue::Arr(fs)) = doc.get("flavors") {
+            let mut flavors = Vec::new();
+            for f in fs {
+                let name = f.as_str().ok_or_else(|| {
+                    AdaError::Config("flavors must be strings".into())
+                })?;
+                flavors.push(Self::flavor_by_name(name, &doc)?);
+            }
+            spec.flavors = flavors;
+        }
+        Ok(spec)
+    }
+
+    fn flavor_by_name(name: &str, doc: &TomlDoc) -> Result<SgdFlavor> {
+        let k0 = doc
+            .get("ada.k0")
+            .and_then(TomlValue::as_int)
+            .map(|v| v as usize);
+        let gamma_k = doc
+            .get("ada.gamma_k")
+            .and_then(TomlValue::as_float)
+            .unwrap_or(1.0);
+        Ok(match name {
+            "c_complete" | "C_complete" => SgdFlavor::CentralizedComplete,
+            "d_complete" | "D_complete" => SgdFlavor::DecentralizedComplete,
+            "d_ring" | "D_ring" => SgdFlavor::DecentralizedRing,
+            "d_torus" | "D_torus" => SgdFlavor::DecentralizedTorus,
+            "d_exponential" | "D_exponential" => SgdFlavor::DecentralizedExponential,
+            "ada" | "D_adaptive" => SgdFlavor::Ada {
+                k0: k0.ok_or_else(|| {
+                    AdaError::Config("ada flavor needs [ada] k0 = <int>".into())
+                })?,
+                gamma_k,
+            },
+            "one_peer" | "D_one_peer" => SgdFlavor::OnePeer,
+            other => {
+                return Err(AdaError::Config(format!("unknown flavor {other:?}")))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_load_from_toml() {
+        let spec = ExperimentSpec::from_toml_str(
+            r#"
+            base = "densenet"
+            name = "fig3_densenet"
+            scales = [8, 16]
+            epochs = 3
+            peak_lr = 0.02
+            scaling = "sqrt"
+            flavors = ["d_ring", "ada"]
+
+            [ada]
+            k0 = 10
+            gamma_k = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "fig3_densenet");
+        assert_eq!(spec.scales, vec![8, 16]);
+        assert_eq!(spec.epochs, 3);
+        assert_eq!(spec.scaling, ScalingRule::Sqrt);
+        assert_eq!(spec.flavors.len(), 2);
+        assert_eq!(
+            spec.flavors[1],
+            SgdFlavor::Ada { k0: 10, gamma_k: 0.5 }
+        );
+    }
+
+    #[test]
+    fn toml_spec_rejects_bad_inputs() {
+        assert!(ExperimentSpec::from_toml_str("epochs = 3").is_err(), "no base");
+        assert!(ExperimentSpec::from_toml_str("base = \"nope\"").is_err());
+        assert!(ExperimentSpec::from_toml_str(
+            "base = \"lstm\"\nflavors = [\"ada\"]"
+        )
+        .is_err(), "ada without k0");
+    }
+
+    #[test]
+    fn workloads_build_models_and_datasets() {
+        for spec in ExperimentSpec::four_applications() {
+            let d = spec.workload.dataset(1).unwrap();
+            assert!(d.len() > 0);
+            let m = spec.workload.model(4).unwrap();
+            assert!(m.param_count() > 0);
+            assert_eq!(d.x_dim(), {
+                // Batch shape agreement between dataset and model inputs.
+                let b = d.batch(&[0]);
+                b.x_dim
+            });
+        }
+    }
+
+    #[test]
+    fn lm_workload_uses_iid_sharding() {
+        let spec = ExperimentSpec::lstm_analog();
+        let cfg = spec.train_config(8);
+        assert_eq!(cfg.shard, ShardStrategy::Iid);
+    }
+
+    #[test]
+    fn five_implementations_match_paper_names() {
+        let names: Vec<String> = ExperimentSpec::five_sgd_implementations()
+            .iter()
+            .map(|f| f.name())
+            .collect();
+        assert_eq!(
+            names,
+            vec!["C_complete", "D_complete", "D_ring", "D_torus", "D_exponential"]
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the ada-dist library.
+#[derive(Debug)]
+pub enum AdaError {
+    /// A communication graph could not be constructed (bad node count,
+    /// incompatible parameters, …).
+    Graph(String),
+    /// Configuration file / CLI parameter problems.
+    Config(String),
+    /// Artifact loading / PJRT compile / execute failures.
+    Runtime(String),
+    /// Dataset or sharding problems.
+    Data(String),
+    /// Coordinator invariant violations (mismatched worker state, …).
+    Coordinator(String),
+    /// Wrapped I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for AdaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdaError::Graph(m) => write!(f, "graph error: {m}"),
+            AdaError::Config(m) => write!(f, "config error: {m}"),
+            AdaError::Runtime(m) => write!(f, "runtime error: {m}"),
+            AdaError::Data(m) => write!(f, "data error: {m}"),
+            AdaError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            AdaError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AdaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AdaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AdaError {
+    fn from(e: std::io::Error) -> Self {
+        AdaError::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, AdaError>;

@@ -1,0 +1,240 @@
+//! Constructors for the Table-1 graph families.
+
+use super::{CommGraph, GraphKind};
+use crate::error::{AdaError, Result};
+
+pub(super) fn build(kind: GraphKind, n: usize) -> Result<CommGraph> {
+    if n == 0 {
+        return Err(AdaError::Graph("graph must have at least one node".into()));
+    }
+    match kind {
+        GraphKind::Ring => ring(n),
+        GraphKind::Torus => torus(n),
+        GraphKind::RingLattice { k } => ring_lattice(n, k),
+        GraphKind::AdaLattice { k } => ada_lattice(n, k),
+        GraphKind::Exponential => exponential(n),
+        GraphKind::Complete => complete(n),
+        GraphKind::Hypercube => hypercube(n),
+        GraphKind::RandomRegular { d, seed } => random_regular(n, d, seed),
+    }
+}
+
+/// Binary hypercube over n = 2^m nodes: neighbors flip one address bit.
+fn hypercube(n: usize) -> Result<CommGraph> {
+    if n < 2 || !n.is_power_of_two() {
+        return Err(AdaError::Graph(format!(
+            "hypercube needs a power-of-two node count, got {n}"
+        )));
+    }
+    let bits = n.trailing_zeros() as usize;
+    let neighbors = (0..n)
+        .map(|i| (0..bits).map(|b| i ^ (1 << b)).collect())
+        .collect();
+    CommGraph::from_neighbor_lists(GraphKind::Hypercube, neighbors, false)
+}
+
+/// Random d-regular circulant: d/2 distinct random offsets `o ∈ [1, n/2)`
+/// with neighbors `i ± o`. Always simple and d-regular; connected iff
+/// `gcd(offsets, n) = 1`, so offsets are resampled until connected.
+/// Vertex-transitive like the paper's graphs, with near-expander gaps
+/// for random offsets.
+fn random_regular(n: usize, d: usize, seed: u64) -> Result<CommGraph> {
+    if d < 2 || d % 2 != 0 {
+        return Err(AdaError::Graph(format!(
+            "random regular graph needs an even degree ≥ 2, got {d}"
+        )));
+    }
+    if d >= n || d / 2 >= n.div_ceil(2) {
+        return Err(AdaError::Graph(format!(
+            "degree {d} too large for n = {n} distinct offsets"
+        )));
+    }
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ 0x5EED_6A7);
+    let half_max = n.div_ceil(2); // offsets in 1..half_max avoid i ≡ i±o
+    for _attempt in 0..256 {
+        let mut offsets = std::collections::BTreeSet::new();
+        // Offset 1 guarantees connectivity on the first try for most
+        // seeds; still sample randomly and just retry when unlucky.
+        while offsets.len() < d / 2 {
+            offsets.insert(1 + rng.below(half_max - 1));
+        }
+        let mut neighbors: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut nb: Vec<usize> = offsets
+                .iter()
+                .flat_map(|&o| [(i + o) % n, (i + n - o) % n])
+                .collect();
+            nb.sort_unstable();
+            nb.dedup();
+            neighbors.push(nb);
+        }
+        // All offsets < ⌈n/2⌉ ⇒ ±o distinct ⇒ exactly d neighbors.
+        if neighbors[0].len() != d {
+            continue;
+        }
+        let kind = GraphKind::RandomRegular { d, seed };
+        let g = CommGraph::from_neighbor_lists(kind, neighbors, false)?;
+        if g.is_connected() {
+            return Ok(g);
+        }
+    }
+    Err(AdaError::Graph(format!(
+        "could not build a connected random {d}-regular graph on {n} nodes"
+    )))
+}
+
+/// Degree-2 cycle. Needs n ≥ 3 for two *distinct* neighbors.
+fn ring(n: usize) -> Result<CommGraph> {
+    if n < 3 {
+        return Err(AdaError::Graph(format!("ring needs n ≥ 3, got {n}")));
+    }
+    let neighbors = (0..n)
+        .map(|i| vec![(i + n - 1) % n, (i + 1) % n])
+        .collect();
+    CommGraph::from_neighbor_lists(GraphKind::Ring, neighbors, false)
+}
+
+/// 2-D wrap-around grid. Picks the most square factorization r × c = n
+/// with r, c ≥ 2. When a dimension is 2, its two wrap neighbors coincide
+/// and are deduplicated (degree drops to 3), matching how production
+/// torus collectives degenerate on 2-wide meshes.
+fn torus(n: usize) -> Result<CommGraph> {
+    let (r, c) = squarest_factors(n).ok_or_else(|| {
+        AdaError::Graph(format!("torus needs a factorization r×c={n} with r,c ≥ 2"))
+    })?;
+    let idx = |row: usize, col: usize| row * c + col;
+    let mut neighbors = Vec::with_capacity(n);
+    for row in 0..r {
+        for col in 0..c {
+            let mut nb = vec![
+                idx((row + r - 1) % r, col),
+                idx((row + 1) % r, col),
+                idx(row, (col + c - 1) % c),
+                idx(row, (col + 1) % c),
+            ];
+            nb.sort_unstable();
+            nb.dedup();
+            neighbors.push(nb);
+        }
+    }
+    CommGraph::from_neighbor_lists(GraphKind::Torus, neighbors, false)
+}
+
+/// Table-1 ring lattice: 2k neighbors (k nearest on each side).
+fn ring_lattice(n: usize, k: usize) -> Result<CommGraph> {
+    if k == 0 {
+        return Err(AdaError::Graph("ring lattice needs k ≥ 1".into()));
+    }
+    if 2 * k >= n {
+        return Err(AdaError::Graph(format!(
+            "ring lattice needs 2k < n (k={k}, n={n}); use Complete instead"
+        )));
+    }
+    let mut neighbors = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut nb: Vec<usize> = (1..=k)
+            .flat_map(|h| [(i + h) % n, (i + n - h) % n])
+            .collect();
+        nb.sort_unstable();
+        nb.dedup();
+        neighbors.push(nb);
+    }
+    CommGraph::from_neighbor_lists(GraphKind::RingLattice { k }, neighbors, false)
+}
+
+/// Algorithm-1 lattice: neighbors `(i+j) mod n` for `j ∈ [-k/2, k/2] \ {0}`
+/// (integer division, so `k` neighbors when `k` is even), uniform weight
+/// `1/(k+1)`. `k` saturates at `n-1` (complete graph).
+fn ada_lattice(n: usize, k: usize) -> Result<CommGraph> {
+    if k < 2 {
+        return Err(AdaError::Graph(format!(
+            "Algorithm 1 keeps k ≥ 2 (got {k})"
+        )));
+    }
+    let k = k.min(n - 1);
+    let half = (k / 2) as isize;
+    let mut neighbors = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut nb: Vec<usize> = (-half..=half)
+            .filter(|&j| j != 0)
+            .map(|j| (i as isize + j).rem_euclid(n as isize) as usize)
+            .collect();
+        nb.sort_unstable();
+        nb.dedup();
+        neighbors.push(nb);
+    }
+    CommGraph::from_neighbor_lists(GraphKind::AdaLattice { k }, neighbors, false)
+}
+
+/// Directed exponential expander (§3.1.2): out-neighbors `(i + 2^m) % n`.
+fn exponential(n: usize) -> Result<CommGraph> {
+    if n < 3 {
+        return Err(AdaError::Graph(format!("exponential needs n ≥ 3, got {n}")));
+    }
+    let mut neighbors = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut nb: Vec<usize> = (0..)
+            .map(|m| 1usize << m)
+            .take_while(|&p| p <= n - 1)
+            .map(|p| (i + p) % n)
+            .collect();
+        nb.sort_unstable();
+        nb.dedup();
+        neighbors.push(nb);
+    }
+    CommGraph::from_neighbor_lists(GraphKind::Exponential, neighbors, true)
+}
+
+/// Complete graph: uniform 1/n averaging (decentralized complete).
+fn complete(n: usize) -> Result<CommGraph> {
+    if n < 2 {
+        return Err(AdaError::Graph(format!("complete needs n ≥ 2, got {n}")));
+    }
+    let neighbors = (0..n)
+        .map(|i| (0..n).filter(|&j| j != i).collect())
+        .collect();
+    CommGraph::from_neighbor_lists(GraphKind::Complete, neighbors, false)
+}
+
+/// Most-square factorization n = r × c with r ≤ c and r ≥ 2.
+pub fn squarest_factors(n: usize) -> Option<(usize, usize)> {
+    let mut best = None;
+    let mut r = (n as f64).sqrt() as usize;
+    while r >= 2 {
+        if n % r == 0 && n / r >= 2 {
+            best = Some((r, n / r));
+            break;
+        }
+        r -= 1;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorization_is_squarest() {
+        assert_eq!(squarest_factors(96), Some((8, 12)));
+        assert_eq!(squarest_factors(16), Some((4, 4)));
+        assert_eq!(squarest_factors(1008), Some((28, 36)));
+        assert_eq!(squarest_factors(7), None);
+        assert_eq!(squarest_factors(2), None);
+    }
+
+    #[test]
+    fn ada_lattice_saturates_at_complete() {
+        let g = ada_lattice(9, 100).unwrap();
+        assert_eq!(g.degree(), 8);
+    }
+
+    #[test]
+    fn ring_lattice_k1_is_a_ring() {
+        let lat = ring_lattice(12, 1).unwrap();
+        let ring = super::ring(12).unwrap();
+        for i in 0..12 {
+            assert_eq!(lat.neighbors_of(i), ring.neighbors_of(i));
+        }
+    }
+}

@@ -1,0 +1,592 @@
+//! Communication graphs and mixing matrices for decentralized SGD.
+//!
+//! This is the substrate underneath both DBench (§3 of the paper, which
+//! sweeps ring / torus / exponential / complete graphs) and Ada (§4, which
+//! evolves a ring lattice by decaying its coordination number `k`).
+//!
+//! A [`CommGraph`] couples the *topology* (who talks to whom) with the
+//! *mixing weights* (how parameter tensors are averaged): each node `i`
+//! holds a row `W_i` of the mixing matrix with `W_ii + Σ_j W_ij = 1`.
+//! For all undirected graphs here the weights are the uniform
+//! `1/(deg+1)` scheme used by the paper's Algorithm 1, which makes `W`
+//! symmetric and doubly stochastic; the (directed) exponential graph is
+//! regular in both in- and out-degree, so uniform weights remain doubly
+//! stochastic while `W` itself is asymmetric.
+
+mod builders;
+mod spectral;
+
+pub use spectral::{mixing_contraction, power_iteration_sigma2};
+
+use crate::error::{AdaError, Result};
+use std::collections::VecDeque;
+use std::fmt;
+
+/// The communication-graph families studied in the paper (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphKind {
+    /// Each node has 2 neighbors, one hop each way. Degree 2, `n` edges.
+    Ring,
+    /// 2-D wrap-around grid, degree 4 (fewer when a grid dimension is 2),
+    /// `2n` edges.
+    Torus,
+    /// Ring lattice with coordination number `k` per Table 1: each node
+    /// connects to the `k` nearest neighbors on each side → degree `2k`,
+    /// `kn` edges.
+    RingLattice {
+        /// Coordination number (neighbors per side).
+        k: usize,
+    },
+    /// Ada's lattice exactly as in Algorithm 1 of the paper: node `i`
+    /// connects to `(i+j) mod n` for `j ∈ [-k/2, k/2] \ {0}` with uniform
+    /// weight `1/(k+1)` (so `k` neighbors, self-weight `1/(k+1)`).
+    AdaLattice {
+        /// Algorithm-1 coordination number (total neighbor count).
+        k: usize,
+    },
+    /// Directed expander: node `i`'s out-neighbors are `{(i+2^m) mod n}`
+    /// for `m = 0..⌊log2(n-1)⌋`. Degree `⌊log2(n-1)⌋ + 1`.
+    Exponential,
+    /// Every node connected to every other node. Degree `n-1`.
+    Complete,
+    /// Binary hypercube (n must be a power of two): neighbors differ in
+    /// one address bit. Degree `log2 n` — the classic HPC topology,
+    /// included beyond the paper's five for the design-space study.
+    Hypercube,
+    /// Random d-regular graph (permutation-union construction, seeded):
+    /// the expander family the theory literature analyzes.
+    RandomRegular {
+        /// Even degree (built from d/2 random cyclic permutations).
+        d: usize,
+        /// Construction seed.
+        seed: u64,
+    },
+}
+
+impl fmt::Display for GraphKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphKind::Ring => write!(f, "ring"),
+            GraphKind::Torus => write!(f, "torus"),
+            GraphKind::RingLattice { k } => write!(f, "ring_lattice(k={k})"),
+            GraphKind::AdaLattice { k } => write!(f, "ada_lattice(k={k})"),
+            GraphKind::Exponential => write!(f, "exponential"),
+            GraphKind::Complete => write!(f, "complete"),
+            GraphKind::Hypercube => write!(f, "hypercube"),
+            GraphKind::RandomRegular { d, .. } => write!(f, "random_regular(d={d})"),
+        }
+    }
+}
+
+/// A communication graph together with its mixing weights.
+///
+/// Immutable after construction; cheap to clone (used per-epoch by the
+/// adaptive schedules).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommGraph {
+    kind: GraphKind,
+    n: usize,
+    /// Out-neighbors of each node, sorted, no self-loops, deduplicated.
+    neighbors: Vec<Vec<usize>>,
+    /// Mixing weight of each out-neighbor, aligned with `neighbors`.
+    weights: Vec<Vec<f32>>,
+    /// Self-mixing weight of each node.
+    self_weight: Vec<f32>,
+    directed: bool,
+}
+
+impl CommGraph {
+    /// Build a graph of `kind` over `n` nodes with uniform mixing weights.
+    pub fn build(kind: GraphKind, n: usize) -> Result<Self> {
+        builders::build(kind, n)
+    }
+
+    /// Construct from explicit neighbor lists with uniform `1/(deg_i + 1)`
+    /// weights. `neighbors[i]` must not contain `i` or duplicates.
+    pub fn from_neighbor_lists(
+        kind: GraphKind,
+        neighbors: Vec<Vec<usize>>,
+        directed: bool,
+    ) -> Result<Self> {
+        let n = neighbors.len();
+        if n == 0 {
+            return Err(AdaError::Graph("graph must have at least one node".into()));
+        }
+        let mut weights = Vec::with_capacity(n);
+        let mut self_weight = Vec::with_capacity(n);
+        for (i, nb) in neighbors.iter().enumerate() {
+            let mut seen = vec![false; n];
+            for &j in nb {
+                if j >= n {
+                    return Err(AdaError::Graph(format!(
+                        "node {i} has out-of-range neighbor {j} (n={n})"
+                    )));
+                }
+                if j == i {
+                    return Err(AdaError::Graph(format!("node {i} has a self-loop")));
+                }
+                if seen[j] {
+                    return Err(AdaError::Graph(format!(
+                        "node {i} lists neighbor {j} twice"
+                    )));
+                }
+                seen[j] = true;
+            }
+            let w = 1.0 / (nb.len() as f32 + 1.0);
+            weights.push(vec![w; nb.len()]);
+            self_weight.push(w);
+        }
+        let mut g = CommGraph {
+            kind,
+            n,
+            neighbors,
+            weights,
+            self_weight,
+            directed,
+        };
+        for nb in &mut g.neighbors {
+            nb.sort_unstable();
+        }
+        Ok(g)
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The graph family this was built from.
+    pub fn kind(&self) -> GraphKind {
+        self.kind
+    }
+
+    /// Whether edges are directed (true only for the exponential graph).
+    pub fn is_directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Out-degree of node `i`.
+    pub fn degree_of(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// Common degree if the graph is regular, else the maximum degree.
+    pub fn degree(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// True if every node has the same out-degree.
+    pub fn is_regular(&self) -> bool {
+        let d = self.degree_of(0);
+        self.neighbors.iter().all(|nb| nb.len() == d)
+    }
+
+    /// Number of edges: undirected edge count for undirected graphs,
+    /// directed arc count otherwise (matching Table 1's conventions).
+    pub fn edge_count(&self) -> usize {
+        let arcs: usize = self.neighbors.iter().map(Vec::len).sum();
+        if self.directed {
+            arcs
+        } else {
+            arcs / 2
+        }
+    }
+
+    /// Out-neighbors of node `i` (sorted).
+    pub fn neighbors_of(&self, i: usize) -> &[usize] {
+        &self.neighbors[i]
+    }
+
+    /// Mixing weight on the edge `i → j`, if present. The self weight is
+    /// returned for `i == j`.
+    pub fn weight(&self, i: usize, j: usize) -> Option<f32> {
+        if i == j {
+            return Some(self.self_weight[i]);
+        }
+        self.neighbors[i]
+            .binary_search(&j)
+            .ok()
+            .map(|idx| self.weights[i][idx])
+    }
+
+    /// Iterate the full mixing row of node `i`: `(j, w)` pairs including
+    /// the self-loop entry.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        std::iter::once((i, self.self_weight[i])).chain(
+            self.neighbors[i]
+                .iter()
+                .copied()
+                .zip(self.weights[i].iter().copied()),
+        )
+    }
+
+    /// Self-mixing weight of node `i`.
+    pub fn self_weight(&self, i: usize) -> f32 {
+        self.self_weight[i]
+    }
+
+    /// Dense row-major `n × n` mixing matrix (for the HLO gossip kernel
+    /// and spectral analysis).
+    pub fn dense_mixing(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            for (j, wij) in self.row(i) {
+                w[i * n + j] = wij;
+            }
+        }
+        w
+    }
+
+    /// True if the graph is connected, treating directed arcs as
+    /// bidirectional for reachability (standard for gossip convergence:
+    /// the union graph must be strongly connected; the exponential graph
+    /// is vertex-transitive so weak connectivity implies strong).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 1 {
+            return true;
+        }
+        // Build undirected reachability.
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for (i, nb) in self.neighbors.iter().enumerate() {
+            for &j in nb {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+        let mut seen = vec![false; self.n];
+        let mut q = VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = q.pop_front() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Check all mixing-matrix invariants; returns an error describing the
+    /// first violation. Used by tests and by the coordinator at startup.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n;
+        // Row stochasticity.
+        for i in 0..n {
+            let s: f32 = self.row(i).map(|(_, w)| w).sum();
+            if (s - 1.0).abs() > 1e-5 {
+                return Err(AdaError::Graph(format!(
+                    "row {i} of mixing matrix sums to {s}, expected 1"
+                )));
+            }
+            if self.self_weight[i] < 0.0 || self.weights[i].iter().any(|&w| w < 0.0) {
+                return Err(AdaError::Graph(format!("row {i} has negative weights")));
+            }
+        }
+        // Column stochasticity (doubly stochastic ⇒ gossip preserves the
+        // global mean). Holds for uniform weights on regular graphs.
+        let dense = self.dense_mixing();
+        for j in 0..n {
+            let s: f32 = (0..n).map(|i| dense[i * n + j]).sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(AdaError::Graph(format!(
+                    "column {j} of mixing matrix sums to {s}, expected 1 \
+                     (graph not regular?)"
+                )));
+            }
+        }
+        // Symmetry for undirected graphs.
+        if !self.directed {
+            for i in 0..n {
+                for &j in &self.neighbors[i] {
+                    if self.weight(j, i) != self.weight(i, j) {
+                        return Err(AdaError::Graph(format!(
+                            "undirected graph asymmetric at ({i},{j})"
+                        )));
+                    }
+                }
+            }
+        }
+        if !self.is_connected() {
+            return Err(AdaError::Graph("graph is not connected".into()));
+        }
+        Ok(())
+    }
+
+    /// `1 − σ₂(W)`: the spectral gap of the mixing matrix, the standard
+    /// measure of gossip mixing speed (larger = faster consensus).
+    pub fn spectral_gap(&self) -> f64 {
+        1.0 - spectral::mixing_contraction(&self.dense_mixing(), self.n)
+    }
+
+    /// Bytes a single node sends per gossip round for a model of
+    /// `param_count` f32 parameters (degree × 4 bytes × params).
+    pub fn bytes_sent_per_node(&self, param_count: usize) -> u64 {
+        self.degree() as u64 * 4 * param_count as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_for(n: usize) -> Vec<GraphKind> {
+        vec![
+            GraphKind::Ring,
+            GraphKind::Torus,
+            GraphKind::RingLattice { k: 2 },
+            GraphKind::AdaLattice { k: 4 },
+            GraphKind::Exponential,
+            GraphKind::Complete,
+        ]
+        .into_iter()
+        .filter(|k| !(matches!(k, GraphKind::Torus) && n < 4))
+        .filter(|k| !matches!(k, GraphKind::RingLattice { k } if 2 * k >= n))
+        .collect()
+    }
+
+    #[test]
+    fn table1_ring_degree_and_edges() {
+        for n in [4, 8, 12, 16, 96] {
+            let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+            assert_eq!(g.degree(), 2, "ring degree must be 2 (Table 1)");
+            assert!(g.is_regular());
+            assert_eq!(g.edge_count(), n, "ring has n edges (Table 1)");
+            assert!(!g.is_directed());
+        }
+    }
+
+    #[test]
+    fn table1_torus_degree_and_edges() {
+        // n with both grid dims ≥ 3 matches Table 1 exactly.
+        for n in [9, 12, 16, 24, 48, 96] {
+            let g = CommGraph::build(GraphKind::Torus, n).unwrap();
+            assert_eq!(g.degree(), 4, "torus degree must be 4 (Table 1), n={n}");
+            assert!(g.is_regular());
+            assert_eq!(g.edge_count(), 2 * n, "torus has 2n edges (Table 1)");
+        }
+    }
+
+    #[test]
+    fn table1_ring_lattice_degree_and_edges() {
+        for (n, k) in [(12, 2), (16, 3), (96, 5)] {
+            let g = CommGraph::build(GraphKind::RingLattice { k }, n).unwrap();
+            assert_eq!(g.degree(), 2 * k, "ring lattice degree must be 2k");
+            assert!(g.is_regular());
+            assert_eq!(g.edge_count(), k * n, "ring lattice has kn edges");
+        }
+    }
+
+    #[test]
+    fn table1_exponential_degree_and_edges() {
+        for n in [8, 12, 16, 24, 48, 96] {
+            let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+            let expect = ((n - 1) as f64).log2().floor() as usize + 1;
+            assert_eq!(
+                g.degree(),
+                expect,
+                "exponential degree must be ⌊log2(n-1)⌋+1, n={n}"
+            );
+            assert!(g.is_regular());
+            assert_eq!(g.edge_count(), n * expect, "n(⌊log2(n-1)⌋+1) arcs");
+            assert!(g.is_directed());
+        }
+    }
+
+    #[test]
+    fn table1_complete_degree_and_edges() {
+        for n in [4, 12, 96] {
+            let g = CommGraph::build(GraphKind::Complete, n).unwrap();
+            assert_eq!(g.degree(), n - 1);
+            assert!(g.is_regular());
+            assert_eq!(g.edge_count(), n * (n - 1) / 2, "n(n-1)/2 edges");
+        }
+    }
+
+    #[test]
+    fn exponential_neighbors_match_paper_formula() {
+        // §3.1.2: S_i = {(i + 2^m) % n}, m = 0..⌊log2(n-1)⌋.
+        let n = 12;
+        let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+        for i in 0..n {
+            let mut expect: Vec<usize> = (0..)
+                .map(|m| 1usize << m)
+                .take_while(|&p| p <= n - 1)
+                .map(|p| (i + p) % n)
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(g.neighbors_of(i), expect.as_slice(), "node {i}");
+        }
+    }
+
+    #[test]
+    fn ada_lattice_matches_algorithm1() {
+        // Algorithm 1: graph[i][(i+j)%n] = 1/(k+1) for j in -k/2..k/2, j≠0,
+        // and graph[i][i] = 1/(k+1).
+        let (n, k) = (9, 4);
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, n).unwrap();
+        for i in 0..n {
+            assert!((g.self_weight(i) - 1.0 / (k as f32 + 1.0)).abs() < 1e-6);
+            let half = k as isize / 2;
+            let mut expect: Vec<usize> = (-half..=half)
+                .filter(|&j| j != 0)
+                .map(|j| (i as isize + j).rem_euclid(n as isize) as usize)
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(g.neighbors_of(i), expect.as_slice());
+            for &j in g.neighbors_of(i) {
+                assert!((g.weight(i, j).unwrap() - 1.0 / (k as f32 + 1.0)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ada_lattice_k_saturates_to_complete() {
+        // k = n-1 (odd n) reaches the complete graph, as in Fig. 6(a).
+        let g = CommGraph::build(GraphKind::AdaLattice { k: 8 }, 9).unwrap();
+        assert_eq!(g.degree(), 8);
+        let c = CommGraph::build(GraphKind::Complete, 9).unwrap();
+        assert_eq!(g.dense_mixing(), c.dense_mixing());
+    }
+
+    #[test]
+    fn all_graphs_validate() {
+        for n in [4, 8, 9, 12, 16, 24, 48, 96] {
+            for kind in kinds_for(n) {
+                let g = CommGraph::build(kind, n)
+                    .unwrap_or_else(|e| panic!("build {kind} n={n}: {e}"));
+                g.validate()
+                    .unwrap_or_else(|e| panic!("validate {kind} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_gap_orders_by_connectivity() {
+        // Observation 2's mechanism: more connections ⇒ faster mixing.
+        let n = 24;
+        let gap = |k: GraphKind| CommGraph::build(k, n).unwrap().spectral_gap();
+        let ring = gap(GraphKind::Ring);
+        let torus = gap(GraphKind::Torus);
+        let expo = gap(GraphKind::Exponential);
+        let complete = gap(GraphKind::Complete);
+        assert!(
+            ring < torus && torus < expo && expo <= complete + 1e-9,
+            "expected gap(ring) < gap(torus) < gap(exp) ≤ gap(complete): \
+             {ring} {torus} {expo} {complete}"
+        );
+        assert!((complete - 1.0).abs() < 1e-3, "complete graph mixes in one step");
+    }
+
+    #[test]
+    fn complete_graph_row_is_uniform_average() {
+        let n = 8;
+        let g = CommGraph::build(GraphKind::Complete, n).unwrap();
+        for i in 0..n {
+            for (j, w) in g.row(i) {
+                assert!((w - 1.0 / n as f32).abs() < 1e-6, "W[{i}][{j}]={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_lookup_roundtrip() {
+        let g = CommGraph::build(GraphKind::Torus, 16).unwrap();
+        for i in 0..16 {
+            for j in 0..16 {
+                let dense = g.dense_mixing();
+                let w = g.weight(i, j).unwrap_or(0.0);
+                assert_eq!(w, dense[i * 16 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn torus_small_dim_degenerates_gracefully() {
+        // 2×4 grid: vertical neighbors coincide → degree 3, still valid.
+        let g = CommGraph::build(GraphKind::Torus, 8).unwrap();
+        assert!(g.is_regular());
+        assert_eq!(g.degree(), 3);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(CommGraph::build(GraphKind::Ring, 0).is_err());
+        assert!(CommGraph::build(GraphKind::Ring, 2).is_err());
+        assert!(CommGraph::build(GraphKind::Torus, 7).is_err()); // prime
+        assert!(CommGraph::build(GraphKind::RingLattice { k: 0 }, 8).is_err());
+        assert!(CommGraph::build(GraphKind::RingLattice { k: 5 }, 8).is_err()); // 2k ≥ n
+        assert!(CommGraph::from_neighbor_lists(
+            GraphKind::Ring,
+            vec![vec![0], vec![0]], // self loop
+            false
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hypercube_degree_and_distance() {
+        for n in [4usize, 16, 64] {
+            let g = CommGraph::build(GraphKind::Hypercube, n).unwrap();
+            assert_eq!(g.degree(), n.trailing_zeros() as usize);
+            assert!(g.is_regular());
+            g.validate().unwrap();
+            // Every neighbor differs in exactly one bit.
+            for i in 0..n {
+                for &j in g.neighbors_of(i) {
+                    assert_eq!((i ^ j).count_ones(), 1, "{i} ↔ {j}");
+                }
+            }
+        }
+        assert!(CommGraph::build(GraphKind::Hypercube, 12).is_err());
+    }
+
+    #[test]
+    fn random_regular_is_regular_connected_deterministic() {
+        for (n, d) in [(16, 4), (30, 6), (96, 4)] {
+            let g = CommGraph::build(GraphKind::RandomRegular { d, seed: 9 }, n).unwrap();
+            assert!(g.is_regular(), "n={n} d={d}");
+            assert_eq!(g.degree(), d);
+            g.validate().unwrap();
+            let g2 = CommGraph::build(GraphKind::RandomRegular { d, seed: 9 }, n).unwrap();
+            assert_eq!(g.dense_mixing(), g2.dense_mixing(), "seeded determinism");
+        }
+        assert!(CommGraph::build(GraphKind::RandomRegular { d: 3, seed: 0 }, 16).is_err());
+        assert!(CommGraph::build(GraphKind::RandomRegular { d: 16, seed: 0 }, 16).is_err());
+    }
+
+    #[test]
+    fn random_regular_is_a_good_expander() {
+        // The theory motivation: a random 4-regular graph's spectral gap
+        // crushes the ring's at the same per-round cost ballpark.
+        let n = 64;
+        let ring = CommGraph::build(GraphKind::Ring, n).unwrap().spectral_gap();
+        let rr = CommGraph::build(GraphKind::RandomRegular { d: 4, seed: 3 }, n)
+            .unwrap()
+            .spectral_gap();
+        assert!(rr > 10.0 * ring, "expander gap {rr} vs ring {ring}");
+    }
+
+    #[test]
+    fn n1008_topologies_build_exactly() {
+        // Fig 7(d) scale: topology machinery is exact at n = 1008.
+        let n = 1008;
+        let ring = CommGraph::build(GraphKind::Ring, n).unwrap();
+        assert_eq!(ring.edge_count(), n);
+        let torus = CommGraph::build(GraphKind::Torus, n).unwrap();
+        assert_eq!(torus.degree(), 4); // 1008 = 24 × 42
+        let expo = CommGraph::build(GraphKind::Exponential, n).unwrap();
+        assert_eq!(expo.degree(), 10); // ⌊log2(1007)⌋ + 1 = 10
+        let ada = CommGraph::build(GraphKind::AdaLattice { k: 112 }, n).unwrap();
+        assert_eq!(ada.degree(), 112); // Table 4: k0 = 112
+        for g in [&ring, &torus, &expo, &ada] {
+            g.validate().unwrap();
+        }
+    }
+}

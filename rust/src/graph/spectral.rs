@@ -1,0 +1,134 @@
+//! Spectral analysis of mixing matrices.
+//!
+//! Gossip convergence speed is governed by the second-largest singular
+//! value σ₂ of the mixing matrix `W` (Xiao & Boyd 2004): the disagreement
+//! `‖Θ − Θ̄‖` contracts by σ₂ per round. `1 − σ₂` is the spectral gap.
+//! We compute σ₂ by power iteration on `WᵀW` restricted to the complement
+//! of the consensus direction (the all-ones vector), which works uniformly
+//! for symmetric and asymmetric (exponential-graph) mixing matrices.
+
+/// Second-largest singular value of the `n × n` row-major matrix `w`,
+/// assuming `w` is doubly stochastic (σ₁ = 1 with singular vector 1/√n).
+pub fn power_iteration_sigma2(w: &[f32], n: usize) -> f64 {
+    assert_eq!(w.len(), n * n, "matrix shape mismatch");
+    if n == 1 {
+        return 0.0;
+    }
+    let wf: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+    // x ← deflate(x); y = W x; x' = Wᵀ y  (i.e. one step of WᵀW)
+    let mut x: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+    deflate(&mut x);
+    normalize(&mut x);
+    let mut y = vec![0.0f64; n];
+    let mut sigma2_sq = 0.0f64;
+    for _ in 0..600 {
+        // y = W x
+        for i in 0..n {
+            let row = &wf[i * n..(i + 1) * n];
+            y[i] = row.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+        }
+        // x' = Wᵀ y
+        for i in 0..n {
+            x[i] = 0.0;
+        }
+        for i in 0..n {
+            let row = &wf[i * n..(i + 1) * n];
+            let yi = y[i];
+            for j in 0..n {
+                x[j] += row[j] * yi;
+            }
+        }
+        deflate(&mut x);
+        let norm = normalize(&mut x);
+        let prev = sigma2_sq;
+        sigma2_sq = norm;
+        if (sigma2_sq - prev).abs() < 1e-13 {
+            break;
+        }
+    }
+    sigma2_sq.max(0.0).sqrt()
+}
+
+/// σ₂ of the mixing matrix: the per-round contraction factor of the
+/// disagreement. `1 − mixing_contraction` is the spectral gap.
+pub fn mixing_contraction(w: &[f32], n: usize) -> f64 {
+    power_iteration_sigma2(w, n)
+}
+
+/// Remove the component along the all-ones consensus direction.
+fn deflate(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+/// Normalize to unit length, returning the prior squared norm after one
+/// WᵀW application (the Rayleigh-quotient estimate of σ₂²).
+fn normalize(x: &mut [f64]) -> f64 {
+    let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for v in x.iter_mut() {
+            *v /= norm;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CommGraph, GraphKind};
+
+    #[test]
+    fn complete_graph_has_gap_one() {
+        let g = CommGraph::build(GraphKind::Complete, 16).unwrap();
+        let s2 = power_iteration_sigma2(&g.dense_mixing(), 16);
+        assert!(s2 < 1e-6, "uniform averaging reaches consensus in one round, σ2={s2}");
+    }
+
+    #[test]
+    fn ring_sigma2_matches_closed_form() {
+        // Uniform-weight ring: eigenvalues (1 + 2cos(2πk/n)) / 3.
+        let n = 24;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let s2 = power_iteration_sigma2(&g.dense_mixing(), n);
+        let expect = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0;
+        assert!(
+            (s2 - expect).abs() < 1e-6,
+            "σ2 = {s2}, closed form = {expect}"
+        );
+    }
+
+    #[test]
+    fn sigma2_decreases_with_lattice_k() {
+        // Ada's premise: larger k ⇒ faster mixing.
+        let n = 32;
+        let mut prev = 1.0f64;
+        for k in [2, 4, 8, 12] {
+            let g = CommGraph::build(GraphKind::AdaLattice { k }, n).unwrap();
+            let s2 = power_iteration_sigma2(&g.dense_mixing(), n);
+            assert!(
+                s2 < prev + 1e-9,
+                "σ2 must not increase with k: k={k} σ2={s2} prev={prev}"
+            );
+            prev = s2;
+        }
+    }
+
+    #[test]
+    fn identity_matrix_sigma2_is_one() {
+        let n = 8;
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let s2 = power_iteration_sigma2(&w, n);
+        assert!((s2 - 1.0).abs() < 1e-9, "no mixing ⇒ σ2 = 1, got {s2}");
+    }
+
+    #[test]
+    fn single_node_gap() {
+        assert_eq!(power_iteration_sigma2(&[1.0], 1), 0.0);
+    }
+}

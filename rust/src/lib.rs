@@ -1,0 +1,57 @@
+//! # ada-dist — adaptive decentralized data-parallel training
+//!
+//! Reproduction of *“Scaling Up Data Parallelism in Decentralized Deep
+//! Learning”* (Xie, Yin, Zhou, Oral, Wang — CS.LG 2025): the **DBench**
+//! benchmarking framework for centralized/decentralized data-parallel DNN
+//! training, and **Ada**, an adaptive decentralized SGD that decays the
+//! coordination number of a ring-lattice communication graph across epochs.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: communication graphs and mixing
+//!   matrices ([`graph`]), adaptive topology schedules ([`topology`]), the
+//!   gossip mixing engine ([`gossip`]), the n-worker decentralized training
+//!   loop ([`coordinator`]), variance metrics and ranking analysis
+//!   ([`metrics`]), the DBench experiment runner ([`dbench`]), and a
+//!   Summit-like analytic network cost model ([`simnet`]).
+//! * **L2 (build-time Python)** — JAX model definitions (`python/compile/`)
+//!   AOT-lowered to HLO text artifacts, loaded and executed from Rust via
+//!   the PJRT C API ([`runtime`]).
+//! * **L1 (build-time Python)** — Pallas kernels for the gossip mixing
+//!   matmul and the fused SGD update, lowered into the same HLO artifacts.
+//!
+//! Python never runs on the training path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ada_dist::graph::{CommGraph, GraphKind};
+//! use ada_dist::topology::{AdaSchedule, TopologySchedule};
+//!
+//! // A 16-node torus mixing matrix:
+//! let g = CommGraph::build(GraphKind::Torus, 16).unwrap();
+//! assert_eq!(g.degree(), 4);
+//!
+//! // Ada's adaptive ring lattice (Algorithm 1): k0 = 8, gamma_k = 0.5.
+//! let ada = AdaSchedule::new(16, 8, 0.5);
+//! let g0 = ada.graph_for_epoch(0).unwrap();   // near-complete
+//! let g9 = ada.graph_for_epoch(20).unwrap();  // decayed to k = 2
+//! assert!(g0.degree() > g9.degree());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dbench;
+pub mod error;
+pub mod gossip;
+pub mod graph;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod simnet;
+pub mod topology;
+pub mod util;
+
+pub use error::{AdaError, Result};

@@ -1,0 +1,69 @@
+//! White-box training metrics — the instrumentation DBench adds (§3 of
+//! the paper): per-replica parameter-tensor L2 norms collected *before*
+//! the gossip averaging step, and four cross-replica variance statistics
+//! (gini coefficient, index of dispersion, coefficient of variation,
+//! quartile coefficient of dispersion), plus the variance **ranking
+//! analysis** of §3.3 and structured recorders for the figure data.
+
+mod ranking;
+mod recorder;
+mod variance;
+
+pub use ranking::{rank_ascending, RankSummary};
+pub use recorder::{IterationRecord, RunRecorder};
+pub use variance::{
+    coefficient_of_variation, gini_coefficient, index_of_dispersion,
+    quartile_coefficient_of_dispersion, VarianceReport,
+};
+
+/// L2 norm of a parameter vector — the per-replica quantity DBench logs
+/// via `torch.tensor.norm()` in the paper (§3.1.2).
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// L2 norms of a named slice of each replica's flat parameter vector —
+/// used to study individual parameter tensors (Fig. 4) rather than the
+/// whole model.
+pub fn per_replica_l2_norms(replicas: &[Vec<f32>], range: std::ops::Range<usize>) -> Vec<f64> {
+    replicas
+        .iter()
+        .map(|p| l2_norm(&p[range.clone()]))
+        .collect()
+}
+
+/// Mean of a sample.
+pub(crate) fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance of a sample.
+pub(crate) fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_norm_matches_manual() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn per_replica_norms_slice_correctly() {
+        let replicas = vec![vec![3.0, 4.0, 100.0], vec![6.0, 8.0, 100.0]];
+        let norms = per_replica_l2_norms(&replicas, 0..2);
+        assert!((norms[0] - 5.0).abs() < 1e-12);
+        assert!((norms[1] - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,125 @@
+//! The ranking analysis of §3.3: per iteration, each SGD implementation
+//! is assigned a rank 1..=m by its gini coefficient (1 = lowest variance),
+//! which "filters out the value differences among the variances [and]
+//! makes the variances across parameters comparable and integrable".
+//! Summed over iterations and parameters, the rank totals reproduce
+//! Fig. 5.
+
+use std::collections::HashMap;
+
+/// Ranks of `values` in ascending order, 1-based: the smallest value gets
+/// rank 1. Ties receive the same (minimum) rank, like competition ranking.
+pub fn rank_ascending(values: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).expect("NaN in ranks"));
+    let mut ranks = vec![0usize; values.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        // Tie group shares the rank i+1.
+        while j + 1 < idx.len() && values[idx[j + 1]] == values[idx[i]] {
+            j += 1;
+        }
+        for &k in &idx[i..=j] {
+            ranks[k] = i + 1;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Accumulates variance ranks per SGD implementation across iterations
+/// (and across parameter tensors), reproducing Fig. 5's summaries.
+#[derive(Debug, Default, Clone)]
+pub struct RankSummary {
+    /// Implementation name → (sum of ranks, observation count).
+    totals: HashMap<String, (u64, u64)>,
+}
+
+impl RankSummary {
+    /// Create an empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one iteration's gini coefficients: `entries` pairs each SGD
+    /// implementation with its measured gini for the same parameter at the
+    /// same iteration.
+    pub fn record(&mut self, entries: &[(&str, f64)]) {
+        let values: Vec<f64> = entries.iter().map(|&(_, v)| v).collect();
+        let ranks = rank_ascending(&values);
+        for ((name, _), rank) in entries.iter().zip(ranks) {
+            let e = self.totals.entry((*name).to_string()).or_insert((0, 0));
+            e.0 += rank as u64;
+            e.1 += 1;
+        }
+    }
+
+    /// Mean rank of an implementation (1 = consistently lowest variance).
+    pub fn mean_rank(&self, name: &str) -> Option<f64> {
+        self.totals
+            .get(name)
+            .map(|&(sum, count)| sum as f64 / count as f64)
+    }
+
+    /// Implementations sorted by ascending mean rank — the Fig. 5 ordering.
+    pub fn ordering(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .totals
+            .iter()
+            .map(|(k, &(sum, count))| (k.clone(), sum as f64 / count as f64))
+            .collect();
+        v.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN mean rank"));
+        v
+    }
+
+    /// Number of observations recorded for `name`.
+    pub fn count(&self, name: &str) -> u64 {
+        self.totals.get(name).map(|&(_, c)| c).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_are_ascending_one_based() {
+        assert_eq!(rank_ascending(&[0.3, 0.1, 0.2]), vec![3, 1, 2]);
+        assert_eq!(rank_ascending(&[5.0]), vec![1]);
+        assert_eq!(rank_ascending(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ties_share_minimum_rank() {
+        assert_eq!(rank_ascending(&[1.0, 1.0, 2.0]), vec![1, 1, 3]);
+        assert_eq!(rank_ascending(&[2.0, 2.0, 2.0]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn summary_reproduces_fig5_ordering() {
+        // C_complete consistently lowest variance, D_ring highest —
+        // the ResNet20 pattern described in §3.3.
+        let mut s = RankSummary::new();
+        for iter in 0..100 {
+            let base = 0.001 * (100 - iter) as f64;
+            s.record(&[
+                ("C_complete", base * 1.0),
+                ("D_complete", base * 1.5),
+                ("D_torus", base * 3.0),
+                ("D_ring", base * 5.0),
+            ]);
+        }
+        let order: Vec<String> = s.ordering().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(order, vec!["C_complete", "D_complete", "D_torus", "D_ring"]);
+        assert_eq!(s.mean_rank("C_complete"), Some(1.0));
+        assert_eq!(s.mean_rank("D_ring"), Some(4.0));
+        assert_eq!(s.count("D_torus"), 100);
+    }
+
+    #[test]
+    fn mean_rank_missing_is_none() {
+        let s = RankSummary::new();
+        assert_eq!(s.mean_rank("nope"), None);
+    }
+}

@@ -1,0 +1,279 @@
+//! Structured run recording: one [`IterationRecord`] per training
+//! iteration, streamed to JSONL and summarizable to the CSV series the
+//! figure benches print. This is DBench's profiling-data path (§3.1.2).
+
+use super::VarianceReport;
+use crate::error::Result;
+use crate::util::json::Value;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Everything DBench logs for one training iteration.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    /// 0-based global iteration index.
+    pub iteration: usize,
+    /// 0-based epoch.
+    pub epoch: usize,
+    /// Mean training loss across replicas this iteration.
+    pub train_loss: f64,
+    /// Test accuracy (classification) or perplexity (LM), when evaluated
+    /// this iteration; `None` between eval points.
+    pub test_metric: Option<f64>,
+    /// Cross-replica variance of whole-model parameter L2 norms,
+    /// sampled *before* gossip averaging.
+    pub variance: VarianceReport,
+    /// Gini coefficients of individual tracked parameter tensors
+    /// (Fig. 4 uses single parameters).
+    pub per_tensor_gini: Vec<f64>,
+    /// Degree of the communication graph used this iteration.
+    pub graph_degree: usize,
+    /// Bytes sent per node this iteration (communication cost).
+    pub bytes_per_node: u64,
+    /// Learning rate in effect.
+    pub lr: f64,
+}
+
+impl IterationRecord {
+    /// JSON encoding (one JSONL line).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("iteration", Value::Num(self.iteration as f64)),
+            ("epoch", Value::Num(self.epoch as f64)),
+            ("train_loss", Value::Num(self.train_loss)),
+            (
+                "test_metric",
+                match self.test_metric {
+                    Some(m) => Value::Num(m),
+                    None => Value::Null,
+                },
+            ),
+            (
+                "variance",
+                Value::obj(vec![
+                    ("gini", Value::Num(self.variance.gini)),
+                    ("iod", Value::Num(self.variance.index_of_dispersion)),
+                    ("cov", Value::Num(self.variance.coeff_of_variation)),
+                    ("qcd", Value::Num(self.variance.quartile_coeff)),
+                ]),
+            ),
+            (
+                "per_tensor_gini",
+                Value::Arr(self.per_tensor_gini.iter().map(|&g| Value::Num(g)).collect()),
+            ),
+            ("graph_degree", Value::Num(self.graph_degree as f64)),
+            ("bytes_per_node", Value::Num(self.bytes_per_node as f64)),
+            ("lr", Value::Num(self.lr)),
+        ])
+    }
+
+    /// Decode from JSON (inverse of [`IterationRecord::to_json`]).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let variance = v
+            .get("variance")
+            .ok_or_else(|| crate::AdaError::Config("missing variance".into()))?;
+        Ok(IterationRecord {
+            iteration: v.usize_field("iteration")?,
+            epoch: v.usize_field("epoch")?,
+            train_loss: v.num_field("train_loss")?,
+            test_metric: match v.get("test_metric") {
+                Some(Value::Num(m)) => Some(*m),
+                _ => None,
+            },
+            variance: VarianceReport {
+                gini: variance.num_field("gini")?,
+                index_of_dispersion: variance.num_field("iod")?,
+                coeff_of_variation: variance.num_field("cov")?,
+                quartile_coeff: variance.num_field("qcd")?,
+            },
+            per_tensor_gini: v
+                .arr_field("per_tensor_gini")?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect(),
+            graph_degree: v.usize_field("graph_degree")?,
+            bytes_per_node: v.num_field("bytes_per_node")? as u64,
+            lr: v.num_field("lr")?,
+        })
+    }
+}
+
+/// Streams [`IterationRecord`]s to a JSONL file and keeps an in-memory
+/// copy for post-run analysis.
+#[derive(Debug)]
+pub struct RunRecorder {
+    records: Vec<IterationRecord>,
+    sink: Option<BufWriter<File>>,
+    /// Run label (SGD implementation name, e.g. `D_ring`).
+    pub label: String,
+}
+
+impl RunRecorder {
+    /// In-memory only recorder.
+    pub fn in_memory(label: impl Into<String>) -> Self {
+        RunRecorder {
+            records: Vec::new(),
+            sink: None,
+            label: label.into(),
+        }
+    }
+
+    /// Recorder that also appends JSONL to `path`.
+    pub fn to_file(label: impl Into<String>, path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(RunRecorder {
+            records: Vec::new(),
+            sink: Some(BufWriter::new(File::create(path)?)),
+            label: label.into(),
+        })
+    }
+
+    /// Record one iteration.
+    pub fn push(&mut self, rec: IterationRecord) -> Result<()> {
+        if let Some(sink) = &mut self.sink {
+            writeln!(sink, "{}", rec.to_json().to_string())?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// All records so far.
+    pub fn records(&self) -> &[IterationRecord] {
+        &self.records
+    }
+
+    /// Final test metric (last evaluated point), if any.
+    pub fn final_test_metric(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_metric)
+    }
+
+    /// Best test metric over the run (`higher_is_better` flips for PPL).
+    pub fn best_test_metric(&self, higher_is_better: bool) -> Option<f64> {
+        let it = self.records.iter().filter_map(|r| r.test_metric);
+        if higher_is_better {
+            it.max_by(|a, b| a.partial_cmp(b).expect("NaN metric"))
+        } else {
+            it.min_by(|a, b| a.partial_cmp(b).expect("NaN metric"))
+        }
+    }
+
+    /// Total bytes sent per node over the run (communication cost).
+    pub fn total_bytes_per_node(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_per_node).sum()
+    }
+
+    /// Mean gini over a window of iterations (for early/late-stage
+    /// comparisons, Observation 4).
+    pub fn mean_gini(&self, range: std::ops::Range<usize>) -> f64 {
+        let window: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| range.contains(&r.iteration))
+            .map(|r| r.variance.gini)
+            .collect();
+        if window.is_empty() {
+            0.0
+        } else {
+            window.iter().sum::<f64>() / window.len() as f64
+        }
+    }
+
+    /// The (iteration, test_metric) series — the accuracy curves of
+    /// Figures 2/3/7.
+    pub fn metric_series(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_metric.map(|m| (r.iteration, m)))
+            .collect()
+    }
+
+    /// The (iteration, gini) series — Fig. 4's curves.
+    pub fn gini_series(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .map(|r| (r.iteration, r.variance.gini))
+            .collect()
+    }
+
+    /// Flush the JSONL sink.
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(sink) = &mut self.sink {
+            sink.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::scratch_dir;
+
+    fn rec(iteration: usize, gini: f64, test: Option<f64>) -> IterationRecord {
+        IterationRecord {
+            iteration,
+            epoch: iteration / 10,
+            train_loss: 1.0,
+            test_metric: test,
+            variance: VarianceReport {
+                gini,
+                index_of_dispersion: 0.0,
+                coeff_of_variation: 0.0,
+                quartile_coeff: 0.0,
+            },
+            per_tensor_gini: vec![gini],
+            graph_degree: 2,
+            bytes_per_node: 800,
+            lr: 0.1,
+        }
+    }
+
+    #[test]
+    fn in_memory_aggregations() {
+        let mut r = RunRecorder::in_memory("D_ring");
+        r.push(rec(0, 0.5, None)).unwrap();
+        r.push(rec(1, 0.3, Some(0.6))).unwrap();
+        r.push(rec(2, 0.1, Some(0.8))).unwrap();
+        assert_eq!(r.final_test_metric(), Some(0.8));
+        assert_eq!(r.best_test_metric(true), Some(0.8));
+        assert_eq!(r.best_test_metric(false), Some(0.6));
+        assert_eq!(r.total_bytes_per_node(), 2400);
+        assert!((r.mean_gini(0..2) - 0.4).abs() < 1e-12);
+        assert_eq!(r.metric_series(), vec![(1, 0.6), (2, 0.8)]);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = scratch_dir("recorder").unwrap();
+        let path = dir.join("run.jsonl");
+        {
+            let mut r = RunRecorder::to_file("D_torus", &path).unwrap();
+            r.push(rec(0, 0.2, Some(0.7))).unwrap();
+            r.push(rec(1, 0.1, None)).unwrap();
+            r.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let parsed =
+            IterationRecord::from_json(&Value::parse(lines[0]).unwrap()).unwrap();
+        assert_eq!(parsed.iteration, 0);
+        assert_eq!(parsed.test_metric, Some(0.7));
+        assert!((parsed.variance.gini - 0.2).abs() < 1e-12);
+        let parsed1 =
+            IterationRecord::from_json(&Value::parse(lines[1]).unwrap()).unwrap();
+        assert_eq!(parsed1.test_metric, None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_recorder_is_sane() {
+        let r = RunRecorder::in_memory("x");
+        assert_eq!(r.final_test_metric(), None);
+        assert_eq!(r.mean_gini(0..100), 0.0);
+        assert_eq!(r.total_bytes_per_node(), 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! The four cross-replica variance statistics of §3.3.
+//!
+//! Each takes the per-replica L2 norms of a parameter tensor (one value
+//! per GPU, sampled *before* gossip averaging) and returns a scalar
+//! dispersion measure. The paper reports that all four "present the same
+//! trends and patterns consistently" and publishes gini; we implement all
+//! four and test that they order dispersion consistently.
+
+use super::{mean, variance};
+
+/// Gini coefficient of a non-negative sample (the paper's headline
+/// metric). Uses the standard mean-absolute-difference form
+/// `G = Σᵢⱼ|xᵢ−xⱼ| / (2 n² μ)`, computed in O(n log n) via the sorted
+/// identity `G = (2 Σᵢ i·x₍ᵢ₎ / (n Σ x)) − (n+1)/n`.
+pub fn gini_coefficient(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in gini input"));
+    let total: f64 = sorted.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = sorted
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i as f64 + 1.0) * x)
+        .sum();
+    let n_f = n as f64;
+    // Clamp the O(ε) residue of the sorted-sum identity on (near-)
+    // constant samples so exact zeros stay exactly zero.
+    ((2.0 * weighted / (n_f * total)) - (n_f + 1.0) / n_f).max(0.0)
+}
+
+/// Index of dispersion (variance-to-mean ratio) `σ² / μ`.
+pub fn index_of_dispersion(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    variance(xs) / m
+}
+
+/// Coefficient of variation `σ / μ`.
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    variance(xs).sqrt() / m
+}
+
+/// Quartile coefficient of dispersion `(Q3 − Q1) / (Q3 + Q1)`.
+pub fn quartile_coefficient_of_dispersion(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in QCD input"));
+    let q1 = quantile(&sorted, 0.25);
+    let q3 = quantile(&sorted, 0.75);
+    if q3 + q1 == 0.0 {
+        return 0.0;
+    }
+    (q3 - q1) / (q3 + q1)
+}
+
+/// Linear-interpolated quantile of a sorted sample.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// All four §3.3 statistics of one cross-replica sample, bundled for
+/// the recorders.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VarianceReport {
+    /// Gini coefficient (the paper's reported metric).
+    pub gini: f64,
+    /// Index of dispersion σ²/μ.
+    pub index_of_dispersion: f64,
+    /// Coefficient of variation σ/μ.
+    pub coeff_of_variation: f64,
+    /// Quartile coefficient of dispersion.
+    pub quartile_coeff: f64,
+}
+
+impl VarianceReport {
+    /// Compute all four statistics of `xs` (per-replica L2 norms).
+    pub fn of(xs: &[f64]) -> Self {
+        VarianceReport {
+            gini: gini_coefficient(xs),
+            index_of_dispersion: index_of_dispersion(xs),
+            coeff_of_variation: coefficient_of_variation(xs),
+            quartile_coeff: quartile_coefficient_of_dispersion(xs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gini_zero_for_constant_sample() {
+        assert_eq!(gini_coefficient(&[5.0; 8]), 0.0);
+        assert_eq!(gini_coefficient(&[5.0]), 0.0);
+        assert_eq!(gini_coefficient(&[]), 0.0);
+    }
+
+    #[test]
+    fn gini_known_values() {
+        // Two-point {0, x}: G = 1/2.
+        assert!((gini_coefficient(&[0.0, 1.0]) - 0.5).abs() < 1e-12);
+        // Maximal inequality over n → (n-1)/n.
+        let mut xs = vec![0.0; 10];
+        xs[9] = 7.0;
+        assert!((gini_coefficient(&xs) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_matches_quadratic_definition() {
+        let xs = [1.0, 2.5, 0.3, 4.0, 4.0, 0.9];
+        let n = xs.len() as f64;
+        let mu = xs.iter().sum::<f64>() / n;
+        let mut mad = 0.0;
+        for &a in &xs {
+            for &b in &xs {
+                mad += (a - b).abs();
+            }
+        }
+        let expect = mad / (2.0 * n * n * mu);
+        assert!((gini_coefficient(&xs) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_scale_invariant() {
+        let xs = [1.0, 3.0, 7.0, 2.0];
+        let scaled: Vec<f64> = xs.iter().map(|x| x * 42.0).collect();
+        assert!((gini_coefficient(&xs) - gini_coefficient(&scaled)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_bounded() {
+        let xs = [0.0, 0.0, 1.0, 100.0, 3.0];
+        let g = gini_coefficient(&xs);
+        assert!((0.0..1.0).contains(&g));
+    }
+
+    #[test]
+    fn cov_and_iod_known_values() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]; // σ=2, μ=5
+        assert!((coefficient_of_variation(&xs) - 0.4).abs() < 1e-12);
+        assert!((index_of_dispersion(&xs) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qcd_known_value() {
+        // 1..=9: Q1=3, Q3=7 → (7-3)/(7+3) = 0.4
+        let xs: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        assert!((quartile_coefficient_of_dispersion(&xs) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_metrics_agree_on_dispersion_ordering() {
+        // §3.3: "the results of different metrics present the same trends".
+        let tight = [10.0, 10.1, 9.9, 10.05, 9.95];
+        let wide = [2.0, 18.0, 9.0, 14.0, 5.0];
+        let t = VarianceReport::of(&tight);
+        let w = VarianceReport::of(&wide);
+        assert!(t.gini < w.gini);
+        assert!(t.index_of_dispersion < w.index_of_dispersion);
+        assert!(t.coeff_of_variation < w.coeff_of_variation);
+        assert!(t.quartile_coeff < w.quartile_coeff);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_zero_not_nan() {
+        for f in [
+            gini_coefficient as fn(&[f64]) -> f64,
+            index_of_dispersion,
+            coefficient_of_variation,
+            quartile_coefficient_of_dispersion,
+        ] {
+            assert_eq!(f(&[]), 0.0);
+            assert_eq!(f(&[0.0, 0.0]), 0.0);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! LARS — layer-wise adaptive rate scaling (You et al. 2017).
+//!
+//! §4.2 of the paper proposes applying LARS to decentralized large-batch
+//! training as future work ("The application of layer-wise adaptive rate
+//! scaling (LARS) to the decentralized setting might be an option to
+//! further improve the performance of our approach"). We implement it so
+//! the ablation bench can measure exactly that option.
+
+use super::SgdState;
+
+/// LARS wrapper around momentum SGD: per layer ℓ the local LR is
+/// `γ_ℓ = η · ‖θ_ℓ‖ / (‖g_ℓ‖ + β‖θ_ℓ‖ + ε)`, applied on top of the
+/// global schedule LR.
+#[derive(Debug, Clone)]
+pub struct Lars {
+    /// Trust coefficient η (paper default 0.001 for ResNet-scale nets).
+    pub eta: f32,
+    /// Weight decay β folded into the trust ratio.
+    pub weight_decay: f32,
+    /// Numerical floor.
+    pub epsilon: f32,
+    sgd: SgdState,
+    /// Flat-vector layer boundaries: layer ℓ is `params[ranges[ℓ].0..ranges[ℓ].1]`.
+    ranges: Vec<(usize, usize)>,
+}
+
+impl Lars {
+    /// Create LARS state over `n_params` parameters split at `ranges`.
+    pub fn new(
+        n_params: usize,
+        ranges: Vec<(usize, usize)>,
+        eta: f32,
+        momentum: f32,
+        weight_decay: f32,
+    ) -> Self {
+        assert!(
+            ranges.iter().all(|&(a, b)| a < b && b <= n_params),
+            "layer ranges must be valid sub-slices"
+        );
+        Lars {
+            eta,
+            weight_decay,
+            epsilon: 1e-9,
+            sgd: SgdState::new(n_params, momentum, 0.0),
+            ranges,
+        }
+    }
+
+    /// The trust ratio for one layer.
+    fn trust_ratio(&self, theta: &[f32], grad: &[f32]) -> f32 {
+        let wn = l2(theta);
+        let gn = l2(grad);
+        if wn == 0.0 || gn == 0.0 {
+            return 1.0;
+        }
+        self.eta * wn / (gn + self.weight_decay * wn + self.epsilon)
+    }
+
+    /// In-place LARS update with global LR `lr`: rescales each layer's
+    /// gradient by its trust ratio, then momentum-SGD-steps.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let mut scaled = grads.to_vec();
+        for &(a, b) in &self.ranges {
+            let ratio = self.trust_ratio(&params[a..b], &grads[a..b]);
+            for (g, &p) in scaled[a..b].iter_mut().zip(&params[a..b]) {
+                *g = (*g + self.weight_decay * p) * ratio;
+            }
+        }
+        self.sgd.step(params, &scaled, lr);
+    }
+}
+
+fn l2(v: &[f32]) -> f32 {
+    v.iter().map(|&x| x * x).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trust_ratio_normalizes_large_gradients() {
+        let lars = Lars::new(4, vec![(0, 4)], 0.001, 0.0, 0.0);
+        // Huge gradient relative to weights ⇒ tiny trust ratio.
+        let ratio = lars.trust_ratio(&[1.0, 0.0, 0.0, 0.0], &[1000.0, 0.0, 0.0, 0.0]);
+        assert!((ratio - 0.001 / 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_norms_fall_back_to_unit_ratio() {
+        let lars = Lars::new(2, vec![(0, 2)], 0.001, 0.0, 0.0);
+        assert_eq!(lars.trust_ratio(&[0.0, 0.0], &[1.0, 1.0]), 1.0);
+        assert_eq!(lars.trust_ratio(&[1.0, 1.0], &[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn per_layer_scaling_differs() {
+        // Layer 0 has balanced norms, layer 1 has exploding gradient:
+        // after one step, layer 1's parameters must move *less* relative
+        // to its gradient magnitude.
+        let mut lars = Lars::new(4, vec![(0, 2), (2, 4)], 0.01, 0.0, 0.0);
+        let mut p = vec![1.0f32, 1.0, 1.0, 1.0];
+        let g = vec![1.0f32, 1.0, 100.0, 100.0];
+        lars.step(&mut p, &g, 1.0);
+        let move0 = (1.0 - p[0]).abs();
+        let move1 = (1.0 - p[2]).abs();
+        // Trust ratios: both layers scale to η·‖θ‖/‖g‖ ⇒ absolute moves equal.
+        assert!(
+            (move0 - move1).abs() < 1e-6,
+            "LARS equalizes per-layer update magnitude: {move0} vs {move1}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "layer ranges")]
+    fn rejects_bad_ranges() {
+        Lars::new(4, vec![(0, 5)], 0.001, 0.0, 0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Optimization: learning-rate schedules (Table 2 of the paper), the
+//! linear / square-root batch-size scaling rules whose interaction with
+//! decentralization §3.2 analyzes (Observation 3), momentum SGD for the
+//! in-process surrogate models, and LARS (the paper's proposed future
+//! work for large-batch decentralized training, §4.2).
+
+mod lars;
+mod schedule;
+mod sgd;
+
+pub use lars::Lars;
+pub use schedule::{LrSchedule, PiecewiseLinear};
+pub use sgd::SgdState;
+
+/// Batch-size scaling rule applied to the base learning rate.
+///
+/// Table 2 uses `s = batch_size · (k+1) / divisor` — the effective data
+/// consumed per averaging neighborhood — scaled linearly; §3.2's tuned
+/// runs replace the linear rule with square-root scaling, which the
+/// paper finds becomes necessary at *smaller* scales for decentralized
+/// runs than for centralized ones (Observation 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalingRule {
+    /// No scaling: s = 1.
+    None,
+    /// Linear: s = effective_batch / divisor.
+    Linear,
+    /// Square-root: s = sqrt(effective_batch / divisor).
+    Sqrt,
+}
+
+impl ScalingRule {
+    /// Compute the scale factor `s` from the per-GPU batch size, the
+    /// neighbor count `k` of the communication graph (so `k+1` replicas
+    /// participate in each average) and the paper's divisor (256 for
+    /// ImageNet-style runs, 24 for the LSTM).
+    pub fn factor(self, batch_per_gpu: usize, k_neighbors: usize, divisor: f64) -> f64 {
+        let eff = batch_per_gpu as f64 * (k_neighbors as f64 + 1.0) / divisor;
+        match self {
+            ScalingRule::None => 1.0,
+            ScalingRule::Linear => eff,
+            ScalingRule::Sqrt => eff.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_resnet50_scaling_examples() {
+        // Table 2: s = Batch_Size·(k+1)/256, k=2 (ring) … k=#GPU−1 (complete).
+        let s_ring = ScalingRule::Linear.factor(32, 2, 256.0);
+        assert!((s_ring - 32.0 * 3.0 / 256.0).abs() < 1e-12);
+        let s_complete_96 = ScalingRule::Linear.factor(32, 95, 256.0);
+        assert!((s_complete_96 - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_is_smaller_than_linear_above_one() {
+        let lin = ScalingRule::Linear.factor(32, 95, 256.0);
+        let sqr = ScalingRule::Sqrt.factor(32, 95, 256.0);
+        assert!(sqr < lin, "sqrt must damp large-scale LR: {sqr} < {lin}");
+        assert!((sqr - lin.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        assert_eq!(ScalingRule::None.factor(999, 999, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Learning-rate schedules in Table 2's notation.
+//!
+//! Table 2 specifies schedules as paired lists
+//! `epoch=[(e0,e1),(e1,e2),…]` and `lr=[(lr_start,lr_end),…]`: within
+//! each epoch segment the LR interpolates linearly between the pair.
+//! One-cycle (ResNet20/DenseNet100) and warmup+multi-step
+//! (ResNet50/LSTM) are both instances of this piecewise-linear form.
+
+/// One segment: over `epoch ∈ [e0, e1)`, LR goes linearly `lr0 → lr1`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    /// Segment start epoch (inclusive, fractional allowed).
+    pub e0: f64,
+    /// Segment end epoch (exclusive).
+    pub e1: f64,
+    /// LR at `e0`.
+    pub lr0: f64,
+    /// LR approached at `e1`.
+    pub lr1: f64,
+}
+
+/// A piecewise-linear LR schedule over (fractional) epochs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PiecewiseLinear {
+    segments: Vec<Segment>,
+}
+
+impl PiecewiseLinear {
+    /// Build from Table-2-style paired lists. Panics if the lists are
+    /// empty, differ in length, or the epochs are not contiguous.
+    pub fn from_table(epochs: &[(f64, f64)], lrs: &[(f64, f64)]) -> Self {
+        assert!(!epochs.is_empty() && epochs.len() == lrs.len(), "paired lists");
+        let segments: Vec<Segment> = epochs
+            .iter()
+            .zip(lrs)
+            .map(|(&(e0, e1), &(lr0, lr1))| {
+                assert!(e1 > e0, "segment must advance: ({e0},{e1})");
+                Segment { e0, e1, lr0, lr1 }
+            })
+            .collect();
+        for w in segments.windows(2) {
+            assert!(
+                (w[0].e1 - w[1].e0).abs() < 1e-9,
+                "segments must be contiguous"
+            );
+        }
+        PiecewiseLinear { segments }
+    }
+
+    /// LR at a fractional epoch. Clamps before the first and after the
+    /// last segment.
+    pub fn lr_at(&self, epoch: f64) -> f64 {
+        let first = self.segments.first().expect("nonempty");
+        if epoch <= first.e0 {
+            return first.lr0;
+        }
+        for s in &self.segments {
+            if epoch < s.e1 {
+                let t = (epoch - s.e0) / (s.e1 - s.e0);
+                return s.lr0 + t * (s.lr1 - s.lr0);
+            }
+        }
+        self.segments.last().expect("nonempty").lr1
+    }
+
+    /// Multiply every LR by `s` (the scaling-rule factor).
+    pub fn scaled(&self, s: f64) -> Self {
+        PiecewiseLinear {
+            segments: self
+                .segments
+                .iter()
+                .map(|&seg| Segment {
+                    lr0: seg.lr0 * s,
+                    lr1: seg.lr1 * s,
+                    ..seg
+                })
+                .collect(),
+        }
+    }
+
+    /// Last scheduled epoch.
+    pub fn end_epoch(&self) -> f64 {
+        self.segments.last().expect("nonempty").e1
+    }
+}
+
+/// The named schedule families used in Table 2.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Constant LR.
+    Constant {
+        /// The LR.
+        lr: f64,
+    },
+    /// Arbitrary piecewise-linear schedule.
+    Piecewise {
+        /// Segments.
+        schedule: PiecewiseLinear,
+    },
+}
+
+impl LrSchedule {
+    /// Table 2's one-cycle for ResNet20/DenseNet100 on CIFAR10:
+    /// `epoch=[(1,23),(23,46),(46,300)]`,
+    /// `lr=[(0.15, 3s),(3s, 0.15s),(0.15s, 0.015s)]`.
+    pub fn one_cycle_cifar(s: f64) -> Self {
+        LrSchedule::Piecewise {
+            schedule: PiecewiseLinear::from_table(
+                &[(1.0, 23.0), (23.0, 46.0), (46.0, 300.0)],
+                &[
+                    (0.15, 3.0 * s),
+                    (3.0 * s, 0.15 * s),
+                    (0.15 * s, 0.015 * s),
+                ],
+            ),
+        }
+    }
+
+    /// Table 2's warmup + multi-step for ResNet50/ImageNet:
+    /// warmup over `[0,5)`, then steps at 30/60/80 dividing by 10.
+    pub fn warmup_multistep_imagenet(lr0: f64, s: f64) -> Self {
+        LrSchedule::Piecewise {
+            schedule: PiecewiseLinear::from_table(
+                &[(0.0, 5.0), (5.0, 30.0), (30.0, 60.0), (60.0, 80.0), (80.0, 90.0)],
+                &[
+                    (lr0, lr0 * s),
+                    (lr0 * s, lr0 * s),
+                    (lr0 / 10.0 * s, lr0 / 10.0 * s),
+                    (lr0 / 100.0 * s, lr0 / 100.0 * s),
+                    (lr0 / 1000.0 * s, lr0 / 1000.0 * s),
+                ],
+            ),
+        }
+    }
+
+    /// Table 2's warmup + multi-step for the WikiText2 LSTM.
+    pub fn warmup_multistep_lstm(s: f64) -> Self {
+        LrSchedule::Piecewise {
+            schedule: PiecewiseLinear::from_table(
+                &[(0.0, 5.0), (5.0, 150.0), (150.0, 225.0), (225.0, 300.0)],
+                &[
+                    (2.5, 2.5 * s),
+                    (2.5 * s, 2.5 * s),
+                    (0.25 * s, 0.25 * s),
+                    (0.025 * s, 0.025 * s),
+                ],
+            ),
+        }
+    }
+
+    /// A short generic warmup-then-decay schedule for the synthetic
+    /// benchmark workloads: warmup over `warmup` epochs to `peak·s`,
+    /// hold, then linear decay to 10% by `total`.
+    pub fn bench_default(peak: f64, s: f64, warmup: f64, total: f64) -> Self {
+        let total = total.max(0.5);
+        let warmup = warmup.clamp(0.0, total * 0.5);
+        let hold_end = warmup.max(total * 0.4).min(total);
+        let mut epochs: Vec<(f64, f64)> = Vec::new();
+        let mut lrs: Vec<(f64, f64)> = Vec::new();
+        if warmup > 0.0 {
+            epochs.push((0.0, warmup));
+            lrs.push((peak * s * 0.1, peak * s));
+        }
+        if hold_end > warmup {
+            epochs.push((warmup, hold_end));
+            lrs.push((peak * s, peak * s));
+        }
+        if total > hold_end {
+            epochs.push((hold_end, total));
+            lrs.push((peak * s, peak * s * 0.1));
+        }
+        if epochs.is_empty() {
+            return LrSchedule::Constant { lr: peak * s };
+        }
+        LrSchedule::Piecewise {
+            schedule: PiecewiseLinear::from_table(&epochs, &lrs),
+        }
+    }
+
+    /// LR at a fractional epoch.
+    pub fn lr_at(&self, epoch: f64) -> f64 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::Piecewise { schedule } => schedule.lr_at(epoch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn piecewise_interpolates_linearly() {
+        let p = PiecewiseLinear::from_table(&[(0.0, 10.0), (10.0, 20.0)], &[(0.0, 1.0), (1.0, 0.0)]);
+        assert!((p.lr_at(0.0) - 0.0).abs() < 1e-12);
+        assert!((p.lr_at(5.0) - 0.5).abs() < 1e-12);
+        assert!((p.lr_at(10.0) - 1.0).abs() < 1e-12);
+        assert!((p.lr_at(15.0) - 0.5).abs() < 1e-12);
+        assert!((p.lr_at(99.0) - 0.0).abs() < 1e-12, "clamps after end");
+        assert!((p.lr_at(-1.0) - 0.0).abs() < 1e-12, "clamps before start");
+    }
+
+    #[test]
+    fn one_cycle_matches_table2_breakpoints() {
+        let s = 2.0;
+        let lr = LrSchedule::one_cycle_cifar(s);
+        assert!((lr.lr_at(1.0) - 0.15).abs() < 1e-9);
+        assert!((lr.lr_at(23.0) - 3.0 * s).abs() < 1e-9);
+        assert!((lr.lr_at(46.0) - 0.15 * s).abs() < 1e-9);
+        assert!((lr.lr_at(300.0) - 0.015 * s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imagenet_multistep_drops_by_ten() {
+        let lr = LrSchedule::warmup_multistep_imagenet(0.1, 1.0);
+        assert!((lr.lr_at(10.0) - 0.1).abs() < 1e-9);
+        assert!((lr.lr_at(45.0) - 0.01).abs() < 1e-9);
+        assert!((lr.lr_at(70.0) - 0.001).abs() < 1e-9);
+        assert!((lr.lr_at(85.0) - 0.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_starts_low() {
+        let lr = LrSchedule::warmup_multistep_imagenet(0.1, 4.0);
+        assert!(lr.lr_at(0.0) < lr.lr_at(4.9), "LR must grow through warmup");
+        assert!((lr.lr_at(0.0) - 0.1).abs() < 1e-9, "warmup starts at lr0");
+    }
+
+    #[test]
+    fn scaled_multiplies_everything() {
+        let p = PiecewiseLinear::from_table(&[(0.0, 10.0)], &[(1.0, 2.0)]).scaled(3.0);
+        assert!((p.lr_at(0.0) - 3.0).abs() < 1e-12);
+        assert!((p.lr_at(10.0) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn rejects_gapped_segments() {
+        PiecewiseLinear::from_table(&[(0.0, 5.0), (6.0, 10.0)], &[(1.0, 1.0), (1.0, 1.0)]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Momentum SGD over flat parameter vectors — the optimizer for the
+//! in-process surrogate models (the HLO models fuse their own update
+//! into the `step` executable; see `python/compile/models/`).
+
+/// Heavy-ball momentum SGD state.
+#[derive(Debug, Clone)]
+pub struct SgdState {
+    velocity: Vec<f32>,
+    /// Momentum coefficient μ (0 disables).
+    pub momentum: f32,
+    /// Decoupled L2 weight decay λ.
+    pub weight_decay: f32,
+}
+
+impl SgdState {
+    /// Fresh state for `n_params` parameters.
+    pub fn new(n_params: usize, momentum: f32, weight_decay: f32) -> Self {
+        SgdState {
+            velocity: vec![0.0; n_params],
+            momentum,
+            weight_decay,
+        }
+    }
+
+    /// In-place update: `v ← μv + (g + λθ)`, `θ ← θ − γv`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.velocity.len());
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        for ((p, &g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
+            let eff = g + wd * *p;
+            *v = mu * *v + eff;
+            *p -= lr * *v;
+        }
+    }
+
+    /// Reset accumulated velocity (e.g. after a topology change study).
+    pub fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Parameter count this state serves.
+    pub fn len(&self) -> usize {
+        self.velocity.len()
+    }
+
+    /// True when sized zero.
+    pub fn is_empty(&self) -> bool {
+        self.velocity.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_without_momentum() {
+        let mut s = SgdState::new(2, 0.0, 0.0);
+        let mut p = vec![1.0f32, 2.0];
+        s.step(&mut p, &[0.5, -0.5], 0.1);
+        assert!((p[0] - 0.95).abs() < 1e-7);
+        assert!((p[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut s = SgdState::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        s.step(&mut p, &[1.0], 1.0); // v=1, p=-1
+        s.step(&mut p, &[1.0], 1.0); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut s = SgdState::new(1, 0.0, 0.1);
+        let mut p = vec![10.0f32];
+        s.step(&mut p, &[0.0], 1.0);
+        assert!((p[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_velocity() {
+        let mut s = SgdState::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        s.step(&mut p, &[1.0], 1.0);
+        s.reset();
+        s.step(&mut p, &[0.0], 1.0);
+        assert!((p[0] + 1.0).abs() < 1e-6, "no velocity carryover after reset");
+    }
+}

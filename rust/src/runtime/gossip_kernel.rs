@@ -1,0 +1,123 @@
+//! The L1 Pallas `gossip_mix` kernel, loaded as an HLO executable.
+//!
+//! `python/compile/kernels/gossip_mix.py` writes one artifact per
+//! `(n, param_count)` pair it was asked to lower
+//! (`artifacts/gossip/mix_n{n}_p{p}.hlo.txt`) plus an index
+//! (`artifacts/gossip/manifest.json`). The kernel computes `Θ' = W Θ`
+//! with W the `n × n` mixing matrix and Θ the stacked `n × p` replica
+//! parameters — the paper's averaging step as one MXU-shaped matmul
+//! (DESIGN.md §Hardware-Adaptation).
+
+use super::{lit_f32, to_f32, HloExecutable, PjRtRuntime};
+use crate::error::{AdaError, Result};
+use crate::graph::CommGraph;
+use crate::util::json::Value;
+
+/// Index of the lowered gossip kernels.
+#[derive(Debug, Clone)]
+struct GossipManifest {
+    /// `(n, p)` pairs with artifacts available.
+    variants: Vec<(usize, usize)>,
+}
+
+impl GossipManifest {
+    fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let variants = v
+            .arr_field("variants")?
+            .iter()
+            .map(|pair| match pair {
+                Value::Arr(np) if np.len() == 2 => match (np[0].as_f64(), np[1].as_f64()) {
+                    (Some(n), Some(p)) => Ok((n as usize, p as usize)),
+                    _ => Err(AdaError::Config("bad gossip variant".into())),
+                },
+                _ => Err(AdaError::Config("bad gossip variant".into())),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(GossipManifest { variants })
+    }
+}
+
+/// A compiled gossip-mix kernel for fixed `(n, p)`.
+#[derive(Debug)]
+pub struct GossipKernel {
+    exe: HloExecutable,
+    n: usize,
+    p: usize,
+}
+
+impl GossipKernel {
+    /// Load the kernel for exactly `(n, param_count)`, erroring with the
+    /// available variants if missing.
+    pub fn load(rt: &PjRtRuntime, n: usize, param_count: usize) -> Result<Self> {
+        let dir = rt.artifact_dir().join("gossip");
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            AdaError::Runtime(format!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = GossipManifest::from_json_text(&text)
+            .map_err(|e| AdaError::Runtime(format!("bad gossip manifest: {e}")))?;
+        if !manifest.variants.contains(&(n, param_count)) {
+            return Err(AdaError::Runtime(format!(
+                "no gossip kernel lowered for (n={n}, p={param_count}); \
+                 available: {:?}",
+                manifest.variants
+            )));
+        }
+        let exe = rt.load(
+            std::path::Path::new("gossip").join(format!("mix_n{n}_p{param_count}.hlo.txt")),
+        )?;
+        Ok(GossipKernel {
+            exe,
+            n,
+            p: param_count,
+        })
+    }
+
+    /// Replica count the kernel was lowered for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Parameter count the kernel was lowered for.
+    pub fn param_count(&self) -> usize {
+        self.p
+    }
+
+    /// One gossip round through the kernel: `replicas[i] ← Σ_j W_ij θ_j`.
+    /// Equivalent to [`crate::gossip::GossipEngine::mix`] (tested against
+    /// it in `rust/tests/hlo_integration.rs`).
+    pub fn mix(&self, graph: &CommGraph, replicas: &mut [Vec<f32>]) -> Result<()> {
+        if graph.n() != self.n || replicas.len() != self.n {
+            return Err(AdaError::Runtime(format!(
+                "kernel lowered for n={}, got graph n={} / {} replicas",
+                self.n,
+                graph.n(),
+                replicas.len()
+            )));
+        }
+        let w = graph.dense_mixing();
+        let mut theta = Vec::with_capacity(self.n * self.p);
+        for r in replicas.iter() {
+            if r.len() != self.p {
+                return Err(AdaError::Runtime(format!(
+                    "kernel lowered for p={}, replica has {}",
+                    self.p,
+                    r.len()
+                )));
+            }
+            theta.extend_from_slice(r);
+        }
+        let w_lit = lit_f32(&w, &[self.n as i64, self.n as i64])?;
+        let t_lit = lit_f32(&theta, &[self.n as i64, self.p as i64])?;
+        let outs = self.exe.run(&[w_lit, t_lit])?;
+        let mixed = to_f32(&outs[0])?;
+        for (i, r) in replicas.iter_mut().enumerate() {
+            r.copy_from_slice(&mixed[i * self.p..(i + 1) * self.p]);
+        }
+        Ok(())
+    }
+}

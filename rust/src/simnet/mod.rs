@@ -1,0 +1,254 @@
+//! Analytic network cost model for a Summit-like cluster.
+//!
+//! The paper runs on OLCF Summit: 6 V100s per node, NVLink 2.0 at
+//! 50 GB/s within a node, EDR InfiniBand at 23 GB/s between nodes
+//! (§3.1.1). We cannot occupy 1008 GPUs, but the *communication cost*
+//! side of Ada's accuracy/cost trade-off is a deterministic function of
+//! the communication graph, message sizes, and these link constants — so
+//! we compute it exactly (α–β model: `time = latency + bytes/bandwidth`
+//! per message, per-GPU serialized sends, cluster time = max over GPUs).
+
+use crate::graph::CommGraph;
+
+/// Link constants of the modeled cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    /// GPUs per node (Summit: 6).
+    pub gpus_per_node: usize,
+    /// Intra-node bandwidth, bytes/sec (NVLink 2.0: 50 GB/s).
+    pub intra_bw: f64,
+    /// Inter-node bandwidth, bytes/sec (EDR IB: 23 GB/s).
+    pub inter_bw: f64,
+    /// Intra-node message latency, seconds.
+    pub intra_lat: f64,
+    /// Inter-node message latency, seconds.
+    pub inter_lat: f64,
+}
+
+impl ClusterSpec {
+    /// Summit's published constants (§3.1.1 of the paper).
+    pub fn summit() -> Self {
+        ClusterSpec {
+            gpus_per_node: 6,
+            intra_bw: 50e9,
+            inter_bw: 23e9,
+            intra_lat: 1e-6,
+            inter_lat: 5e-6,
+        }
+    }
+
+    /// Node index hosting GPU `i` (block placement, like jsrun).
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    /// Point-to-point transfer time for `bytes` between two GPUs.
+    pub fn p2p_time(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        if self.node_of(from) == self.node_of(to) {
+            self.intra_lat + bytes as f64 / self.intra_bw
+        } else {
+            self.inter_lat + bytes as f64 / self.inter_bw
+        }
+    }
+}
+
+/// Per-iteration communication cost of one gossip round or allreduce.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommCost {
+    /// Wall-clock seconds for the round (max over GPUs).
+    pub time_s: f64,
+    /// Total bytes crossing node boundaries.
+    pub inter_node_bytes: u64,
+    /// Total bytes moved (all links).
+    pub total_bytes: u64,
+}
+
+/// Analytic cost model over a [`ClusterSpec`].
+#[derive(Debug, Clone)]
+pub struct SimNet {
+    spec: ClusterSpec,
+}
+
+impl SimNet {
+    /// Model over `spec`.
+    pub fn new(spec: ClusterSpec) -> Self {
+        SimNet { spec }
+    }
+
+    /// The cluster constants in use.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Cost of one **gossip round** over `graph` exchanging `param_count`
+    /// f32 parameters: every GPU sends its parameter vector to each
+    /// out-neighbor; sends from one GPU serialize, GPUs overlap.
+    pub fn gossip_round(&self, graph: &CommGraph, param_count: usize) -> CommCost {
+        let bytes_per_msg = 4 * param_count as u64;
+        let mut worst = 0.0f64;
+        let mut inter = 0u64;
+        let mut total = 0u64;
+        for i in 0..graph.n() {
+            let mut t = 0.0;
+            for &j in graph.neighbors_of(i) {
+                t += self.spec.p2p_time(i, j, bytes_per_msg);
+                total += bytes_per_msg;
+                if self.spec.node_of(i) != self.spec.node_of(j) {
+                    inter += bytes_per_msg;
+                }
+            }
+            worst = worst.max(t);
+        }
+        CommCost {
+            time_s: worst,
+            inter_node_bytes: inter,
+            total_bytes: total,
+        }
+    }
+
+    /// Cost of one **ring allreduce** over all `n` GPUs (the centralized
+    /// `C_complete` baseline, NCCL-style): `2(n−1)` pipeline steps each
+    /// moving `bytes/n`, bound by the slowest link in the ring.
+    pub fn allreduce(&self, n: usize, param_count: usize) -> CommCost {
+        if n <= 1 {
+            return CommCost {
+                time_s: 0.0,
+                inter_node_bytes: 0,
+                total_bytes: 0,
+            };
+        }
+        let bytes = 4 * param_count as u64;
+        let chunk = bytes as f64 / n as f64;
+        // Slowest hop in the block-placement ring: inter-node whenever the
+        // cluster spans > 1 node.
+        let spans_nodes = self.spec.node_of(n - 1) > 0;
+        let (bw, lat) = if spans_nodes {
+            (self.spec.inter_bw, self.spec.inter_lat)
+        } else {
+            (self.spec.intra_bw, self.spec.intra_lat)
+        };
+        let steps = 2 * (n - 1);
+        let time = steps as f64 * (lat + chunk / bw);
+        // Every GPU sends `chunk` per step.
+        let total = (steps * n) as f64 * chunk;
+        let inter_links = if spans_nodes {
+            // Ring over block placement crosses nodes 2·(#nodes) times
+            // per step direction; approximate with per-hop accounting.
+            let hops_inter = (0..n)
+                .filter(|&i| self.spec.node_of(i) != self.spec.node_of((i + 1) % n))
+                .count();
+            (steps * hops_inter) as f64 * chunk
+        } else {
+            0.0
+        };
+        CommCost {
+            time_s: time,
+            inter_node_bytes: inter_links as u64,
+            total_bytes: total as u64,
+        }
+    }
+
+    /// Per-epoch communication time of a topology schedule (seconds),
+    /// used by the fig7 bench to plot Ada's decaying cost.
+    pub fn epoch_cost(
+        &self,
+        graph: &CommGraph,
+        param_count: usize,
+        iters_per_epoch: usize,
+    ) -> f64 {
+        self.gossip_round(graph, param_count).time_s * iters_per_epoch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CommGraph, GraphKind};
+
+    #[test]
+    fn node_placement_is_block() {
+        let s = ClusterSpec::summit();
+        assert_eq!(s.node_of(0), 0);
+        assert_eq!(s.node_of(5), 0);
+        assert_eq!(s.node_of(6), 1);
+        assert_eq!(s.node_of(1007), 167); // 1008 GPUs = 168 Summit nodes
+    }
+
+    #[test]
+    fn intra_node_is_faster() {
+        let s = ClusterSpec::summit();
+        let fast = s.p2p_time(0, 1, 1 << 20);
+        let slow = s.p2p_time(0, 6, 1 << 20);
+        assert!(fast < slow);
+    }
+
+    #[test]
+    fn ring_cheaper_than_complete_per_round() {
+        // The premise of Ada's late stage: sparse graphs cost less.
+        let net = SimNet::new(ClusterSpec::summit());
+        let n = 48;
+        let p = 1_000_000;
+        let ring = net.gossip_round(&CommGraph::build(GraphKind::Ring, n).unwrap(), p);
+        let complete = net.gossip_round(&CommGraph::build(GraphKind::Complete, n).unwrap(), p);
+        assert!(
+            ring.time_s * 5.0 < complete.time_s,
+            "ring {} vs complete {}",
+            ring.time_s,
+            complete.time_s
+        );
+        assert!(ring.total_bytes < complete.total_bytes);
+    }
+
+    #[test]
+    fn gossip_cost_scales_with_degree() {
+        let net = SimNet::new(ClusterSpec::summit());
+        let n = 96;
+        let p = 25_560_000; // ResNet50-sized
+        let mut prev = 0.0;
+        for kind in [GraphKind::Ring, GraphKind::Torus, GraphKind::Exponential] {
+            let c = net.gossip_round(&CommGraph::build(kind, n).unwrap(), p);
+            assert!(c.time_s > prev, "{kind:?} must cost more than sparser graphs");
+            prev = c.time_s;
+        }
+    }
+
+    #[test]
+    fn allreduce_single_gpu_is_free() {
+        let net = SimNet::new(ClusterSpec::summit());
+        assert_eq!(net.allreduce(1, 1000).time_s, 0.0);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_saturates() {
+        // Ring allreduce moves 2·(n−1)/n·bytes per GPU regardless of n:
+        // time should grow with latency·n but the bandwidth term plateaus.
+        let net = SimNet::new(ClusterSpec::summit());
+        let p = 25_560_000;
+        let t96 = net.allreduce(96, p).time_s;
+        let t1008 = net.allreduce(1008, p).time_s;
+        assert!(t1008 < t96 * 12.0, "allreduce must not scale linearly with n");
+        assert!(t1008 > t96, "latency term still grows");
+    }
+
+    #[test]
+    fn ada_cost_decays_with_k() {
+        let net = SimNet::new(ClusterSpec::summit());
+        let n = 96;
+        let p = 1_000_000;
+        let dense = CommGraph::build(GraphKind::AdaLattice { k: 10 }, n).unwrap();
+        let sparse = CommGraph::build(GraphKind::AdaLattice { k: 2 }, n).unwrap();
+        let cd = net.epoch_cost(&dense, p, 100);
+        let cs = net.epoch_cost(&sparse, p, 100);
+        assert!(cs < cd / 3.0, "k=2 must be ≳5× cheaper: {cs} vs {cd}");
+    }
+
+    #[test]
+    fn exponential_graph_crosses_nodes() {
+        // Exponential neighbors at offsets ≥ 8 always leave a 6-GPU node.
+        let net = SimNet::new(ClusterSpec::summit());
+        let g = CommGraph::build(GraphKind::Exponential, 48).unwrap();
+        let c = net.gossip_round(&g, 1000);
+        assert!(c.inter_node_bytes > 0);
+        assert!(c.inter_node_bytes <= c.total_bytes);
+    }
+}

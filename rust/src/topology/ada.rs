@@ -1,0 +1,169 @@
+//! Ada's adaptive ring-lattice schedule — Algorithm 1 of the paper.
+//!
+//! ```text
+//! for epoch = 1..nepochs:
+//!     k ← max(k0 − int(γk · epoch), 2)
+//!     graph[i][i]            = 1/(k+1)
+//!     graph[i][(i+j) mod n]  = 1/(k+1)   for j ∈ [−k/2, k/2] \ {0}
+//!     decentralized_training(epoch, graph)
+//! ```
+//!
+//! The run starts near-complete (`k0` large, e.g. `n−1`) and decays to a
+//! sparse lattice, keeping `k ≥ 2`. Table 4 of the paper uses
+//! `(k0, γk) = (10, 0.02)` at 96 GPUs and `(112, 1)` at 1008 GPUs.
+
+use super::TopologySchedule;
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Algorithm-1 schedule: `k(epoch) = max(k0 − int(γk · epoch), 2)`.
+#[derive(Debug)]
+pub struct AdaSchedule {
+    n: usize,
+    k0: usize,
+    gamma_k: f64,
+    /// Graphs cached by k — k repeats for many consecutive epochs when
+    /// γk < 1, and rebuilding the lattice each epoch is wasted work.
+    cache: Mutex<HashMap<usize, CommGraph>>,
+}
+
+impl AdaSchedule {
+    /// Create a schedule over `n` nodes starting at coordination number
+    /// `k0` and decaying at `gamma_k` per epoch.
+    pub fn new(n: usize, k0: usize, gamma_k: f64) -> Self {
+        AdaSchedule {
+            n,
+            k0,
+            gamma_k,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The coordination number used at `epoch` (Algorithm 1, line 2).
+    pub fn k_for_epoch(&self, epoch: usize) -> usize {
+        let decayed = self.k0 as i64 - (self.gamma_k * epoch as f64) as i64;
+        decayed.max(2) as usize
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Initial coordination number.
+    pub fn k0(&self) -> usize {
+        self.k0
+    }
+
+    /// Per-epoch decay rate of `k`.
+    pub fn gamma_k(&self) -> f64 {
+        self.gamma_k
+    }
+
+    /// Epoch at which the schedule reaches its floor `k = 2`.
+    pub fn epochs_to_floor(&self) -> usize {
+        if self.gamma_k <= 0.0 || self.k0 <= 2 {
+            return 0;
+        }
+        ((self.k0 - 2) as f64 / self.gamma_k).ceil() as usize
+    }
+}
+
+impl TopologySchedule for AdaSchedule {
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+        let k = self.k_for_epoch(epoch);
+        let mut cache = self.cache.lock().expect("ada cache poisoned");
+        if let Some(g) = cache.get(&k) {
+            return Ok(g.clone());
+        }
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, self.n)?;
+        cache.insert(k, g.clone());
+        Ok(g)
+    }
+
+    fn name(&self) -> String {
+        format!("ada(k0={},γk={})", self.k0, self.gamma_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_decays_linearly_with_floor_two() {
+        // Matches Algorithm 1 line 2: k = max(k0 − int(γk·epoch), 2).
+        let s = AdaSchedule::new(16, 10, 1.0);
+        assert_eq!(s.k_for_epoch(0), 10);
+        assert_eq!(s.k_for_epoch(3), 7);
+        assert_eq!(s.k_for_epoch(8), 2);
+        assert_eq!(s.k_for_epoch(100), 2, "floor at k = 2");
+    }
+
+    #[test]
+    fn fractional_gamma_uses_int_truncation() {
+        // int(0.02 · epoch): k stays at k0 for the first 49 epochs.
+        let s = AdaSchedule::new(96, 10, 0.02);
+        assert_eq!(s.k_for_epoch(0), 10);
+        assert_eq!(s.k_for_epoch(49), 10);
+        assert_eq!(s.k_for_epoch(50), 9);
+        assert_eq!(s.k_for_epoch(399), 3);
+        assert_eq!(s.k_for_epoch(400), 2);
+    }
+
+    #[test]
+    fn k_is_monotone_nonincreasing() {
+        let s = AdaSchedule::new(32, 31, 0.7);
+        let mut prev = usize::MAX;
+        for e in 0..120 {
+            let k = s.k_for_epoch(e);
+            assert!(k <= prev, "k must not increase: epoch {e}");
+            assert!(k >= 2, "k must stay ≥ 2: epoch {e}");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn graph_degree_tracks_k() {
+        // Fig. 6: 9-node lattice evolving from complete (k=8) toward ring.
+        let s = AdaSchedule::new(9, 8, 2.0);
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 8); // complete
+        assert_eq!(s.graph_for_epoch(1).unwrap().degree(), 6);
+        assert_eq!(s.graph_for_epoch(2).unwrap().degree(), 4);
+        assert_eq!(s.graph_for_epoch(3).unwrap().degree(), 2); // k=2 ⇒ ring
+    }
+
+    #[test]
+    fn table4_configurations_build() {
+        // (k0, γk) = (10, 0.02) @ 96 and (112, 1) @ 1008.
+        let s96 = AdaSchedule::new(96, 10, 0.02);
+        s96.graph_for_epoch(0).unwrap().validate().unwrap();
+        assert_eq!(s96.epochs_to_floor(), 400);
+
+        let s1008 = AdaSchedule::new(1008, 112, 1.0);
+        let g0 = s1008.graph_for_epoch(0).unwrap();
+        assert_eq!(g0.degree(), 112);
+        let g_late = s1008.graph_for_epoch(110).unwrap();
+        assert_eq!(g_late.degree(), 2);
+        assert_eq!(s1008.epochs_to_floor(), 110);
+    }
+
+    #[test]
+    fn comm_cost_decreases_across_epochs() {
+        // The point of Ada: late epochs are cheaper than early ones.
+        let s = AdaSchedule::new(32, 20, 1.0);
+        let early = s.graph_for_epoch(0).unwrap().bytes_sent_per_node(1000);
+        let late = s.graph_for_epoch(30).unwrap().bytes_sent_per_node(1000);
+        assert!(late < early / 5, "late {late} vs early {early}");
+    }
+
+    #[test]
+    fn cache_returns_identical_graphs() {
+        let s = AdaSchedule::new(16, 10, 0.1);
+        let a = s.graph_for_epoch(0).unwrap();
+        let b = s.graph_for_epoch(5).unwrap(); // same k
+        assert_eq!(a.dense_mixing(), b.dense_mixing());
+    }
+}

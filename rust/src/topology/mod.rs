@@ -1,0 +1,111 @@
+//! Topology schedules: which communication graph each epoch uses.
+//!
+//! The paper's contribution, **Ada** (§4), is a schedule: start from a
+//! highly connected ring lattice and decay its coordination number `k`
+//! per epoch (Algorithm 1), trading connectivity for communication cost
+//! exactly when the white-box analysis (§3.3) shows the cross-graph
+//! variance differences have diminished.
+//!
+//! Alongside [`AdaSchedule`] we provide [`StaticSchedule`] (the fixed
+//! graphs DBench benchmarks against), [`OnePeerExponential`] (a rotating
+//! one-neighbor exponential schedule — the communication-minimal point in
+//! the design space), and [`VarianceAdaptive`] (an extension from the
+//! paper's Observation 4: decay `k` when the measured parameter-tensor
+//! variance drops below a threshold instead of on a fixed epoch clock).
+
+mod ada;
+mod one_peer;
+mod variance_adaptive;
+
+pub use ada::AdaSchedule;
+pub use one_peer::OnePeerExponential;
+pub use variance_adaptive::VarianceAdaptive;
+
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+
+/// A per-epoch communication-graph policy.
+///
+/// Schedules may react to training feedback (e.g. the measured
+/// parameter-tensor variance) via [`TopologySchedule::observe`].
+pub trait TopologySchedule: Send {
+    /// The graph to gossip over during `epoch` (0-based).
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph>;
+
+    /// Feed back the cross-replica parameter variance (gini coefficient)
+    /// measured at the end of `epoch`. Default: ignored.
+    fn observe(&mut self, _epoch: usize, _gini: f64) {}
+
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Total bytes each node sends over `epochs` epochs of `iters_per_epoch`
+    /// gossip rounds for a `param_count`-parameter model — the communication
+    /// cost side of the paper's accuracy/cost trade-off.
+    fn comm_bytes_per_node(
+        &self,
+        epochs: usize,
+        iters_per_epoch: usize,
+        param_count: usize,
+    ) -> Result<u64> {
+        let mut total = 0u64;
+        for e in 0..epochs {
+            let g = self.graph_for_epoch(e)?;
+            total += g.bytes_sent_per_node(param_count) * iters_per_epoch as u64;
+        }
+        Ok(total)
+    }
+}
+
+/// A fixed communication graph for the whole run (the paper's baselines:
+/// `D_ring`, `D_torus`, `D_exponential`, `D_complete`).
+#[derive(Debug, Clone)]
+pub struct StaticSchedule {
+    kind: GraphKind,
+    n: usize,
+    cached: CommGraph,
+}
+
+impl StaticSchedule {
+    /// Build the fixed graph once; `graph_for_epoch` clones the cache.
+    pub fn new(kind: GraphKind, n: usize) -> Result<Self> {
+        let cached = CommGraph::build(kind, n)?;
+        Ok(StaticSchedule { kind, n, cached })
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+impl TopologySchedule for StaticSchedule {
+    fn graph_for_epoch(&self, _epoch: usize) -> Result<CommGraph> {
+        Ok(self.cached.clone())
+    }
+
+    fn name(&self) -> String {
+        format!("static({})", self.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_schedule_is_constant() {
+        let s = StaticSchedule::new(GraphKind::Torus, 16).unwrap();
+        let g0 = s.graph_for_epoch(0).unwrap();
+        let g9 = s.graph_for_epoch(9).unwrap();
+        assert_eq!(g0.dense_mixing(), g9.dense_mixing());
+        assert_eq!(s.name(), "static(torus)");
+    }
+
+    #[test]
+    fn comm_bytes_counts_degree() {
+        let s = StaticSchedule::new(GraphKind::Ring, 8).unwrap();
+        // degree 2 × 4 bytes × 100 params × 3 iters × 2 epochs
+        assert_eq!(s.comm_bytes_per_node(2, 3, 100).unwrap(), 2 * 4 * 100 * 3 * 2);
+    }
+}

@@ -1,0 +1,134 @@
+//! One-peer exponential schedule (Ying et al. 2021, cited by the paper):
+//! each round every node talks to exactly **one** neighbor at offset
+//! `2^(t mod ⌈log2 n⌉)`, cycling through the exponential graph's edges.
+//! Over a full cycle this achieves the mixing of the static exponential
+//! graph at degree-1 per-round communication — the communication-minimal
+//! corner of the design space that Ada is compared against.
+
+use super::TopologySchedule;
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+
+/// Rotating single-neighbor exponential schedule.
+#[derive(Debug, Clone)]
+pub struct OnePeerExponential {
+    n: usize,
+    /// Number of distinct offsets = ⌊log2(n−1)⌋ + 1.
+    period: usize,
+}
+
+impl OnePeerExponential {
+    /// Create the schedule over `n ≥ 3` nodes.
+    pub fn new(n: usize) -> Result<Self> {
+        // Validate n by building the static exponential graph once.
+        let g = CommGraph::build(GraphKind::Exponential, n)?;
+        Ok(OnePeerExponential {
+            n,
+            period: g.degree(),
+        })
+    }
+
+    /// Offsets cycle with this period.
+    pub fn period(&self) -> usize {
+        self.period
+    }
+}
+
+impl TopologySchedule for OnePeerExponential {
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+        let m = epoch % self.period;
+        let offset = 1usize << m;
+        let neighbors = (0..self.n)
+            .map(|i| {
+                let j = (i + offset) % self.n;
+                if j == i {
+                    vec![]
+                } else {
+                    vec![j]
+                }
+            })
+            .collect();
+        CommGraph::from_neighbor_lists(GraphKind::Exponential, neighbors, true)
+    }
+
+    fn name(&self) -> String {
+        format!("one_peer_exponential(n={})", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_round_has_degree_one() {
+        let s = OnePeerExponential::new(16).unwrap();
+        for e in 0..s.period() {
+            let g = s.graph_for_epoch(e).unwrap();
+            assert_eq!(g.degree(), 1, "round {e}");
+            assert!(g.is_regular());
+        }
+    }
+
+    #[test]
+    fn rounds_cycle_through_powers_of_two() {
+        let s = OnePeerExponential::new(16).unwrap();
+        assert_eq!(s.period(), 4); // ⌊log2 15⌋ + 1
+        let g0 = s.graph_for_epoch(0).unwrap();
+        assert_eq!(g0.neighbors_of(0), &[1]);
+        let g2 = s.graph_for_epoch(2).unwrap();
+        assert_eq!(g2.neighbors_of(0), &[4]);
+        let g4 = s.graph_for_epoch(4).unwrap();
+        assert_eq!(g4.neighbors_of(0), &[1], "period wraps");
+    }
+
+    #[test]
+    fn per_round_mixing_preserves_mean() {
+        // Each per-round W is doubly stochastic (permutation-structured):
+        // rows and columns sum to 1. A single round need not be
+        // *connected* — only the union over a period is — so this checks
+        // stochasticity directly rather than `validate()`.
+        let s = OnePeerExponential::new(12).unwrap();
+        let n = 12;
+        for e in 0..s.period() {
+            let g = s.graph_for_epoch(e).unwrap();
+            let w = g.dense_mixing();
+            for i in 0..n {
+                let row: f32 = (0..n).map(|j| w[i * n + j]).sum();
+                let col: f32 = (0..n).map(|j| w[j * n + i]).sum();
+                assert!((row - 1.0).abs() < 1e-6, "round {e} row {i}: {row}");
+                assert!((col - 1.0).abs() < 1e-6, "round {e} col {i}: {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn union_over_period_is_connected() {
+        let s = OnePeerExponential::new(16).unwrap();
+        let mut union: Vec<Vec<usize>> = vec![Vec::new(); 16];
+        for e in 0..s.period() {
+            let g = s.graph_for_epoch(e).unwrap();
+            for i in 0..16 {
+                union[i].extend_from_slice(g.neighbors_of(i));
+            }
+        }
+        for nb in union.iter_mut() {
+            nb.sort_unstable();
+            nb.dedup();
+        }
+        let g = crate::graph::CommGraph::from_neighbor_lists(
+            crate::graph::GraphKind::Exponential,
+            union,
+            true,
+        )
+        .unwrap();
+        assert!(g.is_connected(), "union over a period must be connected");
+    }
+
+    #[test]
+    fn cheapest_communication_of_all_schedules() {
+        let one = OnePeerExponential::new(64).unwrap();
+        let bytes = one.comm_bytes_per_node(10, 5, 1000).unwrap();
+        assert_eq!(bytes, 1 * 4 * 1000 * 5 * 10);
+    }
+}

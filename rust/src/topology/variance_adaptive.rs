@@ -1,0 +1,156 @@
+//! Variance-triggered adaptive schedule — an extension built directly on
+//! the paper's Observation 4: the cross-replica parameter-tensor variance
+//! (gini coefficient) is high early and diminishes as training progresses,
+//! and the benefit of dense graphs tracks that variance.
+//!
+//! Instead of Ada's fixed epoch clock (`k0 − int(γk·epoch)`), this
+//! schedule *measures* the gini coefficient each epoch and steps `k` down
+//! only when the variance has fallen below a threshold for `patience`
+//! consecutive epochs — a feedback controller on the same signal the
+//! white-box analysis identified.
+
+use super::TopologySchedule;
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Feedback-driven coordination-number controller.
+#[derive(Debug)]
+pub struct VarianceAdaptive {
+    n: usize,
+    k0: usize,
+    /// Decay k by this much per trigger.
+    step: usize,
+    /// Gini threshold below which a decay is considered.
+    threshold: f64,
+    /// Consecutive below-threshold epochs required before decaying.
+    patience: usize,
+    state: Mutex<State>,
+}
+
+#[derive(Debug)]
+struct State {
+    k: usize,
+    below_count: usize,
+    /// k effective per epoch, recorded as observations arrive; epochs not
+    /// yet observed use the current k.
+    history: HashMap<usize, usize>,
+    cache: HashMap<usize, CommGraph>,
+}
+
+impl VarianceAdaptive {
+    /// `threshold` is on the gini coefficient of cross-replica parameter
+    /// L2 norms (≈ 0.0005–0.05 in practice; see Fig 4 of the paper).
+    pub fn new(n: usize, k0: usize, step: usize, threshold: f64, patience: usize) -> Self {
+        VarianceAdaptive {
+            n,
+            k0,
+            step: step.max(1),
+            threshold,
+            patience: patience.max(1),
+            state: Mutex::new(State {
+                k: k0,
+                below_count: 0,
+                history: HashMap::new(),
+                cache: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Current coordination number.
+    pub fn current_k(&self) -> usize {
+        self.state.lock().expect("state poisoned").k
+    }
+}
+
+impl TopologySchedule for VarianceAdaptive {
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+        let mut st = self.state.lock().expect("state poisoned");
+        let k = st.history.get(&epoch).copied().unwrap_or(st.k);
+        if let Some(g) = st.cache.get(&k) {
+            return Ok(g.clone());
+        }
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, self.n)?;
+        st.cache.insert(k, g.clone());
+        Ok(g)
+    }
+
+    fn observe(&mut self, epoch: usize, gini: f64) {
+        let mut st = self.state.lock().expect("state poisoned");
+        let current_k = st.k;
+        st.history.insert(epoch, current_k);
+        if gini < self.threshold {
+            st.below_count += 1;
+            if st.below_count >= self.patience {
+                st.k = st.k.saturating_sub(self.step).max(2);
+                st.below_count = 0;
+            }
+        } else {
+            st.below_count = 0;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "variance_adaptive(k0={},step={},thr={})",
+            self.k0, self.step, self.threshold
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_dense_while_variance_high() {
+        let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 2);
+        for e in 0..5 {
+            s.observe(e, 0.5); // high variance
+        }
+        assert_eq!(s.current_k(), 8);
+    }
+
+    #[test]
+    fn decays_after_patience_epochs_below_threshold() {
+        let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 2);
+        s.observe(0, 0.001);
+        assert_eq!(s.current_k(), 8, "patience not yet met");
+        s.observe(1, 0.001);
+        assert_eq!(s.current_k(), 6, "decayed by step after patience");
+    }
+
+    #[test]
+    fn spike_resets_patience() {
+        let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 3);
+        s.observe(0, 0.001);
+        s.observe(1, 0.001);
+        s.observe(2, 0.9); // spike
+        s.observe(3, 0.001);
+        s.observe(4, 0.001);
+        assert_eq!(s.current_k(), 8, "spike must reset the counter");
+        s.observe(5, 0.001);
+        assert_eq!(s.current_k(), 6);
+    }
+
+    #[test]
+    fn floors_at_k2() {
+        let mut s = VarianceAdaptive::new(16, 4, 10, 0.5, 1);
+        s.observe(0, 0.0);
+        s.observe(1, 0.0);
+        assert_eq!(s.current_k(), 2, "k never drops below 2 (Algorithm 1)");
+    }
+
+    #[test]
+    fn graph_for_observed_epoch_uses_recorded_k() {
+        let mut s = VarianceAdaptive::new(16, 8, 4, 0.01, 1);
+        let g0 = s.graph_for_epoch(0).unwrap();
+        assert_eq!(g0.degree(), 8);
+        s.observe(0, 0.0); // k → 4
+        let g1 = s.graph_for_epoch(1).unwrap();
+        assert_eq!(g1.degree(), 4);
+        // Epoch 0 is pinned to the k it actually ran with.
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 8);
+    }
+}

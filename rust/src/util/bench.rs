@@ -1,0 +1,173 @@
+//! Micro-benchmark harness for the `benches/` binaries: warmup +
+//! repeated timing with median/mean/min reporting, and a tiny aligned
+//! table printer shared by the figure benches.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmarked operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Mean per-iteration time.
+    pub mean: Duration,
+    /// Fastest iteration.
+    pub min: Duration,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Timing {
+    /// ns as f64 of the median.
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// Throughput in ops/sec given `work` units per iteration.
+    pub fn throughput(&self, work: f64) -> f64 {
+        work / self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Timing {
+        median,
+        mean,
+        min,
+        iters: samples.len(),
+    }
+}
+
+/// Auto-scaled duration formatting (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Read a bench-scaling knob from the environment (e.g. `ADA_BENCH_FULL=1`
+/// for paper-scale sweeps; default is the quick preset).
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Read a numeric knob from the environment.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(cols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let t = bench(1, 5, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min <= t.median);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn duration_formatting_scales() {
+        assert!(fmt_duration(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn env_knobs_default() {
+        assert!(!env_flag("ADA_DEFINITELY_UNSET_FLAG"));
+        assert_eq!(env_usize("ADA_DEFINITELY_UNSET_NUM", 7), 7);
+    }
+}

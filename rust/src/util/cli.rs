@@ -1,0 +1,133 @@
+//! Minimal CLI argument parsing for the `ada`/`dbench` binaries:
+//! `binary <subcommand> [--key value]... [--flag]...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options and
+/// boolean `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag argument), if any.
+    pub command: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an argument iterator (excluding argv[0]). `known_flags`
+    /// lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if known_flags.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("option --{key} needs a value"))?;
+                    args.options.insert(key.to_string(), val);
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Option value by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option value or default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option with default; errors on unparseable values.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("cannot parse --{key} value {v:?}")),
+        }
+    }
+
+    /// Typed optional option.
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("cannot parse --{key} value {v:?}")),
+        }
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| format!("cannot parse --{key} element {x:?}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        let a = Args::parse(argv("run --workers 8 --save --flavor d_ring"), &["save"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("flavor"), Some("d_ring"));
+        assert!(a.has_flag("save"));
+        assert!(!a.has_flag("other"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(argv("x --n 16 --scales 8,16,32"), &[]).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 16);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        assert_eq!(
+            a.get_list::<usize>("scales").unwrap(),
+            Some(vec![8, 16, 32])
+        );
+        assert_eq!(a.get_opt::<f64>("missing").unwrap(), None);
+        assert!(a.get_parse::<usize>("scales", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(argv("run --workers"), &[]).is_err());
+        assert!(Args::parse(argv("run extra"), &[]).is_err());
+    }
+}

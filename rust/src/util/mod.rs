@@ -1,0 +1,42 @@
+//! Self-contained substrate utilities: deterministic RNG, JSON codec,
+//! TOML-subset config parser, and a micro-benchmark harness.
+//!
+//! The coordinator is deliberately dependency-free (beyond the PJRT
+//! bindings): everything a distributed-training launcher needs from the
+//! usual crates.io stack is implemented here, tested, and sized to this
+//! project's needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod tomlmini;
+
+/// A unique scratch directory under the system temp dir (test helper).
+/// The caller owns cleanup; tests lean on the OS tmp reaper.
+pub fn scratch_dir(tag: &str) -> std::io::Result<std::path::PathBuf> {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("ada_{tag}_{pid}_{nanos}"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_dirs_are_unique_and_exist() {
+        let a = scratch_dir("t").unwrap();
+        let b = scratch_dir("t").unwrap();
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+}

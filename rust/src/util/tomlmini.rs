@@ -1,0 +1,267 @@
+//! A TOML subset parser for the config files under `configs/`:
+//! top-level `key = value` pairs and one level of `[section]` tables,
+//! with string / integer / float / boolean / homogeneous-array values
+//! and `#` comments. That is exactly the shape of every config this
+//! project ships; anything fancier is a config error, loudly.
+
+use crate::error::{AdaError, Result};
+use std::collections::BTreeMap;
+
+/// A TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Array of values.
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As i64 (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As f64 (ints widen).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As usize array.
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Arr(xs) => xs
+                .iter()
+                .map(|x| x.as_int().and_then(|i| usize::try_from(i).ok()))
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: the root table plus named sections.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    /// Top-level `key = value` pairs.
+    pub root: BTreeMap<String, TomlValue>,
+    /// `[section]` tables.
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated [section]"))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(err(lineno, "bad section name"));
+                }
+                doc.sections.entry(name.to_string()).or_default();
+                current = Some(name.to_string());
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(lineno, &m))?;
+            let table = match &current {
+                Some(s) => doc.sections.get_mut(s).expect("section exists"),
+                None => &mut doc.root,
+            };
+            table.insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `key` at top level, or `section.key`.
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        match path.split_once('.') {
+            Some((section, key)) => self.sections.get(section)?.get(key),
+            None => self.root.get(path),
+        }
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> AdaError {
+    AdaError::Config(format!("toml parse error on line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items: std::result::Result<Vec<TomlValue>, String> =
+            split_top_level(inner).iter().map(|s| parse_value(s.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {text:?}"))
+}
+
+/// Split an array body on commas, respecting quotes (no nested arrays —
+/// not needed by our configs).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_root_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            # launcher config
+            name = "fig3"          # inline comment
+            epochs = 6
+            peak_lr = 0.05
+            sqrt = false
+            scales = [8, 16, 32]
+
+            [workload]
+            kind = "mlp_image"
+            dim = 32
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("fig3"));
+        assert_eq!(doc.get("epochs").unwrap().as_int(), Some(6));
+        assert_eq!(doc.get("peak_lr").unwrap().as_float(), Some(0.05));
+        assert_eq!(doc.get("sqrt").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            doc.get("scales").unwrap().as_usize_array(),
+            Some(vec![8, 16, 32])
+        );
+        assert_eq!(doc.get("workload.kind").unwrap().as_str(), Some("mlp_image"));
+        assert_eq!(doc.get("workload.dim").unwrap().as_int(), Some(32));
+        assert!(doc.get("missing").is_none());
+        assert!(doc.get("workload.missing").is_none());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn string_arrays() {
+        let doc = TomlDoc::parse(r#"fs = ["a", "b,c"]"#).unwrap();
+        match doc.get("fs").unwrap() {
+            TomlValue::Arr(xs) => {
+                assert_eq!(xs[0].as_str(), Some("a"));
+                assert_eq!(xs[1].as_str(), Some("b,c"), "comma inside quotes");
+            }
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["key", "= 3", "[open", "x = ", "x = 'single'", "x = [1,"] {
+            assert!(TomlDoc::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = TomlDoc::parse("p = 25_560_000").unwrap();
+        assert_eq!(doc.get("p").unwrap().as_int(), Some(25_560_000));
+    }
+}

@@ -1,0 +1,247 @@
+//! Randomized property tests over the coordinator invariants (the role
+//! proptest would play; generators are seeded from our own RNG so runs
+//! are reproducible and shrinking is replaced by printing the failing
+//! case's seed).
+
+use ada_dist::coordinator::{SgdFlavor, TrainConfig, Trainer};
+use ada_dist::coordinator::surrogate::SoftmaxRegression;
+use ada_dist::data::{shard_indices, ShardStrategy, SyntheticClassification};
+use ada_dist::gossip::{mix_dense_reference, GossipEngine};
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::metrics::{gini_coefficient, rank_ascending, VarianceReport};
+use ada_dist::optim::LrSchedule;
+use ada_dist::topology::{AdaSchedule, TopologySchedule};
+use ada_dist::util::rng::Rng;
+
+const CASES: usize = 40;
+
+fn random_kind(rng: &mut Rng, n: usize) -> GraphKind {
+    loop {
+        let k = match rng.below(6) {
+            0 => GraphKind::Ring,
+            1 => GraphKind::Torus,
+            2 => GraphKind::RingLattice { k: 1 + rng.below(3) },
+            3 => GraphKind::AdaLattice { k: 2 + rng.below(n - 2) },
+            4 => GraphKind::Exponential,
+            _ => GraphKind::Complete,
+        };
+        let ok = match k {
+            GraphKind::Torus => n >= 4 && n % 2 == 0 || n == 9,
+            GraphKind::RingLattice { k } => 2 * k < n,
+            _ => true,
+        };
+        if ok {
+            return k;
+        }
+    }
+}
+
+#[test]
+fn prop_mixing_matrices_are_doubly_stochastic() {
+    let mut rng = Rng::seed_from_u64(0xDA7A);
+    for case in 0..CASES {
+        let n = 4 + rng.below(28);
+        let kind = random_kind(&mut rng, n);
+        let g = match CommGraph::build(kind, n) {
+            Ok(g) => g,
+            Err(_) => continue, // torus factorization misses are fine
+        };
+        let w = g.dense_mixing();
+        for i in 0..n {
+            let row: f32 = (0..n).map(|j| w[i * n + j]).sum();
+            let col: f32 = (0..n).map(|j| w[j * n + i]).sum();
+            assert!((row - 1.0).abs() < 1e-5, "case {case} {kind} n={n} row {i}");
+            assert!((col - 1.0).abs() < 1e-4, "case {case} {kind} n={n} col {i}");
+            assert!((0..n).all(|j| w[i * n + j] >= 0.0), "nonneg weights");
+        }
+    }
+}
+
+#[test]
+fn prop_gossip_preserves_mean_and_matches_dense() {
+    let mut rng = Rng::seed_from_u64(0x60551);
+    let mut engine = GossipEngine::new();
+    for case in 0..CASES {
+        let n = 4 + rng.below(12);
+        let p = 1 + rng.below(200);
+        let kind = random_kind(&mut rng, n);
+        let g = match CommGraph::build(kind, n) {
+            Ok(g) => g,
+            Err(_) => continue,
+        };
+        let src: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.range_f32(-2.0, 2.0)).collect())
+            .collect();
+        let want = mix_dense_reference(&g, &src);
+        let mut got = src.clone();
+        engine.mix(&g, &mut got);
+        for i in 0..n {
+            for k in 0..p {
+                assert!(
+                    (got[i][k] - want[i][k]).abs() < 1e-4,
+                    "case {case} {kind} [{i}][{k}]"
+                );
+            }
+        }
+        // Mean preservation.
+        for k in 0..p {
+            let before: f64 = src.iter().map(|r| r[k] as f64).sum();
+            let after: f64 = got.iter().map(|r| r[k] as f64).sum();
+            assert!((before - after).abs() < 1e-3, "case {case} mean drift col {k}");
+        }
+    }
+}
+
+#[test]
+fn prop_gini_bounds_and_scale_invariance() {
+    let mut rng = Rng::seed_from_u64(0x6121);
+    for case in 0..CASES {
+        let n = 2 + rng.below(40);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+        let g = gini_coefficient(&xs);
+        assert!((0.0..1.0).contains(&g), "case {case}: gini {g} out of range");
+        let scaled: Vec<f64> = xs.iter().map(|x| x * 1234.5).collect();
+        let gs = gini_coefficient(&scaled);
+        assert!((g - gs).abs() < 1e-9, "case {case}: scale variance {g} vs {gs}");
+        // All four metrics agree that a constant sample has zero spread.
+        let report = VarianceReport::of(&vec![3.7; n]);
+        assert!(report.gini.abs() < 1e-12, "constant gini {}", report.gini);
+        assert!(report.coeff_of_variation.abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_ranks_are_a_permutation_with_ties() {
+    let mut rng = Rng::seed_from_u64(0x7A9C);
+    for case in 0..CASES {
+        let n = 1 + rng.below(12);
+        // Random values with deliberate duplicates.
+        let vals: Vec<f64> = (0..n).map(|_| (rng.below(5) as f64) / 4.0).collect();
+        let ranks = rank_ascending(&vals);
+        assert_eq!(ranks.len(), n);
+        assert!(ranks.iter().all(|&r| (1..=n).contains(&r)), "case {case}");
+        // Ranks must respect ordering: vals[i] < vals[j] => rank[i] < rank[j].
+        for i in 0..n {
+            for j in 0..n {
+                if vals[i] < vals[j] {
+                    assert!(ranks[i] < ranks[j], "case {case}: order violated");
+                }
+                if vals[i] == vals[j] {
+                    assert_eq!(ranks[i], ranks[j], "case {case}: tie rank differs");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ada_schedule_monotone_and_floored() {
+    let mut rng = Rng::seed_from_u64(0xADA);
+    for case in 0..CASES {
+        let n = 5 + rng.below(60);
+        let k0 = 2 + rng.below(n - 2);
+        let gamma = rng.f64() * 3.0;
+        let s = AdaSchedule::new(n, k0, gamma);
+        let mut prev = usize::MAX;
+        for e in 0..50 {
+            let k = s.k_for_epoch(e);
+            assert!(k >= 2, "case {case}: floor violated");
+            assert!(k <= k0.max(2), "case {case}: k above k0");
+            assert!(k <= prev, "case {case}: k increased at epoch {e}");
+            prev = k;
+            let g = s.graph_for_epoch(e).unwrap();
+            assert!(g.is_connected(), "case {case}: disconnected lattice");
+        }
+    }
+}
+
+#[test]
+fn prop_shards_partition_for_all_strategies() {
+    let mut rng = Rng::seed_from_u64(0x5AAD);
+    for case in 0..CASES {
+        let n_workers = 2 + rng.below(14);
+        let len = n_workers * (2 + rng.below(50));
+        let classes = 2 + rng.below(9) as u32;
+        let labels: Vec<u32> = (0..len).map(|i| (i as u32) % classes).collect();
+        let strategy = match rng.below(3) {
+            0 => ShardStrategy::Iid,
+            1 => ShardStrategy::Contiguous,
+            _ => ShardStrategy::LabelSkew { alpha: 0.05 + rng.f64() },
+        };
+        let shards =
+            shard_indices(len, Some(&labels), n_workers, strategy, case as u64).unwrap();
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..len).collect::<Vec<_>>(), "case {case} {strategy:?}");
+        assert!(shards.iter().all(|s| !s.is_empty()), "case {case}: empty shard");
+    }
+}
+
+#[test]
+fn prop_lr_schedules_stay_positive_and_bounded() {
+    let mut rng = Rng::seed_from_u64(0x112);
+    for case in 0..CASES {
+        let s = 0.1 + rng.f64() * 10.0;
+        for sched in [
+            LrSchedule::one_cycle_cifar(s),
+            LrSchedule::warmup_multistep_imagenet(0.1, s),
+            LrSchedule::warmup_multistep_lstm(s),
+            LrSchedule::bench_default(0.05, s, 1.0, 10.0),
+        ] {
+            for i in 0..200 {
+                let epoch = i as f64 * 2.0;
+                let lr = sched.lr_at(epoch);
+                assert!(lr > 0.0, "case {case}: non-positive LR at {epoch}");
+                assert!(lr <= 3.0 * s.max(1.0) + 1e-9, "case {case}: LR blow-up {lr}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_training_is_deterministic_across_repeats() {
+    // The controlled-experiment guarantee DBench relies on.
+    let mut rng = Rng::seed_from_u64(0xD00D);
+    for case in 0..4 {
+        let n = 4 + 2 * rng.below(3);
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let data = SyntheticClassification::generate(512, 8, 4, 3.0, seed);
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, n, 0.9);
+            let mut cfg = TrainConfig::quick(n, 2);
+            cfg.seed = seed;
+            cfg.max_iters_per_epoch = Some(5);
+            let mut t = Trainer::new(&mut model, cfg);
+            let (rec, summary) = t.run(&data, &SgdFlavor::DecentralizedTorus).unwrap();
+            (
+                rec.records().iter().map(|r| r.train_loss).collect::<Vec<_>>(),
+                summary.final_eval.metric,
+            )
+        };
+        let (la, ma) = run(seed);
+        let (lb, mb) = run(seed);
+        assert_eq!(la, lb, "case {case}: loss series must be identical");
+        assert_eq!(ma, mb, "case {case}: metric must be identical");
+    }
+}
+
+#[test]
+fn prop_topology_comm_bytes_match_degree_sum() {
+    let mut rng = Rng::seed_from_u64(0xB17E5);
+    for case in 0..CASES {
+        let n = 6 + rng.below(20);
+        let k0 = 2 + rng.below(n - 3);
+        let s = AdaSchedule::new(n, k0, 1.0);
+        let epochs = 1 + rng.below(8);
+        let iters = 1 + rng.below(5);
+        let p = 1 + rng.below(1000);
+        let total = s.comm_bytes_per_node(epochs, iters, p).unwrap();
+        let manual: u64 = (0..epochs)
+            .map(|e| {
+                let g = s.graph_for_epoch(e).unwrap();
+                g.degree() as u64 * 4 * p as u64 * iters as u64
+            })
+            .sum();
+        assert_eq!(total, manual, "case {case}");
+    }
+}
