@@ -1,17 +1,25 @@
 //! Gossip mixing engine benchmarks — the L3 hot path.
 //!
-//! Three execution paths over identical inputs:
-//!   * `native`   — the sparse row-wise engine (production path)
-//!   * `dense`    — the O(n²P) dense reference (baseline)
-//!   * `hlo`      — the L1 Pallas kernel via PJRT (when artifacts exist)
+//! Sections:
+//!   1. native sparse engine vs the O(n²P) dense reference
+//!   2. **threads × graph × P sweep**: serial-vs-parallel speedup of the
+//!      blocked SpMM, and fused gossip+SGD vs split mix-then-step —
+//!      written to `BENCH_gossip.json` at the repo root
+//!   3. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
-//! Prints per-round latency and effective bandwidth (bytes touched/s).
+//! Results are bit-identical across thread counts (asserted in
+//! `rust/tests/exec_determinism.rs`), so the sweep is purely wall-clock.
+//!
 //! Run: `cargo bench --bench gossip_bench`.
+//! Knobs: `ADA_BENCH_ITERS` (default 30), `ADA_BENCH_FULL=1` (adds the
+//! paper-scale n=64, P=1M cells to the sweep; they are included by
+//! default too — the flag raises their iteration count).
 
 use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
-use ada_dist::runtime::{GossipKernel, PjRtRuntime};
-use ada_dist::util::bench::{bench, env_usize, fmt_duration, Table};
+use ada_dist::optim::SgdState;
+use ada_dist::util::bench::{bench, env_flag, env_usize, fmt_duration, Table};
+use ada_dist::util::json::Value;
 use ada_dist::util::rng::Rng;
 
 fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -23,6 +31,15 @@ fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
 
 fn main() {
     let iters = env_usize("ADA_BENCH_ITERS", 30);
+    native_vs_dense(iters);
+    threads_sweep(iters);
+    #[cfg(feature = "pjrt")]
+    hlo_section(iters);
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pure-std build — skipping the PJRT kernel path; use --features pjrt)");
+}
+
+fn native_vs_dense(iters: usize) {
     println!("== gossip mixing: native vs dense reference ==");
     let mut t = Table::new(&["graph", "n", "P", "path", "median/round", "GB/s"]);
     for (n, p) in [(8, 2762), (16, 72000), (32, 72000), (64, 1_000_000)] {
@@ -60,7 +77,124 @@ fn main() {
         }
     }
     println!("{}", t.render());
+}
 
+/// The tentpole measurement: serial-vs-parallel SpMM and fused-vs-split
+/// gossip+SGD over threads × graph × P, recorded to BENCH_gossip.json.
+fn threads_sweep(iters: usize) {
+    let full = env_flag("ADA_BENCH_FULL");
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("== threads × graph × P sweep (host has {cores} cores) ==");
+
+    let graphs = [
+        GraphKind::Ring,
+        GraphKind::RingLattice { k: 3 },
+        GraphKind::Exponential,
+        GraphKind::Complete,
+    ];
+    let sizes: [(usize, usize); 3] = [(16, 72_000), (64, 262_144), (64, 1_000_000)];
+    let thread_counts = [1usize, 2, 4, 8];
+
+    let mut t = Table::new(&[
+        "graph", "n", "P", "threads", "mix", "speedup", "split", "fused", "fused gain",
+    ]);
+    let mut cells: Vec<Value> = Vec::new();
+
+    for (n, p) in sizes {
+        // Big cells get fewer iterations unless ADA_BENCH_FULL=1.
+        let cell_iters = if p >= 500_000 && !full { (iters / 6).max(3) } else { iters };
+        for kind in graphs {
+            let g = CommGraph::build(kind, n).unwrap();
+            let touched = ((g.degree() + 2) * n * p * 4) as f64;
+            let src = replicas(n, p, 1);
+            let grads = replicas(n, p, 2);
+            let mut serial_mix_s = f64::NAN;
+            for threads in thread_counts {
+                // -- plain mix --------------------------------------
+                let mut engine = GossipEngine::with_threads(threads);
+                let mut reps = src.clone();
+                let t_mix = bench(1, cell_iters, || {
+                    engine.mix(&g, &mut reps);
+                });
+                let mix_s = t_mix.median.as_secs_f64();
+                if threads == 1 {
+                    serial_mix_s = mix_s;
+                }
+                let speedup = serial_mix_s / mix_s;
+
+                // -- split: mix + per-replica momentum step ---------
+                let mut split_engine = GossipEngine::with_threads(threads);
+                let mut split_reps = src.clone();
+                let mut split_states: Vec<SgdState> =
+                    (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
+                let t_split = bench(1, cell_iters, || {
+                    split_engine.mix(&g, &mut split_reps);
+                    for (r, s) in split_reps.iter_mut().zip(split_states.iter_mut()) {
+                        s.step(r, &grads[0], 0.01);
+                    }
+                });
+
+                // -- fused gossip+SGD -------------------------------
+                let mut fused_engine = GossipEngine::with_threads(threads);
+                let mut fused_reps = src.clone();
+                let mut fused_states: Vec<SgdState> =
+                    (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
+                let gs: Vec<Vec<f32>> = (0..n).map(|_| grads[0].clone()).collect();
+                let t_fused = bench(1, cell_iters, || {
+                    fused_engine.mix_step(&g, &mut fused_reps, &gs, &mut fused_states, 0.01);
+                });
+
+                let split_s = t_split.median.as_secs_f64();
+                let fused_s = t_fused.median.as_secs_f64();
+                t.row(vec![
+                    kind.to_string(),
+                    n.to_string(),
+                    p.to_string(),
+                    threads.to_string(),
+                    fmt_duration(t_mix.median),
+                    format!("{speedup:.2}x"),
+                    fmt_duration(t_split.median),
+                    fmt_duration(t_fused.median),
+                    format!("{:.2}x", split_s / fused_s),
+                ]);
+                cells.push(Value::obj(vec![
+                    ("graph", Value::Str(kind.to_string())),
+                    ("n", Value::Num(n as f64)),
+                    ("p", Value::Num(p as f64)),
+                    ("threads", Value::Num(threads as f64)),
+                    ("mix_median_s", Value::Num(mix_s)),
+                    ("mix_gbps", Value::Num(touched / mix_s / 1e9)),
+                    ("mix_speedup_vs_1t", Value::Num(speedup)),
+                    ("split_median_s", Value::Num(split_s)),
+                    ("fused_median_s", Value::Num(fused_s)),
+                    ("fused_speedup_vs_split", Value::Num(split_s / fused_s)),
+                    ("iters", Value::Num(cell_iters as f64)),
+                ]));
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(speedup = mix vs the same engine at 1 thread; fused gain = split\n\
+         mix+step vs the fused kernel at the same thread count)"
+    );
+
+    let doc = Value::obj(vec![
+        ("status", Value::Str("measured".into())),
+        ("bench", Value::Str("gossip_bench::threads_sweep".into())),
+        ("host_cores", Value::Num(cores as f64)),
+        ("sweep", Value::Arr(cells)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn hlo_section(iters: usize) {
+    use ada_dist::runtime::{GossipKernel, PjRtRuntime};
     // HLO kernel path (requires artifacts).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("gossip/manifest.json").exists() {

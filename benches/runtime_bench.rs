@@ -1,16 +1,94 @@
-//! PJRT runtime benchmarks — the per-iteration budget of the production
-//! (HLO) path: executable load+compile time, `init`/`step`/`eval`
-//! latency per model, and coordinator overhead (everything around the
-//! PJRT call in a training iteration).
+//! Runtime benchmarks — the per-iteration budget of a training step.
 //!
-//! Run: `cargo bench --bench runtime_bench` (needs `make artifacts`).
+//! Sections:
+//!   1. **coordinator throughput sweep** (always available): full
+//!      n-worker iterations over the pure-Rust surrogate at
+//!      threads × {split, fused} — how much of the iteration the
+//!      multi-threaded engine and the fused gossip+SGD kernel recover.
+//!   2. PJRT sections (pjrt builds with artifacts): executable
+//!      load+compile time, `init`/`step`/`eval` latency per model, and
+//!      coordinator overhead around the PJRT call.
+//!
+//! Run: `cargo bench --bench runtime_bench`
+//! (PJRT sections additionally need `--features pjrt` + `make artifacts`).
 
-use ada_dist::coordinator::{HloModel, LocalModel};
-use ada_dist::data::{Dataset, SyntheticClassification, SyntheticLm};
-use ada_dist::runtime::PjRtRuntime;
+use ada_dist::coordinator::surrogate::MlpClassifier;
+use ada_dist::coordinator::{LrPolicy, SgdFlavor, TrainConfig, Trainer};
+use ada_dist::data::SyntheticClassification;
+use ada_dist::optim::LrSchedule;
 use ada_dist::util::bench::{bench, env_usize, fmt_duration, Table};
 
 fn main() {
+    coordinator_sweep();
+    #[cfg(feature = "pjrt")]
+    pjrt_sections();
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pure-std build — skipping PJRT sections; use --features pjrt)");
+}
+
+/// Full-iteration throughput of the n-worker coordinator on the
+/// surrogate MLP: threads × execution-mode grid. The gossip/fused
+/// engine is the only part that changes — gradients dominate at small
+/// P, mixing dominates as P grows, which is exactly what the fused
+/// kernel and the thread fan-out attack.
+fn coordinator_sweep() {
+    let n = env_usize("ADA_BENCH_SCALE", 8);
+    let hidden = env_usize("ADA_BENCH_HIDDEN", 256);
+    let reps = env_usize("ADA_BENCH_ITERS", 5).max(3);
+    let data = SyntheticClassification::generate(2048, 64, 10, 2.5, 42);
+    println!("== coordinator throughput: {n} workers, MLP(64→{hidden}→10) ==");
+    let make_cfg = |threads: usize, fused: bool| {
+        let mut cfg = TrainConfig::quick(n, 2);
+        cfg.lr = LrPolicy::Fixed {
+            schedule: LrSchedule::Constant { lr: 0.05 },
+        };
+        cfg.max_iters_per_epoch = Some(8);
+        cfg.eval_every_epochs = 0;
+        cfg.metrics_every = 0;
+        cfg.threads = threads;
+        cfg.fused = fused;
+        cfg
+    };
+    // Untimed run to learn the actual iteration count (the per-epoch cap
+    // of 8 only binds when every worker's shard has ≥ 8 batches).
+    let iterations = {
+        let mut model = MlpClassifier::new(64, hidden, 10, 16, 64, n, 0.9);
+        let mut trainer = Trainer::new(&mut model, make_cfg(1, false));
+        let (rec, _) = trainer.run(&data, &SgdFlavor::DecentralizedExponential).unwrap();
+        rec.records().len() as f64
+    };
+    let mut t = Table::new(&["threads", "mode", "median/run", "iters/s"]);
+    for threads in [1usize, 2, 4, 8] {
+        for fused in [false, true] {
+            let tm = bench(1, reps, || {
+                let mut model = MlpClassifier::new(64, hidden, 10, 16, 64, n, 0.9);
+                let mut trainer = Trainer::new(&mut model, make_cfg(threads, fused));
+                std::hint::black_box(
+                    trainer.run(&data, &SgdFlavor::DecentralizedExponential).unwrap(),
+                );
+            });
+            t.row(vec![
+                threads.to_string(),
+                if fused { "fused" } else { "split" }.into(),
+                fmt_duration(tm.median),
+                format!("{:.1}", iterations / tm.median.as_secs_f64()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(split = local momentum step then gossip; fused = gradients then the\n\
+         one-pass W·θ + momentum kernel. Outputs are bit-identical across the\n\
+         threads column — see rust/tests/exec_determinism.rs)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_sections() {
+    use ada_dist::coordinator::{HloModel, LocalModel};
+    use ada_dist::data::{Dataset, SyntheticLm};
+    use ada_dist::runtime::PjRtRuntime;
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("mlp/manifest.json").exists() {
         println!("artifacts missing — run `make artifacts` first");
@@ -75,7 +153,6 @@ fn main() {
 
     println!("== coordinator overhead around the PJRT call ==");
     // Measure a full n-worker iteration and subtract n × step latency.
-    use ada_dist::coordinator::{SgdFlavor, TrainConfig, Trainer};
     let n = 4;
     let data = SyntheticClassification::generate(1024, 32, 10, 3.0, 5);
     let mut model = HloModel::new(rt.load_model("mlp").unwrap());

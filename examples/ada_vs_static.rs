@@ -8,7 +8,7 @@ use ada_dist::coordinator::SgdFlavor;
 use ada_dist::dbench::{run_cell, ExperimentSpec};
 use ada_dist::util::bench::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let workers: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
     let epochs: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(8);

@@ -10,7 +10,7 @@ use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::simnet::{ClusterSpec, SimNet};
 use ada_dist::util::bench::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(96);
     let params: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(1_000_000);

@@ -7,12 +7,11 @@
 //! `artifacts/` exists, else falls back to the pure-Rust surrogate so
 //! the example always runs.
 
-use ada_dist::coordinator::{HloModel, LocalModel, SgdFlavor, TrainConfig, Trainer};
+use ada_dist::coordinator::{LocalModel, SgdFlavor, TrainConfig, Trainer};
 use ada_dist::coordinator::surrogate::MlpClassifier;
 use ada_dist::data::SyntheticClassification;
-use ada_dist::runtime::PjRtRuntime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workers = 8;
     let epochs = 6;
 
@@ -20,14 +19,23 @@ fn main() -> anyhow::Result<()> {
     //    non-iid across workers by the trainer.
     let data = SyntheticClassification::generate(4096, 32, 10, 2.5, 42);
 
-    // 2. A model: the AOT JAX/Pallas `mlp` via PJRT, or the surrogate.
-    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let mut model: Box<dyn LocalModel> = if artifact_dir.join("mlp/manifest.json").exists() {
-        let rt = PjRtRuntime::cpu(&artifact_dir)?;
-        println!("using HLO artifacts via PJRT ({})", rt.platform());
-        Box::new(HloModel::new(rt.load_model("mlp")?))
-    } else {
-        println!("artifacts not built — using the pure-Rust surrogate");
+    // 2. A model: the AOT JAX/Pallas `mlp` via PJRT (pjrt builds with
+    //    artifacts present), or the pure-Rust surrogate.
+    #[cfg(feature = "pjrt")]
+    let mut model: Box<dyn LocalModel> = {
+        let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifact_dir.join("mlp/manifest.json").exists() {
+            let rt = ada_dist::runtime::PjRtRuntime::cpu(&artifact_dir)?;
+            println!("using HLO artifacts via PJRT ({})", rt.platform());
+            Box::new(ada_dist::coordinator::HloModel::new(rt.load_model("mlp")?))
+        } else {
+            println!("artifacts not built — using the pure-Rust surrogate");
+            Box::new(MlpClassifier::new(32, 64, 10, 16, 64, workers, 0.9))
+        }
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let mut model: Box<dyn LocalModel> = {
+        println!("pure-std build — using the pure-Rust surrogate");
         Box::new(MlpClassifier::new(32, 64, 10, 16, 64, workers, 0.9))
     };
 

@@ -24,7 +24,7 @@ use ada_dist::optim::LrSchedule;
 use ada_dist::runtime::PjRtRuntime;
 use ada_dist::util::bench::env_usize;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let model_name =
         std::env::var("ADA_E2E_MODEL").unwrap_or_else(|_| "transformer".to_string());
     let workers = env_usize("ADA_E2E_WORKERS", 4);
@@ -67,6 +67,9 @@ fn main() -> anyhow::Result<()> {
         track_layers: vec![0, 2],
         central_momentum: 0.0,
         drop_prob: 0.0,
+        threads: 0,
+        fused: false,
+        fused_momentum: 0.0,
         record_path: Some("out/train_e2e.jsonl".into()),
     };
 
@@ -118,10 +121,11 @@ fn main() -> anyhow::Result<()> {
         summary.diverged,
     );
     println!("records written to out/train_e2e.jsonl");
-    anyhow::ensure!(!summary.diverged, "training diverged");
-    anyhow::ensure!(
-        last_loss < first_loss,
-        "loss must decrease over the run"
-    );
+    if summary.diverged {
+        return Err("training diverged".into());
+    }
+    if !(last_loss < first_loss) {
+        return Err("loss must decrease over the run".into());
+    }
     Ok(())
 }

@@ -7,6 +7,7 @@
 //! dbench list                                   # available specs
 //! dbench run --app resnet20 --scales 8,16 --epochs 4
 //! dbench run --spec configs/fig3_resnet20.toml  # from TOML
+//! dbench run --app resnet20 --threads 8 --fused # multi-core fast path
 //! dbench ada --app densenet --workers 16        # Fig 7-style comparison
 //! ```
 
@@ -15,8 +16,9 @@ use ada_dist::coordinator::SgdFlavor;
 use ada_dist::dbench::{format_table, rank_analysis, run_experiment, ExperimentSpec};
 use ada_dist::optim::ScalingRule;
 use ada_dist::util::cli::Args;
-use anyhow::{anyhow, bail, Context};
 use std::io::Write as _;
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 const USAGE: &str = "\
 dbench <command> [options]
@@ -24,29 +26,30 @@ dbench <command> [options]
   run    experiment grid (Fig 2/3/4/5-style)
     --app resnet20|resnet50|densenet|lstm | --spec FILE.toml
     --scales 8,16,32 --epochs N --max-iters N --sqrt-scaling --save-records
+    --threads N (0 = all cores; bit-identical results)  --fused
   ada    Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
     --app NAME --workers N --epochs N --k0 N --gamma-k F
   (global) --config PATH   launcher TOML";
 
-fn builtin(app: &str) -> anyhow::Result<ExperimentSpec> {
+fn builtin(app: &str) -> Result<ExperimentSpec, String> {
     Ok(match app {
         "resnet20" => ExperimentSpec::resnet20_analog(),
         "resnet50" => ExperimentSpec::resnet50_analog(),
         "densenet" => ExperimentSpec::densenet_analog(),
         "lstm" => ExperimentSpec::lstm_analog(),
-        other => bail!("unknown app {other} (resnet20|resnet50|densenet|lstm)"),
+        other => return Err(format!("unknown app {other} (resnet20|resnet50|densenet|lstm)")),
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["sqrt-scaling", "save-records", "help"],
+        &["sqrt-scaling", "save-records", "fused", "help"],
     )
-    .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
         Some(p) => LauncherConfig::from_file(std::path::Path::new(p))
-            .context("loading launcher config")?,
+            .map_err(|e| format!("loading launcher config: {e}"))?,
         None => LauncherConfig::default(),
     };
 
@@ -64,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         Some("run") => cmd_run(&args, &cfg),
-        Some("ada") => cmd_ada(&args),
+        Some("ada") => cmd_ada(&args, &cfg),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -72,23 +75,27 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
+fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     let mut spec = match (args.get("app"), args.get("spec")) {
         (Some(app), None) => builtin(app)?,
         (None, Some(path)) => ExperimentSpec::from_toml_file(std::path::Path::new(path))?,
-        _ => bail!("pass exactly one of --app or --spec\n\n{USAGE}"),
+        _ => return Err(format!("pass exactly one of --app or --spec\n\n{USAGE}").into()),
     };
-    if let Some(scales) = args.get_list::<usize>("scales").map_err(|e| anyhow!(e))? {
+    if let Some(scales) = args.get_list::<usize>("scales")? {
         spec.scales = scales;
     }
-    if let Some(e) = args.get_opt::<usize>("epochs").map_err(|e| anyhow!(e))? {
+    if let Some(e) = args.get_opt::<usize>("epochs")? {
         spec.epochs = e;
     }
-    if let Some(m) = args.get_opt::<usize>("max-iters").map_err(|e| anyhow!(e))? {
+    if let Some(m) = args.get_opt::<usize>("max-iters")? {
         spec.max_iters_per_epoch = Some(m);
     }
     if args.has_flag("sqrt-scaling") {
         spec.scaling = ScalingRule::Sqrt;
+    }
+    spec.threads = args.threads(cfg.threads)?;
+    if args.has_flag("fused") {
+        spec.fused = true;
     }
     let t0 = std::time::Instant::now();
     let cells = run_experiment(&spec)?;
@@ -122,15 +129,19 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_ada(args: &Args) -> anyhow::Result<()> {
+fn cmd_ada(args: &Args, cfg: &LauncherConfig) -> CliResult {
     let app = args.get_or("app", "resnet20");
-    let workers: usize = args.get_parse("workers", 16).map_err(|e| anyhow!(e))?;
-    let epochs: usize = args.get_parse("epochs", 8).map_err(|e| anyhow!(e))?;
-    let k0: Option<usize> = args.get_opt("k0").map_err(|e| anyhow!(e))?;
-    let gamma_k: f64 = args.get_parse("gamma-k", 1.0).map_err(|e| anyhow!(e))?;
+    let workers: usize = args.get_parse("workers", 16)?;
+    let epochs: usize = args.get_parse("epochs", 8)?;
+    let k0: Option<usize> = args.get_opt("k0")?;
+    let gamma_k: f64 = args.get_parse("gamma-k", 1.0)?;
     let mut spec = builtin(app)?;
     spec.scales = vec![workers];
     spec.epochs = epochs;
+    spec.threads = args.threads(cfg.threads)?;
+    if args.has_flag("fused") {
+        spec.fused = true;
+    }
     spec.flavors = vec![
         SgdFlavor::CentralizedComplete,
         SgdFlavor::DecentralizedRing,

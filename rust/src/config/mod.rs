@@ -13,6 +13,10 @@ pub struct LauncherConfig {
     pub artifact_dir: PathBuf,
     /// Where run records / tables are written.
     pub output_dir: PathBuf,
+    /// Default gossip/fused-kernel fan-out for the binaries (`0` = all
+    /// cores). Overridable per run with `--threads`; results are
+    /// bit-identical for every value (see `crate::exec`).
+    pub threads: usize,
 }
 
 impl Default for LauncherConfig {
@@ -20,6 +24,7 @@ impl Default for LauncherConfig {
         LauncherConfig {
             artifact_dir: PathBuf::from("artifacts"),
             output_dir: PathBuf::from("out"),
+            threads: 0,
         }
     }
 }
@@ -40,6 +45,9 @@ impl LauncherConfig {
         }
         if let Some(v) = doc.get("output_dir").and_then(TomlValue::as_str) {
             cfg.output_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get("threads").and_then(TomlValue::as_int) {
+            cfg.threads = v.max(0) as usize;
         }
         Ok(cfg)
     }
@@ -67,6 +75,9 @@ mod tests {
         let c = LauncherConfig::from_toml_str("artifact_dir = \"/x\"\n").unwrap();
         assert_eq!(c.artifact_dir, PathBuf::from("/x"));
         assert_eq!(c.output_dir, PathBuf::from("out"), "default kept");
+        assert_eq!(c.threads, 0, "default threads = auto");
+        let c = LauncherConfig::from_toml_str("threads = 4\n").unwrap();
+        assert_eq!(c.threads, 4);
     }
 
     #[test]

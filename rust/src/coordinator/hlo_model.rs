@@ -73,6 +73,10 @@ impl LocalModel for HloModel {
         ))
     }
 
+    fn supports_loss_and_grad(&self) -> bool {
+        false
+    }
+
     fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
         self.bundle.eval_batch(params, batch)
     }

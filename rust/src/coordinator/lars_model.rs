@@ -84,6 +84,10 @@ impl<M: LocalModel> LocalModel for LarsWrapped<M> {
         self.inner.loss_and_grad(params, batch)
     }
 
+    fn supports_loss_and_grad(&self) -> bool {
+        self.inner.supports_loss_and_grad()
+    }
+
     fn eval_sums(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
         self.inner.eval_sums(params, batch)
     }

@@ -14,12 +14,14 @@
 //! EXPERIMENTS.md for where each is used).
 
 pub mod checkpoint;
+#[cfg(feature = "pjrt")]
 mod hlo_model;
 mod lars_model;
 pub mod surrogate;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+#[cfg(feature = "pjrt")]
 pub use hlo_model::HloModel;
 pub use lars_model::LarsWrapped;
 pub use trainer::{LrPolicy, RunSummary, SgdFlavor, TrainConfig, Trainer};
@@ -57,6 +59,13 @@ pub trait LocalModel {
     /// Models that only expose a fused step (the HLO bundles) return an
     /// error, restricting them to the decentralized algorithms.
     fn loss_and_grad(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)>;
+    /// Whether [`LocalModel::loss_and_grad`] works. Models that only
+    /// expose a fused local step (the HLO bundles) return `false`, and
+    /// the trainer's `fused` execution mode falls back to the default
+    /// adapt-then-combine path for them.
+    fn supports_loss_and_grad(&self) -> bool {
+        true
+    }
     /// `(loss_sum, metric_sum)` over one eval batch: metric_sum is the
     /// correct-prediction count (classification) or token count (LM,
     /// where loss_sum is the summed token NLL).

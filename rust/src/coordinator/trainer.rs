@@ -194,6 +194,26 @@ pub struct TrainConfig {
     /// Decentralized flavors only; the production-stability scenario the
     /// paper's introduction motivates.
     pub drop_prob: f64,
+    /// Worker threads the gossip/fused kernels fan out over (`0` = all
+    /// cores). Results are **bit-identical for every value** — see
+    /// `crate::exec` — so this is purely a wall-clock knob.
+    pub threads: usize,
+    /// Execute decentralized flavors in the **fused** combine-then-adapt
+    /// order (D-PSGD, Lian et al. 2017): each iteration computes
+    /// gradients at `θ_t`, then applies `θ_{t+1} = W θ_t − γ v` with the
+    /// momentum update running inside the gossip pass
+    /// ([`GossipEngine::mix_step`]), eliminating one O(nP) DRAM
+    /// round-trip per iteration. `false` (default) keeps the paper's
+    /// adapt-then-combine order (local momentum step inside the model,
+    /// then gossip). Both orders are standard; they are *not* numerically
+    /// identical to each other. Requires the model to expose
+    /// [`super::LocalModel::loss_and_grad`] (all surrogates do; the HLO
+    /// bundles only expose the fused local step and stay on the default
+    /// path). `C_complete` ignores this flag.
+    pub fused: bool,
+    /// Momentum coefficient of the per-worker buffers owned by the fused
+    /// path (set equal to the model's momentum for like-for-like runs).
+    pub fused_momentum: f32,
     /// Optional JSONL output path.
     pub record_path: Option<PathBuf>,
 }
@@ -219,6 +239,9 @@ impl TrainConfig {
             track_layers: vec![0],
             central_momentum: 0.9,
             drop_prob: 0.0,
+            threads: 0,
+            fused: false,
+            fused_momentum: 0.9,
             record_path: None,
         }
     }
@@ -360,9 +383,22 @@ impl<'m> Trainer<'m> {
                 vec![init; n]
             }
         };
-        let mut engine = GossipEngine::new();
+        let mut engine = GossipEngine::with_threads(cfg.threads);
         // Centralized path state: one shared momentum buffer.
         let mut central_momentum = SgdState::new(p, cfg.central_momentum, 0.0);
+        // Fused-path state: per-worker momentum buffers owned by the
+        // trainer (the fused kernel updates them tile-by-tile) and the
+        // iteration's gradient stash. Velocity restarts at zero on
+        // resume, matching the models' internal momentum buffers.
+        // Models without a raw-gradient interface (the HLO bundles)
+        // fall back to the default adapt-then-combine path.
+        let fused = cfg.fused && self.model.supports_loss_and_grad();
+        let mut fused_states: Vec<SgdState> = if fused {
+            (0..n).map(|_| SgdState::new(p, cfg.fused_momentum, 0.0)).collect()
+        } else {
+            Vec::new()
+        };
+        let mut fused_grads: Vec<Vec<f32>> = if fused { vec![Vec::new(); n] } else { Vec::new() };
         // Failure-injection stream (deterministic under the run seed).
         let mut drop_rng = crate::util::rng::Rng::seed_from_u64(cfg.seed ^ 0xD209);
 
@@ -405,6 +441,15 @@ impl<'m> Trainer<'m> {
                     for r in tail {
                         r.copy_from_slice(&head[0]);
                     }
+                } else if fused {
+                    // Combine-then-adapt: gradients at θ_t now, parameter
+                    // and momentum updates fused into the gossip pass below.
+                    for (w, loader) in loaders.iter().enumerate() {
+                        let batch = dataset.batch(&loader.batch_indices(epoch, b));
+                        let (loss, g) = self.model.loss_and_grad(&replicas[w], &batch)?;
+                        loss_sum += loss as f64;
+                        fused_grads[w] = g;
+                    }
                 } else {
                     for (w, loader) in loaders.iter().enumerate() {
                         let batch = dataset.batch(&loader.batch_indices(epoch, b));
@@ -445,6 +490,16 @@ impl<'m> Trainer<'m> {
                         let active: Vec<bool> =
                             (0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect();
                         engine.mix_active(g, &mut replicas, &active);
+                        if fused {
+                            // Unfused fallback with the same mix-then-step
+                            // semantics: a straggler misses the exchange
+                            // but still applies its local gradient.
+                            for (w, state) in fused_states.iter_mut().enumerate() {
+                                state.step(&mut replicas[w], &fused_grads[w], lr);
+                            }
+                        }
+                    } else if fused {
+                        engine.mix_step(g, &mut replicas, &fused_grads, &mut fused_states, lr);
                     } else {
                         engine.mix(g, &mut replicas);
                     }
@@ -758,6 +813,110 @@ mod tests {
             .run(&data, &SgdFlavor::DecentralizedTorus)
             .unwrap();
         assert_eq!(s.final_eval.metric, s2.final_eval.metric);
+    }
+
+    #[test]
+    fn fused_flavors_train_without_divergence() {
+        // The fused gossip+SGD path (combine-then-adapt) must learn on
+        // every decentralized flavor.
+        for flavor in [
+            SgdFlavor::DecentralizedComplete,
+            SgdFlavor::DecentralizedRing,
+            SgdFlavor::DecentralizedTorus,
+            SgdFlavor::DecentralizedExponential,
+            SgdFlavor::Ada { k0: 7, gamma_k: 2.0 },
+        ] {
+            let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, 8, 0.9);
+            let mut cfg = quick_config(8, 8);
+            cfg.fused = true;
+            let mut t = Trainer::new(&mut model, cfg);
+            let (_, s) = t.run(&data, &flavor).unwrap();
+            assert!(!s.diverged, "{} diverged (fused)", s.flavor);
+            assert!(
+                s.final_eval.metric > 0.5,
+                "fused {} should beat chance (0.25): {}",
+                s.flavor,
+                s.final_eval.metric
+            );
+        }
+    }
+
+    #[test]
+    fn fused_is_bit_identical_across_thread_counts() {
+        // The headline determinism guarantee, end to end: a full fused
+        // training run produces the same floats at 1, 2, 4 threads.
+        let run = |threads: usize| {
+            let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, 8, 0.9);
+            let mut cfg = quick_config(8, 4);
+            cfg.fused = true;
+            cfg.threads = threads;
+            let mut t = Trainer::new(&mut model, cfg);
+            let (rec, s) = t.run(&data, &SgdFlavor::DecentralizedRing).unwrap();
+            (
+                rec.records().iter().map(|r| r.train_loss).collect::<Vec<_>>(),
+                s.final_eval.metric,
+            )
+        };
+        let (l1, m1) = run(1);
+        for threads in [2, 4] {
+            let (lt, mt) = run(threads);
+            assert_eq!(l1, lt, "loss series differs at {threads} threads");
+            assert_eq!(m1, mt, "metric differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn fused_flag_does_not_change_centralized_sgd() {
+        // C_complete averages gradients globally; the fused gossip path
+        // never engages, so the flag must be a no-op there.
+        let run = |fused: bool| {
+            let data = SyntheticClassification::generate(512, 8, 4, 3.0, 31);
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, 6, 0.9);
+            let mut cfg = quick_config(6, 3);
+            cfg.fused = fused;
+            let mut t = Trainer::new(&mut model, cfg);
+            let (rec, _) = t.run(&data, &SgdFlavor::CentralizedComplete).unwrap();
+            rec.records().iter().map(|r| r.train_loss).collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn fused_survives_worker_dropout() {
+        // Fused mode under failure injection takes the unfused
+        // mix_active fallback but keeps the same semantics: stable,
+        // learning, deterministic.
+        let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 23);
+        let run = || {
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, 8, 0.9);
+            let mut cfg = quick_config(8, 8);
+            cfg.drop_prob = 0.2;
+            cfg.fused = true;
+            let mut t = Trainer::new(&mut model, cfg);
+            t.run(&data, &SgdFlavor::DecentralizedTorus).unwrap().1
+        };
+        let s = run();
+        assert!(!s.diverged);
+        assert!(s.final_eval.metric > 0.5, "must still learn: {}", s.final_eval.metric);
+        assert_eq!(s.final_eval.metric, run().final_eval.metric, "deterministic");
+    }
+
+    #[test]
+    fn threaded_split_path_matches_serial_exactly() {
+        // The non-fused path through the parallel engine is the same
+        // floats as the serial engine, end to end.
+        let run = |threads: usize| {
+            let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+            let mut model = SoftmaxRegression::new(8, 4, 16, 32, 8, 0.9);
+            let mut cfg = quick_config(8, 4);
+            cfg.threads = threads;
+            let mut t = Trainer::new(&mut model, cfg);
+            let (_, s) = t.run(&data, &SgdFlavor::DecentralizedExponential).unwrap();
+            s.final_eval.metric
+        };
+        assert_eq!(run(1), run(4));
     }
 
     #[test]

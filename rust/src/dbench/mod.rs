@@ -145,6 +145,28 @@ mod tests {
     }
 
     #[test]
+    fn fused_grid_runs_and_stays_deterministic() {
+        // The fused execution mode through the full DBench harness:
+        // identical results at 1 and 4 threads.
+        let run = |threads: usize| {
+            let mut spec = tiny_spec();
+            spec.fused = true;
+            spec.threads = threads;
+            run_experiment(&spec).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.len(), b.len());
+        for (ca, cb) in a.iter().zip(&b) {
+            assert_eq!(
+                ca.summary.final_eval.metric, cb.summary.final_eval.metric,
+                "{} differs across thread counts",
+                ca.flavor
+            );
+        }
+    }
+
+    #[test]
     fn rank_analysis_produces_full_counts() {
         let spec = tiny_spec();
         let cells = run_experiment(&spec).unwrap();

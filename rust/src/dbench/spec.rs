@@ -2,11 +2,14 @@
 //! plus HLO-artifact workloads, with TOML-loadable parameters.
 
 use crate::coordinator::surrogate::{BigramLm, MlpClassifier, SoftmaxRegression};
-use crate::coordinator::{HloModel, LocalModel, SgdFlavor};
+#[cfg(feature = "pjrt")]
+use crate::coordinator::HloModel;
+use crate::coordinator::{LocalModel, SgdFlavor};
 use crate::coordinator::trainer::{LrPolicy, TrainConfig};
 use crate::data::{Dataset, ShardStrategy, SyntheticClassification, SyntheticLm};
 use crate::error::{AdaError, Result};
 use crate::optim::ScalingRule;
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjRtRuntime;
 use crate::util::tomlmini::{TomlDoc, TomlValue};
 
@@ -123,7 +126,7 @@ impl Workload {
                 n_examples,
                 artifact_dir,
             } => {
-                let manifest = crate::runtime::ModelBundle::read_manifest(
+                let manifest = crate::runtime::ModelManifest::load(
                     &std::path::Path::new(artifact_dir)
                         .join(name)
                         .join("manifest.json"),
@@ -184,11 +187,19 @@ impl Workload {
             } => Box::new(BigramLm::new(
                 *vocab, *seq_len, *batch, *eval_batch, n_workers, *momentum,
             )),
+            #[cfg(feature = "pjrt")]
             Workload::Hlo {
                 name, artifact_dir, ..
             } => {
                 let rt = PjRtRuntime::cpu(artifact_dir)?;
                 Box::new(HloModel::new(rt.load_model(name)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            Workload::Hlo { name, .. } => {
+                return Err(AdaError::Runtime(format!(
+                    "workload hlo:{name} needs the `pjrt` feature \
+                     (build with `--features pjrt`)"
+                )));
             }
         })
     }
@@ -235,6 +246,12 @@ pub struct ExperimentSpec {
     pub max_iters_per_epoch: Option<usize>,
     /// Tracked layer indices for per-tensor gini (Fig. 4).
     pub track_layers: Vec<usize>,
+    /// Gossip/fused kernel fan-out (`0` = all cores; bit-identical
+    /// results for every value — see `crate::exec`).
+    pub threads: usize,
+    /// Run decentralized flavors through the fused gossip+SGD kernel
+    /// (combine-then-adapt order; see [`TrainConfig::fused`]).
+    pub fused: bool,
 }
 
 impl ExperimentSpec {
@@ -265,6 +282,8 @@ impl ExperimentSpec {
             metrics_every: 1,
             max_iters_per_epoch: None,
             track_layers: vec![0, 1],
+            threads: 0,
+            fused: false,
         }
     }
 
@@ -374,6 +393,9 @@ impl ExperimentSpec {
             track_layers: self.track_layers.clone(),
             central_momentum: 0.9,
             drop_prob: 0.0,
+            threads: self.threads,
+            fused: self.fused,
+            fused_momentum: 0.9,
             record_path: None,
         }
     }
@@ -450,6 +472,12 @@ impl ExperimentSpec {
         }
         if let Some(v) = doc.get("track_layers").and_then(TomlValue::as_usize_array) {
             spec.track_layers = v;
+        }
+        if let Some(v) = doc.get("threads").and_then(TomlValue::as_int) {
+            spec.threads = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get("fused").and_then(TomlValue::as_bool) {
+            spec.fused = v;
         }
         if let Some(TomlValue::Arr(fs)) = doc.get("flavors") {
             let mut flavors = Vec::new();

@@ -1,0 +1,259 @@
+//! Deterministic fork-join execution engine for the simulation hot
+//! paths (gossip SpMM, fused gossip+SGD).
+//!
+//! ## Design: tile ownership, not work stealing
+//!
+//! The engine partitions the parameter axis `[0, P)` into at most
+//! `threads` contiguous column ranges and hands each range to exactly
+//! one worker for the whole call ([`ExecEngine::run_jobs`] +
+//! [`partition`]). There are no queues and no work stealing: ownership
+//! of every output element is decided *before* any thread starts, purely
+//! from `(P, threads, min_chunk)`.
+//!
+//! ## Why results are bit-identical for any thread count
+//!
+//! Every kernel routed through this engine computes each output element
+//! `out[i][k]` from a reduction whose operand order depends only on `i`
+//! (the graph row's neighbor order) and never on `k`'s tile, the number
+//! of tiles, or which worker owns the tile. Column partitioning
+//! therefore changes *which core* executes the per-element float
+//! sequence, but not the sequence itself — IEEE-754 operations are
+//! deterministic, so `threads = 1, 2, 4, 8 …` all produce the same bits.
+//! This is verified exhaustively in `rust/tests/exec_determinism.rs`.
+//!
+//! Two consequences worth knowing:
+//!  * no atomic/reduction-tree summation anywhere (those *would* change
+//!    operand order with thread count);
+//!  * a worker never writes outside its column range, so the disjoint
+//!    `&mut` views handed out by [`column_views`] are safe Rust, no
+//!    `unsafe` required.
+//!
+//! ## Threading model
+//!
+//! Workers are scoped threads (`std::thread::scope`): spawned per call,
+//! joined before the call returns, so they can borrow the caller's
+//! buffers directly. Spawn cost (~tens of µs) is negligible against the
+//! O(n·P) passes this engine exists for; [`partition`]'s `min_chunk`
+//! keeps tiny inputs on the calling thread so small-model runs pay
+//! nothing. A persistent NUMA-pinned pool is a roadmap follow-on (see
+//! ROADMAP.md §Open items).
+
+use std::num::NonZeroUsize;
+use std::ops::Range;
+
+/// Resolve a user-facing thread-count knob: `0` means "auto" (all
+/// available cores), anything else is taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Split `[0, len)` into at most `parts` contiguous ranges of at least
+/// `min_chunk` elements each (except when `len < min_chunk`, which
+/// yields a single short range). Ranges are returned in ascending order,
+/// cover `[0, len)` exactly, and differ in length by at most one — the
+/// deterministic tile-ownership map of the engine.
+pub fn partition(len: usize, parts: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let max_by_chunk = if min_chunk == 0 { parts } else { len.div_ceil(min_chunk) };
+    let k = parts.max(1).min(max_by_chunk).max(1);
+    let base = len / k;
+    let extra = len % k; // first `extra` ranges get one more element
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Transpose row-major mutable buffers into per-worker column views:
+/// `column_views(rows, ranges)[w][i]` is row `i` restricted to
+/// `ranges[w]`. The views are disjoint by construction (ranges are
+/// disjoint), which is what lets each worker own its columns of *every*
+/// row without any synchronization.
+pub fn column_views<'a>(
+    rows: Vec<&'a mut [f32]>,
+    ranges: &[Range<usize>],
+) -> Vec<Vec<&'a mut [f32]>> {
+    let mut per_worker: Vec<Vec<&'a mut [f32]>> =
+        ranges.iter().map(|_| Vec::with_capacity(rows.len())).collect();
+    for row in rows {
+        let mut rest = row;
+        let mut offset = 0;
+        for (w, r) in ranges.iter().enumerate() {
+            // `take` moves the remainder out of `rest` so the split
+            // halves keep the full `'a` lifetime.
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.end - offset);
+            per_worker[w].push(head);
+            rest = tail;
+            offset = r.end;
+        }
+    }
+    per_worker
+}
+
+/// The engine: a fixed worker count and the fork-join runner.
+#[derive(Debug, Clone)]
+pub struct ExecEngine {
+    threads: usize,
+}
+
+impl Default for ExecEngine {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl ExecEngine {
+    /// Engine with `threads` workers; `0` = auto (available cores).
+    pub fn new(threads: usize) -> Self {
+        ExecEngine {
+            threads: resolve_threads(threads).max(1),
+        }
+    }
+
+    /// Single-threaded engine (the default; identical results, see the
+    /// module docs' determinism argument).
+    pub fn serial() -> Self {
+        ExecEngine { threads: 1 }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Partition `[0, len)` for this engine's worker count.
+    pub fn partition(&self, len: usize, min_chunk: usize) -> Vec<Range<usize>> {
+        partition(len, self.threads, min_chunk)
+    }
+
+    /// Run the jobs to completion, one per worker. Job 0 executes on the
+    /// calling thread; the rest on scoped threads joined before return.
+    /// With zero or one job no thread is ever spawned.
+    pub fn run_jobs<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send,
+    {
+        let mut it = jobs.into_iter();
+        let Some(first) = it.next() else { return };
+        let rest: Vec<F> = it.collect();
+        if rest.is_empty() {
+            first();
+            return;
+        }
+        std::thread::scope(|scope| {
+            for job in rest {
+                scope.spawn(job);
+            }
+            first();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly_and_is_balanced() {
+        for (len, parts, min_chunk) in
+            [(10, 3, 1), (1_000_000, 4, 4096), (5, 8, 1), (4096, 8, 4096), (1, 4, 4096)]
+        {
+            let ranges = partition(len, parts, min_chunk);
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= parts);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, len);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must tile");
+            }
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced within one element: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn partition_respects_min_chunk() {
+        // 10k columns at min_chunk 4096 → at most 3 ranges even with 8 workers.
+        let ranges = partition(10_000, 8, 4096);
+        assert!(ranges.len() <= 3, "{ranges:?}");
+        // Tiny input stays on one worker.
+        assert_eq!(partition(100, 8, 4096).len(), 1);
+        assert!(partition(0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        assert_eq!(partition(999, 4, 16), partition(999, 4, 16));
+    }
+
+    #[test]
+    fn column_views_are_disjoint_and_cover() {
+        let mut rows = vec![vec![0.0f32; 10]; 3];
+        let ranges = partition(10, 3, 1);
+        {
+            let views = column_views(rows.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            assert_eq!(views.len(), ranges.len());
+            for (w, view) in views.into_iter().enumerate() {
+                assert_eq!(view.len(), 3, "one slice per row");
+                for (i, chunk) in view.into_iter().enumerate() {
+                    assert_eq!(chunk.len(), ranges[w].end - ranges[w].start);
+                    for v in chunk.iter_mut() {
+                        *v += (w * 3 + i + 1) as f32; // mark ownership
+                    }
+                }
+            }
+        }
+        // Every element written exactly once.
+        for (i, row) in rows.iter().enumerate() {
+            for (k, &v) in row.iter().enumerate() {
+                let w = ranges.iter().position(|r| r.contains(&k)).unwrap();
+                assert_eq!(v, (w * 3 + i + 1) as f32, "row {i} col {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_jobs_executes_all_jobs_in_parallel_sum() {
+        let engine = ExecEngine::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let ranges = engine.partition(data.len(), 1);
+        let mut partials = vec![0u64; ranges.len()];
+        {
+            let data = &data;
+            let jobs: Vec<_> = partials
+                .iter_mut()
+                .zip(ranges.iter().cloned())
+                .map(|(out, r)| move || *out = data[r].iter().sum::<u64>())
+                .collect();
+            engine.run_jobs(jobs);
+        }
+        assert_eq!(partials.iter().sum::<u64>(), 499_500);
+    }
+
+    #[test]
+    fn serial_engine_spawns_nothing_and_still_runs() {
+        let engine = ExecEngine::serial();
+        assert_eq!(engine.threads(), 1);
+        let mut hit = false;
+        engine.run_jobs(vec![|| hit = true]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn resolve_threads_auto_is_positive() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

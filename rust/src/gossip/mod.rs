@@ -4,27 +4,72 @@
 //!
 //! Two interchangeable execution paths:
 //!  * **native** (this module): sparse row-wise mixing over the graph's
-//!    neighbor lists with reused scratch buffers and an O(nP)
-//!    fast path for uniform complete graphs. This is the production hot
-//!    path and the baseline the kernel path is benchmarked against.
-//!  * **HLO kernel** (`crate::runtime::GossipKernel`): the L1 Pallas
-//!    `gossip_mix` kernel AOT-lowered to an HLO executable and run via
-//!    PJRT — demonstrating the paper's averaging step as an MXU matmul
-//!    (DESIGN.md §Hardware-Adaptation).
+//!    neighbor lists with reused scratch buffers, an O(nP) fast path for
+//!    uniform complete graphs, and a **fused gossip+SGD kernel**
+//!    ([`GossipEngine::mix_step`]) that applies the momentum update
+//!    while each mixed tile is still cache-resident. This is the
+//!    production hot path and the baseline the kernel path is
+//!    benchmarked against.
+//!  * **HLO kernel** (`crate::runtime::GossipKernel`, `pjrt` feature):
+//!    the L1 Pallas `gossip_mix` kernel AOT-lowered to an HLO executable
+//!    and run via PJRT — demonstrating the paper's averaging step as an
+//!    MXU matmul (DESIGN.md §Hardware-Adaptation).
+//!
+//! ## Parallel execution
+//!
+//! Both native kernels fan out over the [`crate::exec`] engine: the
+//! parameter axis is partitioned into contiguous column tiles and each
+//! worker owns its tiles of **all** n replicas (a blocked SpMM over the
+//! sparse mixing matrix). Because every output element's reduction
+//! order is fixed by its graph row alone, results are **bit-identical
+//! for any thread count** — see `rust/src/exec/mod.rs` for the full
+//! argument and `rust/tests/exec_determinism.rs` for the proof-by-test.
 
+use crate::exec::{column_views, ExecEngine};
 use crate::graph::CommGraph;
+use crate::optim::SgdState;
+use std::ops::Range;
+
+/// Column-tile width of the blocked SpMM: the working set (one tile of
+/// every replica) stays cache-resident across all n output rows
+/// (§Perf iteration 2: ~2× at n=64, P=1M on the higher-degree graphs,
+/// where a row-major pass re-streams each 4 MB source row from DRAM
+/// once per consumer).
+const TILE: usize = 4096;
+
+/// A worker must own at least one full tile before a mix call fans out;
+/// below that the spawn cost dwarfs the arithmetic and everything runs
+/// on the calling thread.
+const MIN_COLS_PER_WORKER: usize = TILE;
 
 /// Reusable mixing engine. Holds scratch buffers so steady-state rounds
-/// allocate nothing.
+/// allocate nothing, plus the execution engine that decides fan-out.
 #[derive(Debug, Default)]
 pub struct GossipEngine {
     scratch: Vec<Vec<f32>>,
+    mean_scratch: Vec<f32>,
+    exec: ExecEngine,
 }
 
 impl GossipEngine {
-    /// New engine with empty scratch (grown on first use).
+    /// New single-threaded engine with empty scratch (grown on first use).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Engine fanning out over `threads` workers (`0` = all cores).
+    /// Results are bit-identical to [`GossipEngine::new`] for any value.
+    pub fn with_threads(threads: usize) -> Self {
+        GossipEngine {
+            scratch: Vec::new(),
+            mean_scratch: Vec::new(),
+            exec: ExecEngine::new(threads),
+        }
+    }
+
+    /// Worker count this engine fans out over.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
     }
 
     /// One gossip round in place: `replicas[i] ← Σ_j W_ij · replicas[j]`.
@@ -45,81 +90,223 @@ impl GossipEngine {
 
         // Fast path: uniform complete graph == global mean.
         if is_uniform_complete(graph) {
-            let mean = column_mean(replicas, p);
-            for r in replicas.iter_mut() {
-                r.copy_from_slice(&mean);
-            }
+            self.mix_complete(replicas, p);
             return;
         }
 
         self.ensure_scratch(n, p);
-        let scratch = &mut self.scratch;
-        // out[i] = Σ_(j,w) w · in[j], computed in column tiles so the
-        // working set (one tile of every replica) stays cache-resident
-        // across all n output rows — a blocked SpMM over the sparse
-        // mixing matrix (§Perf iteration 2: ~2× at n=64, P=1M on the
-        // higher-degree graphs, where the row-major pass re-streams
-        // each 4 MB source row from DRAM once per consumer).
-        const TILE: usize = 4096;
-        let mut start = 0;
-        while start < p {
-            let end = (start + TILE).min(p);
-            for (i, out) in scratch.iter_mut().enumerate() {
-                let out = &mut out[start..end];
-                let mut first = true;
-                for (j, w) in graph.row(i) {
-                    let src = &replicas[j][start..end];
-                    if first {
-                        for (o, &s) in out.iter_mut().zip(src.iter()) {
-                            *o = w * s;
-                        }
-                        first = false;
-                    } else {
-                        axpy(out, src, w);
-                    }
-                }
-            }
-            start = end;
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        {
+            let reps: &[Vec<f32>] = replicas;
+            let views =
+                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .zip(ranges.iter().cloned())
+                .map(|(chunks, range)| move || mix_tile(graph, reps, chunks, range))
+                .collect();
+            self.exec.run_jobs(jobs);
         }
-        // Swap buffers instead of copying back: saves one full O(nP)
-        // memory pass per round (§Perf iteration 1).
-        for (r, s) in replicas.iter_mut().zip(scratch.iter_mut()) {
-            std::mem::swap(r, s);
-        }
+        self.swap_in_scratch(replicas);
     }
 
     /// Mix only a subset round (partial participation is not used by the
     /// paper but exercised by failure-injection tests): rows not in
-    /// `active` keep their parameters.
+    /// `active` keep their parameters; active rows renormalize their
+    /// mixing weights over the active participants so the result stays
+    /// a convex combination.
     pub fn mix_active(&mut self, graph: &CommGraph, replicas: &mut [Vec<f32>], active: &[bool]) {
         let n = graph.n();
-        assert_eq!(replicas.len(), n);
-        assert_eq!(active.len(), n);
+        assert_eq!(replicas.len(), n, "replica count must match graph size");
+        assert_eq!(active.len(), n, "active mask must match graph size");
+        if n == 0 {
+            return;
+        }
+        let p = replicas[0].len();
+        assert!(
+            replicas.iter().all(|r| r.len() == p),
+            "replicas must have equal parameter counts"
+        );
         if active.iter().all(|&a| a) {
             return self.mix(graph, replicas);
         }
-        let p = replicas[0].len();
         self.ensure_scratch(n, p);
-        let scratch = &mut self.scratch;
-        scratch.iter_mut().enumerate().for_each(|(i, out)| {
-            if !active[i] {
-                out.copy_from_slice(&replicas[i]);
-                return;
-            }
-            // Renormalize over active rows so the result stays an average.
-            let mut total = 0.0f32;
-            for (j, w) in graph.row(i) {
-                if active[j] {
-                    total += w;
-                }
-            }
+        // Per-row active weight mass, O(n·deg) once — the tiled inner
+        // loop then only divides.
+        let totals: Vec<f32> = (0..n)
+            .map(|i| graph.row(i).filter(|&(j, _)| active[j]).map(|(_, w)| w).sum())
+            .collect();
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        {
+            let reps: &[Vec<f32>] = replicas;
+            let totals: &[f32] = &totals;
+            let views =
+                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .zip(ranges.iter().cloned())
+                .map(|(chunks, range)| {
+                    move || mix_active_tile(graph, reps, active, totals, chunks, range)
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
+
+    /// **Fused gossip + momentum-SGD round** — the combined kernel that
+    /// eliminates one full O(nP) DRAM round-trip per training iteration:
+    ///
+    /// ```text
+    /// θ'_i = Σ_j W_ij θ_j            (gossip SpMM tile)
+    /// v_i  ← μ_i v_i + (g_i + λ_i θ'_i)   (momentum, while the tile
+    /// θ'_i ← θ'_i − γ v_i                  is still cache-resident)
+    /// ```
+    ///
+    /// Bit-identical to calling [`GossipEngine::mix`] followed by
+    /// [`SgdState::step`] per replica, *except* on uniform complete
+    /// graphs where `mix` takes the global-mean fast path (the fused
+    /// kernel always runs the general SpMM; results then agree to float
+    /// rounding, ~1e-7). `μ_i`/`λ_i` come from each replica's
+    /// [`SgdState`]; `γ` is `lr`.
+    pub fn mix_step(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        states: &mut [SgdState],
+        lr: f32,
+    ) {
+        let n = graph.n();
+        assert_eq!(replicas.len(), n, "replica count must match graph size");
+        assert_eq!(grads.len(), n, "gradient count must match graph size");
+        assert_eq!(states.len(), n, "optimizer state count must match graph size");
+        if n == 0 {
+            return;
+        }
+        let p = replicas[0].len();
+        assert!(
+            replicas.iter().all(|r| r.len() == p),
+            "replicas must have equal parameter counts"
+        );
+        assert!(
+            grads.iter().all(|g| g.len() == p),
+            "gradients must match parameter counts"
+        );
+        assert!(
+            states.iter().all(|s| s.len() == p),
+            "optimizer states must match parameter counts"
+        );
+
+        self.ensure_scratch(n, p);
+        let hyper: Vec<(f32, f32)> =
+            states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        {
+            let reps: &[Vec<f32>] = replicas;
+            let hyper: &[(f32, f32)] = &hyper;
+            let out_views =
+                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let vel_views =
+                column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
+            let jobs: Vec<_> = out_views
+                .into_iter()
+                .zip(vel_views)
+                .zip(ranges.iter().cloned())
+                .map(|((outs, vels), range)| {
+                    move || mix_step_tile(graph, reps, grads, hyper, lr, outs, vels, range)
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
+
+    /// Complete-graph fast path: one column-mean pass + one broadcast
+    /// copy, both fanned out over the same column ranges.
+    fn mix_complete(&mut self, replicas: &mut [Vec<f32>], p: usize) {
+        let n = replicas.len();
+        if self.mean_scratch.len() != p {
+            self.mean_scratch = vec![0.0f32; p];
+        }
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        // Phase 1: column mean of the replica stack.
+        {
+            let reps: &[Vec<f32>] = replicas;
+            let nf = n as f32;
+            let mean_views = column_views(vec![self.mean_scratch.as_mut_slice()], &ranges);
+            let jobs: Vec<_> = mean_views
+                .into_iter()
+                .zip(ranges.iter().cloned())
+                .map(|(mut chunks, range)| {
+                    move || {
+                        let m = chunks.pop().expect("one mean row");
+                        m.iter_mut().for_each(|v| *v = 0.0);
+                        for r in reps {
+                            axpy(m, &r[range.clone()], 1.0);
+                        }
+                        for v in m.iter_mut() {
+                            *v /= nf;
+                        }
+                    }
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
+        }
+        // Phase 2: broadcast the mean into every replica.
+        {
+            let mean: &[f32] = &self.mean_scratch;
+            let rep_views =
+                column_views(replicas.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let jobs: Vec<_> = rep_views
+                .into_iter()
+                .zip(ranges.iter().cloned())
+                .map(|(chunks, range)| {
+                    move || {
+                        let src = &mean[range];
+                        for chunk in chunks {
+                            chunk.copy_from_slice(src);
+                        }
+                    }
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
+        }
+    }
+
+    fn ensure_scratch(&mut self, n: usize, p: usize) {
+        if self.scratch.len() != n || self.scratch.first().map(Vec::len) != Some(p) {
+            self.scratch = vec![vec![0.0f32; p]; n];
+        }
+    }
+
+    /// Swap scratch rows into `replicas` instead of copying back: saves
+    /// one full O(nP) memory pass per round (§Perf iteration 1).
+    fn swap_in_scratch(&mut self, replicas: &mut [Vec<f32>]) {
+        for (r, s) in replicas.iter_mut().zip(self.scratch.iter_mut()) {
+            std::mem::swap(r, s);
+        }
+    }
+}
+
+/// One worker's share of a mix round: the blocked SpMM over its column
+/// range of every output row. `out_rows[i]` is row `i` restricted to
+/// `range`; reads come from the (shared, immutable) pre-round replicas.
+fn mix_tile(
+    graph: &CommGraph,
+    replicas: &[Vec<f32>],
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        for (i, out_row) in out_rows.iter_mut().enumerate() {
+            let out = &mut out_row[lo..hi];
             let mut first = true;
             for (j, w) in graph.row(i) {
-                if !active[j] {
-                    continue;
-                }
-                let w = w / total;
-                let src = &replicas[j];
+                let src = &replicas[j][start..end];
                 if first {
                     for (o, &s) in out.iter_mut().zip(src.iter()) {
                         *o = w * s;
@@ -129,41 +316,112 @@ impl GossipEngine {
                     axpy(out, src, w);
                 }
             }
-        });
-        for (r, s) in replicas.iter_mut().zip(scratch.iter_mut()) {
-            std::mem::swap(r, s);
         }
-    }
-
-    fn ensure_scratch(&mut self, n: usize, p: usize) {
-        if self.scratch.len() != n || self.scratch.first().map(Vec::len) != Some(p) {
-            self.scratch = vec![vec![0.0f32; p]; n];
-        }
+        start = end;
     }
 }
 
-/// `out += w * src`, the inner loop of mixing. Written so LLVM
-/// auto-vectorizes (no bounds checks in the loop body).
+/// [`mix_tile`] under partial participation: inactive rows copy their
+/// parameters through; active rows renormalize by the precomputed
+/// active weight mass `totals[i]`.
+fn mix_active_tile(
+    graph: &CommGraph,
+    replicas: &[Vec<f32>],
+    active: &[bool],
+    totals: &[f32],
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        for (i, out_row) in out_rows.iter_mut().enumerate() {
+            let out = &mut out_row[lo..hi];
+            if !active[i] {
+                out.copy_from_slice(&replicas[i][start..end]);
+                continue;
+            }
+            let total = totals[i];
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                if !active[j] {
+                    continue;
+                }
+                let w = w / total;
+                let src = &replicas[j][start..end];
+                if first {
+                    for (o, &s) in out.iter_mut().zip(src.iter()) {
+                        *o = w * s;
+                    }
+                    first = false;
+                } else {
+                    axpy(out, src, w);
+                }
+            }
+        }
+        start = end;
+    }
+}
+
+/// One worker's share of the fused gossip+SGD round: SpMM a tile, then
+/// immediately run the momentum update on it (same element ops as
+/// [`SgdState::step`]) before moving to the next tile.
+#[allow(clippy::too_many_arguments)]
+fn mix_step_tile(
+    graph: &CommGraph,
+    replicas: &[Vec<f32>],
+    grads: &[Vec<f32>],
+    hyper: &[(f32, f32)],
+    lr: f32,
+    mut out_rows: Vec<&mut [f32]>,
+    mut vel_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        for (i, (out_row, vel_row)) in
+            out_rows.iter_mut().zip(vel_rows.iter_mut()).enumerate()
+        {
+            let out = &mut out_row[lo..hi];
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                let src = &replicas[j][start..end];
+                if first {
+                    for (o, &s) in out.iter_mut().zip(src.iter()) {
+                        *o = w * s;
+                    }
+                    first = false;
+                } else {
+                    axpy(out, src, w);
+                }
+            }
+            let (mu, wd) = hyper[i];
+            let vel = &mut vel_row[lo..hi];
+            let g = &grads[i][start..end];
+            for k in 0..out.len() {
+                let eff = g[k] + wd * out[k];
+                vel[k] = mu * vel[k] + eff;
+                out[k] -= lr * vel[k];
+            }
+        }
+        start = end;
+    }
+}
+
+/// `out += w * src`, the inner loop of mixing. Lengths must match
+/// exactly (checked in debug builds); the exact-length loop lets LLVM
+/// drop bounds checks and keep the body vectorized.
 #[inline]
 fn axpy(out: &mut [f32], src: &[f32], w: f32) {
-    let len = out.len().min(src.len());
+    debug_assert_eq!(out.len(), src.len(), "axpy slices must have equal length");
+    let len = out.len();
     let (o, s) = (&mut out[..len], &src[..len]);
     for i in 0..len {
         o[i] += w * s[i];
     }
-}
-
-/// Column-wise mean of the replica stack.
-fn column_mean(replicas: &[Vec<f32>], p: usize) -> Vec<f32> {
-    let n = replicas.len() as f32;
-    let mut mean = vec![0.0f32; p];
-    for r in replicas {
-        axpy(&mut mean, r, 1.0);
-    }
-    for m in mean.iter_mut() {
-        *m /= n;
-    }
-    mean
 }
 
 fn is_uniform_complete(graph: &CommGraph) -> bool {
@@ -350,6 +608,16 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "equal parameter counts")]
+    fn mix_active_rejects_ragged_replicas() {
+        let g = CommGraph::build(GraphKind::Ring, 4).unwrap();
+        let mut reps = replicas(4, 5, 0);
+        reps[2].pop();
+        let active = vec![true, false, true, true];
+        GossipEngine::new().mix_active(&g, &mut reps, &active);
+    }
+
+    #[test]
     fn scratch_is_reused_across_rounds() {
         // Behavioural proxy: repeated mixing with the same engine gives
         // identical results to fresh engines (no scratch contamination).
@@ -363,5 +631,83 @@ mod tests {
         GossipEngine::new().mix(&g, &mut b);
         GossipEngine::new().mix(&g, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_mix_is_bit_identical_to_serial() {
+        // P chosen to force several tiles per worker at 4 threads.
+        for kind in [GraphKind::Ring, GraphKind::Exponential, GraphKind::Complete] {
+            let n = 8;
+            let p = 3 * MIN_COLS_PER_WORKER + 17;
+            let g = CommGraph::build(kind, n).unwrap();
+            let src = replicas(n, p, 21);
+            let mut serial = src.clone();
+            GossipEngine::new().mix(&g, &mut serial);
+            for threads in [2, 3, 4, 8] {
+                let mut par = src.clone();
+                GossipEngine::with_threads(threads).mix(&g, &mut par);
+                assert_eq!(serial, par, "{kind} differs at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_mix_step_equals_mix_then_step() {
+        for kind in [GraphKind::Ring, GraphKind::Torus, GraphKind::Exponential] {
+            let n = 12;
+            let p = 257;
+            let g = CommGraph::build(kind, n).unwrap();
+            let src = replicas(n, p, 31);
+            let grads = replicas(n, p, 32);
+            let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+
+            // Split: mix, then per-replica momentum step.
+            let mut split = src.clone();
+            let mut split_states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+            let mut eng = GossipEngine::new();
+            for round in 0..3 {
+                eng.mix(&g, &mut split);
+                for (r, s) in split.iter_mut().zip(split_states.iter_mut()) {
+                    s.step(r, &grads[round % n], lr);
+                }
+            }
+
+            // Fused: one pass per round.
+            let mut fused = src.clone();
+            let mut fused_states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+            let mut feng = GossipEngine::new();
+            for round in 0..3 {
+                let gs: Vec<Vec<f32>> = (0..n).map(|_| grads[round % n].clone()).collect();
+                feng.mix_step(&g, &mut fused, &gs, &mut fused_states, lr);
+            }
+            // Same element ops in the same order ⇒ exact equality on the
+            // general (non-complete) path.
+            assert_eq!(split, fused, "{kind}: fused must equal mix-then-step");
+        }
+    }
+
+    #[test]
+    fn fused_mix_step_is_bit_identical_across_threads() {
+        let n = 6;
+        let p = 2 * MIN_COLS_PER_WORKER + 5;
+        let g = CommGraph::build(GraphKind::RingLattice { k: 2 }, n).unwrap();
+        let src = replicas(n, p, 41);
+        let grads = replicas(n, p, 42);
+        let run = |threads: usize| {
+            let mut reps = src.clone();
+            let mut states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
+            let mut eng = GossipEngine::with_threads(threads);
+            for _ in 0..2 {
+                eng.mix_step(&g, &mut reps, &grads, &mut states, 0.1);
+            }
+            reps
+        };
+        let one = run(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(one, run(threads), "fused differs at {threads} threads");
+        }
     }
 }

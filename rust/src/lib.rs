@@ -10,8 +10,9 @@
 //!
 //! * **L3 (this crate)** — the coordinator: communication graphs and mixing
 //!   matrices ([`graph`]), adaptive topology schedules ([`topology`]), the
-//!   gossip mixing engine ([`gossip`]), the n-worker decentralized training
-//!   loop ([`coordinator`]), variance metrics and ranking analysis
+//!   gossip mixing engine ([`gossip`]) fanned out over the deterministic
+//!   thread-pool execution engine ([`exec`]), the n-worker decentralized
+//!   training loop ([`coordinator`]), variance metrics and ranking analysis
 //!   ([`metrics`]), the DBench experiment runner ([`dbench`]), and a
 //!   Summit-like analytic network cost model ([`simnet`]).
 //! * **L2 (build-time Python)** — JAX model definitions (`python/compile/`)
@@ -45,6 +46,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dbench;
 pub mod error;
+pub mod exec;
 pub mod gossip;
 pub mod graph;
 pub mod metrics;

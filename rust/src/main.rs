@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! ada run    --workload mlp --flavor d_ring --workers 8 --epochs 4
+//! ada run    --workload mlp --flavor d_ring --threads 8 --fused   # fast path
 //! ada run    --workload hlo:mlp --flavor ada --workers 8      # PJRT path
 //! ada graphs --n 96                                           # Table 1
 //! ada simnet --n 1008 --params 25560000                       # comm cost
@@ -13,10 +14,10 @@ use ada_dist::config::LauncherConfig;
 use ada_dist::coordinator::{SgdFlavor, Trainer};
 use ada_dist::dbench::{format_table, CellResult, ExperimentSpec, Workload};
 use ada_dist::graph::{CommGraph, GraphKind};
-use ada_dist::runtime::PjRtRuntime;
 use ada_dist::simnet::{ClusterSpec, SimNet};
 use ada_dist::util::cli::Args;
-use anyhow::{anyhow, bail, Context};
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 const USAGE: &str = "\
 ada <command> [options]
@@ -24,17 +25,21 @@ ada <command> [options]
     --workload softmax|mlp|mlp_large|bigram|hlo:<name>   (default softmax)
     --flavor c_complete|d_complete|d_ring|d_torus|d_exponential|ada|one_peer|var_adaptive
     --workers N --epochs N --k0 N --gamma-k F --seed N --record PATH
+    --threads N      gossip/fused kernel fan-out (0 = all cores; default
+                     from launcher config; bit-identical results)
+    --fused          fused gossip+SGD execution (combine-then-adapt order)
   graphs           print Table 1 for --n nodes (default 96)
   simnet           Summit-model comm costs: --n nodes --params P
-  check-artifacts  load every artifact and smoke-test via PJRT
-  (global) --config PATH   launcher TOML (artifact_dir/output_dir)";
+  check-artifacts  load every artifact and smoke-test via PJRT (needs
+                   a build with `--features pjrt`)
+  (global) --config PATH   launcher TOML (artifact_dir/output_dir/threads)";
 
 pub(crate) fn parse_flavor(
     name: &str,
     workers: usize,
     k0: Option<usize>,
     gamma_k: f64,
-) -> anyhow::Result<SgdFlavor> {
+) -> Result<SgdFlavor, String> {
     Ok(match name {
         "c_complete" => SgdFlavor::CentralizedComplete,
         "d_complete" => SgdFlavor::DecentralizedComplete,
@@ -52,11 +57,11 @@ pub(crate) fn parse_flavor(
             threshold: 0.002,
             patience: 1,
         },
-        other => bail!("unknown flavor {other}"),
+        other => return Err(format!("unknown flavor {other}")),
     })
 }
 
-fn parse_workload(name: &str, artifact_dir: &std::path::Path) -> anyhow::Result<Workload> {
+fn parse_workload(name: &str, artifact_dir: &std::path::Path) -> Result<Workload, String> {
     Ok(match name {
         "softmax" => ExperimentSpec::resnet20_analog().workload,
         "mlp" => ExperimentSpec::densenet_analog().workload,
@@ -67,16 +72,20 @@ fn parse_workload(name: &str, artifact_dir: &std::path::Path) -> anyhow::Result<
             n_examples: 4096,
             artifact_dir: artifact_dir.display().to_string(),
         },
-        other => bail!("unknown workload {other} (softmax|mlp|mlp_large|bigram|hlo:<name>)"),
+        other => {
+            return Err(format!(
+                "unknown workload {other} (softmax|mlp|mlp_large|bigram|hlo:<name>)"
+            ))
+        }
     })
 }
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help"])
-        .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+fn main() -> CliResult {
+    let args = Args::parse(std::env::args().skip(1), &["help", "fused"])
+        .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
         Some(p) => LauncherConfig::from_file(std::path::Path::new(p))
-            .context("loading launcher config")?,
+            .map_err(|e| format!("loading launcher config: {e}"))?,
         None => LauncherConfig::default(),
     };
 
@@ -92,12 +101,12 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
-    let workers: usize = args.get_parse("workers", 8).map_err(|e| anyhow!(e))?;
-    let epochs: usize = args.get_parse("epochs", 6).map_err(|e| anyhow!(e))?;
-    let k0: Option<usize> = args.get_opt("k0").map_err(|e| anyhow!(e))?;
-    let gamma_k: f64 = args.get_parse("gamma-k", 1.0).map_err(|e| anyhow!(e))?;
-    let seed: u64 = args.get_parse("seed", 42).map_err(|e| anyhow!(e))?;
+fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
+    let workers: usize = args.get_parse("workers", 8)?;
+    let epochs: usize = args.get_parse("epochs", 6)?;
+    let k0: Option<usize> = args.get_opt("k0")?;
+    let gamma_k: f64 = args.get_parse("gamma-k", 1.0)?;
+    let seed: u64 = args.get_parse("seed", 42)?;
     let flavor = parse_flavor(args.get_or("flavor", "ada"), workers, k0, gamma_k)?;
     let workload = parse_workload(args.get_or("workload", "softmax"), &cfg.artifact_dir)?;
 
@@ -108,6 +117,8 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
     let dataset = spec.workload.dataset(spec.seed)?;
     let mut model = spec.workload.model(workers)?;
     let mut train_cfg = spec.train_config(workers);
+    train_cfg.threads = args.threads(cfg.threads)?;
+    train_cfg.fused = args.has_flag("fused");
     train_cfg.record_path = args.get("record").map(std::path::PathBuf::from);
     let mut trainer = Trainer::new(model.as_mut(), train_cfg);
     let t0 = std::time::Instant::now();
@@ -132,8 +143,8 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_graphs(args: &Args) -> anyhow::Result<()> {
-    let n: usize = args.get_parse("n", 96).map_err(|e| anyhow!(e))?;
+fn cmd_graphs(args: &Args) -> CliResult {
+    let n: usize = args.get_parse("n", 96)?;
     println!(
         "{:<22} {:>8} {:>10} {:>10} {:>14} {:>10}",
         "graph", "degree", "edges", "directed", "spectral gap", "regular"
@@ -162,9 +173,9 @@ fn cmd_graphs(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simnet(args: &Args) -> anyhow::Result<()> {
-    let n: usize = args.get_parse("n", 1008).map_err(|e| anyhow!(e))?;
-    let params: usize = args.get_parse("params", 25_560_000).map_err(|e| anyhow!(e))?;
+fn cmd_simnet(args: &Args) -> CliResult {
+    let n: usize = args.get_parse("n", 1008)?;
+    let params: usize = args.get_parse("params", 25_560_000)?;
     let net = SimNet::new(ClusterSpec::summit());
     println!("Summit model: {n} GPUs, {params} params ({} nodes)", n.div_ceil(6));
     println!(
@@ -200,12 +211,14 @@ fn cmd_simnet(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_check_artifacts(cfg: &LauncherConfig) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn cmd_check_artifacts(cfg: &LauncherConfig) -> CliResult {
+    use ada_dist::runtime::PjRtRuntime;
     let rt = PjRtRuntime::cpu(&cfg.artifact_dir)?;
     println!("PJRT platform: {}", rt.platform());
     let mut ok = 0;
     for entry in std::fs::read_dir(&cfg.artifact_dir)
-        .context("reading artifact dir — run `make artifacts`")?
+        .map_err(|e| format!("reading artifact dir — run `make artifacts` ({e})"))?
     {
         let entry = entry?;
         let manifest = entry.path().join("manifest.json");
@@ -228,7 +241,16 @@ fn cmd_check_artifacts(cfg: &LauncherConfig) -> anyhow::Result<()> {
         ok += 1;
     }
     if ok == 0 {
-        bail!("no model artifacts found under {}", cfg.artifact_dir.display());
+        return Err(format!(
+            "no model artifacts found under {}",
+            cfg.artifact_dir.display()
+        )
+        .into());
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_check_artifacts(_cfg: &LauncherConfig) -> CliResult {
+    Err("check-artifacts needs the PJRT runtime: rebuild with `--features pjrt`".into())
 }

@@ -40,6 +40,19 @@ impl SgdState {
         self.velocity.iter_mut().for_each(|v| *v = 0.0);
     }
 
+    /// Read access to the velocity buffer (checkpointing, tests).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Mutable velocity buffer — used by the fused gossip+SGD kernel
+    /// ([`crate::gossip::GossipEngine::mix_step`]) to update momentum
+    /// tile-by-tile while the mixed parameters are cache-resident. The
+    /// per-element update it performs is exactly [`SgdState::step`]'s.
+    pub fn velocity_mut(&mut self) -> &mut [f32] {
+        &mut self.velocity
+    }
+
     /// Parameter count this state serves.
     pub fn len(&self) -> usize {
         self.velocity.len()

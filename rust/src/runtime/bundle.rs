@@ -1,152 +1,13 @@
 //! Model bundles: the trio of HLO executables (`init`, `step`, `eval`)
-//! plus a JSON manifest that `python/compile/aot.py` writes per model.
+//! plus the JSON manifest that `python/compile/aot.py` writes per model.
+//! Compiled only with the `pjrt` feature; the manifest types themselves
+//! live in [`super::manifest`] and are always available.
 
+use super::manifest::{ModelManifest, StepOutput};
 use super::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_f32, HloExecutable, PjRtRuntime};
 use crate::data::Batch;
 use crate::error::{AdaError, Result};
-use crate::util::json::Value;
 use std::path::Path;
-
-/// Task family of a model (decides how `eval`'s outputs are interpreted).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ModelKind {
-    /// `eval → (loss_sum, correct_count)`; metric = accuracy.
-    Classification,
-    /// `eval → (nll_sum, token_count)`; metric = perplexity.
-    Lm,
-}
-
-/// `manifest.json` written next to each model's artifacts.
-#[derive(Debug, Clone)]
-pub struct ModelManifest {
-    /// Model name (artifact directory name).
-    pub name: String,
-    /// Task family.
-    pub kind: ModelKind,
-    /// Flat parameter-vector length.
-    pub param_count: usize,
-    /// Feature width per example.
-    pub x_dim: usize,
-    /// Target width per example (1 for classification).
-    pub y_dim: usize,
-    /// Training batch rows the `step` executable was lowered for.
-    pub batch_size: usize,
-    /// Eval batch rows the `eval` executable was lowered for.
-    pub eval_batch_size: usize,
-    /// Classes (classification) or vocabulary size (LM).
-    pub num_outputs: usize,
-    /// Flat-vector layer boundaries `[start, end)` — used by LARS and by
-    /// the per-tensor variance analysis (Fig. 4 tracks single tensors).
-    pub layer_ranges: Vec<(usize, usize)>,
-    /// Artifact filenames relative to the model directory.
-    pub files: ManifestFiles,
-}
-
-/// Artifact filenames of one model.
-#[derive(Debug, Clone)]
-pub struct ManifestFiles {
-    /// `init(seed:i32) → (params,)`.
-    pub init: String,
-    /// `step(params, x, y, lr) → (params', loss)`.
-    pub step: String,
-    /// `eval(params, x, y) → (loss_sum, metric_sum)`.
-    pub eval: String,
-}
-
-impl ModelManifest {
-    /// Parse from JSON text (the format `aot.py` writes).
-    pub fn from_json_text(text: &str) -> Result<Self> {
-        let v = Value::parse(text)?;
-        let kind = match v.str_field("kind")? {
-            "classification" => ModelKind::Classification,
-            "lm" => ModelKind::Lm,
-            other => {
-                return Err(AdaError::Config(format!("unknown model kind {other:?}")))
-            }
-        };
-        let files = v
-            .get("files")
-            .ok_or_else(|| AdaError::Config("missing 'files'".into()))?;
-        let layer_ranges = v
-            .arr_field("layer_ranges")?
-            .iter()
-            .map(|pair| match pair {
-                Value::Arr(ab) if ab.len() == 2 => {
-                    match (ab[0].as_f64(), ab[1].as_f64()) {
-                        (Some(a), Some(b)) => Ok((a as usize, b as usize)),
-                        _ => Err(AdaError::Config("bad layer range".into())),
-                    }
-                }
-                _ => Err(AdaError::Config("bad layer range".into())),
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ModelManifest {
-            name: v.str_field("name")?.to_string(),
-            kind,
-            param_count: v.usize_field("param_count")?,
-            x_dim: v.usize_field("x_dim")?,
-            y_dim: v.usize_field("y_dim")?,
-            batch_size: v.usize_field("batch_size")?,
-            eval_batch_size: v.usize_field("eval_batch_size")?,
-            num_outputs: v.usize_field("num_outputs")?,
-            layer_ranges,
-            files: ManifestFiles {
-                init: files.str_field("init")?.to_string(),
-                step: files.str_field("step")?.to_string(),
-                eval: files.str_field("eval")?.to_string(),
-            },
-        })
-    }
-
-    /// JSON encoding (inverse of [`ModelManifest::from_json_text`]).
-    pub fn to_json(&self) -> Value {
-        Value::obj(vec![
-            ("name", Value::Str(self.name.clone())),
-            (
-                "kind",
-                Value::Str(
-                    match self.kind {
-                        ModelKind::Classification => "classification",
-                        ModelKind::Lm => "lm",
-                    }
-                    .into(),
-                ),
-            ),
-            ("param_count", Value::Num(self.param_count as f64)),
-            ("x_dim", Value::Num(self.x_dim as f64)),
-            ("y_dim", Value::Num(self.y_dim as f64)),
-            ("batch_size", Value::Num(self.batch_size as f64)),
-            ("eval_batch_size", Value::Num(self.eval_batch_size as f64)),
-            ("num_outputs", Value::Num(self.num_outputs as f64)),
-            (
-                "layer_ranges",
-                Value::Arr(
-                    self.layer_ranges
-                        .iter()
-                        .map(|&(a, b)| {
-                            Value::Arr(vec![Value::Num(a as f64), Value::Num(b as f64)])
-                        })
-                        .collect(),
-                ),
-            ),
-            (
-                "files",
-                Value::obj(vec![
-                    ("init", Value::Str(self.files.init.clone())),
-                    ("step", Value::Str(self.files.step.clone())),
-                    ("eval", Value::Str(self.files.eval.clone())),
-                ]),
-            ),
-        ])
-    }
-}
-
-/// Result of one local training step.
-#[derive(Debug, Clone, Copy)]
-pub struct StepOutput {
-    /// Mean loss of the step's batch.
-    pub loss: f32,
-}
 
 /// A loaded model: manifest + compiled executables.
 #[derive(Debug)]
@@ -175,16 +36,9 @@ impl ModelBundle {
         })
     }
 
-    /// Parse a manifest file.
+    /// Parse a manifest file (alias of [`ModelManifest::load`]).
     pub fn read_manifest(path: &Path) -> Result<ModelManifest> {
-        let text = std::fs::read_to_string(path).map_err(|e| {
-            AdaError::Runtime(format!(
-                "cannot read {} ({e}) — run `make artifacts` first",
-                path.display()
-            ))
-        })?;
-        ModelManifest::from_json_text(&text)
-            .map_err(|e| AdaError::Runtime(format!("bad manifest {}: {e}", path.display())))
+        ModelManifest::load(path)
     }
 
     /// Initialize a fresh flat parameter vector from `seed`.
@@ -244,42 +98,5 @@ impl ModelBundle {
         let p = lit_f32(params, &[m.param_count as i64])?;
         let outs = self.eval.run(&[p, x, y])?;
         Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn manifest_roundtrip() {
-        let m = ModelManifest {
-            name: "mlp".into(),
-            kind: ModelKind::Classification,
-            param_count: 100,
-            x_dim: 32,
-            y_dim: 1,
-            batch_size: 16,
-            eval_batch_size: 64,
-            num_outputs: 10,
-            layer_ranges: vec![(0, 80), (80, 100)],
-            files: ManifestFiles {
-                init: "init.hlo.txt".into(),
-                step: "step.hlo.txt".into(),
-                eval: "eval.hlo.txt".into(),
-            },
-        };
-        let json = m.to_json().to_string();
-        let back = ModelManifest::from_json_text(&json).unwrap();
-        assert_eq!(back.param_count, 100);
-        assert_eq!(back.kind, ModelKind::Classification);
-        assert_eq!(back.layer_ranges, vec![(0, 80), (80, 100)]);
-        assert_eq!(back.files.step, "step.hlo.txt");
-    }
-
-    #[test]
-    fn missing_manifest_mentions_make_artifacts() {
-        let err = ModelBundle::read_manifest(Path::new("/no/such/manifest.json")).unwrap_err();
-        assert!(err.to_string().contains("make artifacts"));
     }
 }

@@ -8,184 +8,211 @@
 //!
 //! Python runs only at `make artifacts` time; everything here is pure
 //! Rust + the PJRT C API on the training path.
+//!
+//! ## The `pjrt` feature
+//!
+//! The PJRT/XLA bindings are gated behind the off-by-default `pjrt`
+//! cargo feature so the default build is pure-std (the coordinator,
+//! gossip engine, surrogates, DBench and all tier-1 tests run without
+//! any external dependency). Manifest types ([`ModelKind`],
+//! [`ModelManifest`], [`StepOutput`]) are always available; executing
+//! artifacts ([`PjRtRuntime`], [`ModelBundle`], [`GossipKernel`])
+//! requires `--features pjrt` and a real `xla` crate (the in-tree
+//! `rust/xla-stub` placeholder satisfies the build; point the `xla`
+//! dependency at a vendored `xla_extension` checkout to actually run).
 
+mod manifest;
+
+pub use manifest::{ManifestFiles, ModelKind, ModelManifest, StepOutput};
+
+#[cfg(feature = "pjrt")]
 mod bundle;
+#[cfg(feature = "pjrt")]
 mod gossip_kernel;
 
-pub use bundle::{ModelBundle, ModelKind, ModelManifest, StepOutput};
+#[cfg(feature = "pjrt")]
+pub use bundle::ModelBundle;
+#[cfg(feature = "pjrt")]
 pub use gossip_kernel::GossipKernel;
 
-use crate::error::{AdaError, Result};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::*;
 
-impl From<xla::Error> for AdaError {
-    fn from(e: xla::Error) -> Self {
-        AdaError::Runtime(e.to_string())
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use crate::error::{AdaError, Result};
+    use std::path::{Path, PathBuf};
 
-/// A PJRT client plus the artifact root it loads from.
-pub struct PjRtRuntime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-}
-
-impl std::fmt::Debug for PjRtRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjRtRuntime")
-            .field("artifact_dir", &self.artifact_dir)
-            .finish_non_exhaustive()
-    }
-}
-
-impl PjRtRuntime {
-    /// CPU PJRT client rooted at `artifact_dir` (usually `artifacts/`).
-    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjRtRuntime {
-            client,
-            artifact_dir: artifact_dir.into(),
-        })
+    impl From<xla::Error> for AdaError {
+        fn from(e: xla::Error) -> Self {
+            AdaError::Runtime(e.to_string())
+        }
     }
 
-    /// Platform string of the underlying client.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A PJRT client plus the artifact root it loads from.
+    pub struct PjRtRuntime {
+        client: xla::PjRtClient,
+        artifact_dir: PathBuf,
     }
 
-    /// Artifact root.
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
+    impl std::fmt::Debug for PjRtRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjRtRuntime")
+                .field("artifact_dir", &self.artifact_dir)
+                .finish_non_exhaustive()
+        }
     }
 
-    /// Load + compile one HLO-text artifact (path relative to the
-    /// artifact root unless absolute).
-    pub fn load(&self, rel: impl AsRef<Path>) -> Result<HloExecutable> {
-        let rel = rel.as_ref();
-        let path = if rel.is_absolute() {
-            rel.to_path_buf()
-        } else {
-            self.artifact_dir.join(rel)
-        };
-        if !path.exists() {
+    impl PjRtRuntime {
+        /// CPU PJRT client rooted at `artifact_dir` (usually `artifacts/`).
+        pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjRtRuntime {
+                client,
+                artifact_dir: artifact_dir.into(),
+            })
+        }
+
+        /// Platform string of the underlying client.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Artifact root.
+        pub fn artifact_dir(&self) -> &Path {
+            &self.artifact_dir
+        }
+
+        /// Load + compile one HLO-text artifact (path relative to the
+        /// artifact root unless absolute).
+        pub fn load(&self, rel: impl AsRef<Path>) -> Result<HloExecutable> {
+            let rel = rel.as_ref();
+            let path = if rel.is_absolute() {
+                rel.to_path_buf()
+            } else {
+                self.artifact_dir.join(rel)
+            };
+            if !path.exists() {
+                return Err(AdaError::Runtime(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(HloExecutable {
+                exe,
+                path: path.clone(),
+            })
+        }
+
+        /// Load a [`super::ModelBundle`] by model name (directory under
+        /// the root).
+        pub fn load_model(&self, name: &str) -> Result<super::ModelBundle> {
+            super::ModelBundle::load(self, name)
+        }
+    }
+
+    /// One compiled HLO executable.
+    pub struct HloExecutable {
+        pub(super) exe: xla::PjRtLoadedExecutable,
+        pub(super) path: PathBuf,
+    }
+
+    impl std::fmt::Debug for HloExecutable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("HloExecutable").field("path", &self.path).finish()
+        }
+    }
+
+    impl HloExecutable {
+        /// Execute with the given input literals. The artifacts are lowered
+        /// with `return_tuple=True`, so the single output literal is a tuple;
+        /// this unwraps it into its elements.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let outs = self.exe.execute::<xla::Literal>(inputs)?;
+            let lit = outs
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| AdaError::Runtime("executable returned no outputs".into()))?
+                .to_literal_sync()?;
+            Ok(lit.to_tuple()?)
+        }
+
+        /// Source artifact path.
+        pub fn path(&self) -> &Path {
+            &self.path
+        }
+    }
+
+    /// f32 literal of shape `dims` from a flat slice.
+    pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect as usize != data.len() {
             return Err(AdaError::Runtime(format!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
+                "literal shape {dims:?} needs {expect} elements, got {}",
+                data.len()
             )));
         }
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(HloExecutable {
-            exe,
-            path: path.clone(),
-        })
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
     }
 
-    /// Load a [`ModelBundle`] by model name (directory under the root).
-    pub fn load_model(&self, name: &str) -> Result<ModelBundle> {
-        ModelBundle::load(self, name)
-    }
-}
-
-/// One compiled HLO executable.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
-
-impl std::fmt::Debug for HloExecutable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("HloExecutable").field("path", &self.path).finish()
-    }
-}
-
-impl HloExecutable {
-    /// Execute with the given input literals. The artifacts are lowered
-    /// with `return_tuple=True`, so the single output literal is a tuple;
-    /// this unwraps it into its elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let outs = self.exe.execute::<xla::Literal>(inputs)?;
-        let lit = outs
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| AdaError::Runtime("executable returned no outputs".into()))?
-            .to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    /// i32 literal of shape `dims` from a flat slice.
+    pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect as usize != data.len() {
+            return Err(AdaError::Runtime(format!(
+                "literal shape {dims:?} needs {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
     }
 
-    /// Source artifact path.
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-}
-
-/// f32 literal of shape `dims` from a flat slice.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    if expect as usize != data.len() {
-        return Err(AdaError::Runtime(format!(
-            "literal shape {dims:?} needs {expect} elements, got {}",
-            data.len()
-        )));
-    }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// i32 literal of shape `dims` from a flat slice.
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    if expect as usize != data.len() {
-        return Err(AdaError::Runtime(format!(
-            "literal shape {dims:?} needs {expect} elements, got {}",
-            data.len()
-        )));
-    }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// Rank-0 f32 literal.
-pub fn lit_scalar_f32(v: f32) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
-}
-
-/// Rank-0 i32 literal.
-pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
-}
-
-/// Extract a literal's contents as `Vec<f32>`.
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Extract a rank-0/rank-1 literal's first f32.
-pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    v.first()
-        .copied()
-        .ok_or_else(|| AdaError::Runtime("empty literal where scalar expected".into()))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn lit_shape_validation() {
-        assert!(lit_f32(&[1.0, 2.0], &[2]).is_ok());
-        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
-        assert!(lit_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
-        assert!(lit_i32(&[1], &[2]).is_err());
+    /// Rank-0 f32 literal.
+    pub fn lit_scalar_f32(v: f32) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
     }
 
-    #[test]
-    fn missing_artifact_is_a_clear_error() {
-        let rt = match PjRtRuntime::cpu("/nonexistent-artifacts") {
-            Ok(rt) => rt,
-            Err(e) => panic!("cpu client failed: {e}"),
-        };
-        let err = rt.load("nope.hlo.txt").unwrap_err();
-        assert!(err.to_string().contains("make artifacts"), "{err}");
+    /// Rank-0 i32 literal.
+    pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
+    }
+
+    /// Extract a literal's contents as `Vec<f32>`.
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Extract a rank-0/rank-1 literal's first f32.
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        let v = lit.to_vec::<f32>()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| AdaError::Runtime("empty literal where scalar expected".into()))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn lit_shape_validation() {
+            assert!(lit_f32(&[1.0, 2.0], &[2]).is_ok());
+            assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+            assert!(lit_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+            assert!(lit_i32(&[1], &[2]).is_err());
+        }
+
+        #[test]
+        fn missing_artifact_is_a_clear_error() {
+            let rt = match PjRtRuntime::cpu("/nonexistent-artifacts") {
+                Ok(rt) => rt,
+                Err(e) => panic!("cpu client failed: {e}"),
+            };
+            let err = rt.load("nope.hlo.txt").unwrap_err();
+            assert!(err.to_string().contains("make artifacts"), "{err}");
+        }
     }
 }

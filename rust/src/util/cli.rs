@@ -77,6 +77,15 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// The shared `--threads` option of the `ada`/`dbench` binaries:
+    /// worker count for the gossip/fused execution engine. `0` (and the
+    /// conventional default) means "all cores" — the resolution happens
+    /// in [`crate::exec::ExecEngine::new`], and results are bit-identical
+    /// for every value, so this knob only moves wall-clock time.
+    pub fn threads(&self, default: usize) -> Result<usize, String> {
+        self.get_parse("threads", default)
+    }
+
     /// Comma-separated list option.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, String> {
         match self.get(key) {
@@ -123,6 +132,16 @@ mod tests {
         );
         assert_eq!(a.get_opt::<f64>("missing").unwrap(), None);
         assert!(a.get_parse::<usize>("scales", 0).is_err());
+    }
+
+    #[test]
+    fn threads_option_defaults_and_parses() {
+        let a = Args::parse(argv("run --threads 8"), &[]).unwrap();
+        assert_eq!(a.threads(0).unwrap(), 8);
+        let b = Args::parse(argv("run"), &[]).unwrap();
+        assert_eq!(b.threads(4).unwrap(), 4);
+        let c = Args::parse(argv("run --threads x"), &[]).unwrap();
+        assert!(c.threads(0).is_err());
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Determinism property tests for the multi-threaded execution engine:
+//! `mix`, `mix_active`, and the fused `mix_step` must produce
+//! **bit-identical** output for 1, 2, 4 and 8 threads on every
+//! [`GraphKind`], and the fused kernel must agree with the split
+//! mix-then-step sequence within 1e-6 (exactly, off the complete-graph
+//! fast path). This is the contract that makes `--threads` a pure
+//! wall-clock knob — see `rust/src/exec/mod.rs` for the argument.
+
+use ada_dist::gossip::GossipEngine;
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::optim::SgdState;
+use ada_dist::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Every graph family the crate can build, at an n that satisfies all
+/// of their constraints (16 = power of two, 4×4 torus, 2k < n, …).
+fn all_kinds() -> Vec<GraphKind> {
+    vec![
+        GraphKind::Ring,
+        GraphKind::Torus,
+        GraphKind::RingLattice { k: 3 },
+        GraphKind::AdaLattice { k: 4 },
+        GraphKind::Exponential,
+        GraphKind::Complete,
+        GraphKind::Hypercube,
+        GraphKind::RandomRegular { d: 4, seed: 11 },
+    ]
+}
+
+fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect()
+}
+
+// P just above two tile widths so 4- and 8-thread runs split unevenly
+// (the interesting case for tile-boundary bugs).
+const P: usize = 2 * 4096 + 137;
+const N: usize = 16;
+
+#[test]
+fn mix_is_bit_identical_for_every_thread_count_and_graph() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 100 + case as u64);
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for threads in THREAD_COUNTS {
+            let mut reps = src.clone();
+            let mut engine = GossipEngine::with_threads(threads);
+            // Two rounds so scratch reuse is exercised too.
+            engine.mix(&g, &mut reps);
+            engine.mix(&g, &mut reps);
+            match &reference {
+                None => reference = Some(reps),
+                Some(want) => assert_eq!(
+                    want, &reps,
+                    "{kind}: mix not bit-identical at {threads} threads"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn mix_active_is_bit_identical_for_every_thread_count_and_graph() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 200 + case as u64);
+        // Deterministic mask with a mix of active and inactive rows.
+        let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for threads in THREAD_COUNTS {
+            let mut reps = src.clone();
+            GossipEngine::with_threads(threads).mix_active(&g, &mut reps, &active);
+            match &reference {
+                None => reference = Some(reps),
+                Some(want) => assert_eq!(
+                    want, &reps,
+                    "{kind}: mix_active not bit-identical at {threads} threads"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_step_is_bit_identical_for_every_thread_count_and_graph() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 300 + case as u64);
+        let grads = replicas(N, P, 400 + case as u64);
+        let mut reference: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
+        for threads in THREAD_COUNTS {
+            let mut reps = src.clone();
+            let mut states: Vec<SgdState> =
+                (0..N).map(|_| SgdState::new(P, 0.9, 1e-4)).collect();
+            let mut engine = GossipEngine::with_threads(threads);
+            // Two rounds so momentum accumulation is exercised.
+            engine.mix_step(&g, &mut reps, &grads, &mut states, 0.05);
+            engine.mix_step(&g, &mut reps, &grads, &mut states, 0.05);
+            let vels: Vec<Vec<f32>> = states.iter().map(|s| s.velocity().to_vec()).collect();
+            match &reference {
+                None => reference = Some((reps, vels)),
+                Some((want_p, want_v)) => {
+                    assert_eq!(
+                        want_p, &reps,
+                        "{kind}: fused params not bit-identical at {threads} threads"
+                    );
+                    assert_eq!(
+                        want_v, &vels,
+                        "{kind}: fused velocity not bit-identical at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_equals_split_mix_then_step_within_1e6() {
+    // The fused kernel's semantic contract: mix_step ≡ mix followed by
+    // SgdState::step. Exact off the complete-graph fast path; within
+    // float rounding (≪ 1e-6) on it.
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 500 + case as u64);
+        let grads = replicas(N, P, 600 + case as u64);
+        let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+
+        let mut split = src.clone();
+        let mut split_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut split_engine = GossipEngine::with_threads(4);
+        let mut fused = src.clone();
+        let mut fused_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut fused_engine = GossipEngine::with_threads(4);
+
+        for _round in 0..3 {
+            split_engine.mix(&g, &mut split);
+            for (r, s) in split.iter_mut().zip(split_states.iter_mut()) {
+                s.step(r, &grads[0], lr);
+            }
+            let gs: Vec<Vec<f32>> = (0..N).map(|_| grads[0].clone()).collect();
+            fused_engine.mix_step(&g, &mut fused, &gs, &mut fused_states, lr);
+        }
+        for i in 0..N {
+            for k in 0..P {
+                let (a, b) = (split[i][k], fused[i][k]);
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "{kind}: fused vs split diverge at [{i}][{k}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mix_active_with_full_mask_equals_mix() {
+    // The all-active fast path must route to plain mix (same bits).
+    let g = CommGraph::build(GraphKind::RingLattice { k: 3 }, N).unwrap();
+    let src = replicas(N, P, 700);
+    let mut via_mix = src.clone();
+    GossipEngine::with_threads(4).mix(&g, &mut via_mix);
+    let mut via_active = src.clone();
+    GossipEngine::with_threads(4).mix_active(&g, &mut via_active, &vec![true; N]);
+    assert_eq!(via_mix, via_active);
+}

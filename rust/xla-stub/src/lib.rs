@@ -1,0 +1,147 @@
+//! API-compatible stub of the XLA/PJRT bindings used by `ada-dist`'s
+//! `pjrt` feature.
+//!
+//! This crate exists so the dependency graph resolves offline: the real
+//! bindings (`xla_extension` / xla-rs style) link libxla and are not
+//! vendorable here. Every constructor returns [`Error::Unavailable`]
+//! at runtime, so code paths that merely *compile* against the PJRT
+//! surface work, and anything that tries to *execute* gets a clear
+//! message. To run real artifacts, replace this path dependency in the
+//! workspace `Cargo.toml` with a vendored checkout of the actual
+//! bindings — the public surface below is the exact subset `ada-dist`
+//! consumes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always "XLA bindings unavailable".
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was invoked at runtime.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "XLA/PJRT bindings unavailable: the `xla` dependency is the in-tree \
+             stub (rust/xla-stub). Vendor the real bindings and point the \
+             workspace `xla` path dependency at them to execute HLO artifacts."
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable)
+}
+
+/// Host literal (stub).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a slice (stub: carries no data).
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape (stub: always errors).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Tuple decomposition (stub: always errors).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Element extraction (stub: always errors).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Device-to-host copy (stub: always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client (stub: always errors, so nothing downstream runs).
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Platform name (stub).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation (stub: always errors).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute (stub: always errors).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (stub: always errors).
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a proto (stub).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+        let msg = Error::Unavailable.to_string();
+        assert!(msg.contains("xla-stub"), "{msg}");
+    }
+}
