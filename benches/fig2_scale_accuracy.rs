@@ -7,7 +7,11 @@
 //! graph (1.4%–5%).
 //!
 //! Run: `cargo bench --bench fig2_scale_accuracy`
-//! (quick preset: scales {8,16,32}; ADA_BENCH_FULL=1 adds 64 and more epochs).
+//! (quick preset: scales {8,16,32}; ADA_BENCH_FULL=1 extends the scale
+//! axis to {8,16,32,64,128,256} and adds epochs). The sweep runs on the
+//! parallel execution path by default — `ADA_BENCH_THREADS` (0 = all
+//! cores) and `ADA_BENCH_FUSED=1` control the engine, and results are
+//! bit-identical for every thread count (see `crate::exec`).
 
 use ada_dist::coordinator::SgdFlavor;
 use ada_dist::dbench::{run_cell, ExperimentSpec};
@@ -16,18 +20,25 @@ use ada_dist::util::bench::{env_flag, env_usize, Table};
 fn main() {
     let full = env_flag("ADA_BENCH_FULL");
     let scales: Vec<usize> = if full {
-        vec![8, 16, 32, 64]
+        vec![8, 16, 32, 64, 128, 256]
     } else {
         vec![8, 16, 32]
     };
     let mut spec = ExperimentSpec::resnet50_analog();
     spec.epochs = env_usize("ADA_BENCH_EPOCHS", if full { 12 } else { 6 });
     spec.metrics_every = 4;
+    // Default to the pooled parallel engine so the O(n·P) gossip,
+    // variance-capture and mean-eval passes fan out — without it the
+    // n=128/256 cells are serial-pass bound.
+    spec.threads = env_usize("ADA_BENCH_THREADS", 0);
+    spec.fused = env_flag("ADA_BENCH_FUSED");
 
     println!(
-        "== Fig 2: accuracy vs scale (workload {}, {} epochs) ==",
+        "== Fig 2: accuracy vs scale (workload {}, {} epochs, threads={}, fused={}) ==",
         spec.workload.name(),
-        spec.epochs
+        spec.epochs,
+        if spec.threads == 0 { "auto".into() } else { spec.threads.to_string() },
+        spec.fused
     );
     let mut t = Table::new(&["flavor", "scale", "final acc", "best acc", "drop vs n=8"]);
     for flavor in [SgdFlavor::DecentralizedRing, SgdFlavor::DecentralizedComplete] {

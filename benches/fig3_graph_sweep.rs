@@ -11,7 +11,10 @@
 //!
 //! Run: `cargo bench --bench fig3_graph_sweep`
 //! (quick preset: 2 apps × scales {8,16}; ADA_BENCH_FULL=1: 4 apps ×
-//! {8,16,32,64}).
+//! {8,16,32,64,128,256}). Runs on the parallel execution path by
+//! default — `ADA_BENCH_THREADS` (0 = all cores) and `ADA_BENCH_FUSED=1`
+//! control the engine; results are bit-identical for every thread count
+//! (see `crate::exec`).
 
 use ada_dist::dbench::{format_table, run_experiment, ExperimentSpec};
 use ada_dist::optim::ScalingRule;
@@ -19,8 +22,14 @@ use ada_dist::util::bench::{env_flag, env_usize};
 
 fn main() {
     let full = env_flag("ADA_BENCH_FULL");
-    let scales: Vec<usize> = if full { vec![8, 16, 32, 64] } else { vec![8, 16] };
+    let scales: Vec<usize> = if full {
+        vec![8, 16, 32, 64, 128, 256]
+    } else {
+        vec![8, 16]
+    };
     let epochs = env_usize("ADA_BENCH_EPOCHS", if full { 10 } else { 5 });
+    let threads = env_usize("ADA_BENCH_THREADS", 0); // 0 = all cores
+    let fused = env_flag("ADA_BENCH_FUSED");
 
     let mut apps = ExperimentSpec::four_applications();
     if !full {
@@ -30,6 +39,8 @@ fn main() {
         spec.scales = scales.clone();
         spec.epochs = epochs;
         spec.metrics_every = 2;
+        spec.threads = threads;
+        spec.fused = fused;
         let t0 = std::time::Instant::now();
         let cells = run_experiment(&spec).expect("sweep");
         println!(

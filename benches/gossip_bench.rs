@@ -3,20 +3,29 @@
 //! Sections:
 //!   1. native sparse engine vs the O(n²P) dense reference
 //!   2. **threads × graph × P sweep**: serial-vs-parallel speedup of the
-//!      blocked SpMM, and fused gossip+SGD vs split mix-then-step —
-//!      written to `BENCH_gossip.json` at the repo root
-//!   3. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
+//!      blocked SpMM, and fused gossip+SGD vs split mix-then-step
+//!   3. **pool vs scoped**: per-call fork-join dispatch cost of the
+//!      persistent worker pool against a per-call scoped-thread spawn
+//!      (what the engine did before PR 2)
+//!   4. **reduce vs serial variance**: the trainer's per-replica L2
+//!      variance capture as a pooled deterministic tiled reduction
+//!      against the old serial O(n·P) pass
+//!   5. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
+//! Sections 2–4 are written to `BENCH_gossip.json` at the repo root.
 //! Results are bit-identical across thread counts (asserted in
-//! `rust/tests/exec_determinism.rs`), so the sweep is purely wall-clock.
+//! `rust/tests/exec_determinism.rs`), so every sweep is purely
+//! wall-clock.
 //!
 //! Run: `cargo bench --bench gossip_bench`.
 //! Knobs: `ADA_BENCH_ITERS` (default 30), `ADA_BENCH_FULL=1` (adds the
 //! paper-scale n=64, P=1M cells to the sweep; they are included by
 //! default too — the flag raises their iteration count).
 
+use ada_dist::exec::ExecEngine;
 use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::metrics::{l2_norm, per_replica_l2_norms_pooled, VarianceReport};
 use ada_dist::optim::SgdState;
 use ada_dist::util::bench::{bench, env_flag, env_usize, fmt_duration, Table};
 use ada_dist::util::json::Value;
@@ -32,7 +41,10 @@ fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
 fn main() {
     let iters = env_usize("ADA_BENCH_ITERS", 30);
     native_vs_dense(iters);
-    threads_sweep(iters);
+    let sweep = threads_sweep(iters);
+    let pool = pool_vs_scoped(iters);
+    let reduce = reduce_vs_serial_variance(iters);
+    write_bench_json(sweep, pool, reduce);
     #[cfg(feature = "pjrt")]
     hlo_section(iters);
     #[cfg(not(feature = "pjrt"))]
@@ -81,7 +93,7 @@ fn native_vs_dense(iters: usize) {
 
 /// The tentpole measurement: serial-vs-parallel SpMM and fused-vs-split
 /// gossip+SGD over threads × graph × P, recorded to BENCH_gossip.json.
-fn threads_sweep(iters: usize) {
+fn threads_sweep(iters: usize) -> Vec<Value> {
     let full = env_flag("ADA_BENCH_FULL");
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     println!("== threads × graph × P sweep (host has {cores} cores) ==");
@@ -178,12 +190,117 @@ fn threads_sweep(iters: usize) {
         "(speedup = mix vs the same engine at 1 thread; fused gain = split\n\
          mix+step vs the fused kernel at the same thread count)"
     );
+    cells
+}
 
+/// Per-call fork-join dispatch cost: the persistent parked pool against
+/// a per-call `std::thread::scope` spawn (the pre-PR-2 engine). The
+/// jobs are near-trivial so the measurement isolates dispatch overhead
+/// — the cost the pool removes from every small-P/high-frequency round.
+fn pool_vs_scoped(iters: usize) -> Vec<Value> {
+    println!("== fork-join dispatch: persistent pool vs per-call scoped spawn ==");
+    let calls = (iters * 20).max(200);
+    let mut t = Table::new(&["threads", "pool/call", "scoped/call", "spawn cost removed"]);
+    let mut cells = Vec::new();
+    for threads in [2usize, 4, 8] {
+        let engine = ExecEngine::new(threads);
+        let mut sink = vec![0u64; threads];
+        let t_pool = bench(calls / 4, calls, || {
+            let jobs: Vec<_> = sink
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| move || *s = i as u64 + 1)
+                .collect();
+            engine.run_jobs(jobs);
+        });
+        let t_scoped = bench(calls / 4, calls, || {
+            // What ExecEngine::run_jobs did before the pool: job 0 on
+            // the caller, one scoped thread spawned per remaining job.
+            let mut it = sink.iter_mut().enumerate();
+            let first = it.next();
+            std::thread::scope(|scope| {
+                for (i, s) in it {
+                    scope.spawn(move || *s = i as u64 + 1);
+                }
+                if let Some((i, s)) = first {
+                    *s = i as u64 + 1;
+                }
+            });
+        });
+        std::hint::black_box(&mut sink);
+        let (pool_s, scoped_s) = (t_pool.median.as_secs_f64(), t_scoped.median.as_secs_f64());
+        t.row(vec![
+            threads.to_string(),
+            fmt_duration(t_pool.median),
+            fmt_duration(t_scoped.median),
+            format!("{:.2}x", scoped_s / pool_s),
+        ]);
+        cells.push(Value::obj(vec![
+            ("threads", Value::Num(threads as f64)),
+            ("pool_median_s", Value::Num(pool_s)),
+            ("scoped_median_s", Value::Num(scoped_s)),
+            ("scoped_over_pool", Value::Num(scoped_s / pool_s)),
+            ("calls", Value::Num(calls as f64)),
+        ]));
+    }
+    println!("{}", t.render());
+    cells
+}
+
+/// The trainer's variance capture (per-replica L2 norms + §3.3 stats),
+/// serial pass vs the pooled deterministic tiled reduction — the
+/// monitoring path the paper argues must be as cheap as the mixing
+/// path.
+fn reduce_vs_serial_variance(iters: usize) -> Vec<Value> {
+    println!("== variance capture: serial O(n·P) pass vs pooled tiled reduction ==");
+    let (n, p) = (64usize, 262_144usize);
+    let reps = replicas(n, p, 3);
+    let serial = bench(2, iters, || {
+        let norms: Vec<f64> = reps.iter().map(|r| l2_norm(r)).collect();
+        std::hint::black_box(VarianceReport::of(&norms));
+    });
+    let serial_s = serial.median.as_secs_f64();
+    let mut t = Table::new(&["n", "P", "threads", "serial", "pooled", "speedup"]);
+    let mut cells = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let engine = ExecEngine::new(threads);
+        let pooled = bench(2, iters, || {
+            let norms = per_replica_l2_norms_pooled(&engine, &reps, 0..p);
+            std::hint::black_box(VarianceReport::of(&norms));
+        });
+        let pooled_s = pooled.median.as_secs_f64();
+        t.row(vec![
+            n.to_string(),
+            p.to_string(),
+            threads.to_string(),
+            fmt_duration(serial.median),
+            fmt_duration(pooled.median),
+            format!("{:.2}x", serial_s / pooled_s),
+        ]);
+        cells.push(Value::obj(vec![
+            ("n", Value::Num(n as f64)),
+            ("p", Value::Num(p as f64)),
+            ("threads", Value::Num(threads as f64)),
+            ("serial_median_s", Value::Num(serial_s)),
+            ("pooled_median_s", Value::Num(pooled_s)),
+            ("speedup_vs_serial", Value::Num(serial_s / pooled_s)),
+            ("iters", Value::Num(iters as f64)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("(pooled results are bit-identical at every thread count — the sweep is pure wall-clock)");
+    cells
+}
+
+fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>) {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let doc = Value::obj(vec![
         ("status", Value::Str("measured".into())),
-        ("bench", Value::Str("gossip_bench::threads_sweep".into())),
+        ("bench", Value::Str("gossip_bench".into())),
         ("host_cores", Value::Num(cores as f64)),
-        ("sweep", Value::Arr(cells)),
+        ("sweep", Value::Arr(sweep)),
+        ("pool_vs_scoped", Value::Arr(pool)),
+        ("reduce_vs_serial_variance", Value::Arr(reduce)),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
     match std::fs::write(&out, doc.to_string()) {

@@ -4,16 +4,17 @@
 use super::{EvalResult, LocalModel};
 use crate::data::{shard_indices, train_test_split, Dataset, ShardLoader, ShardStrategy};
 use crate::error::{AdaError, Result};
+use crate::exec::ExecEngine;
 use crate::graph::GraphKind;
 use crate::metrics::{
-    l2_norm, per_replica_l2_norms, IterationRecord, RunRecorder, VarianceReport,
+    per_replica_l2_norms_pooled, IterationRecord, RunRecorder, VarianceReport,
 };
 use crate::optim::{LrSchedule, ScalingRule, SgdState};
 use crate::runtime::ModelKind;
 use crate::topology::{
     AdaSchedule, OnePeerExponential, StaticSchedule, TopologySchedule, VarianceAdaptive,
 };
-use crate::gossip::GossipEngine;
+use crate::gossip::{mean_model, GossipEngine};
 use std::path::PathBuf;
 
 /// The SGD implementations benchmarked by DBench (§3.1.2), Ada (§4), and
@@ -194,9 +195,12 @@ pub struct TrainConfig {
     /// Decentralized flavors only; the production-stability scenario the
     /// paper's introduction motivates.
     pub drop_prob: f64,
-    /// Worker threads the gossip/fused kernels fan out over (`0` = all
-    /// cores). Results are **bit-identical for every value** — see
-    /// `crate::exec` — so this is purely a wall-clock knob.
+    /// Worker threads of the run's persistent execution pool (`0` = all
+    /// cores), shared by the gossip/fused kernels, the per-iteration
+    /// variance capture and the mean-model evaluation. The workers are
+    /// spawned once per run and parked between calls. Results are
+    /// **bit-identical for every value** — see `crate::exec` — so this
+    /// is purely a wall-clock knob.
     pub threads: usize,
     /// Execute decentralized flavors in the **fused** combine-then-adapt
     /// order (D-PSGD, Lian et al. 2017): each iteration computes
@@ -464,14 +468,23 @@ impl<'m> Trainer<'m> {
                 }
 
                 // --- pre-averaging metric capture (DBench §3.1.2) ----
+                // Pooled: the per-replica norms and per-tensor slices
+                // fan out over the gossip engine's persistent workers
+                // (deterministic tiled reductions — bit-identical for
+                // any thread count), so monitoring costs no more than
+                // one parallel pass where it used to be serial O(n·P).
                 let capture = cfg.metrics_every > 0 && iteration % cfg.metrics_every == 0;
                 let (variance, per_tensor) = if capture {
-                    let norms: Vec<f64> = replicas.iter().map(|r| l2_norm(r)).collect();
+                    let norms = per_replica_l2_norms_pooled(engine.exec(), &replicas, 0..p);
                     let report = VarianceReport::of(&norms);
                     let per_tensor: Vec<f64> = tracked
                         .iter()
                         .map(|range| {
-                            let tn = per_replica_l2_norms(&replicas, range.clone());
+                            let tn = per_replica_l2_norms_pooled(
+                                engine.exec(),
+                                &replicas,
+                                range.clone(),
+                            );
                             crate::metrics::gini_coefficient(&tn)
                         })
                         .collect();
@@ -489,14 +502,21 @@ impl<'m> Trainer<'m> {
                     if cfg.drop_prob > 0.0 {
                         let active: Vec<bool> =
                             (0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect();
-                        engine.mix_active(g, &mut replicas, &active);
                         if fused {
-                            // Unfused fallback with the same mix-then-step
-                            // semantics: a straggler misses the exchange
-                            // but still applies its local gradient.
-                            for (w, state) in fused_states.iter_mut().enumerate() {
-                                state.step(&mut replicas[w], &fused_grads[w], lr);
-                            }
+                            // Fused dropout round: renormalized mixing
+                            // and the momentum update in one pass — a
+                            // straggler misses the exchange but still
+                            // applies its local gradient.
+                            engine.mix_active_step(
+                                g,
+                                &mut replicas,
+                                &fused_grads,
+                                &mut fused_states,
+                                lr,
+                                &active,
+                            );
+                        } else {
+                            engine.mix_active(g, &mut replicas, &active);
                         }
                     } else if fused {
                         engine.mix_step(g, &mut replicas, &fused_grads, &mut fused_states, lr);
@@ -515,7 +535,10 @@ impl<'m> Trainer<'m> {
                         && (epoch + 1) % cfg.eval_every_epochs == 0
                         || epoch + 1 == cfg.epochs);
                 let test_metric = if eval_now {
-                    Some(self.evaluate(dataset, &test_idx, &replicas)?.metric)
+                    Some(
+                        self.evaluate(dataset, &test_idx, &replicas, engine.exec())?
+                            .metric,
+                    )
                 } else {
                     None
                 };
@@ -541,7 +564,7 @@ impl<'m> Trainer<'m> {
         }
         recorder.flush()?;
 
-        let final_eval = self.evaluate(dataset, &test_idx, &replicas)?;
+        let final_eval = self.evaluate(dataset, &test_idx, &replicas, engine.exec())?;
         let total_iters = recorder.records().len();
         let decile = (total_iters / 10).max(1);
         let summary = RunSummary {
@@ -556,24 +579,17 @@ impl<'m> Trainer<'m> {
     }
 
     /// Evaluate the replica-averaged model (§2.2: "the trained model
-    /// takes θ as the average over all θ_i") on the test split.
+    /// takes θ as the average over all θ_i") on the test split. The
+    /// mean model is built over the run's persistent worker pool
+    /// ([`mean_model`]) — previously a serial O(n·P) pass.
     fn evaluate(
         &self,
         dataset: &dyn Dataset,
         test_idx: &[usize],
         replicas: &[Vec<f32>],
+        exec: &ExecEngine,
     ) -> Result<EvalResult> {
-        let p = replicas[0].len();
-        let mut mean = vec![0.0f32; p];
-        for r in replicas {
-            for (m, &v) in mean.iter_mut().zip(r.iter()) {
-                *m += v;
-            }
-        }
-        let inv = 1.0 / replicas.len() as f32;
-        for m in mean.iter_mut() {
-            *m *= inv;
-        }
+        let mean = mean_model(exec, replicas);
         self.evaluate_params(dataset, test_idx, &mean)
     }
 

@@ -1,5 +1,6 @@
 //! Deterministic fork-join execution engine for the simulation hot
-//! paths (gossip SpMM, fused gossip+SGD).
+//! paths (gossip SpMM, fused gossip+SGD, variance capture, mean-model
+//! construction).
 //!
 //! ## Design: tile ownership, not work stealing
 //!
@@ -19,27 +20,64 @@
 //! therefore changes *which core* executes the per-element float
 //! sequence, but not the sequence itself — IEEE-754 operations are
 //! deterministic, so `threads = 1, 2, 4, 8 …` all produce the same bits.
-//! This is verified exhaustively in `rust/tests/exec_determinism.rs`.
 //!
-//! Two consequences worth knowing:
-//!  * no atomic/reduction-tree summation anywhere (those *would* change
-//!    operand order with thread count);
-//!  * a worker never writes outside its column range, so the disjoint
-//!    `&mut` views handed out by [`column_views`] are safe Rust, no
-//!    `unsafe` required.
+//! The same argument extends to **scalar reductions**
+//! ([`ExecEngine::run_reduce`], [`ExecEngine::run_reduce_rows`]): the
+//! input is split into *fixed-granularity* tiles whose boundaries
+//! depend only on
+//! `(len, granularity)` — never on the thread count — each tile yields
+//! one partial computed by a serial in-order pass, and the partials are
+//! combined on the calling thread in ascending tile order. Which worker
+//! computed a partial is unobservable; the float sequence per partial
+//! and the combine sequence are both fixed. Verified exhaustively in
+//! `rust/tests/exec_determinism.rs`.
 //!
-//! ## Threading model
+//! One consequence worth knowing: there is no atomic/reduction-tree
+//! summation anywhere (those *would* change operand order with thread
+//! count).
 //!
-//! Workers are scoped threads (`std::thread::scope`): spawned per call,
-//! joined before the call returns, so they can borrow the caller's
-//! buffers directly. Spawn cost (~tens of µs) is negligible against the
-//! O(n·P) passes this engine exists for; [`partition`]'s `min_chunk`
-//! keeps tiny inputs on the calling thread so small-model runs pay
-//! nothing. A persistent NUMA-pinned pool is a roadmap follow-on (see
-//! ROADMAP.md §Open items).
+//! ## Threading model: a persistent parked pool
+//!
+//! An [`ExecEngine`] with `threads > 1` spawns `threads − 1` workers
+//! **exactly once**, at construction ([`pool::WorkerPool`]). Between
+//! calls the workers sit parked in a blocking channel `recv`; a
+//! fork-join round costs one channel send per worker plus one condvar
+//! wait on the caller — the ~tens-of-µs per-call scoped-thread spawn of
+//! the PR 1 engine is gone, which matters for the O(n·P) passes that
+//! run every iteration (gossip, variance capture) at small P or high
+//! frequency. Job 0 always executes on the calling thread. Cloned
+//! engines share the same pool (`Arc`); dropping the last clone closes
+//! the channels and **joins every worker** before returning, so no
+//! thread outlives the engine.
+//!
+//! Because pool workers are long-lived, jobs cross a `'static` channel
+//! and the caller's borrows are erased (`unsafe`, localized to
+//! [`ExecEngine::run_jobs`]). Soundness rests on the fork-join barrier:
+//! `run_jobs` does not return — and does not unwind past the borrowed
+//! buffers — until every dispatched job has counted down its latch, so
+//! every borrow strictly outlives every use. This is the same
+//! structured-concurrency argument `std::thread::scope` makes, with the
+//! join moved from thread exit to a per-call latch. A panicking job is
+//! contained in the worker, still counts down, and is re-raised on the
+//! calling thread after the barrier.
+//!
+//! [`partition`]'s `min_chunk` keeps tiny inputs on the calling thread
+//! so small-model runs never touch the pool. NUMA pinning of workers to
+//! their owned column ranges is the next rung (see ROADMAP.md §Open
+//! items); `GossipEngine::ensure_scratch` already first-touches scratch
+//! rows inside the owning worker's tile as groundwork.
 
+pub mod pool;
+mod reduce;
+
+pub use pool::WorkerPool;
+pub use reduce::{reduce_tiles, REDUCE_GRANULARITY};
+
+use pool::{run_caught, Latch, PanicSlot, Task, TaskGuard};
 use std::num::NonZeroUsize;
 use std::ops::Range;
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex};
 
 /// Resolve a user-facing thread-count knob: `0` means "auto" (all
 /// available cores), anything else is taken literally.
@@ -101,10 +139,36 @@ pub fn column_views<'a>(
     per_worker
 }
 
-/// The engine: a fixed worker count and the fork-join runner.
+/// Blocks on the latch when dropped — the fork-join barrier holds on
+/// both the normal and the unwinding exit path of `run_jobs`, which is
+/// what the lifetime-erasure safety argument requires.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Erase a job's borrow lifetime so it can cross the pool's `'static`
+/// channel.
+///
+/// # Safety
+///
+/// The caller must guarantee the job has finished running before any
+/// borrow captured in it ends. `run_jobs` guarantees this with
+/// [`WaitGuard`]: the latch wait sits below every captured borrow on
+/// the caller's stack and runs on both exit paths.
+unsafe fn erase_task(task: Box<dyn FnOnce() + Send + '_>) -> Task {
+    std::mem::transmute(task)
+}
+
+/// The engine: a fixed worker count, the persistent pool, and the
+/// fork-join runner. Cheap to clone (clones share the pool).
 #[derive(Debug, Clone)]
 pub struct ExecEngine {
     threads: usize,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for ExecEngine {
@@ -114,22 +178,35 @@ impl Default for ExecEngine {
 }
 
 impl ExecEngine {
-    /// Engine with `threads` workers; `0` = auto (available cores).
+    /// Engine with `threads` workers; `0` = auto (available cores). The
+    /// `threads − 1` pool workers are spawned here, exactly once; every
+    /// later call reuses them.
     pub fn new(threads: usize) -> Self {
-        ExecEngine {
-            threads: resolve_threads(threads).max(1),
-        }
+        let threads = resolve_threads(threads).max(1);
+        let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads - 1)));
+        ExecEngine { threads, pool }
     }
 
     /// Single-threaded engine (the default; identical results, see the
-    /// module docs' determinism argument).
+    /// module docs' determinism argument). Never spawns a thread.
     pub fn serial() -> Self {
-        ExecEngine { threads: 1 }
+        ExecEngine {
+            threads: 1,
+            pool: None,
+        }
     }
 
-    /// Worker count.
+    /// Worker count (calling thread included).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Live pool-worker counter, when this engine owns a pool:
+    /// `threads() − 1` while the engine is up, `0` once the last clone
+    /// has been dropped (drop joins the workers). Lets tests prove the
+    /// spawn-once / join-on-drop contract.
+    pub fn pool_liveness(&self) -> Option<Arc<AtomicUsize>> {
+        self.pool.as_ref().map(|p| p.liveness())
     }
 
     /// Partition `[0, len)` for this engine's worker count.
@@ -138,8 +215,10 @@ impl ExecEngine {
     }
 
     /// Run the jobs to completion, one per worker. Job 0 executes on the
-    /// calling thread; the rest on scoped threads joined before return.
-    /// With zero or one job no thread is ever spawned.
+    /// calling thread; the rest are dispatched to the persistent pool
+    /// and joined (latch barrier) before return. Serial engines run all
+    /// jobs in order on the calling thread; no thread is ever spawned
+    /// per call.
     pub fn run_jobs<F>(&self, jobs: Vec<F>)
     where
         F: FnOnce() + Send,
@@ -147,22 +226,61 @@ impl ExecEngine {
         let mut it = jobs.into_iter();
         let Some(first) = it.next() else { return };
         let rest: Vec<F> = it.collect();
-        if rest.is_empty() {
-            first();
-            return;
-        }
-        std::thread::scope(|scope| {
-            for job in rest {
-                scope.spawn(job);
+        let pool = match self.pool.as_deref() {
+            Some(pool) if !rest.is_empty() => pool,
+            _ => {
+                first();
+                for job in rest {
+                    job();
+                }
+                return;
             }
+        };
+
+        let latch = Arc::new(Latch::new(rest.len()));
+        let panic_slot: PanicSlot = Arc::new(Mutex::new(None));
+        let tasks: Vec<Task> = rest
+            .into_iter()
+            .map(|job| {
+                let guard = TaskGuard {
+                    latch: latch.clone(),
+                };
+                let slot = panic_slot.clone();
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    // The guard counts the latch down when the task
+                    // ends on any path; run_caught stashes a panic
+                    // payload (with the job's borrows already dropped)
+                    // so the caller can resume it with the original
+                    // message after the barrier.
+                    let _g = guard;
+                    run_caught(job, &slot);
+                });
+                // SAFETY: the WaitGuard below blocks until this task's
+                // latch fires, on both the normal and unwind path, so
+                // every borrow captured in `job` outlives its use.
+                unsafe { erase_task(task) }
+            })
+            .collect();
+        {
+            // The barrier guard must exist BEFORE any task is handed
+            // out: if dispatch or job 0 unwinds, the drop still waits
+            // for every in-flight task, upholding the erase_task
+            // invariant (dispatch itself never strands the latch — a
+            // task it cannot deliver runs inline, see WorkerPool).
+            let _barrier = WaitGuard(&latch);
+            pool.dispatch(tasks);
             first();
-        });
+        }
+        if let Some(payload) = panic_slot.lock().expect("panic slot lock").take() {
+            std::panic::resume_unwind(payload);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn partition_covers_exactly_and_is_balanced() {
@@ -246,9 +364,64 @@ mod tests {
     fn serial_engine_spawns_nothing_and_still_runs() {
         let engine = ExecEngine::serial();
         assert_eq!(engine.threads(), 1);
+        assert!(engine.pool_liveness().is_none(), "serial engine has no pool");
         let mut hit = false;
         engine.run_jobs(vec![|| hit = true]);
         assert!(hit);
+    }
+
+    #[test]
+    fn serial_engine_runs_excess_jobs_in_order() {
+        let engine = ExecEngine::serial();
+        let order = std::sync::Mutex::new(Vec::new());
+        let jobs: Vec<_> = (0..4)
+            .map(|i| {
+                let order = &order;
+                move || order.lock().unwrap().push(i)
+            })
+            .collect();
+        engine.run_jobs(jobs);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn engine_clone_shares_one_pool() {
+        let engine = ExecEngine::new(4);
+        let live = engine.pool_liveness().expect("pooled");
+        let clone = engine.clone();
+        assert_eq!(live.load(Ordering::SeqCst), 3, "clone spawns nothing");
+        drop(engine);
+        assert_eq!(live.load(Ordering::SeqCst), 3, "pool outlives first clone");
+        drop(clone);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "last drop joins workers");
+    }
+
+    #[test]
+    fn pooled_job_panic_is_reraised_on_caller() {
+        let engine = ExecEngine::new(2);
+        let mk = |bomb: bool| {
+            move || {
+                if bomb {
+                    panic!("job boom");
+                }
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run_jobs(vec![mk(false), mk(true)]);
+        }));
+        let payload = result.expect_err("worker panic must reach the caller");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"job boom"),
+            "original panic payload must be resumed on the caller"
+        );
+        // The engine stays usable after a contained panic.
+        let mut flags = vec![false; 2];
+        {
+            let jobs: Vec<_> = flags.iter_mut().map(|f| move || *f = true).collect();
+            engine.run_jobs(jobs);
+        }
+        assert!(flags.iter().all(|&f| f));
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! The persistent worker pool behind [`crate::exec::ExecEngine`].
+//!
+//! Workers are spawned **once** (at engine construction), sit parked in
+//! a blocking channel `recv` between calls, and are joined on drop. The
+//! per-call cost of a fork-join round is therefore one channel send per
+//! worker plus one condvar wait on the caller — the ~tens-of-µs scoped
+//! thread spawn that PR 1 paid on every hot-loop call is gone.
+//!
+//! ## Fork-join protocol
+//!
+//! [`WorkerPool::dispatch`] hands each task to a fixed worker
+//! (round-robin over the worker index — tasks produced by
+//! [`crate::exec::partition`] never exceed the worker count, so in
+//! practice the mapping is one task per worker). Completion is signalled
+//! through a count-down [`Latch`] embedded in the task wrapper by the
+//! caller ([`crate::exec::ExecEngine::run_jobs`]), which blocks until
+//! every dispatched task has finished. That barrier is what makes the
+//! lifetime erasure in `run_jobs` sound: borrowed buffers outlive every
+//! task because the call does not return (and does not unwind past the
+//! borrow) until all tasks are done.
+//!
+//! ## Panic containment
+//!
+//! A panicking task is caught inside its wrapper (`catch_unwind`) so
+//! the worker survives for subsequent calls; the wrapper stashes the
+//! original payload ([`PanicSlot`]) and still counts the latch down,
+//! and `run_jobs` `resume_unwind`s it on the calling thread after the
+//! barrier — the same observable behaviour (original message included)
+//! as the old scoped-thread engine, without poisoning the pool.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased unit of work (see the safety argument in
+/// [`crate::exec::ExecEngine::run_jobs`]).
+pub(crate) type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Count-down completion barrier for one fork-join round.
+pub(crate) struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    pub(crate) fn new(count: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Signal one task finished (called from the task wrapper's drop so
+    /// it fires even while a task panic unwinds).
+    pub(crate) fn count_down(&self) {
+        let mut r = self.remaining.lock().expect("latch lock");
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task counted down.
+    pub(crate) fn wait(&self) {
+        let mut r = self.remaining.lock().expect("latch lock");
+        while *r > 0 {
+            r = self.done.wait(r).expect("latch wait");
+        }
+    }
+}
+
+/// Decrements the live-worker counter when a worker thread exits (any
+/// path, including unwind).
+struct AliveGuard(Arc<AtomicUsize>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The first panic payload of a fork-join round, carried back to the
+/// calling thread so it can be `resume_unwind`ed with its original
+/// message (a later panic in the same round is dropped — same behaviour
+/// as scoped threads, which propagate whichever join hits first).
+pub(crate) type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>>;
+
+/// Guard attached to every dispatched task: counts the latch down on
+/// drop, so the caller's barrier always releases.
+pub(crate) struct TaskGuard {
+    pub(crate) latch: Arc<Latch>,
+}
+
+impl Drop for TaskGuard {
+    fn drop(&mut self) {
+        self.latch.count_down();
+    }
+}
+
+/// Run `job`, catching a panic into `slot` (first payload wins).
+pub(crate) fn run_caught<F: FnOnce()>(job: F, slot: &PanicSlot) {
+    if let Err(payload) = std::panic::catch_unwind(AssertUnwindSafe(job)) {
+        let mut slot = slot.lock().expect("panic slot lock");
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+}
+
+/// The long-lived worker set of one [`crate::exec::ExecEngine`].
+#[derive(Debug)]
+pub struct WorkerPool {
+    senders: Vec<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+    alive: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads. This is the only place threads
+    /// are ever created — every subsequent call reuses them.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "pool needs at least one worker");
+        let alive = Arc::new(AtomicUsize::new(workers));
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = std::sync::mpsc::channel::<Task>();
+            let guard_counter = alive.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ada-exec-{w}"))
+                .spawn(move || {
+                    let _guard = AliveGuard(guard_counter);
+                    // Parked in `recv` between fork-join rounds; exits
+                    // when the engine drops its sender. Task wrappers
+                    // already catch their own panics ([`run_caught`]);
+                    // this outer catch is a second belt so a bad task
+                    // can never kill the worker.
+                    while let Ok(task) = rx.recv() {
+                        let _ = std::panic::catch_unwind(AssertUnwindSafe(task));
+                    }
+                })
+                .expect("spawn exec worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool {
+            senders,
+            handles,
+            alive,
+        }
+    }
+
+    /// Number of pool workers (excludes the calling thread).
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Live worker-thread count — `workers()` while the pool is up, `0`
+    /// after drop has joined them. Exposed so tests can prove the
+    /// spawn-once / join-on-drop contract.
+    pub fn liveness(&self) -> Arc<AtomicUsize> {
+        self.alive.clone()
+    }
+
+    /// Hand `tasks` to the workers (non-blocking; completion is the
+    /// caller's latch). Task `i` goes to worker `i % workers`, so a
+    /// round with at most `workers` tasks maps one task per worker.
+    ///
+    /// Never panics and never strands a task: if a send fails (a worker
+    /// died — possible only through events outside the task protocol,
+    /// since task panics are contained), the task runs inline on the
+    /// calling thread so its latch still counts down. Stranding one
+    /// would leave the caller's barrier waiting forever, and unwinding
+    /// here instead would drop borrows that already-dispatched tasks
+    /// still reference.
+    pub(crate) fn dispatch(&self, tasks: Vec<Task>) {
+        let w = self.senders.len();
+        for (i, task) in tasks.into_iter().enumerate() {
+            if let Err(std::sync::mpsc::SendError(task)) = self.senders[i % w].send(task) {
+                task();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels wakes every parked worker out of `recv`;
+        // joining guarantees no thread outlives the engine.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_spawns_and_joins_exactly() {
+        let pool = WorkerPool::new(3);
+        let live = pool.liveness();
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(live.load(Ordering::SeqCst), 3);
+        drop(pool);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "drop must join workers");
+    }
+
+    #[test]
+    fn dispatch_runs_tasks_and_latch_releases() {
+        let pool = WorkerPool::new(2);
+        let latch = Arc::new(Latch::new(2));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..2)
+            .map(|_| {
+                let latch = latch.clone();
+                let hits = hits.clone();
+                Box::new(move || {
+                    let _g = TaskGuard { latch };
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as Task
+            })
+            .collect();
+        pool.dispatch(tasks);
+        latch.wait();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_task_and_payload_is_kept() {
+        let pool = WorkerPool::new(1);
+        let slot: PanicSlot = Arc::new(Mutex::new(None));
+        let latch = Arc::new(Latch::new(1));
+        let (l, s) = (latch.clone(), slot.clone());
+        pool.dispatch(vec![Box::new(move || {
+            let _g = TaskGuard { latch: l };
+            run_caught(|| panic!("boom"), &s);
+        }) as Task]);
+        latch.wait();
+        let payload = slot.lock().unwrap().take().expect("payload captured");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The same worker still serves the next round.
+        let latch2 = Arc::new(Latch::new(1));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let (l2, ok2) = (latch2.clone(), ok.clone());
+        pool.dispatch(vec![Box::new(move || {
+            let _g = TaskGuard { latch: l2 };
+            ok2.fetch_add(1, Ordering::SeqCst);
+        }) as Task]);
+        latch2.wait();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic parallel reductions over the persistent pool.
+//!
+//! The column-tiled kernels in [`crate::gossip`] are deterministic
+//! because each *output element* has a fixed operand order. A scalar
+//! reduction (an L2 norm, a variance) has no per-element outputs — its
+//! operand order **is** the grouping of the sum, so naively splitting
+//! it by worker count would change the float result with `--threads`.
+//!
+//! The fix is the same tile-ownership idea, extended to reductions:
+//!
+//!  1. [`reduce_tiles`] splits `[0, len)` into tiles of exactly
+//!     `granularity` elements (last tile short). The boundaries depend
+//!     only on `(len, granularity)` — never on the thread count.
+//!  2. Every tile yields **one partial**, computed by a serial in-order
+//!     pass over that tile. Which worker computes it is unobservable.
+//!  3. The calling thread combines the partials in ascending tile
+//!     order.
+//!
+//! The float sequence per partial and the combine sequence are both
+//! functions of `(len, granularity)` alone, so results are bit-identical
+//! for any worker count — including the serial engine, which walks the
+//! same tiles on the calling thread. Proof-by-test in
+//! `rust/tests/exec_determinism.rs`.
+
+use super::{partition, ExecEngine};
+use std::ops::Range;
+
+/// Default reduction tile width. Matches the gossip SpMM tile so one
+/// reduction tile is one cache-resident block; fixed so that every
+/// reduction in the crate shares one deterministic tiling.
+pub const REDUCE_GRANULARITY: usize = 4096;
+
+/// The fixed reduction tiling of `[0, len)`: tiles of exactly
+/// `granularity` elements, last tile short, ascending order. Depends
+/// only on `(len, granularity)` — this is the determinism contract.
+pub fn reduce_tiles(len: usize, granularity: usize) -> Vec<Range<usize>> {
+    let g = granularity.max(1);
+    let mut out = Vec::with_capacity(len.div_ceil(g));
+    let mut start = 0;
+    while start < len {
+        let end = (start + g).min(len);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+impl ExecEngine {
+    /// Deterministic parallel reduction of `[0, len)`: `map` turns one
+    /// fixed tile into a partial, `fold` combines partials in ascending
+    /// tile order on the calling thread, starting from `init`. Results
+    /// are bit-identical for any engine thread count (see module docs).
+    pub fn run_reduce<T, M, F>(
+        &self,
+        len: usize,
+        granularity: usize,
+        map: M,
+        fold: F,
+        init: T,
+    ) -> T
+    where
+        T: Clone + Send,
+        M: Fn(Range<usize>) -> T + Sync,
+        F: FnMut(T, T) -> T,
+    {
+        self.run_reduce_rows(1, len, granularity, |_, tile| map(tile), fold, init)
+            .pop()
+            .expect("one row")
+    }
+
+    /// [`ExecEngine::run_reduce`] over `rows` independent rows sharing
+    /// one fan-out (one fork-join round for the whole `rows × tiles`
+    /// grid — this is what the trainer's per-replica variance capture
+    /// uses). `map(row, tile)` produces the partial of one grid cell;
+    /// each row's partials are folded in ascending tile order and the
+    /// per-row results are returned in row order.
+    pub fn run_reduce_rows<T, M, F>(
+        &self,
+        rows: usize,
+        len: usize,
+        granularity: usize,
+        map: M,
+        mut fold: F,
+        init: T,
+    ) -> Vec<T>
+    where
+        T: Clone + Send,
+        M: Fn(usize, Range<usize>) -> T + Sync,
+        F: FnMut(T, T) -> T,
+    {
+        let tiles = reduce_tiles(len, granularity);
+        let per_row = tiles.len();
+        if rows == 0 {
+            return Vec::new();
+        }
+        if per_row == 0 {
+            return vec![init; rows];
+        }
+        let cells = rows * per_row;
+        let mut partials: Vec<Option<T>> = Vec::with_capacity(cells);
+        partials.resize_with(cells, || None);
+        {
+            // Workers own contiguous runs of the row-major cell grid;
+            // the partial a cell holds depends only on `map` and its
+            // fixed tile, never on this assignment. Mirror the gossip
+            // kernels' fan-out floor: a worker must have at least one
+            // full granularity tile of elements, so tiny captures (a
+            // small tracked tensor slice, a small model) stay on the
+            // calling thread and never pay a dispatch round-trip —
+            // same tiles either way, so the bits don't move.
+            let max_workers = (rows * len / granularity.max(1)).max(1);
+            let parts = self.threads().min(max_workers);
+            let map = &map;
+            let tiles = &tiles;
+            let worker_ranges = partition(cells, parts, 1);
+            let mut jobs = Vec::with_capacity(worker_ranges.len());
+            let mut rest: &mut [Option<T>] = &mut partials;
+            let mut offset = 0usize;
+            for r in &worker_ranges {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.end - offset);
+                rest = tail;
+                let start = offset;
+                offset = r.end;
+                jobs.push(move || {
+                    for (k, slot) in head.iter_mut().enumerate() {
+                        let cell = start + k;
+                        *slot = Some(map(cell / per_row, tiles[cell % per_row].clone()));
+                    }
+                });
+            }
+            self.run_jobs(jobs);
+        }
+        let mut out = Vec::with_capacity(rows);
+        let mut it = partials.into_iter();
+        for _ in 0..rows {
+            let mut acc = init.clone();
+            for _ in 0..per_row {
+                acc = fold(acc, it.next().expect("cell").expect("partial computed"));
+            }
+            out.push(acc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_depend_only_on_len_and_granularity() {
+        let a = reduce_tiles(10_000, 4096);
+        assert_eq!(a, vec![0..4096, 4096..8192, 8192..10_000]);
+        assert_eq!(a, reduce_tiles(10_000, 4096));
+        assert!(reduce_tiles(0, 4096).is_empty());
+        assert_eq!(reduce_tiles(5, 4096), vec![0..5]);
+        // Zero granularity is clamped, not a panic.
+        assert_eq!(reduce_tiles(3, 0).len(), 3);
+    }
+
+    #[test]
+    fn reduce_sum_matches_serial_loop() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let engine = ExecEngine::new(4);
+        let sum = engine.run_reduce(
+            data.len(),
+            128,
+            |tile| data[tile].iter().sum::<f64>(),
+            |a, b| a + b,
+            0.0,
+        );
+        // Same grouping as a serial pass over the same tiles.
+        let serial: f64 = reduce_tiles(data.len(), 128)
+            .into_iter()
+            .map(|t| data[t].iter().sum::<f64>())
+            .sum();
+        assert_eq!(sum, serial);
+    }
+
+    #[test]
+    fn reduce_is_bit_identical_across_thread_counts() {
+        let data: Vec<f64> = (0..50_000).map(|i| ((i * 37 + 11) as f64).cos()).collect();
+        let reference = ExecEngine::serial().run_reduce(
+            data.len(),
+            4096,
+            |tile| data[tile].iter().sum::<f64>(),
+            |a, b| a + b,
+            0.0,
+        );
+        for threads in [2, 3, 4, 8] {
+            let engine = ExecEngine::new(threads);
+            let got = engine.run_reduce(
+                data.len(),
+                4096,
+                |tile| data[tile].iter().sum::<f64>(),
+                |a, b| a + b,
+                0.0,
+            );
+            assert_eq!(reference.to_bits(), got.to_bits(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn reduce_rows_folds_each_row_independently() {
+        let rows: Vec<Vec<f64>> = (0..5)
+            .map(|r| (0..1000).map(|i| (r * 1000 + i) as f64).collect())
+            .collect();
+        let engine = ExecEngine::new(3);
+        let sums = engine.run_reduce_rows(
+            rows.len(),
+            1000,
+            64,
+            |row, tile| rows[row][tile].iter().sum::<f64>(),
+            |a, b| a + b,
+            0.0,
+        );
+        for (r, s) in sums.iter().enumerate() {
+            let expect: f64 = rows[r].iter().sum();
+            assert!((s - expect).abs() < 1e-6, "row {r}: {s} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn reduce_handles_empty_inputs() {
+        let engine = ExecEngine::new(4);
+        let z = engine.run_reduce(0, 16, |_| -> f64 { unreachable!("no tiles") }, |a, b| a + b, 7.0);
+        assert_eq!(z, 7.0);
+        let rows: Vec<f64> = engine.run_reduce_rows(3, 0, 16, |_, _| 0.0, |a, b| a + b, 1.5);
+        assert_eq!(rows, vec![1.5; 3]);
+        assert!(engine
+            .run_reduce_rows(0, 10, 2, |_, _| 0.0f64, |a, b| a + b, 0.0)
+            .is_empty());
+    }
+}

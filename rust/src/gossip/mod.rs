@@ -5,8 +5,9 @@
 //! Two interchangeable execution paths:
 //!  * **native** (this module): sparse row-wise mixing over the graph's
 //!    neighbor lists with reused scratch buffers, an O(nP) fast path for
-//!    uniform complete graphs, and a **fused gossip+SGD kernel**
-//!    ([`GossipEngine::mix_step`]) that applies the momentum update
+//!    uniform complete graphs, and **fused gossip+SGD kernels**
+//!    ([`GossipEngine::mix_step`], and [`GossipEngine::mix_active_step`]
+//!    for partial-participation rounds) that apply the momentum update
 //!    while each mixed tile is still cache-resident. This is the
 //!    production hot path and the baseline the kernel path is
 //!    benchmarked against.
@@ -17,13 +18,18 @@
 //!
 //! ## Parallel execution
 //!
-//! Both native kernels fan out over the [`crate::exec`] engine: the
-//! parameter axis is partitioned into contiguous column tiles and each
-//! worker owns its tiles of **all** n replicas (a blocked SpMM over the
-//! sparse mixing matrix). Because every output element's reduction
-//! order is fixed by its graph row alone, results are **bit-identical
-//! for any thread count** — see `rust/src/exec/mod.rs` for the full
-//! argument and `rust/tests/exec_determinism.rs` for the proof-by-test.
+//! The native kernels fan out over the [`crate::exec`] engine — a
+//! **persistent worker pool**, spawned once when the `GossipEngine` is
+//! built and parked between rounds: the parameter axis is partitioned
+//! into contiguous column tiles and each worker owns its tiles of
+//! **all** n replicas (a blocked SpMM over the sparse mixing matrix).
+//! Because every output element's reduction order is fixed by its graph
+//! row alone, results are **bit-identical for any thread count** — see
+//! `rust/src/exec/mod.rs` for the full argument and
+//! `rust/tests/exec_determinism.rs` for the proof-by-test. Scratch rows
+//! are first-touched inside the owning worker's tile
+//! ([`GossipEngine::ensure_scratch`]) so page placement follows tile
+//! ownership — the groundwork for NUMA pinning (ROADMAP §Open items).
 
 use crate::exec::{column_views, ExecEngine};
 use crate::graph::CommGraph;
@@ -70,6 +76,13 @@ impl GossipEngine {
     /// Worker count this engine fans out over.
     pub fn threads(&self) -> usize {
         self.exec.threads()
+    }
+
+    /// The underlying execution engine — shared with the trainer's
+    /// pooled variance capture and mean-model construction so the whole
+    /// iteration runs on one worker set.
+    pub fn exec(&self) -> &ExecEngine {
+        &self.exec
     }
 
     /// One gossip round in place: `replicas[i] ← Σ_j W_ij · replicas[j]`.
@@ -131,11 +144,7 @@ impl GossipEngine {
             return self.mix(graph, replicas);
         }
         self.ensure_scratch(n, p);
-        // Per-row active weight mass, O(n·deg) once — the tiled inner
-        // loop then only divides.
-        let totals: Vec<f32> = (0..n)
-            .map(|i| graph.row(i).filter(|&(j, _)| active[j]).map(|(_, w)| w).sum())
-            .collect();
+        let totals = active_totals(graph, active);
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         {
             let reps: &[Vec<f32>] = replicas;
@@ -222,18 +231,102 @@ impl GossipEngine {
         self.swap_in_scratch(replicas);
     }
 
+    /// **Fused partial-participation gossip + momentum-SGD round** —
+    /// [`GossipEngine::mix_active`] and the per-replica
+    /// [`SgdState::step`] in one pass, so dropout rounds stop paying
+    /// the extra O(nP) DRAM round-trip the split fallback costs:
+    ///
+    /// ```text
+    /// θ'_i = Σ_{j active} (W_ij / T_i) θ_j   if active[i]   (renormalized SpMM)
+    /// θ'_i = θ_i                              otherwise      (passthrough)
+    /// v_i ← μ_i v_i + (g_i + λ_i θ'_i);  θ'_i ← θ'_i − γ v_i   (every i)
+    /// ```
+    ///
+    /// Matching the trainer's straggler model, **inactive rows still
+    /// apply their local gradient** — they only miss the exchange.
+    /// Bit-identical to `mix_active` followed by `SgdState::step` per
+    /// replica (same per-element float sequence), except when every row
+    /// is active: that mask delegates to [`GossipEngine::mix_step`],
+    /// whose complete-graph handling is documented there.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mix_active_step(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        states: &mut [SgdState],
+        lr: f32,
+        active: &[bool],
+    ) {
+        let n = graph.n();
+        assert_eq!(replicas.len(), n, "replica count must match graph size");
+        assert_eq!(grads.len(), n, "gradient count must match graph size");
+        assert_eq!(states.len(), n, "optimizer state count must match graph size");
+        assert_eq!(active.len(), n, "active mask must match graph size");
+        if n == 0 {
+            return;
+        }
+        if active.iter().all(|&a| a) {
+            return self.mix_step(graph, replicas, grads, states, lr);
+        }
+        let p = replicas[0].len();
+        assert!(
+            replicas.iter().all(|r| r.len() == p),
+            "replicas must have equal parameter counts"
+        );
+        assert!(
+            grads.iter().all(|g| g.len() == p),
+            "gradients must match parameter counts"
+        );
+        assert!(
+            states.iter().all(|s| s.len() == p),
+            "optimizer states must match parameter counts"
+        );
+
+        self.ensure_scratch(n, p);
+        let totals = active_totals(graph, active);
+        let hyper: Vec<(f32, f32)> =
+            states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        {
+            let reps: &[Vec<f32>] = replicas;
+            let totals: &[f32] = &totals;
+            let hyper: &[(f32, f32)] = &hyper;
+            let out_views =
+                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let vel_views =
+                column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
+            let jobs: Vec<_> = out_views
+                .into_iter()
+                .zip(vel_views)
+                .zip(ranges.iter().cloned())
+                .map(|((outs, vels), range)| {
+                    move || {
+                        mix_active_step_tile(
+                            graph, reps, active, totals, grads, hyper, lr, outs, vels, range,
+                        )
+                    }
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
+
     /// Complete-graph fast path: one column-mean pass + one broadcast
     /// copy, both fanned out over the same column ranges.
     fn mix_complete(&mut self, replicas: &mut [Vec<f32>], p: usize) {
-        let n = replicas.len();
         if self.mean_scratch.len() != p {
+            // Fresh lazily-zero-mapped pages; the owning workers'
+            // writes in phase 1 below are the first touch.
             self.mean_scratch = vec![0.0f32; p];
         }
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
-        // Phase 1: column mean of the replica stack.
+        // Phase 1: column mean of the replica stack. Write-first into
+        // the scratch tile (replica 0 seeds it) instead of zeroing and
+        // accumulating — one fewer pass over every tile per round.
         {
             let reps: &[Vec<f32>] = replicas;
-            let nf = n as f32;
             let mean_views = column_views(vec![self.mean_scratch.as_mut_slice()], &ranges);
             let jobs: Vec<_> = mean_views
                 .into_iter()
@@ -241,13 +334,7 @@ impl GossipEngine {
                 .map(|(mut chunks, range)| {
                     move || {
                         let m = chunks.pop().expect("one mean row");
-                        m.iter_mut().for_each(|v| *v = 0.0);
-                        for r in reps {
-                            axpy(m, &r[range.clone()], 1.0);
-                        }
-                        for v in m.iter_mut() {
-                            *v /= nf;
-                        }
+                        mean_tile(reps, m, range);
                     }
                 })
                 .collect();
@@ -275,8 +362,35 @@ impl GossipEngine {
     }
 
     fn ensure_scratch(&mut self, n: usize, p: usize) {
-        if self.scratch.len() != n || self.scratch.first().map(Vec::len) != Some(p) {
-            self.scratch = vec![vec![0.0f32; p]; n];
+        if self.scratch.len() == n && self.scratch.first().map(Vec::len) == Some(p) {
+            return;
+        }
+        // Rows are allocated one by one: each `vec![0.0; p]` comes from
+        // the zeroed allocator with its pages still lazily mapped (a
+        // `vec![row; n]` clone would memcpy them resident on the
+        // calling thread). The pooled pass below is then the true first
+        // touch of every page, from the worker that owns those columns
+        // — deciding which core (and on multi-socket hosts, which NUMA
+        // node) backs each tile, aligned with the tile ownership every
+        // later kernel call uses (ROADMAP §NUMA).
+        self.scratch = (0..n).map(|_| vec![0.0f32; p]).collect();
+        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        if ranges.len() > 1 {
+            let views =
+                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .map(|chunks| {
+                    move || {
+                        for chunk in chunks {
+                            chunk.fill(0.0);
+                            // Keep the touching stores observable.
+                            std::hint::black_box(&mut *chunk);
+                        }
+                    }
+                })
+                .collect();
+            self.exec.run_jobs(jobs);
         }
     }
 
@@ -358,6 +472,123 @@ fn mix_active_tile(
                 } else {
                     axpy(out, src, w);
                 }
+            }
+        }
+        start = end;
+    }
+}
+
+/// Per-row active weight mass `T_i = Σ_{j active} W_ij`, O(n·deg) once
+/// per round — the tiled inner loops of [`mix_active_tile`] and
+/// [`mix_active_step_tile`] then only divide. Shared by both the split
+/// and fused partial-participation paths so their renormalization can
+/// never diverge.
+fn active_totals(graph: &CommGraph, active: &[bool]) -> Vec<f32> {
+    (0..graph.n())
+        .map(|i| graph.row(i).filter(|&(j, _)| active[j]).map(|(_, w)| w).sum())
+        .collect()
+}
+
+/// One worker's tile of a column mean: seed with replica 0, accumulate
+/// the rest, scale — no zeroing pass. Per-element operand order is the
+/// replica order, independent of tiling, so the mean is bit-identical
+/// for any thread count.
+fn mean_tile(replicas: &[Vec<f32>], out: &mut [f32], range: Range<usize>) {
+    out.copy_from_slice(&replicas[0][range.clone()]);
+    for r in &replicas[1..] {
+        axpy(out, &r[range.clone()], 1.0);
+    }
+    let inv = 1.0 / replicas.len() as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// The replica-averaged model `θ̄ = (1/n) Σ_i θ_i`, fanned out over
+/// `exec`'s column tiles — the parallel form of the trainer's
+/// mean-model evaluation (§2.2: "the trained model takes θ as the
+/// average over all θ_i"), which was the last serial O(n·P) pass on the
+/// evaluation path.
+pub fn mean_model(exec: &ExecEngine, replicas: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!replicas.is_empty(), "mean_model needs at least one replica");
+    let p = replicas[0].len();
+    assert!(
+        replicas.iter().all(|r| r.len() == p),
+        "replicas must have equal parameter counts"
+    );
+    let mut mean = vec![0.0f32; p];
+    let ranges = exec.partition(p, MIN_COLS_PER_WORKER);
+    {
+        let views = column_views(vec![mean.as_mut_slice()], &ranges);
+        let jobs: Vec<_> = views
+            .into_iter()
+            .zip(ranges.iter().cloned())
+            .map(|(mut chunks, range)| {
+                move || {
+                    let m = chunks.pop().expect("one mean row");
+                    mean_tile(replicas, m, range);
+                }
+            })
+            .collect();
+        exec.run_jobs(jobs);
+    }
+    mean
+}
+
+/// [`mix_step_tile`] under partial participation: active rows run the
+/// renormalized SpMM, inactive rows copy through; **every** row then
+/// gets the momentum update while the tile is cache-resident (the
+/// trainer's straggler model: a dropped worker misses the exchange but
+/// still applies its local gradient).
+#[allow(clippy::too_many_arguments)]
+fn mix_active_step_tile(
+    graph: &CommGraph,
+    replicas: &[Vec<f32>],
+    active: &[bool],
+    totals: &[f32],
+    grads: &[Vec<f32>],
+    hyper: &[(f32, f32)],
+    lr: f32,
+    mut out_rows: Vec<&mut [f32]>,
+    mut vel_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        for (i, (out_row, vel_row)) in
+            out_rows.iter_mut().zip(vel_rows.iter_mut()).enumerate()
+        {
+            let out = &mut out_row[lo..hi];
+            if active[i] {
+                let total = totals[i];
+                let mut first = true;
+                for (j, w) in graph.row(i) {
+                    if !active[j] {
+                        continue;
+                    }
+                    let w = w / total;
+                    let src = &replicas[j][start..end];
+                    if first {
+                        for (o, &s) in out.iter_mut().zip(src.iter()) {
+                            *o = w * s;
+                        }
+                        first = false;
+                    } else {
+                        axpy(out, src, w);
+                    }
+                }
+            } else {
+                out.copy_from_slice(&replicas[i][start..end]);
+            }
+            let (mu, wd) = hyper[i];
+            let vel = &mut vel_row[lo..hi];
+            let g = &grads[i][start..end];
+            for k in 0..out.len() {
+                let eff = g[k] + wd * out[k];
+                vel[k] = mu * vel[k] + eff;
+                out[k] -= lr * vel[k];
             }
         }
         start = end;
@@ -708,6 +939,85 @@ mod tests {
         let one = run(1);
         for threads in [2, 4, 8] {
             assert_eq!(one, run(threads), "fused differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn fused_active_step_equals_mix_active_then_step() {
+        // The mix_active_step contract: identical floats to the split
+        // mix_active + per-replica step fallback, inactive rows included
+        // (they keep their parameters but still apply their gradient).
+        for kind in [GraphKind::Ring, GraphKind::Torus, GraphKind::Exponential] {
+            let n = 12;
+            let p = 257;
+            let g = CommGraph::build(kind, n).unwrap();
+            let src = replicas(n, p, 51);
+            let grads = replicas(n, p, 52);
+            let active: Vec<bool> = (0..n).map(|i| i % 4 != 2).collect();
+            let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+
+            let mut split = src.clone();
+            let mut split_states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+            let mut eng = GossipEngine::new();
+            for _ in 0..3 {
+                eng.mix_active(&g, &mut split, &active);
+                for (w, s) in split_states.iter_mut().enumerate() {
+                    s.step(&mut split[w], &grads[w], lr);
+                }
+            }
+
+            let mut fused = src.clone();
+            let mut fused_states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+            let mut feng = GossipEngine::new();
+            for _ in 0..3 {
+                feng.mix_active_step(&g, &mut fused, &grads, &mut fused_states, lr, &active);
+            }
+            assert_eq!(split, fused, "{kind}: fused active must equal split");
+            for (a, b) in split_states.iter().zip(&fused_states) {
+                assert_eq!(a.velocity(), b.velocity(), "{kind}: velocity drift");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_active_step_with_full_mask_routes_to_mix_step() {
+        let n = 8;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let src = replicas(n, 101, 61);
+        let grads = replicas(n, 101, 62);
+        let run = |fused_active: bool| {
+            let mut reps = src.clone();
+            let mut states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(101, 0.9, 0.0)).collect();
+            let mut eng = GossipEngine::new();
+            if fused_active {
+                eng.mix_active_step(&g, &mut reps, &grads, &mut states, 0.1, &vec![true; n]);
+            } else {
+                eng.mix_step(&g, &mut reps, &grads, &mut states, 0.1);
+            }
+            reps
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn mean_model_matches_serial_mean() {
+        let n = 9;
+        let p = 2 * MIN_COLS_PER_WORKER + 33; // force several tiles
+        let reps = replicas(n, p, 71);
+        let serial = crate::exec::ExecEngine::serial();
+        let reference = mean_model(&serial, &reps);
+        // Bit-identical across thread counts.
+        for threads in [2, 4, 8] {
+            let eng = crate::exec::ExecEngine::new(threads);
+            assert_eq!(reference, mean_model(&eng, &reps), "{threads} threads");
+        }
+        // And numerically the f32 replica mean.
+        for k in (0..p).step_by(997) {
+            let want: f32 = reps.iter().map(|r| r[k]).sum::<f32>() / n as f32;
+            assert!((reference[k] - want).abs() < 1e-5, "col {k}");
         }
     }
 }

@@ -25,7 +25,8 @@ ada <command> [options]
     --workload softmax|mlp|mlp_large|bigram|hlo:<name>   (default softmax)
     --flavor c_complete|d_complete|d_ring|d_torus|d_exponential|ada|one_peer|var_adaptive
     --workers N --epochs N --k0 N --gamma-k F --seed N --record PATH
-    --threads N      gossip/fused kernel fan-out (0 = all cores; default
+    --threads N      persistent worker-pool fan-out for the gossip/fused
+                     kernels and metric capture (0 = all cores; default
                      from launcher config; bit-identical results)
     --fused          fused gossip+SGD execution (combine-then-adapt order)
   graphs           print Table 1 for --n nodes (default 96)

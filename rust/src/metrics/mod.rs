@@ -32,6 +32,42 @@ pub fn per_replica_l2_norms(replicas: &[Vec<f32>], range: std::ops::Range<usize>
         .collect()
 }
 
+/// [`per_replica_l2_norms`] fanned out over the execution engine's
+/// persistent pool — the trainer's per-iteration variance capture,
+/// which was the largest remaining serial O(n·P) pass. One fork-join
+/// round covers the whole `replicas × tiles` grid
+/// ([`crate::exec::ExecEngine::run_reduce_rows`]).
+///
+/// The sum of squares is grouped by the engine's fixed
+/// [`crate::exec::REDUCE_GRANULARITY`] tiles, so results are
+/// **bit-identical for every thread count** (including the serial
+/// engine, which walks the same tiles). The tiled grouping differs from
+/// [`l2_norm`]'s single left-to-right f64 sum only in float rounding
+/// (≲1e-12 relative).
+pub fn per_replica_l2_norms_pooled(
+    exec: &crate::exec::ExecEngine,
+    replicas: &[Vec<f32>],
+    range: std::ops::Range<usize>,
+) -> Vec<f64> {
+    let base = range.start;
+    exec.run_reduce_rows(
+        replicas.len(),
+        range.len(),
+        crate::exec::REDUCE_GRANULARITY,
+        |row, tile| {
+            replicas[row][base + tile.start..base + tile.end]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+        },
+        |a, b| a + b,
+        0.0,
+    )
+    .into_iter()
+    .map(f64::sqrt)
+    .collect()
+}
+
 /// Mean of a sample.
 pub(crate) fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -65,5 +101,32 @@ mod tests {
         let norms = per_replica_l2_norms(&replicas, 0..2);
         assert!((norms[0] - 5.0).abs() < 1e-12);
         assert!((norms[1] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooled_norms_match_serial_and_are_thread_invariant() {
+        use crate::exec::ExecEngine;
+        let mut rng = crate::util::rng::Rng::seed_from_u64(9);
+        let p = 10_000; // several reduction tiles
+        let replicas: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+            .collect();
+        let serial = per_replica_l2_norms_pooled(&ExecEngine::serial(), &replicas, 0..p);
+        for (pooled, reference) in serial.iter().zip(per_replica_l2_norms(&replicas, 0..p)) {
+            assert!(
+                (pooled - reference).abs() <= 1e-9 * reference.max(1.0),
+                "tiled vs flat sum: {pooled} vs {reference}"
+            );
+        }
+        for threads in [2, 4, 8] {
+            let eng = ExecEngine::new(threads);
+            let got = per_replica_l2_norms_pooled(&eng, &replicas, 0..p);
+            assert_eq!(serial, got, "{threads} threads");
+            // Sliced capture (per-tensor gini path) is thread-invariant too.
+            assert_eq!(
+                per_replica_l2_norms_pooled(&ExecEngine::serial(), &replicas, 100..7000),
+                per_replica_l2_norms_pooled(&eng, &replicas, 100..7000),
+            );
+        }
     }
 }

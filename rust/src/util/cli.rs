@@ -78,10 +78,12 @@ impl Args {
     }
 
     /// The shared `--threads` option of the `ada`/`dbench` binaries:
-    /// worker count for the gossip/fused execution engine. `0` (and the
+    /// worker count for the execution engine's persistent pool (gossip,
+    /// fused kernels, variance capture, mean eval). `0` (and the
     /// conventional default) means "all cores" — the resolution happens
-    /// in [`crate::exec::ExecEngine::new`], and results are bit-identical
-    /// for every value, so this knob only moves wall-clock time.
+    /// in [`crate::exec::ExecEngine::new`], which spawns the workers
+    /// exactly once — and results are bit-identical for every value, so
+    /// this knob only moves wall-clock time.
     pub fn threads(&self, default: usize) -> Result<usize, String> {
         self.get_parse("threads", default)
     }

@@ -1,15 +1,22 @@
 //! Determinism property tests for the multi-threaded execution engine:
-//! `mix`, `mix_active`, and the fused `mix_step` must produce
-//! **bit-identical** output for 1, 2, 4 and 8 threads on every
-//! [`GraphKind`], and the fused kernel must agree with the split
-//! mix-then-step sequence within 1e-6 (exactly, off the complete-graph
-//! fast path). This is the contract that makes `--threads` a pure
-//! wall-clock knob — see `rust/src/exec/mod.rs` for the argument.
+//! `mix`, `mix_active`, the fused `mix_step`/`mix_active_step`, and the
+//! pooled reductions (`run_reduce`, the trainer's variance capture)
+//! must produce **bit-identical** output for 1, 2, 4 and 8 threads on
+//! every [`GraphKind`], and the fused kernels must agree with their
+//! split sequences within 1e-6 (exactly, off the complete-graph fast
+//! path). Also proves the persistent-pool lifecycle contract: workers
+//! are spawned once, reused across calls without drift, and joined on
+//! drop. This is the contract that makes `--threads` a pure wall-clock
+//! knob — see `rust/src/exec/mod.rs` for the argument.
 
+use ada_dist::exec::{ExecEngine, REDUCE_GRANULARITY};
 use ada_dist::gossip::GossipEngine;
 use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::metrics::per_replica_l2_norms_pooled;
 use ada_dist::optim::SgdState;
 use ada_dist::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
 
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
@@ -168,4 +175,244 @@ fn mix_active_with_full_mask_equals_mix() {
     let mut via_active = src.clone();
     GossipEngine::with_threads(4).mix_active(&g, &mut via_active, &vec![true; N]);
     assert_eq!(via_mix, via_active);
+}
+
+// ---------------------------------------------------------------------
+// Deterministic reductions (PR 2): sum / L2 / variance partials over
+// fixed-granularity tiles must not move with the worker count.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reductions_are_bit_identical_for_every_thread_count() {
+    let data = replicas(1, P, 800).pop().unwrap();
+    let run = |threads: usize| {
+        let e = ExecEngine::new(threads);
+        let sum = e.run_reduce(
+            P,
+            REDUCE_GRANULARITY,
+            |t| data[t].iter().map(|&x| x as f64).sum::<f64>(),
+            |a, b| a + b,
+            0.0,
+        );
+        let l2 = e
+            .run_reduce(
+                P,
+                REDUCE_GRANULARITY,
+                |t| data[t].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>(),
+                |a, b| a + b,
+                0.0,
+            )
+            .sqrt();
+        // Population variance from (Σx, Σx², count) tile partials.
+        let (s, ss, c) = e.run_reduce(
+            P,
+            REDUCE_GRANULARITY,
+            |t| {
+                let (mut s, mut ss) = (0.0f64, 0.0f64);
+                let len = t.len() as f64;
+                for &x in &data[t] {
+                    let x = x as f64;
+                    s += x;
+                    ss += x * x;
+                }
+                (s, ss, len)
+            },
+            |a: (f64, f64, f64), b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+            (0.0, 0.0, 0.0),
+        );
+        let var = ss / c - (s / c) * (s / c);
+        (sum.to_bits(), l2.to_bits(), var.to_bits())
+    };
+    let reference = run(1);
+    for threads in THREAD_COUNTS {
+        assert_eq!(
+            reference,
+            run(threads),
+            "sum/L2/variance reduction differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn pooled_variance_capture_is_bit_identical_across_thread_counts() {
+    // The trainer's actual capture primitive, full-model and sliced.
+    let reps = replicas(N, P, 850);
+    let reference = per_replica_l2_norms_pooled(&ExecEngine::serial(), &reps, 0..P);
+    let ref_slice = per_replica_l2_norms_pooled(&ExecEngine::serial(), &reps, 137..P - 99);
+    for threads in THREAD_COUNTS {
+        let e = ExecEngine::new(threads);
+        assert_eq!(reference, per_replica_l2_norms_pooled(&e, &reps, 0..P));
+        assert_eq!(ref_slice, per_replica_l2_norms_pooled(&e, &reps, 137..P - 99));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused partial-participation kernel (PR 2).
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_active_step_is_bit_identical_for_every_thread_count_and_graph() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 900 + case as u64);
+        let grads = replicas(N, P, 950 + case as u64);
+        let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
+        let mut reference: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
+        for threads in THREAD_COUNTS {
+            let mut reps = src.clone();
+            let mut states: Vec<SgdState> =
+                (0..N).map(|_| SgdState::new(P, 0.9, 1e-4)).collect();
+            let mut engine = GossipEngine::with_threads(threads);
+            engine.mix_active_step(&g, &mut reps, &grads, &mut states, 0.05, &active);
+            engine.mix_active_step(&g, &mut reps, &grads, &mut states, 0.05, &active);
+            let vels: Vec<Vec<f32>> = states.iter().map(|s| s.velocity().to_vec()).collect();
+            match &reference {
+                None => reference = Some((reps, vels)),
+                Some((want_p, want_v)) => {
+                    assert_eq!(
+                        want_p, &reps,
+                        "{kind}: fused active params not bit-identical at {threads} threads"
+                    );
+                    assert_eq!(
+                        want_v, &vels,
+                        "{kind}: fused active velocity not bit-identical at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_active_step_equals_split_within_1e6_under_partial_participation() {
+    // mix_active_step ≡ mix_active followed by SgdState::step on every
+    // replica (inactive rows miss the exchange but still step).
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 1000 + case as u64);
+        let grads = replicas(N, P, 1100 + case as u64);
+        let active: Vec<bool> = (0..N).map(|i| i % 4 != 2).collect();
+        let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+
+        let mut split = src.clone();
+        let mut split_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut split_engine = GossipEngine::with_threads(4);
+        let mut fused = src.clone();
+        let mut fused_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut fused_engine = GossipEngine::with_threads(4);
+
+        for _round in 0..3 {
+            split_engine.mix_active(&g, &mut split, &active);
+            for (w, s) in split_states.iter_mut().enumerate() {
+                s.step(&mut split[w], &grads[w], lr);
+            }
+            fused_engine.mix_active_step(&g, &mut fused, &grads, &mut fused_states, lr, &active);
+        }
+        for i in 0..N {
+            for k in 0..P {
+                let (a, b) = (split[i][k], fused[i][k]);
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "{kind}: fused active vs split diverge at [{i}][{k}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Persistent-pool lifecycle (PR 2): spawn once, reuse without drift,
+// join on drop.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_is_reused_across_100_calls_without_drift() {
+    let engine = ExecEngine::new(4);
+    let data = replicas(1, P, 1200).pop().unwrap();
+    let observed = Mutex::new(std::collections::HashSet::new());
+    let mut reference: Option<u64> = None;
+    for call in 0..100 {
+        // Record which threads execute jobs this call.
+        {
+            let ranges = engine.partition(P, 1);
+            let observed = &observed;
+            let jobs: Vec<_> = ranges
+                .iter()
+                .map(|_| {
+                    move || {
+                        observed.lock().unwrap().insert(std::thread::current().id());
+                    }
+                })
+                .collect();
+            engine.run_jobs(jobs);
+        }
+        // And that the reduction result never drifts.
+        let sum = engine.run_reduce(
+            P,
+            REDUCE_GRANULARITY,
+            |t| data[t].iter().map(|&x| x as f64).sum::<f64>(),
+            |a, b| a + b,
+            0.0,
+        );
+        match reference {
+            None => reference = Some(sum.to_bits()),
+            Some(want) => assert_eq!(want, sum.to_bits(), "drift at call {call}"),
+        }
+    }
+    // 100 calls × 4 jobs ran on at most 4 distinct threads: the caller
+    // plus the 3 pool workers spawned at construction — nothing was
+    // spawned per call.
+    let ids = observed.lock().unwrap().len();
+    assert!(ids <= 4, "expected ≤ 4 executing threads over 100 calls, saw {ids}");
+    // And the pool itself reports exactly the workers spawned once.
+    let live = engine.pool_liveness().expect("pooled engine");
+    assert_eq!(live.load(Ordering::SeqCst), 3);
+}
+
+#[test]
+fn engine_drop_joins_all_workers() {
+    let engine = ExecEngine::new(8);
+    let live = engine.pool_liveness().expect("pooled engine");
+    // Exercise the pool before dropping.
+    let total = engine.run_reduce(
+        10_000,
+        64,
+        |t| t.len() as f64,
+        |a, b| a + b,
+        0.0,
+    );
+    assert_eq!(total, 10_000.0);
+    assert_eq!(live.load(Ordering::SeqCst), 7, "8-thread engine = 7 pool workers");
+    drop(engine);
+    assert_eq!(
+        live.load(Ordering::SeqCst),
+        0,
+        "dropping the engine must join every worker (no thread leak)"
+    );
+}
+
+#[test]
+fn gossip_engine_spawns_workers_exactly_once() {
+    // The acceptance criterion end to end: a GossipEngine's pool
+    // survives (and is reused by) many mixed-kernel rounds.
+    let g = CommGraph::build(GraphKind::RingLattice { k: 3 }, N).unwrap();
+    let mut engine = GossipEngine::with_threads(4);
+    let live = engine.exec().pool_liveness().expect("pooled engine");
+    let mut reps = replicas(N, P, 1300);
+    let grads = replicas(N, P, 1301);
+    let mut states: Vec<SgdState> = (0..N).map(|_| SgdState::new(P, 0.9, 0.0)).collect();
+    let active: Vec<bool> = (0..N).map(|i| i != 3).collect();
+    for _ in 0..25 {
+        engine.mix(&g, &mut reps);
+        engine.mix_step(&g, &mut reps, &grads, &mut states, 0.01);
+        engine.mix_active(&g, &mut reps, &active);
+        engine.mix_active_step(&g, &mut reps, &grads, &mut states, 0.01, &active);
+    }
+    assert_eq!(
+        live.load(Ordering::SeqCst),
+        3,
+        "100 kernel calls must reuse the 3 workers spawned at construction"
+    );
 }
