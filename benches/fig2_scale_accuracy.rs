@@ -8,19 +8,24 @@
 //!
 //! Run: `cargo bench --bench fig2_scale_accuracy`
 //! (quick preset: scales {8,16,32}; ADA_BENCH_FULL=1 extends the scale
-//! axis to {8,16,32,64,128,256} and adds epochs). The sweep runs on the
-//! parallel execution path by default — `ADA_BENCH_THREADS` (0 = all
-//! cores) and `ADA_BENCH_FUSED=1` control the engine, and results are
-//! bit-identical for every thread count (see `crate::exec`).
+//! axis to {8,…,512,1024} and adds epochs). At the large scales the
+//! synthetic dataset is grown so every shard keeps ≥~16 batches under
+//! label skew, and `ADA_BENCH_MAX_ITERS` (default 25 in the full
+//! preset, 0 = uncapped) bounds iterations per epoch so the small
+//! scales don't pay thousand-iteration epochs on the grown dataset.
+//! The sweep runs on the parallel execution path by default —
+//! `ADA_BENCH_THREADS` (0 = all cores) and `ADA_BENCH_FUSED=1` control
+//! the engine, and results are bit-identical for every thread count
+//! (see `crate::exec`).
 
-use ada_dist::coordinator::SgdFlavor;
-use ada_dist::dbench::{run_cell, ExperimentSpec};
+use ada_dist::coordinator::{SgdFlavor, Trainer};
+use ada_dist::dbench::ExperimentSpec;
 use ada_dist::util::bench::{env_flag, env_usize, Table};
 
 fn main() {
     let full = env_flag("ADA_BENCH_FULL");
     let scales: Vec<usize> = if full {
-        vec![8, 16, 32, 64, 128, 256]
+        vec![8, 16, 32, 64, 128, 256, 512, 1024]
     } else {
         vec![8, 16, 32]
     };
@@ -32,6 +37,20 @@ fn main() {
     // n=128/256 cells are serial-pass bound.
     spec.threads = env_usize("ADA_BENCH_THREADS", 0);
     spec.fused = env_flag("ADA_BENCH_FUSED");
+    // Scale-sweep support (ROADMAP: n=512–1024): one dataset sized for
+    // the largest scale (~16 batches per shard past the test split,
+    // never shrinking the preset), shared by every cell; the iteration
+    // cap keeps epochs bounded at the small scales.
+    if full {
+        let max_scale = *scales.iter().max().expect("scales");
+        spec.workload
+            .ensure_examples(max_scale * spec.workload.batch_size() * 16 * 20 / 17);
+    }
+    spec.max_iters_per_epoch =
+        match env_usize("ADA_BENCH_MAX_ITERS", if full { 25 } else { 0 }) {
+            0 => None,
+            m => Some(m),
+        };
 
     println!(
         "== Fig 2: accuracy vs scale (workload {}, {} epochs, threads={}, fused={}) ==",
@@ -40,23 +59,28 @@ fn main() {
         if spec.threads == 0 { "auto".into() } else { spec.threads.to_string() },
         spec.fused
     );
+    // Generate the (possibly grown) dataset exactly once; every cell
+    // trains on it with identical init and sharding per scale — same
+    // results as per-cell generation (the dataset is a pure function of
+    // the seed), minus regenerating ~P·scale examples per cell.
+    let dataset = spec.workload.dataset(spec.seed).expect("dataset");
     let mut t = Table::new(&["flavor", "scale", "final acc", "best acc", "drop vs n=8"]);
     for flavor in [SgdFlavor::DecentralizedRing, SgdFlavor::DecentralizedComplete] {
         let mut base: Option<f64> = None;
         for &scale in &scales {
             let t0 = std::time::Instant::now();
-            let cell = run_cell(&spec, scale, &flavor).expect("cell");
-            let acc = cell.summary.final_eval.metric;
-            let best = cell
-                .recorder
-                .best_test_metric(true)
-                .unwrap_or(acc);
+            let mut model = spec.workload.model(scale).expect("model");
+            let mut trainer = Trainer::new(model.as_mut(), spec.train_config(scale));
+            let (recorder, summary) =
+                trainer.run(dataset.as_ref(), &flavor).expect("cell");
+            let acc = summary.final_eval.metric;
+            let best = recorder.best_test_metric(true).unwrap_or(acc);
             let drop = base.map(|b| format!("{:+.1}%", (acc - b) * 100.0));
             if base.is_none() {
                 base = Some(acc);
             }
             t.row(vec![
-                cell.flavor.clone(),
+                summary.flavor.clone(),
                 scale.to_string(),
                 format!("{acc:.4}"),
                 format!("{best:.4}"),

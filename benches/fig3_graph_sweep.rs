@@ -11,8 +11,11 @@
 //!
 //! Run: `cargo bench --bench fig3_graph_sweep`
 //! (quick preset: 2 apps × scales {8,16}; ADA_BENCH_FULL=1: 4 apps ×
-//! {8,16,32,64,128,256}). Runs on the parallel execution path by
-//! default — `ADA_BENCH_THREADS` (0 = all cores) and `ADA_BENCH_FUSED=1`
+//! {8,…,512,1024}, with the synthetic datasets grown so shards stay
+//! non-degenerate at the large scales and `ADA_BENCH_MAX_ITERS`
+//! (default 25 full, 0 = uncapped) bounding iterations per epoch).
+//! Runs on the parallel execution path by default —
+//! `ADA_BENCH_THREADS` (0 = all cores) and `ADA_BENCH_FUSED=1`
 //! control the engine; results are bit-identical for every thread count
 //! (see `crate::exec`).
 
@@ -23,13 +26,14 @@ use ada_dist::util::bench::{env_flag, env_usize};
 fn main() {
     let full = env_flag("ADA_BENCH_FULL");
     let scales: Vec<usize> = if full {
-        vec![8, 16, 32, 64, 128, 256]
+        vec![8, 16, 32, 64, 128, 256, 512, 1024]
     } else {
         vec![8, 16]
     };
     let epochs = env_usize("ADA_BENCH_EPOCHS", if full { 10 } else { 5 });
     let threads = env_usize("ADA_BENCH_THREADS", 0); // 0 = all cores
     let fused = env_flag("ADA_BENCH_FUSED");
+    let max_iters = env_usize("ADA_BENCH_MAX_ITERS", if full { 25 } else { 0 });
 
     let mut apps = ExperimentSpec::four_applications();
     if !full {
@@ -41,6 +45,17 @@ fn main() {
         spec.metrics_every = 2;
         spec.threads = threads;
         spec.fused = fused;
+        // Scale-sweep support (ROADMAP: n=512–1024): grow each app's
+        // dataset for ~16 batches per shard at the largest scale and
+        // cap iterations so small scales keep bounded epochs.
+        if full {
+            let max_scale = *scales.iter().max().expect("scales");
+            spec.workload
+                .ensure_examples(max_scale * spec.workload.batch_size() * 16 * 20 / 17);
+        }
+        if max_iters > 0 {
+            spec.max_iters_per_epoch = Some(max_iters);
+        }
         let t0 = std::time::Instant::now();
         let cells = run_experiment(&spec).expect("sweep");
         println!(

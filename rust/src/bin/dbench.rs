@@ -12,8 +12,10 @@
 //! ```
 
 use ada_dist::config::LauncherConfig;
-use ada_dist::coordinator::SgdFlavor;
-use ada_dist::dbench::{format_table, rank_analysis, run_experiment, ExperimentSpec};
+use ada_dist::coordinator::{strategy, SgdFlavor};
+use ada_dist::dbench::{
+    format_table, rank_analysis, run_experiment, ExperimentSpec, SessionPlan,
+};
 use ada_dist::optim::ScalingRule;
 use ada_dist::util::cli::Args;
 use std::io::Write as _;
@@ -22,12 +24,18 @@ type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 const USAGE: &str = "\
 dbench <command> [options]
-  list   built-in application specs
-  run    experiment grid (Fig 2/3/4/5-style)
+  list        built-in application specs
+  strategies  registered SGD strategy names (the open registry)
+  run         experiment grid (Fig 2/3/4/5-style), on the SessionPlan pipeline
     --app resnet20|resnet50|densenet|lstm | --spec FILE.toml
     --scales 8,16,32 --epochs N --max-iters N --sqrt-scaling --save-records
     --threads N (0 = all cores; bit-identical results)  --fused
-  ada    Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
+    --cell-parallel N   run up to N grid cells concurrently (bounded by
+                        cores; auto-threaded cells then run 1 thread
+                        each — results identical either way)
+    --resume-dir PATH   persist each finished cell; a rerun reuses cells
+                        whose seed/epochs/scale still match
+  ada         Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
     --app NAME --workers N --epochs N --k0 N --gamma-k F
   (global) --config PATH   launcher TOML";
 
@@ -66,6 +74,12 @@ fn main() -> CliResult {
             }
             Ok(())
         }
+        Some("strategies") => {
+            for name in strategy::registry().names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
         Some("run") => cmd_run(&args, &cfg),
         Some("ada") => cmd_ada(&args, &cfg),
         _ => {
@@ -97,8 +111,11 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     if args.has_flag("fused") {
         spec.fused = true;
     }
+    let mut plan = SessionPlan::from_spec(&spec);
+    plan.parallel = args.get_parse("cell-parallel", 1)?;
+    plan.resume_dir = args.get("resume-dir").map(std::path::PathBuf::from);
     let t0 = std::time::Instant::now();
-    let cells = run_experiment(&spec)?;
+    let cells = plan.run()?;
     println!(
         "{}",
         format_table(&format!("{} ({:.1?})", spec.name, t0.elapsed()), &cells)

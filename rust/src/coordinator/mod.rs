@@ -12,11 +12,26 @@
 //! JAX/Pallas artifacts run via PJRT — the production path) or the pure
 //! Rust [`surrogate`] models (fast, used by the large DBench sweeps; see
 //! EXPERIMENTS.md for where each is used).
+//!
+//! ## The open API
+//!
+//! Since the TrainSession redesign the closed trainer is a facade over
+//! three open layers:
+//!
+//! * [`strategy`] — the per-iteration [`strategy::CombineStrategy`]
+//!   and the name-keyed [`strategy::Registry`] of scenarios;
+//! * [`session`] — the [`TrainSession`] builder that assembles a run
+//!   from a strategy, a variance probe and observers;
+//! * [`observer`] — the [`Observer`] hooks (`on_iteration` /
+//!   `on_epoch` / `on_complete`) behind recording and checkpointing.
 
 pub mod checkpoint;
 #[cfg(feature = "pjrt")]
 mod hlo_model;
 mod lars_model;
+pub mod observer;
+pub mod session;
+pub mod strategy;
 pub mod surrogate;
 pub mod trainer;
 
@@ -24,6 +39,9 @@ pub use checkpoint::Checkpoint;
 #[cfg(feature = "pjrt")]
 pub use hlo_model::HloModel;
 pub use lars_model::LarsWrapped;
+pub use observer::{CheckpointObserver, EpochInfo, Observer};
+pub use session::{SessionBuilder, TrainSession};
+pub use strategy::{CombineStrategy, Registry, StepCtx, StrategyInstance, StrategyParams};
 pub use trainer::{LrPolicy, RunSummary, SgdFlavor, TrainConfig, Trainer};
 
 use crate::data::Batch;

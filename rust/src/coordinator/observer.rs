@@ -1,0 +1,171 @@
+//! Run observers: the open instrumentation layer of
+//! [`crate::coordinator::TrainSession`].
+//!
+//! The old trainer hard-wired its monitoring — records pushed straight
+//! into a [`RunRecorder`], checkpointing bolted on by callers between
+//! runs. [`Observer`] turns every consumer of training progress into a
+//! plug-in with three hooks: `on_iteration` (after each iteration's
+//! record is finalized), `on_epoch` (after each epoch's last gossip
+//! round), and `on_complete` (after the final evaluation). The session
+//! invokes its own recorder through the same trait — it is simply the
+//! first observer — followed by user observers in registration order.
+
+use super::trainer::RunSummary;
+use super::Checkpoint;
+use crate::error::Result;
+use crate::metrics::{IterationRecord, RunRecorder};
+use std::path::PathBuf;
+
+/// End-of-epoch context handed to [`Observer::on_epoch`].
+pub struct EpochInfo<'a> {
+    /// The 0-based epoch that just finished.
+    pub epoch: usize,
+    /// Mean captured gini over the epoch (`None` when the variance
+    /// probe was off this epoch) — the same signal the topology
+    /// schedule's `observe` consumes.
+    pub mean_gini: Option<f64>,
+    /// Current replica parameters (post-averaging).
+    pub replicas: &'a [Vec<f32>],
+    /// Run label (`C_complete`, `D_ring`, …).
+    pub label: &'a str,
+    /// Run seed (checkpoint observers persist it for exact resume).
+    pub seed: u64,
+}
+
+/// A training-progress consumer. All hooks default to no-ops so
+/// implementations opt into the events they need; any hook may fail the
+/// run by returning an error (e.g. a full disk under a checkpointer).
+pub trait Observer: Send {
+    /// One training iteration finished and its record is final.
+    fn on_iteration(&mut self, _rec: &IterationRecord, _replicas: &[Vec<f32>]) -> Result<()> {
+        Ok(())
+    }
+
+    /// One epoch finished (after its last combine round).
+    fn on_epoch(&mut self, _info: &EpochInfo<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    /// The run finished and was evaluated.
+    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The recorder *is* an observer: it appends each finalized record
+/// (streaming to JSONL when file-backed) and flushes its sink when the
+/// run completes. The session drives it through this impl, so custom
+/// observers and the built-in recording share one code path.
+impl Observer for RunRecorder {
+    fn on_iteration(&mut self, rec: &IterationRecord, _replicas: &[Vec<f32>]) -> Result<()> {
+        self.push(rec.clone())
+    }
+
+    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+        self.flush()
+    }
+}
+
+/// Periodic checkpointing as an observer: after every `every_epochs`-th
+/// epoch the full replica state is written to
+/// `dir/<label>_epoch<NNNN>.ckpt`, resumable via
+/// [`crate::coordinator::Trainer::resume`]. Epochs off the cadence
+/// (including a final epoch not divisible by it) are not checkpointed —
+/// pick `every_epochs = 1` to keep every epoch.
+pub struct CheckpointObserver {
+    dir: PathBuf,
+    every_epochs: usize,
+    /// Paths written so far, in order.
+    written: Vec<PathBuf>,
+}
+
+impl CheckpointObserver {
+    /// Checkpoint into `dir` every `every_epochs` epochs (`0` is
+    /// treated as 1 — every epoch).
+    pub fn new(dir: impl Into<PathBuf>, every_epochs: usize) -> Self {
+        CheckpointObserver {
+            dir: dir.into(),
+            every_epochs: every_epochs.max(1),
+            written: Vec::new(),
+        }
+    }
+
+    /// Checkpoint files written so far, in epoch order.
+    pub fn written(&self) -> &[PathBuf] {
+        &self.written
+    }
+}
+
+impl Observer for CheckpointObserver {
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<()> {
+        if (info.epoch + 1) % self.every_epochs != 0 {
+            return Ok(());
+        }
+        let ckpt = Checkpoint {
+            epoch: info.epoch + 1,
+            flavor: info.label.to_string(),
+            seed: info.seed,
+            replicas: info.replicas.to_vec(),
+        };
+        let path = self
+            .dir
+            .join(format!("{}_epoch{:04}.ckpt", info.label, info.epoch + 1));
+        ckpt.save(&path)?;
+        self.written.push(path);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::VarianceReport;
+
+    fn rec(iteration: usize) -> IterationRecord {
+        IterationRecord {
+            iteration,
+            epoch: 0,
+            train_loss: 1.0,
+            test_metric: None,
+            variance: VarianceReport::of(&[]),
+            per_tensor_gini: Vec::new(),
+            graph_degree: 2,
+            bytes_per_node: 8,
+            lr: 0.1,
+        }
+    }
+
+    #[test]
+    fn recorder_observer_accumulates_records() {
+        let mut r = RunRecorder::in_memory("D_ring");
+        let replicas = vec![vec![0.0f32; 4]; 2];
+        Observer::on_iteration(&mut r, &rec(0), &replicas).unwrap();
+        Observer::on_iteration(&mut r, &rec(1), &replicas).unwrap();
+        assert_eq!(r.records().len(), 2);
+        assert_eq!(r.records()[1].iteration, 1);
+    }
+
+    #[test]
+    fn checkpoint_observer_writes_on_cadence() {
+        let dir = crate::util::scratch_dir("ckpt_obs").unwrap();
+        let mut obs = CheckpointObserver::new(&dir, 2);
+        let replicas = vec![vec![1.0f32; 8]; 3];
+        for epoch in 0..4 {
+            obs.on_epoch(&EpochInfo {
+                epoch,
+                mean_gini: None,
+                replicas: &replicas,
+                label: "D_torus",
+                seed: 7,
+            })
+            .unwrap();
+        }
+        assert_eq!(obs.written().len(), 2, "epochs 2 and 4");
+        let back = Checkpoint::load(&obs.written()[1]).unwrap();
+        assert_eq!(back.epoch, 4);
+        assert_eq!(back.flavor, "D_torus");
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.replicas, replicas);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,443 @@
+//! [`TrainSession`] — the composable training loop behind the
+//! [`Trainer`](super::Trainer) facade.
+//!
+//! A session is assembled from four open parts:
+//!
+//! * a **strategy** ([`crate::coordinator::strategy::CombineStrategy`] +
+//!   optional [`TopologySchedule`]), resolved from a
+//!   [`StrategyInstance`] — by flavor name through the registry, or a
+//!   custom instance the caller built;
+//! * a **variance probe** ([`VarianceProbe`]) sampling the §3.1.2
+//!   pre-averaging instrumentation point;
+//! * **observers** ([`Observer`]) — the run's own [`RunRecorder`]
+//!   driven through the same trait, followed by user observers in
+//!   registration order;
+//! * the **config** ([`TrainConfig`]), unchanged from the closed API.
+//!
+//! The loop itself is the §2.1 iteration structure the old 961-line
+//! trainer hard-wired: local phase → capture → combine phase → eval +
+//! record, with failure injection, LR schedules, checkpoint resume and
+//! the deterministic execution engine all preserved bit-for-bit.
+
+use super::observer::{EpochInfo, Observer};
+use super::strategy::{
+    self, CentralizedAverage, CombineStrategy, FusedGossipCombine, GossipCombine,
+    StepCtx, StrategyInstance,
+};
+use super::trainer::{RunSummary, SgdFlavor, TrainConfig};
+use super::{EvalResult, LocalModel};
+use crate::data::{shard_indices, train_test_split, Dataset, ShardLoader};
+use crate::error::{AdaError, Result};
+use crate::exec::ExecEngine;
+use crate::gossip::{mean_model, GossipEngine};
+use crate::metrics::{IterationRecord, RunRecorder, VarianceProbe, VarianceReport};
+use crate::runtime::ModelKind;
+use crate::topology::TopologySchedule;
+
+/// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`],
+/// pick a strategy (by [`SgdFlavor`] or custom [`StrategyInstance`]),
+/// optionally add observers or a resume point, then [`build`].
+///
+/// [`build`]: SessionBuilder::build
+pub struct SessionBuilder<'m> {
+    model: &'m mut dyn LocalModel,
+    config: TrainConfig,
+    label: Option<String>,
+    schedule: Option<Box<dyn TopologySchedule>>,
+    k_neighbors: usize,
+    combine: Option<Box<dyn CombineStrategy>>,
+    observers: Vec<Box<dyn Observer>>,
+    initial_replicas: Option<Vec<Vec<f32>>>,
+    start_epoch: usize,
+}
+
+impl<'m> SessionBuilder<'m> {
+    /// Resolve `flavor` through the builtin strategy registry — the
+    /// backward-compatible path every [`super::Trainer`] run takes.
+    pub fn flavor(self, flavor: &SgdFlavor) -> Result<Self> {
+        let n = self.config.n_workers;
+        let inst = strategy::registry().resolve(&flavor.name(), &flavor.params(n))?;
+        Ok(self.strategy(inst))
+    }
+
+    /// Use a resolved strategy instance (from any registry, or built by
+    /// hand) — the open path.
+    pub fn strategy(mut self, inst: StrategyInstance) -> Self {
+        self.label = Some(inst.label);
+        self.schedule = inst.schedule;
+        self.k_neighbors = inst.k_neighbors;
+        self.combine = inst.combine;
+        self
+    }
+
+    /// Append an observer (invoked after the built-in recorder, in
+    /// registration order).
+    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Resume from saved replica state at `epoch` (shapes validated at
+    /// run time against the dataset/model pair).
+    pub fn start_from(mut self, epoch: usize, replicas: Vec<Vec<f32>>) -> Self {
+        self.start_epoch = epoch;
+        self.initial_replicas = Some(replicas);
+        self
+    }
+
+    /// Finalize. Picks the default combine strategy when the instance
+    /// left it open: [`CentralizedAverage`] without a topology
+    /// schedule; with one, [`FusedGossipCombine`] when
+    /// `config.fused` is set and the model exposes raw gradients, else
+    /// [`GossipCombine`].
+    pub fn build(self) -> Result<TrainSession<'m>> {
+        let label = self.label.ok_or_else(|| {
+            AdaError::Coordinator(
+                "session needs a strategy (SessionBuilder::flavor or ::strategy)".into(),
+            )
+        })?;
+        if self.config.n_workers < 2 {
+            return Err(AdaError::Coordinator("need at least 2 workers".into()));
+        }
+        let combine: Box<dyn CombineStrategy> = match self.combine {
+            Some(c) => c,
+            None => {
+                if self.schedule.is_none() {
+                    Box::new(CentralizedAverage::new(self.config.central_momentum))
+                } else if self.config.fused && self.model.supports_loss_and_grad() {
+                    Box::new(FusedGossipCombine::new(self.config.fused_momentum))
+                } else {
+                    Box::new(GossipCombine::new())
+                }
+            }
+        };
+        Ok(TrainSession {
+            model: self.model,
+            config: self.config,
+            label,
+            schedule: self.schedule,
+            k_neighbors: self.k_neighbors,
+            combine,
+            observers: self.observers,
+            initial_replicas: self.initial_replicas,
+            start_epoch: self.start_epoch,
+        })
+    }
+}
+
+/// One fully assembled training run. Consumed by [`TrainSession::run`].
+pub struct TrainSession<'m> {
+    model: &'m mut dyn LocalModel,
+    config: TrainConfig,
+    label: String,
+    schedule: Option<Box<dyn TopologySchedule>>,
+    k_neighbors: usize,
+    combine: Box<dyn CombineStrategy>,
+    observers: Vec<Box<dyn Observer>>,
+    initial_replicas: Option<Vec<Vec<f32>>>,
+    start_epoch: usize,
+}
+
+impl<'m> TrainSession<'m> {
+    /// Start assembling a session over `model` with `config`.
+    pub fn builder(model: &'m mut dyn LocalModel, config: TrainConfig) -> SessionBuilder<'m> {
+        SessionBuilder {
+            model,
+            config,
+            label: None,
+            schedule: None,
+            k_neighbors: 0,
+            combine: None,
+            observers: Vec::new(),
+            initial_replicas: None,
+            start_epoch: 0,
+        }
+    }
+
+    /// Run label (`C_complete`, `D_ring`, a custom strategy's name, …).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Train on `dataset`, returning the iteration records and a
+    /// summary. Deterministic for a given `(config.seed, strategy)`.
+    pub fn run(mut self, dataset: &dyn Dataset) -> Result<(RunRecorder, RunSummary)> {
+        let cfg = self.config.clone();
+        let n = cfg.n_workers;
+        let (train_idx, test_idx) = train_test_split(dataset.len(), cfg.test_frac);
+        // Shard the *positions within train_idx*, then map back.
+        let train_labels: Option<Vec<u32>> = dataset
+            .labels()
+            .map(|ls| train_idx.iter().map(|&i| ls[i]).collect());
+        let shards = shard_indices(
+            train_idx.len(),
+            train_labels.as_deref(),
+            n,
+            cfg.shard,
+            cfg.seed,
+        )?;
+        let loaders: Vec<ShardLoader> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, s)| {
+                let mapped: Vec<usize> = s.into_iter().map(|p| train_idx[p]).collect();
+                ShardLoader::new(mapped, self.model.batch_size(), w, cfg.seed)
+            })
+            .collect();
+        let min_batches = loaders
+            .iter()
+            .map(ShardLoader::batches_per_epoch)
+            .min()
+            .unwrap_or(0);
+        if min_batches == 0 {
+            return Err(AdaError::Coordinator(
+                "a worker received an empty shard; reduce workers".into(),
+            ));
+        }
+        let iters_per_epoch = cfg
+            .max_iters_per_epoch
+            .map_or(min_batches, |m| m.min(min_batches));
+
+        let lr_schedule =
+            cfg.lr
+                .build(self.k_neighbors, self.model.batch_size(), cfg.epochs as f64);
+        let p = self.model.param_count();
+        let layer_ranges = self.model.layer_ranges();
+        let tracked: Vec<std::ops::Range<usize>> = cfg
+            .track_layers
+            .iter()
+            .filter_map(|&l| layer_ranges.get(l).map(|&(a, b)| a..b))
+            .collect();
+        let probe = VarianceProbe::new(cfg.metrics_every, tracked);
+
+        // Identical initial replicas (§2.2's setup), or restored state.
+        let mut replicas: Vec<Vec<f32>> = match self.initial_replicas.take() {
+            Some(reps) => {
+                if reps.len() != n || reps.iter().any(|r| r.len() != p) {
+                    return Err(AdaError::Coordinator(format!(
+                        "checkpoint shape ({} replicas) does not match run \
+                         (n={n}, P={p})",
+                        reps.len()
+                    )));
+                }
+                reps
+            }
+            None => {
+                let init = self.model.init_params(cfg.seed as i32)?;
+                vec![init; n]
+            }
+        };
+        let mut engine = GossipEngine::with_threads(cfg.threads);
+        self.combine.prepare(n, p)?;
+        // Failure-injection stream (deterministic under the run seed).
+        let mut drop_rng = crate::util::rng::Rng::seed_from_u64(cfg.seed ^ 0xD209);
+
+        let mut recorder = match &cfg.record_path {
+            Some(path) => RunRecorder::to_file(self.label.clone(), path)?,
+            None => RunRecorder::in_memory(self.label.clone()),
+        };
+        let mut diverged = false;
+        let mut iteration = 0usize;
+
+        'epochs: for epoch in self.start_epoch..cfg.epochs {
+            let graph = match &self.schedule {
+                Some(s) => Some(s.graph_for_epoch(epoch)?),
+                None => None,
+            };
+            let mut epoch_gini_sum = 0.0f64;
+            let mut epoch_gini_count = 0usize;
+            for b in 0..iters_per_epoch {
+                let frac_epoch = epoch as f64 + b as f64 / iters_per_epoch as f64;
+                let lr = lr_schedule.lr_at(frac_epoch) as f32;
+                // --- local phase (strategy) --------------------------
+                let train_loss = {
+                    let mut ctx = StepCtx {
+                        model: &mut *self.model,
+                        dataset,
+                        loaders: &loaders,
+                        engine: &mut engine,
+                        graph: graph.as_ref(),
+                        active: None,
+                        epoch,
+                        batch: b,
+                        lr,
+                        n,
+                        param_count: p,
+                    };
+                    self.combine.local_phase(&mut ctx, &mut replicas)?
+                };
+                if !train_loss.is_finite() {
+                    diverged = true;
+                }
+
+                // --- pre-averaging metric capture (DBench §3.1.2) ----
+                let captured = probe.capture(engine.exec(), &replicas, iteration);
+                if let Some((v, _)) = &captured {
+                    epoch_gini_sum += v.gini;
+                    epoch_gini_count += 1;
+                }
+                let (variance, per_tensor) =
+                    captured.unwrap_or_else(|| (VarianceReport::of(&[]), Vec::new()));
+
+                // --- combine phase (strategy) ------------------------
+                // The failure-injection mask is drawn here — by the
+                // session, not the strategy — so the deterministic RNG
+                // stream is a property of the run, and only gossip
+                // rounds consume it (centralized runs draw nothing,
+                // exactly as the closed path did).
+                let active_mask: Option<Vec<bool>> =
+                    if graph.is_some() && cfg.drop_prob > 0.0 {
+                        Some((0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect())
+                    } else {
+                        None
+                    };
+                let (degree, bytes) = {
+                    let mut ctx = StepCtx {
+                        model: &mut *self.model,
+                        dataset,
+                        loaders: &loaders,
+                        engine: &mut engine,
+                        graph: graph.as_ref(),
+                        active: active_mask.as_deref(),
+                        epoch,
+                        batch: b,
+                        lr,
+                        n,
+                        param_count: p,
+                    };
+                    self.combine.combine_phase(&mut ctx, &mut replicas)?
+                };
+
+                // --- eval + record + observers -----------------------
+                let eval_now = b + 1 == iters_per_epoch
+                    && (cfg.eval_every_epochs != 0
+                        && (epoch + 1) % cfg.eval_every_epochs == 0
+                        || epoch + 1 == cfg.epochs);
+                let test_metric = if eval_now {
+                    Some(
+                        evaluate_mean(
+                            &*self.model,
+                            dataset,
+                            &test_idx,
+                            &replicas,
+                            engine.exec(),
+                        )?
+                        .metric,
+                    )
+                } else {
+                    None
+                };
+                let rec = IterationRecord {
+                    iteration,
+                    epoch,
+                    train_loss,
+                    test_metric,
+                    variance,
+                    per_tensor_gini: per_tensor,
+                    graph_degree: degree,
+                    bytes_per_node: bytes,
+                    lr: lr as f64,
+                };
+                Observer::on_iteration(&mut recorder, &rec, &replicas)?;
+                for obs in &mut self.observers {
+                    obs.on_iteration(&rec, &replicas)?;
+                }
+                iteration += 1;
+                if diverged {
+                    break 'epochs;
+                }
+            }
+            let mean_gini = if epoch_gini_count > 0 {
+                Some(epoch_gini_sum / epoch_gini_count as f64)
+            } else {
+                None
+            };
+            if let (Some(s), Some(g)) = (&mut self.schedule, mean_gini) {
+                s.observe(epoch, g);
+            }
+            let info = EpochInfo {
+                epoch,
+                mean_gini,
+                replicas: &replicas,
+                label: &self.label,
+                seed: cfg.seed,
+            };
+            Observer::on_epoch(&mut recorder, &info)?;
+            for obs in &mut self.observers {
+                obs.on_epoch(&info)?;
+            }
+        }
+
+        let final_eval =
+            evaluate_mean(&*self.model, dataset, &test_idx, &replicas, engine.exec())?;
+        let total_iters = recorder.records().len();
+        let decile = (total_iters / 10).max(1);
+        let summary = RunSummary {
+            flavor: self.label.clone(),
+            final_eval,
+            diverged,
+            bytes_per_node: recorder.total_bytes_per_node(),
+            early_gini: recorder.mean_gini(0..decile),
+            late_gini: recorder.mean_gini(total_iters.saturating_sub(decile)..total_iters),
+        };
+        Observer::on_complete(&mut recorder, &summary, &replicas)?;
+        for obs in &mut self.observers {
+            obs.on_complete(&summary, &replicas)?;
+        }
+        Ok((recorder, summary))
+    }
+}
+
+/// Evaluate the replica-averaged model (§2.2: "the trained model takes
+/// θ as the average over all θ_i") on the test split. The mean model is
+/// built over the run's persistent worker pool ([`mean_model`]).
+pub(crate) fn evaluate_mean(
+    model: &dyn LocalModel,
+    dataset: &dyn Dataset,
+    test_idx: &[usize],
+    replicas: &[Vec<f32>],
+    exec: &ExecEngine,
+) -> Result<EvalResult> {
+    let mean = mean_model(exec, replicas);
+    evaluate_params(model, dataset, test_idx, &mean)
+}
+
+/// Evaluate explicit parameters on the test split.
+pub(crate) fn evaluate_params(
+    model: &dyn LocalModel,
+    dataset: &dyn Dataset,
+    test_idx: &[usize],
+    params: &[f32],
+) -> Result<EvalResult> {
+    let eb = model.eval_batch_size();
+    let mut loss_sum = 0.0f64;
+    let mut metric_sum = 0.0f64;
+    let mut count = 0.0f64;
+    for chunk in test_idx.chunks(eb) {
+        if chunk.len() < eb {
+            break; // fixed-shape executables: drop the remainder
+        }
+        let batch = dataset.batch(chunk);
+        let (ls, ms) = model.eval_sums(params, &batch)?;
+        loss_sum += ls as f64;
+        metric_sum += ms as f64;
+        count += match model.kind() {
+            ModelKind::Classification => eb as f64,
+            ModelKind::Lm => 0.0, // token count comes back in ms
+        };
+    }
+    Ok(match model.kind() {
+        ModelKind::Classification => EvalResult {
+            loss: if count > 0.0 { loss_sum / count } else { f64::NAN },
+            metric: if count > 0.0 { metric_sum / count } else { 0.0 },
+        },
+        ModelKind::Lm => {
+            let tokens = metric_sum;
+            let nll = if tokens > 0.0 { loss_sum / tokens } else { f64::NAN };
+            EvalResult {
+                loss: nll,
+                metric: nll.exp(), // perplexity
+            }
+        }
+    })
+}

@@ -1,0 +1,80 @@
+//! `C_complete`'s combine strategy: centralized gradient averaging.
+
+use super::{CombineStrategy, StepCtx};
+use crate::error::Result;
+use crate::optim::SgdState;
+
+/// Centralized gradient averaging with one shared momentum buffer (the
+/// PyTorch-DDP baseline of §3.1.2): every iteration computes gradients
+/// at θ_t on all workers, averages them, applies a single momentum step
+/// and broadcasts, so replicas stay globally consistent.
+///
+/// The whole update runs in [`CombineStrategy::local_phase`] — the
+/// pre-averaging capture point then observes the already-consistent
+/// replicas, matching the closed enum path this was extracted from.
+/// [`CombineStrategy::combine_phase`] only accounts the ring-allreduce
+/// communication cost (`2(n−1)/n · 4P` bytes per node).
+pub struct CentralizedAverage {
+    momentum: f32,
+    state: SgdState,
+    grad_acc: Vec<f32>,
+}
+
+impl CentralizedAverage {
+    /// New strategy with the shared buffer's momentum coefficient.
+    pub fn new(momentum: f32) -> Self {
+        CentralizedAverage {
+            momentum,
+            state: SgdState::new(0, momentum, 0.0),
+            grad_acc: Vec::new(),
+        }
+    }
+}
+
+impl CombineStrategy for CentralizedAverage {
+    fn name(&self) -> &str {
+        "centralized_average"
+    }
+
+    fn prepare(&mut self, _n: usize, p: usize) -> Result<()> {
+        self.state = SgdState::new(p, self.momentum, 0.0);
+        self.grad_acc = vec![0.0f32; p];
+        Ok(())
+    }
+
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+        let n = ctx.n;
+        for a in self.grad_acc.iter_mut() {
+            *a = 0.0;
+        }
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let (loss, g) = ctx.model.loss_and_grad(&replicas[w], &batch)?;
+            loss_sum += loss as f64;
+            for (a, &gi) in self.grad_acc.iter_mut().zip(&g) {
+                *a += gi;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for a in self.grad_acc.iter_mut() {
+            *a *= inv;
+        }
+        self.state.step(&mut replicas[0], &self.grad_acc, ctx.lr);
+        let (head, tail) = replicas.split_at_mut(1);
+        for r in tail {
+            r.copy_from_slice(&head[0]);
+        }
+        Ok(loss_sum / n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        _replicas: &mut [Vec<f32>],
+    ) -> Result<(usize, u64)> {
+        // Ring allreduce of gradients: 2(n−1)/n · 4P bytes per node.
+        let (n, p) = (ctx.n, ctx.param_count);
+        Ok((n - 1, (2 * (n - 1) * 4 * p / n) as u64))
+    }
+}

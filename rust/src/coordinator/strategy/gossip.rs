@@ -1,0 +1,135 @@
+//! The decentralized combine strategies: split (adapt-then-combine) and
+//! fused (combine-then-adapt) gossip.
+
+use super::{CombineStrategy, StepCtx};
+use crate::error::{AdaError, Result};
+use crate::graph::CommGraph;
+use crate::optim::SgdState;
+
+fn need_graph<'a>(ctx: &StepCtx<'a>, name: &str) -> Result<&'a CommGraph> {
+    ctx.graph.ok_or_else(|| {
+        AdaError::Coordinator(format!(
+            "{name} needs a communication graph (decentralized strategies \
+             require a topology schedule)"
+        ))
+    })
+}
+
+/// Adapt-then-combine (the paper's default order): each worker runs its
+/// fused local step (fwd + bwd + momentum update inside the model),
+/// then one gossip round averages parameters over the epoch's graph.
+/// Partial-participation rounds renormalize over the present workers
+/// ([`crate::gossip::GossipEngine::mix_active`]).
+#[derive(Debug, Default)]
+pub struct GossipCombine;
+
+impl GossipCombine {
+    /// New (stateless) strategy.
+    pub fn new() -> Self {
+        GossipCombine
+    }
+}
+
+impl CombineStrategy for GossipCombine {
+    fn name(&self) -> &str {
+        "gossip"
+    }
+
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let loss = ctx.model.local_step(w, &mut replicas[w], &batch, ctx.lr)?;
+            loss_sum += loss as f64;
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut [Vec<f32>],
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "GossipCombine")?;
+        match ctx.active {
+            Some(active) => ctx.engine.mix_active(g, replicas, active),
+            None => ctx.engine.mix(g, replicas),
+        }
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}
+
+/// Combine-then-adapt (D-PSGD, Lian et al. 2017), executed through the
+/// fused gossip+SGD kernels: the local phase computes gradients at θ_t
+/// and stashes them; the combine phase applies
+/// `θ_{t+1} = W θ_t − γ v` with the momentum update running inside the
+/// gossip pass ([`crate::gossip::GossipEngine::mix_step`], or
+/// [`crate::gossip::GossipEngine::mix_active_step`] under failure
+/// injection), eliminating one O(nP) DRAM round-trip per iteration.
+///
+/// Requires [`crate::coordinator::LocalModel::loss_and_grad`]; the
+/// session builder falls back to [`GossipCombine`] for models that only
+/// expose a fused local step (the HLO bundles).
+pub struct FusedGossipCombine {
+    momentum: f32,
+    states: Vec<SgdState>,
+    grads: Vec<Vec<f32>>,
+}
+
+impl FusedGossipCombine {
+    /// New strategy; `momentum` is the coefficient of the per-worker
+    /// buffers the fused kernel updates tile-by-tile (set equal to the
+    /// model's momentum for like-for-like comparisons).
+    pub fn new(momentum: f32) -> Self {
+        FusedGossipCombine {
+            momentum,
+            states: Vec::new(),
+            grads: Vec::new(),
+        }
+    }
+}
+
+impl CombineStrategy for FusedGossipCombine {
+    fn name(&self) -> &str {
+        "fused_gossip"
+    }
+
+    fn prepare(&mut self, n: usize, p: usize) -> Result<()> {
+        // Velocity restarts at zero on every fresh run (and on resume),
+        // matching the models' internal momentum buffers.
+        self.states = (0..n).map(|_| SgdState::new(p, self.momentum, 0.0)).collect();
+        self.grads = vec![Vec::new(); n];
+        Ok(())
+    }
+
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let (loss, g) = ctx.model.loss_and_grad(&replicas[w], &batch)?;
+            loss_sum += loss as f64;
+            self.grads[w] = g;
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut [Vec<f32>],
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "FusedGossipCombine")?;
+        match ctx.active {
+            Some(active) => ctx.engine.mix_active_step(
+                g,
+                replicas,
+                &self.grads,
+                &mut self.states,
+                ctx.lr,
+                active,
+            ),
+            None => ctx.engine.mix_step(g, replicas, &self.grads, &mut self.states, ctx.lr),
+        }
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}

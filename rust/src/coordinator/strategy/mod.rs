@@ -1,0 +1,431 @@
+//! The open strategy layer of the training API.
+//!
+//! The paper's central observation is that accuracy hinges on *which*
+//! combine mechanism and communication graph a run uses (Observations
+//! 2–3, Ada §4). This module makes that axis **open**: a per-iteration
+//! [`CombineStrategy`] (how replicas compute and exchange updates), a
+//! per-epoch [`TopologySchedule`] (which graph they exchange over), and
+//! a name-keyed [`Registry`] that constructs both, so new scenarios —
+//! a D² variance-correction update, consensus-controlled mixing, local
+//! SGD with periodic averaging — plug in without touching the session
+//! loop or this crate at all.
+//!
+//! ## Shape of an iteration
+//!
+//! [`crate::coordinator::TrainSession`] drives every iteration through
+//! two strategy calls with the DBench instrumentation point between
+//! them (§3.1.2's *pre-averaging* metric capture):
+//!
+//! ```text
+//! loss = strategy.local_phase(ctx, replicas)    // compute at θ_t
+//! (variance capture — observers see θ before averaging)
+//! (deg, bytes) = strategy.combine_phase(ctx, replicas)
+//! ```
+//!
+//! The built-in strategies are the three execution paths the old
+//! `Trainer` hard-wired:
+//!
+//! * [`CentralizedAverage`] — `C_complete`: global gradient averaging
+//!   with one shared momentum buffer (the PyTorch-DDP baseline). The
+//!   whole update runs in the local phase, so the capture point sees
+//!   globally consistent replicas — exactly the old behaviour.
+//! * [`GossipCombine`] — adapt-then-combine: per-worker fused local
+//!   step, then a gossip round over the epoch's graph.
+//! * [`FusedGossipCombine`] — combine-then-adapt (D-PSGD order):
+//!   gradients at θ_t in the local phase, then the fused gossip+SGD
+//!   kernel ([`crate::gossip::GossipEngine::mix_step`]).
+//!
+//! ## Registry
+//!
+//! [`registry()`] returns the builtin name → constructor table (every
+//! [`SgdFlavor`] name plus its CLI alias). `SgdFlavor` itself is now a
+//! thin facade whose `schedule()` resolves through this registry, and
+//! [`crate::dbench::SessionPlan`] resolves its cells against a registry
+//! the caller can extend — see `examples/custom_strategy.rs` for a
+//! complete out-of-crate strategy registered and trained end-to-end.
+//!
+//! [`SgdFlavor`]: crate::coordinator::SgdFlavor
+//! [`TopologySchedule`]: crate::topology::TopologySchedule
+
+mod centralized;
+mod gossip;
+
+pub use centralized::CentralizedAverage;
+pub use gossip::{FusedGossipCombine, GossipCombine};
+
+use crate::coordinator::LocalModel;
+use crate::data::{Dataset, ShardLoader};
+use crate::error::{AdaError, Result};
+use crate::gossip::GossipEngine;
+use crate::graph::{CommGraph, GraphKind};
+use crate::topology::{
+    AdaSchedule, OnePeerExponential, StaticSchedule, TopologySchedule, VarianceAdaptive,
+};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Everything one strategy phase may touch, borrowed from the session
+/// for exactly one call. Splitting the borrows out per call is what
+/// lets strategies be plain trait objects with their own state.
+pub struct StepCtx<'a> {
+    /// The model driving per-worker compute.
+    pub model: &'a mut dyn LocalModel,
+    /// The training dataset.
+    pub dataset: &'a dyn Dataset,
+    /// Per-worker shard loaders (deterministic batch order).
+    pub loaders: &'a [ShardLoader],
+    /// The run's gossip engine (owns the persistent exec pool).
+    pub engine: &'a mut GossipEngine,
+    /// This epoch's communication graph; `None` for centralized runs.
+    pub graph: Option<&'a CommGraph>,
+    /// Failure-injection mask for this round (`None` = all present).
+    /// Drawn by the session so the RNG stream stays with the run seed.
+    pub active: Option<&'a [bool]>,
+    /// 0-based epoch.
+    pub epoch: usize,
+    /// 0-based batch index within the epoch.
+    pub batch: usize,
+    /// Learning rate in effect.
+    pub lr: f32,
+    /// Worker count.
+    pub n: usize,
+    /// Flat parameter count per replica.
+    pub param_count: usize,
+}
+
+/// One SGD scenario's per-iteration behaviour: how the `n` replicas
+/// compute local updates and how they combine them.
+///
+/// Implementations hold their own cross-iteration state (momentum
+/// buffers, gradient stashes, sync counters); [`CombineStrategy::prepare`]
+/// sizes it once per run. Both phases must be deterministic functions
+/// of `(ctx, replicas, internal state)` — the whole determinism story
+/// of the execution engine (`crate::exec`) carries through the strategy
+/// layer unchanged.
+pub trait CombineStrategy: Send {
+    /// Diagnostic name (not the run label — that comes from the
+    /// [`StrategyInstance`]).
+    fn name(&self) -> &str;
+
+    /// Size per-run state for `n` workers × `p` parameters. Called once
+    /// before the first iteration (and again from a fresh instance on
+    /// resume — momentum restarts at zero, matching the models'
+    /// internal buffers).
+    fn prepare(&mut self, _n: usize, _p: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Local compute at θ_t for every worker; returns the mean training
+    /// loss across replicas. Runs *before* the pre-averaging metric
+    /// capture.
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64>;
+
+    /// The combine/update step, *after* the capture point. Returns
+    /// `(graph degree, bytes sent per node)` for the iteration record.
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut [Vec<f32>],
+    ) -> Result<(usize, u64)>;
+}
+
+/// The tunable knobs a registry constructor may consume — the union of
+/// the parameters the [`crate::coordinator::SgdFlavor`] variants carry,
+/// with the CLI defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrategyParams {
+    /// Training scale (graph nodes).
+    pub n_workers: usize,
+    /// Initial coordination number for the adaptive schedules.
+    pub k0: Option<usize>,
+    /// Ada's per-epoch decay of `k`.
+    pub gamma_k: f64,
+    /// `k` decrement per trigger (variance-adaptive).
+    pub step: usize,
+    /// Gini threshold (variance-adaptive).
+    pub threshold: f64,
+    /// Consecutive epochs below threshold before decaying.
+    pub patience: usize,
+}
+
+impl StrategyParams {
+    /// Defaults at scale `n` (matching the `ada`/`dbench` CLI).
+    pub fn for_n(n: usize) -> Self {
+        StrategyParams {
+            n_workers: n,
+            k0: None,
+            gamma_k: 1.0,
+            step: 2,
+            threshold: 0.002,
+            patience: 1,
+        }
+    }
+
+    fn need_k0(&self, name: &str) -> Result<usize> {
+        self.k0.ok_or_else(|| {
+            AdaError::Config(format!("strategy {name} needs k0 (initial coordination number)"))
+        })
+    }
+}
+
+/// A fully resolved, ready-to-train scenario: what a [`Registry`]
+/// constructor returns and what
+/// [`crate::coordinator::SessionBuilder::strategy`] consumes.
+pub struct StrategyInstance {
+    /// Run label (paper-style: `C_complete`, `D_ring`, …) used in
+    /// records, tables and summaries.
+    pub label: String,
+    /// Per-epoch communication graph; `None` = centralized.
+    pub schedule: Option<Box<dyn TopologySchedule>>,
+    /// Neighbor count `k` for Table 2's LR scaling
+    /// (`s = batch·(k+1)/divisor`): the densest phase of adaptive
+    /// schedules sets the safe LR.
+    pub k_neighbors: usize,
+    /// The per-iteration combine step; `None` lets the session pick its
+    /// default (centralized averaging without a schedule, split or
+    /// fused gossip per `TrainConfig::fused` with one).
+    pub combine: Option<Box<dyn CombineStrategy>>,
+}
+
+/// A registry constructor: build a [`StrategyInstance`] from params.
+pub type StrategyCtor = Arc<dyn Fn(&StrategyParams) -> Result<StrategyInstance> + Send + Sync>;
+
+/// Name → constructor table for training strategies. Starts from the
+/// builtin [`registry()`] and is extensible at runtime — registering a
+/// new scenario requires no change to `coordinator/` source.
+pub struct Registry {
+    entries: BTreeMap<String, StrategyCtor>,
+}
+
+impl Registry {
+    /// An empty registry (no builtins).
+    pub fn empty() -> Self {
+        Registry { entries: BTreeMap::new() }
+    }
+
+    /// Register `ctor` under `name`, replacing any previous entry.
+    pub fn register<F>(&mut self, name: impl Into<String>, ctor: F)
+    where
+        F: Fn(&StrategyParams) -> Result<StrategyInstance> + Send + Sync + 'static,
+    {
+        self.entries.insert(name.into(), Arc::new(ctor));
+    }
+
+    /// Register `alias` as another name for the existing `name`.
+    pub fn alias(&mut self, alias: impl Into<String>, name: &str) -> Result<()> {
+        let ctor = self
+            .entries
+            .get(name)
+            .cloned()
+            .ok_or_else(|| AdaError::Config(format!("cannot alias unknown strategy {name:?}")))?;
+        self.entries.insert(alias.into(), ctor);
+        Ok(())
+    }
+
+    /// Whether `name` resolves.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// All registered names (canonical names and aliases), sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Construct the instance registered under `name`.
+    pub fn resolve(&self, name: &str, params: &StrategyParams) -> Result<StrategyInstance> {
+        let ctor = self.entries.get(name).ok_or_else(|| {
+            AdaError::Config(format!(
+                "unknown strategy {name:?} (registered: {})",
+                self.names().join(", ")
+            ))
+        })?;
+        ctor(params)
+    }
+}
+
+/// Neighbor count of the exponential graph: ⌊log2(n−1)⌋+1.
+fn k_exponential(n: usize) -> usize {
+    ((n.saturating_sub(1)) as f64).log2().floor() as usize + 1
+}
+
+fn static_instance(
+    label: &str,
+    kind: GraphKind,
+    k: usize,
+    n: usize,
+) -> Result<StrategyInstance> {
+    Ok(StrategyInstance {
+        label: label.to_string(),
+        schedule: Some(Box::new(StaticSchedule::new(kind, n)?)),
+        k_neighbors: k,
+        combine: None,
+    })
+}
+
+/// The builtin strategy table: every [`crate::coordinator::SgdFlavor`]
+/// name (the §3.1.2 five, Ada, and the extension schedules) under its
+/// paper-style name plus its CLI alias. Callers extend the returned
+/// registry with their own scenarios and hand it to
+/// [`crate::dbench::SessionPlan`].
+pub fn registry() -> Registry {
+    let mut reg = Registry::empty();
+    reg.register("C_complete", |p: &StrategyParams| {
+        Ok(StrategyInstance {
+            label: "C_complete".into(),
+            schedule: None,
+            k_neighbors: p.n_workers.saturating_sub(1),
+            combine: None,
+        })
+    });
+    reg.register("D_complete", |p: &StrategyParams| {
+        static_instance(
+            "D_complete",
+            GraphKind::Complete,
+            p.n_workers.saturating_sub(1),
+            p.n_workers,
+        )
+    });
+    reg.register("D_ring", |p: &StrategyParams| {
+        static_instance("D_ring", GraphKind::Ring, 2, p.n_workers)
+    });
+    reg.register("D_torus", |p: &StrategyParams| {
+        static_instance("D_torus", GraphKind::Torus, 4, p.n_workers)
+    });
+    reg.register("D_exponential", |p: &StrategyParams| {
+        static_instance(
+            "D_exponential",
+            GraphKind::Exponential,
+            k_exponential(p.n_workers),
+            p.n_workers,
+        )
+    });
+    reg.register("D_adaptive", |p: &StrategyParams| {
+        let k0 = p.need_k0("D_adaptive")?;
+        Ok(StrategyInstance {
+            label: "D_adaptive".into(),
+            schedule: Some(Box::new(AdaSchedule::new(p.n_workers, k0, p.gamma_k))),
+            k_neighbors: k0,
+            combine: None,
+        })
+    });
+    reg.register("D_one_peer", |p: &StrategyParams| {
+        Ok(StrategyInstance {
+            label: "D_one_peer".into(),
+            schedule: Some(Box::new(OnePeerExponential::new(p.n_workers)?)),
+            k_neighbors: 1,
+            combine: None,
+        })
+    });
+    reg.register("D_var_adaptive", |p: &StrategyParams| {
+        let k0 = p.need_k0("D_var_adaptive")?;
+        Ok(StrategyInstance {
+            label: "D_var_adaptive".into(),
+            schedule: Some(Box::new(VarianceAdaptive::new(
+                p.n_workers,
+                k0,
+                p.step,
+                p.threshold,
+                p.patience,
+            ))),
+            k_neighbors: k0,
+            combine: None,
+        })
+    });
+    for (alias, name) in [
+        ("c_complete", "C_complete"),
+        ("d_complete", "D_complete"),
+        ("d_ring", "D_ring"),
+        ("d_torus", "D_torus"),
+        ("d_exponential", "D_exponential"),
+        ("ada", "D_adaptive"),
+        ("one_peer", "D_one_peer"),
+        ("var_adaptive", "D_var_adaptive"),
+    ] {
+        reg.alias(alias, name).expect("builtin alias target exists");
+    }
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_resolves_every_flavor_name() {
+        let reg = registry();
+        let mut params = StrategyParams::for_n(8);
+        params.k0 = Some(4);
+        for name in [
+            "C_complete",
+            "D_complete",
+            "D_ring",
+            "D_torus",
+            "D_exponential",
+            "D_adaptive",
+            "D_one_peer",
+            "D_var_adaptive",
+        ] {
+            let inst = reg.resolve(name, &params).unwrap_or_else(|e| {
+                panic!("builtin {name} must resolve: {e}")
+            });
+            assert_eq!(inst.label, name);
+            assert_eq!(inst.schedule.is_none(), name == "C_complete");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_same_labels() {
+        let reg = registry();
+        let mut params = StrategyParams::for_n(8);
+        params.k0 = Some(4);
+        for (alias, label) in [("c_complete", "C_complete"), ("ada", "D_adaptive")] {
+            assert_eq!(reg.resolve(alias, &params).unwrap().label, label);
+        }
+    }
+
+    #[test]
+    fn adaptive_without_k0_is_an_error() {
+        let reg = registry();
+        let params = StrategyParams::for_n(8);
+        assert!(reg.resolve("D_adaptive", &params).is_err());
+        assert!(reg.resolve("D_var_adaptive", &params).is_err());
+    }
+
+    #[test]
+    fn unknown_name_lists_registered() {
+        let reg = registry();
+        let err = reg
+            .resolve("D_nope", &StrategyParams::for_n(4))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("D_nope"), "{err}");
+        assert!(err.contains("D_ring"), "{err}");
+    }
+
+    #[test]
+    fn custom_registration_and_override() {
+        let mut reg = registry();
+        reg.register("d_everyother", |p: &StrategyParams| {
+            static_instance("d_everyother", GraphKind::Ring, 2, p.n_workers)
+        });
+        assert!(reg.contains("d_everyother"));
+        let inst = reg.resolve("d_everyother", &StrategyParams::for_n(6)).unwrap();
+        assert_eq!(inst.label, "d_everyother");
+        // Overriding a builtin is allowed (last registration wins).
+        reg.register("D_ring", |p: &StrategyParams| {
+            static_instance("D_ring_override", GraphKind::Ring, 2, p.n_workers)
+        });
+        assert_eq!(
+            reg.resolve("D_ring", &StrategyParams::for_n(6)).unwrap().label,
+            "D_ring_override"
+        );
+    }
+
+    #[test]
+    fn k_exponential_matches_formula() {
+        assert_eq!(k_exponential(8), 2 + 1); // log2(7) = 2.8 → 2, +1
+        assert_eq!(k_exponential(64), 5 + 1);
+        assert_eq!(k_exponential(2), 1); // log2(1) = 0, +1
+    }
+}

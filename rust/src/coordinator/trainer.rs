@@ -1,24 +1,29 @@
-//! The n-worker training loop: the five SGD implementations of §3.1.2
-//! plus Ada and the extension schedules, over any [`LocalModel`].
+//! The backward-compatible training facade: [`SgdFlavor`] (the named
+//! SGD implementations of §3.1.2, Ada §4 and the extension schedules),
+//! [`LrPolicy`]/[`TrainConfig`], and the [`Trainer`] entry point.
+//!
+//! Everything here is a thin layer over the open API: `SgdFlavor`
+//! resolves through [`crate::coordinator::strategy::registry`], and
+//! `Trainer::run` assembles a [`TrainSession`] — one builder call per
+//! legacy run. New scenarios should target the session/strategy API
+//! directly; this module exists so every pre-refactor call site (and
+//! its bit-exact results) keeps working unchanged.
 
+use super::session::{evaluate_params, TrainSession};
+use super::strategy::{self, StrategyParams};
 use super::{EvalResult, LocalModel};
-use crate::data::{shard_indices, train_test_split, Dataset, ShardLoader, ShardStrategy};
+use crate::data::{Dataset, ShardStrategy};
 use crate::error::{AdaError, Result};
-use crate::exec::ExecEngine;
-use crate::graph::GraphKind;
-use crate::metrics::{
-    per_replica_l2_norms_pooled, IterationRecord, RunRecorder, VarianceReport,
-};
-use crate::optim::{LrSchedule, ScalingRule, SgdState};
-use crate::runtime::ModelKind;
-use crate::topology::{
-    AdaSchedule, OnePeerExponential, StaticSchedule, TopologySchedule, VarianceAdaptive,
-};
-use crate::gossip::{mean_model, GossipEngine};
+use crate::metrics::RunRecorder;
+use crate::optim::{LrSchedule, ScalingRule};
+use crate::topology::TopologySchedule;
+use crate::util::json::Value;
 use std::path::PathBuf;
 
-/// The SGD implementations benchmarked by DBench (§3.1.2), Ada (§4), and
-/// the extension schedules.
+/// The SGD implementations benchmarked by DBench (§3.1.2), Ada (§4),
+/// and the extension schedules — now a thin facade: each variant is a
+/// name plus parameters, resolved through the open strategy registry
+/// ([`crate::coordinator::strategy::registry`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum SgdFlavor {
     /// `C_complete`: centralized gradient averaging (PyTorch-DDP-like),
@@ -55,7 +60,8 @@ pub enum SgdFlavor {
 }
 
 impl SgdFlavor {
-    /// Paper-style short name (`C_complete`, `D_ring`, …).
+    /// Paper-style short name (`C_complete`, `D_ring`, …) — the key
+    /// this flavor resolves under in the strategy registry.
     pub fn name(&self) -> String {
         match self {
             SgdFlavor::CentralizedComplete => "C_complete".into(),
@@ -69,62 +75,54 @@ impl SgdFlavor {
         }
     }
 
-    /// Topology schedule for decentralized flavors; `None` = centralized.
-    pub fn schedule(&self, n: usize) -> Result<Option<Box<dyn TopologySchedule>>> {
-        Ok(match *self {
-            SgdFlavor::CentralizedComplete => None,
-            SgdFlavor::DecentralizedComplete => {
-                Some(Box::new(StaticSchedule::new(GraphKind::Complete, n)?))
+    /// This flavor's knobs as registry parameters at scale `n`.
+    pub fn params(&self, n: usize) -> StrategyParams {
+        let mut p = StrategyParams::for_n(n);
+        match *self {
+            SgdFlavor::Ada { k0, gamma_k } => {
+                p.k0 = Some(k0);
+                p.gamma_k = gamma_k;
             }
-            SgdFlavor::DecentralizedRing => {
-                Some(Box::new(StaticSchedule::new(GraphKind::Ring, n)?))
-            }
-            SgdFlavor::DecentralizedTorus => {
-                Some(Box::new(StaticSchedule::new(GraphKind::Torus, n)?))
-            }
-            SgdFlavor::DecentralizedExponential => {
-                Some(Box::new(StaticSchedule::new(GraphKind::Exponential, n)?))
-            }
-            SgdFlavor::Ada { k0, gamma_k } => Some(Box::new(AdaSchedule::new(n, k0, gamma_k))),
-            SgdFlavor::OnePeer => Some(Box::new(OnePeerExponential::new(n)?)),
             SgdFlavor::VarianceAdaptive {
                 k0,
                 step,
                 threshold,
                 patience,
-            } => Some(Box::new(VarianceAdaptive::new(n, k0, step, threshold, patience))),
-        })
+            } => {
+                p.k0 = Some(k0);
+                p.step = step;
+                p.threshold = threshold;
+                p.patience = patience;
+            }
+            _ => {}
+        }
+        p
     }
 
-    /// Neighbor count `k` used by Table 2's LR scaling
-    /// (`s = batch·(k+1)/divisor`): k=2 ring, 4 torus, ⌊log2(n−1)⌋+1
-    /// exponential, n−1 complete (and centralized), k0 for the adaptive
-    /// schedules (their densest phase sets the safe LR).
-    pub fn k_neighbors(&self, n: usize) -> usize {
-        match *self {
-            SgdFlavor::CentralizedComplete | SgdFlavor::DecentralizedComplete => n - 1,
-            SgdFlavor::DecentralizedRing => 2,
-            SgdFlavor::DecentralizedTorus => 4,
-            SgdFlavor::DecentralizedExponential => {
-                ((n - 1) as f64).log2().floor() as usize + 1
-            }
-            SgdFlavor::Ada { k0, .. } => k0,
-            SgdFlavor::OnePeer => 1,
-            SgdFlavor::VarianceAdaptive { k0, .. } => k0,
-        }
+    /// Topology schedule for decentralized flavors (`None` =
+    /// centralized), resolved through the builtin strategy registry.
+    /// The registry's [`StrategyInstance`] is also the single source of
+    /// the flavor's `k_neighbors` (Table 2's LR-scaling input) — there
+    /// is deliberately no duplicate per-flavor formula here.
+    ///
+    /// [`StrategyInstance`]: crate::coordinator::strategy::StrategyInstance
+    pub fn schedule(&self, n: usize) -> Result<Option<Box<dyn TopologySchedule>>> {
+        Ok(strategy::registry()
+            .resolve(&self.name(), &self.params(n))?
+            .schedule)
     }
 }
 
-/// How the base LR schedule is produced per flavor.
+/// How the base LR schedule is produced per strategy.
 #[derive(Debug, Clone)]
 pub enum LrPolicy {
-    /// Use this schedule as-is for every flavor.
+    /// Use this schedule as-is for every strategy.
     Fixed {
         /// The schedule.
         schedule: LrSchedule,
     },
     /// Table-2-style: generic warmup/hold/decay at `peak·s`, where
-    /// `s = rule(batch·(k+1)/divisor)` depends on the flavor's graph.
+    /// `s = rule(batch·(k+1)/divisor)` depends on the strategy's graph.
     Scaled {
         /// Peak base LR before scaling.
         peak: f64,
@@ -138,14 +136,10 @@ pub enum LrPolicy {
 }
 
 impl LrPolicy {
-    /// Build the concrete schedule for a flavor at scale `n`.
-    pub fn build(
-        &self,
-        flavor: &SgdFlavor,
-        n: usize,
-        batch_size: usize,
-        total_epochs: f64,
-    ) -> LrSchedule {
+    /// Build the concrete schedule for a strategy with `k_neighbors`
+    /// graph neighbors (from
+    /// [`crate::coordinator::strategy::StrategyInstance::k_neighbors`]).
+    pub fn build(&self, k_neighbors: usize, batch_size: usize, total_epochs: f64) -> LrSchedule {
         match self {
             LrPolicy::Fixed { schedule } => schedule.clone(),
             LrPolicy::Scaled {
@@ -154,7 +148,7 @@ impl LrPolicy {
                 divisor,
                 warmup,
             } => {
-                let s = rule.factor(batch_size, flavor.k_neighbors(n), *divisor);
+                let s = rule.factor(batch_size, k_neighbors, *divisor);
                 LrSchedule::bench_default(*peak, s, *warmup, total_epochs)
             }
         }
@@ -192,8 +186,8 @@ pub struct TrainConfig {
     /// Failure injection: per-iteration probability that a worker misses
     /// the gossip exchange (straggler model — it still computes locally;
     /// its neighbors renormalize over the present participants). 0 = off.
-    /// Decentralized flavors only; the production-stability scenario the
-    /// paper's introduction motivates.
+    /// Decentralized strategies only; the production-stability scenario
+    /// the paper's introduction motivates.
     pub drop_prob: f64,
     /// Worker threads of the run's persistent execution pool (`0` = all
     /// cores), shared by the gossip/fused kernels, the per-iteration
@@ -202,18 +196,22 @@ pub struct TrainConfig {
     /// **bit-identical for every value** — see `crate::exec` — so this
     /// is purely a wall-clock knob.
     pub threads: usize,
-    /// Execute decentralized flavors in the **fused** combine-then-adapt
-    /// order (D-PSGD, Lian et al. 2017): each iteration computes
-    /// gradients at `θ_t`, then applies `θ_{t+1} = W θ_t − γ v` with the
-    /// momentum update running inside the gossip pass
-    /// ([`GossipEngine::mix_step`]), eliminating one O(nP) DRAM
-    /// round-trip per iteration. `false` (default) keeps the paper's
-    /// adapt-then-combine order (local momentum step inside the model,
-    /// then gossip). Both orders are standard; they are *not* numerically
-    /// identical to each other. Requires the model to expose
-    /// [`super::LocalModel::loss_and_grad`] (all surrogates do; the HLO
-    /// bundles only expose the fused local step and stay on the default
-    /// path). `C_complete` ignores this flag.
+    /// Execute decentralized strategies in the **fused**
+    /// combine-then-adapt order (D-PSGD, Lian et al. 2017): each
+    /// iteration computes gradients at `θ_t`, then applies
+    /// `θ_{t+1} = W θ_t − γ v` with the momentum update running inside
+    /// the gossip pass ([`crate::gossip::GossipEngine::mix_step`]),
+    /// eliminating one O(nP) DRAM round-trip per iteration. `false`
+    /// (default) keeps the paper's adapt-then-combine order (local
+    /// momentum step inside the model, then gossip). Both orders are
+    /// standard; they are *not* numerically identical to each other.
+    /// Requires the model to expose [`super::LocalModel::loss_and_grad`]
+    /// (all surrogates do; the HLO bundles only expose the fused local
+    /// step and stay on the default path). `C_complete` ignores this
+    /// flag. Strategy-level view: this picks between
+    /// [`crate::coordinator::strategy::GossipCombine`] and
+    /// [`crate::coordinator::strategy::FusedGossipCombine`] when the
+    /// strategy instance leaves the combine step open.
     pub fused: bool,
     /// Momentum coefficient of the per-worker buffers owned by the fused
     /// path (set equal to the model's momentum for like-for-like runs).
@@ -254,7 +252,7 @@ impl TrainConfig {
 /// Summary of one finished run.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
-    /// SGD implementation name.
+    /// SGD implementation / strategy label.
     pub flavor: String,
     /// Final evaluation of the averaged model.
     pub final_eval: EvalResult,
@@ -268,7 +266,38 @@ pub struct RunSummary {
     pub late_gini: f64,
 }
 
-/// The coordinator: drives one run of one SGD flavor.
+impl RunSummary {
+    /// JSON encoding (used by the resumable experiment pipeline).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("flavor", Value::Str(self.flavor.clone())),
+            ("loss", Value::Num(self.final_eval.loss)),
+            ("metric", Value::Num(self.final_eval.metric)),
+            ("diverged", Value::Bool(self.diverged)),
+            ("bytes_per_node", Value::Num(self.bytes_per_node as f64)),
+            ("early_gini", Value::Num(self.early_gini)),
+            ("late_gini", Value::Num(self.late_gini)),
+        ])
+    }
+
+    /// Decode from JSON (inverse of [`RunSummary::to_json`]).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(RunSummary {
+            flavor: v.str_field("flavor")?.to_string(),
+            final_eval: EvalResult {
+                loss: v.num_field("loss")?,
+                metric: v.num_field("metric")?,
+            },
+            diverged: matches!(v.get("diverged"), Some(Value::Bool(true))),
+            bytes_per_node: v.num_field("bytes_per_node")? as u64,
+            early_gini: v.num_field("early_gini")?,
+            late_gini: v.num_field("late_gini")?,
+        })
+    }
+}
+
+/// The legacy coordinator entry point: drives one run of one
+/// [`SgdFlavor`] by assembling a [`TrainSession`] per call.
 pub struct Trainer<'m> {
     model: &'m mut dyn LocalModel,
     config: TrainConfig,
@@ -287,7 +316,10 @@ impl<'m> Trainer<'m> {
         dataset: &dyn Dataset,
         flavor: &SgdFlavor,
     ) -> Result<(RunRecorder, RunSummary)> {
-        self.run_inner(dataset, flavor, None, 0)
+        TrainSession::builder(&mut *self.model, self.config.clone())
+            .flavor(flavor)?
+            .build()?
+            .run(dataset)
     }
 
     /// Resume a run from a [`crate::coordinator::Checkpoint`]: replicas
@@ -308,289 +340,11 @@ impl<'m> Trainer<'m> {
             )));
         }
         self.config.seed = ckpt.seed;
-        let epoch = ckpt.epoch;
-        self.run_inner(dataset, flavor, Some(ckpt.replicas), epoch)
-    }
-
-    fn run_inner(
-        &mut self,
-        dataset: &dyn Dataset,
-        flavor: &SgdFlavor,
-        initial_replicas: Option<Vec<Vec<f32>>>,
-        start_epoch: usize,
-    ) -> Result<(RunRecorder, RunSummary)> {
-        let cfg = self.config.clone();
-        let n = cfg.n_workers;
-        if n < 2 {
-            return Err(AdaError::Coordinator("need at least 2 workers".into()));
-        }
-        let (train_idx, test_idx) = train_test_split(dataset.len(), cfg.test_frac);
-        // Shard the *positions within train_idx*, then map back.
-        let train_labels: Option<Vec<u32>> = dataset
-            .labels()
-            .map(|ls| train_idx.iter().map(|&i| ls[i]).collect());
-        let shards = shard_indices(
-            train_idx.len(),
-            train_labels.as_deref(),
-            n,
-            cfg.shard,
-            cfg.seed,
-        )?;
-        let loaders: Vec<ShardLoader> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(w, s)| {
-                let mapped: Vec<usize> = s.into_iter().map(|p| train_idx[p]).collect();
-                ShardLoader::new(mapped, self.model.batch_size(), w, cfg.seed)
-            })
-            .collect();
-        let min_batches = loaders
-            .iter()
-            .map(ShardLoader::batches_per_epoch)
-            .min()
-            .unwrap_or(0);
-        if min_batches == 0 {
-            return Err(AdaError::Coordinator(
-                "a worker received an empty shard; reduce workers".into(),
-            ));
-        }
-        let iters_per_epoch = cfg
-            .max_iters_per_epoch
-            .map_or(min_batches, |m| m.min(min_batches));
-
-        let mut schedule = flavor.schedule(n)?;
-        let lr_schedule =
-            cfg.lr
-                .build(flavor, n, self.model.batch_size(), cfg.epochs as f64);
-        let p = self.model.param_count();
-        let layer_ranges = self.model.layer_ranges();
-        let tracked: Vec<std::ops::Range<usize>> = cfg
-            .track_layers
-            .iter()
-            .filter_map(|&l| layer_ranges.get(l).map(|&(a, b)| a..b))
-            .collect();
-
-        // Identical initial replicas (§2.2's setup), or restored state.
-        let mut replicas: Vec<Vec<f32>> = match initial_replicas {
-            Some(reps) => {
-                if reps.len() != n || reps.iter().any(|r| r.len() != p) {
-                    return Err(AdaError::Coordinator(format!(
-                        "checkpoint shape ({} replicas) does not match run \
-                         (n={n}, P={p})",
-                        reps.len()
-                    )));
-                }
-                reps
-            }
-            None => {
-                let init = self.model.init_params(cfg.seed as i32)?;
-                vec![init; n]
-            }
-        };
-        let mut engine = GossipEngine::with_threads(cfg.threads);
-        // Centralized path state: one shared momentum buffer.
-        let mut central_momentum = SgdState::new(p, cfg.central_momentum, 0.0);
-        // Fused-path state: per-worker momentum buffers owned by the
-        // trainer (the fused kernel updates them tile-by-tile) and the
-        // iteration's gradient stash. Velocity restarts at zero on
-        // resume, matching the models' internal momentum buffers.
-        // Models without a raw-gradient interface (the HLO bundles)
-        // fall back to the default adapt-then-combine path.
-        let fused = cfg.fused && self.model.supports_loss_and_grad();
-        let mut fused_states: Vec<SgdState> = if fused {
-            (0..n).map(|_| SgdState::new(p, cfg.fused_momentum, 0.0)).collect()
-        } else {
-            Vec::new()
-        };
-        let mut fused_grads: Vec<Vec<f32>> = if fused { vec![Vec::new(); n] } else { Vec::new() };
-        // Failure-injection stream (deterministic under the run seed).
-        let mut drop_rng = crate::util::rng::Rng::seed_from_u64(cfg.seed ^ 0xD209);
-
-        let mut recorder = match &cfg.record_path {
-            Some(path) => RunRecorder::to_file(flavor.name(), path)?,
-            None => RunRecorder::in_memory(flavor.name()),
-        };
-        let mut diverged = false;
-        let mut iteration = 0usize;
-
-        'epochs: for epoch in start_epoch..cfg.epochs {
-            let graph = match &schedule {
-                Some(s) => Some(s.graph_for_epoch(epoch)?),
-                None => None,
-            };
-            let mut epoch_gini_sum = 0.0f64;
-            let mut epoch_gini_count = 0usize;
-            for b in 0..iters_per_epoch {
-                let frac_epoch = epoch as f64 + b as f64 / iters_per_epoch as f64;
-                let lr = lr_schedule.lr_at(frac_epoch) as f32;
-                // --- local steps -------------------------------------
-                let mut loss_sum = 0.0f64;
-                if graph.is_none() {
-                    // C_complete: gradient averaging, shared momentum.
-                    let mut grad_acc = vec![0.0f32; p];
-                    for (w, loader) in loaders.iter().enumerate() {
-                        let batch = dataset.batch(&loader.batch_indices(epoch, b));
-                        let (loss, g) = self.model.loss_and_grad(&replicas[w], &batch)?;
-                        loss_sum += loss as f64;
-                        for (a, &gi) in grad_acc.iter_mut().zip(&g) {
-                            *a += gi;
-                        }
-                    }
-                    let inv = 1.0 / n as f32;
-                    for a in grad_acc.iter_mut() {
-                        *a *= inv;
-                    }
-                    central_momentum.step(&mut replicas[0], &grad_acc, lr);
-                    let (head, tail) = replicas.split_at_mut(1);
-                    for r in tail {
-                        r.copy_from_slice(&head[0]);
-                    }
-                } else if fused {
-                    // Combine-then-adapt: gradients at θ_t now, parameter
-                    // and momentum updates fused into the gossip pass below.
-                    for (w, loader) in loaders.iter().enumerate() {
-                        let batch = dataset.batch(&loader.batch_indices(epoch, b));
-                        let (loss, g) = self.model.loss_and_grad(&replicas[w], &batch)?;
-                        loss_sum += loss as f64;
-                        fused_grads[w] = g;
-                    }
-                } else {
-                    for (w, loader) in loaders.iter().enumerate() {
-                        let batch = dataset.batch(&loader.batch_indices(epoch, b));
-                        let loss =
-                            self.model.local_step(w, &mut replicas[w], &batch, lr)?;
-                        loss_sum += loss as f64;
-                    }
-                }
-                let train_loss = loss_sum / n as f64;
-                if !train_loss.is_finite() {
-                    diverged = true;
-                }
-
-                // --- pre-averaging metric capture (DBench §3.1.2) ----
-                // Pooled: the per-replica norms and per-tensor slices
-                // fan out over the gossip engine's persistent workers
-                // (deterministic tiled reductions — bit-identical for
-                // any thread count), so monitoring costs no more than
-                // one parallel pass where it used to be serial O(n·P).
-                let capture = cfg.metrics_every > 0 && iteration % cfg.metrics_every == 0;
-                let (variance, per_tensor) = if capture {
-                    let norms = per_replica_l2_norms_pooled(engine.exec(), &replicas, 0..p);
-                    let report = VarianceReport::of(&norms);
-                    let per_tensor: Vec<f64> = tracked
-                        .iter()
-                        .map(|range| {
-                            let tn = per_replica_l2_norms_pooled(
-                                engine.exec(),
-                                &replicas,
-                                range.clone(),
-                            );
-                            crate::metrics::gini_coefficient(&tn)
-                        })
-                        .collect();
-                    (report, per_tensor)
-                } else {
-                    (VarianceReport::of(&[]), Vec::new())
-                };
-                if capture {
-                    epoch_gini_sum += variance.gini;
-                    epoch_gini_count += 1;
-                }
-
-                // --- averaging ---------------------------------------
-                let (degree, bytes) = if let Some(g) = &graph {
-                    if cfg.drop_prob > 0.0 {
-                        let active: Vec<bool> =
-                            (0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect();
-                        if fused {
-                            // Fused dropout round: renormalized mixing
-                            // and the momentum update in one pass — a
-                            // straggler misses the exchange but still
-                            // applies its local gradient.
-                            engine.mix_active_step(
-                                g,
-                                &mut replicas,
-                                &fused_grads,
-                                &mut fused_states,
-                                lr,
-                                &active,
-                            );
-                        } else {
-                            engine.mix_active(g, &mut replicas, &active);
-                        }
-                    } else if fused {
-                        engine.mix_step(g, &mut replicas, &fused_grads, &mut fused_states, lr);
-                    } else {
-                        engine.mix(g, &mut replicas);
-                    }
-                    (g.degree(), g.bytes_sent_per_node(p))
-                } else {
-                    // Ring allreduce of gradients: 2(n−1)/n · 4P per node.
-                    (n - 1, (2 * (n - 1) * 4 * p / n) as u64)
-                };
-
-                // --- eval + record -----------------------------------
-                let eval_now = b + 1 == iters_per_epoch
-                    && (cfg.eval_every_epochs != 0
-                        && (epoch + 1) % cfg.eval_every_epochs == 0
-                        || epoch + 1 == cfg.epochs);
-                let test_metric = if eval_now {
-                    Some(
-                        self.evaluate(dataset, &test_idx, &replicas, engine.exec())?
-                            .metric,
-                    )
-                } else {
-                    None
-                };
-                recorder.push(IterationRecord {
-                    iteration,
-                    epoch,
-                    train_loss,
-                    test_metric,
-                    variance,
-                    per_tensor_gini: per_tensor,
-                    graph_degree: degree,
-                    bytes_per_node: bytes,
-                    lr: lr as f64,
-                })?;
-                iteration += 1;
-                if diverged {
-                    break 'epochs;
-                }
-            }
-            if let (Some(s), true) = (&mut schedule, epoch_gini_count > 0) {
-                s.observe(epoch, epoch_gini_sum / epoch_gini_count as f64);
-            }
-        }
-        recorder.flush()?;
-
-        let final_eval = self.evaluate(dataset, &test_idx, &replicas, engine.exec())?;
-        let total_iters = recorder.records().len();
-        let decile = (total_iters / 10).max(1);
-        let summary = RunSummary {
-            flavor: flavor.name(),
-            final_eval,
-            diverged,
-            bytes_per_node: recorder.total_bytes_per_node(),
-            early_gini: recorder.mean_gini(0..decile),
-            late_gini: recorder.mean_gini(total_iters.saturating_sub(decile)..total_iters),
-        };
-        Ok((recorder, summary))
-    }
-
-    /// Evaluate the replica-averaged model (§2.2: "the trained model
-    /// takes θ as the average over all θ_i") on the test split. The
-    /// mean model is built over the run's persistent worker pool
-    /// ([`mean_model`]) — previously a serial O(n·P) pass.
-    fn evaluate(
-        &self,
-        dataset: &dyn Dataset,
-        test_idx: &[usize],
-        replicas: &[Vec<f32>],
-        exec: &ExecEngine,
-    ) -> Result<EvalResult> {
-        let mean = mean_model(exec, replicas);
-        self.evaluate_params(dataset, test_idx, &mean)
+        TrainSession::builder(&mut *self.model, self.config.clone())
+            .flavor(flavor)?
+            .start_from(ckpt.epoch, ckpt.replicas)
+            .build()?
+            .run(dataset)
     }
 
     /// Evaluate explicit parameters on the test split.
@@ -600,37 +354,7 @@ impl<'m> Trainer<'m> {
         test_idx: &[usize],
         params: &[f32],
     ) -> Result<EvalResult> {
-        let eb = self.model.eval_batch_size();
-        let mut loss_sum = 0.0f64;
-        let mut metric_sum = 0.0f64;
-        let mut count = 0.0f64;
-        for chunk in test_idx.chunks(eb) {
-            if chunk.len() < eb {
-                break; // fixed-shape executables: drop the remainder
-            }
-            let batch = dataset.batch(chunk);
-            let (ls, ms) = self.model.eval_sums(params, &batch)?;
-            loss_sum += ls as f64;
-            metric_sum += ms as f64;
-            count += match self.model.kind() {
-                ModelKind::Classification => eb as f64,
-                ModelKind::Lm => 0.0, // token count comes back in ms
-            };
-        }
-        Ok(match self.model.kind() {
-            ModelKind::Classification => EvalResult {
-                loss: if count > 0.0 { loss_sum / count } else { f64::NAN },
-                metric: if count > 0.0 { metric_sum / count } else { 0.0 },
-            },
-            ModelKind::Lm => {
-                let tokens = metric_sum;
-                let nll = if tokens > 0.0 { loss_sum / tokens } else { f64::NAN };
-                EvalResult {
-                    loss: nll,
-                    metric: nll.exp(), // perplexity
-                }
-            }
-        })
+        evaluate_params(&*self.model, dataset, test_idx, params)
     }
 }
 
@@ -901,8 +625,8 @@ mod tests {
 
     #[test]
     fn fused_survives_worker_dropout() {
-        // Fused mode under failure injection takes the unfused
-        // mix_active fallback but keeps the same semantics: stable,
+        // Fused mode under failure injection takes the fused
+        // mix_active_step path but keeps the same semantics: stable,
         // learning, deterministic.
         let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 23);
         let run = || {
@@ -957,5 +681,24 @@ mod tests {
             assert_eq!(r.graph_degree, 4, "torus degree");
         }
         assert!(rec.final_test_metric().is_some(), "must eval at end");
+    }
+
+    #[test]
+    fn run_summary_json_roundtrip() {
+        let s = RunSummary {
+            flavor: "D_ring".into(),
+            final_eval: EvalResult { loss: 0.5, metric: 0.875 },
+            diverged: false,
+            bytes_per_node: 123_456,
+            early_gini: 0.01,
+            late_gini: 0.002,
+        };
+        let back = RunSummary::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.flavor, s.flavor);
+        assert_eq!(back.final_eval, s.final_eval);
+        assert_eq!(back.diverged, s.diverged);
+        assert_eq!(back.bytes_per_node, s.bytes_per_node);
+        assert_eq!(back.early_gini, s.early_gini);
+        assert_eq!(back.late_gini, s.late_gini);
     }
 }

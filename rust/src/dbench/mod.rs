@@ -5,9 +5,18 @@
 //! scales, and a set of SGD flavors; [`run_experiment`] executes the
 //! full grid with a shared seed and returns per-cell records + summaries
 //! — the data behind Figures 2–5 and 7.
+//!
+//! Execution runs on the [`SessionPlan`] pipeline: the spec's grid is
+//! enumerated into per-cell plans (each with its own seed and config),
+//! strategies resolve by name against an extensible registry, cells can
+//! execute in parallel (opt-in, bounded by the core count) and persist
+//! individually for resumable sweeps. `run_experiment` is the
+//! sequential, non-persistent default over that pipeline.
 
+mod plan;
 mod spec;
 
+pub use plan::{CellPlan, SessionPlan, StrategyRef};
 pub use spec::{ExperimentSpec, Workload};
 
 use crate::coordinator::{SgdFlavor, TrainConfig, Trainer};
@@ -28,18 +37,15 @@ pub struct CellResult {
     pub summary: RunSummary,
 }
 
-/// Run the full grid of `spec`. Cells run sequentially (each cell's
-/// workers already parallelize internally); the same seed is reused so
-/// all flavors at a scale see identical data, sharding, and init — the
-/// controlled-experiment discipline of §3.1.
+/// Run the full grid of `spec` through the [`SessionPlan`] pipeline.
+/// Cells run sequentially (each cell's workers already parallelize
+/// internally); the same seed is reused so all flavors at a scale see
+/// identical data, sharding, and init — the controlled-experiment
+/// discipline of §3.1. Build the plan directly for parallel or
+/// resumable execution, or to train registry strategies the closed
+/// flavor list cannot name.
 pub fn run_experiment(spec: &ExperimentSpec) -> Result<Vec<CellResult>> {
-    let mut cells = Vec::new();
-    for &scale in &spec.scales {
-        for flavor in &spec.flavors {
-            cells.push(run_cell(spec, scale, flavor)?);
-        }
-    }
-    Ok(cells)
+    SessionPlan::from_spec(spec).run()
 }
 
 /// Run a single cell.

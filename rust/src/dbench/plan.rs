@@ -1,0 +1,490 @@
+//! [`SessionPlan`] — the composable experiment pipeline behind
+//! [`run_experiment`](super::run_experiment).
+//!
+//! A plan owns the three things the old grid loop hard-wired:
+//!
+//! * **cell enumeration** — scale × strategy, each cell carrying its
+//!   own seed and [`TrainConfig`], built up front so the grid is
+//!   inspectable and extensible (push cells for strategies the spec's
+//!   closed flavor list cannot name);
+//! * **strategy resolution** — cells reference strategies by
+//!   [`SgdFlavor`] or by registry name ([`StrategyRef::Named`]),
+//!   resolved per cell against a [`Registry`] the caller may extend —
+//!   a new [`crate::coordinator::strategy::CombineStrategy`] trains
+//!   end-to-end from here without touching `coordinator/` source;
+//! * **execution** — sequential by default; `parallel > 1` opts into a
+//!   bounded cell executor (scoped threads over an atomic work queue,
+//!   capped by the machine's core count), and `resume_dir` makes cells
+//!   resumable: each finished cell is persisted as JSON (tagged with a
+//!   [fingerprint](SessionPlan::cell_fingerprint) of everything that
+//!   affects its floats) and reloaded instead of re-run on the next
+//!   invocation — but only while that fingerprint still matches.
+//!
+//! Results are **identical** for every `parallel` value: cells are
+//! independent runs (each builds its own dataset, model and engine from
+//! the cell seed) and land in their enumeration slot, so execution
+//! order is unobservable. When cells run concurrently, auto-threaded
+//! cells (`config.threads == 0`) execute single-threaded so cell-level
+//! parallelism and the intra-cell pool don't oversubscribe the same
+//! cores (see [`SessionPlan::run`]) — thread count never changes the
+//! floats, so this is purely a scheduling choice.
+
+use super::spec::ExperimentSpec;
+use super::CellResult;
+use crate::coordinator::strategy::{self, Registry, StrategyInstance, StrategyParams};
+use crate::coordinator::{SgdFlavor, TrainConfig, TrainSession};
+use crate::error::{AdaError, Result};
+use crate::exec::resolve_threads;
+use crate::metrics::{IterationRecord, RunRecorder};
+use crate::util::json::Value;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// How a cell names its strategy.
+#[derive(Debug, Clone)]
+pub enum StrategyRef {
+    /// A legacy flavor (resolved under its paper name).
+    Flavor(SgdFlavor),
+    /// A registry name plus parameters (`n_workers` is overridden by
+    /// the cell's scale at resolution time).
+    Named {
+        /// Registry key.
+        name: String,
+        /// Constructor parameters.
+        params: StrategyParams,
+    },
+}
+
+impl StrategyRef {
+    /// A named reference with default params (filled at resolution).
+    pub fn named(name: impl Into<String>) -> Self {
+        StrategyRef::Named {
+            name: name.into(),
+            params: StrategyParams::for_n(0),
+        }
+    }
+
+    /// The registry key / file-naming key of this reference.
+    pub fn key(&self) -> String {
+        match self {
+            StrategyRef::Flavor(f) => f.name(),
+            StrategyRef::Named { name, .. } => name.clone(),
+        }
+    }
+
+    /// Resolve against `registry` at scale `n`.
+    pub fn resolve(&self, registry: &Registry, n: usize) -> Result<StrategyInstance> {
+        match self {
+            StrategyRef::Flavor(f) => registry.resolve(&f.name(), &f.params(n)),
+            StrategyRef::Named { name, params } => {
+                let mut p = params.clone();
+                p.n_workers = n;
+                registry.resolve(name, &p)
+            }
+        }
+    }
+}
+
+/// One enumerated grid cell, fully specified before execution.
+#[derive(Debug, Clone)]
+pub struct CellPlan {
+    /// Position in the enumeration (stable across runs — the resume
+    /// key and the result slot).
+    pub index: usize,
+    /// Training scale (worker count).
+    pub scale: usize,
+    /// Cell seed: dataset generation, sharding, init and shuffling all
+    /// derive from it. The spec pipeline shares one seed across cells
+    /// (the §3.1 controlled-experiment discipline); custom plans may
+    /// vary it per cell.
+    pub seed: u64,
+    /// The strategy to train.
+    pub strategy: StrategyRef,
+    /// The per-run configuration.
+    pub config: TrainConfig,
+}
+
+impl CellPlan {
+    /// Stable result-file name for resumable execution.
+    pub fn file_name(&self) -> String {
+        format!("cell_{:04}_{}_{}.json", self.index, self.scale, self.strategy.key())
+    }
+}
+
+/// The experiment pipeline: enumerated cells + registry + executor
+/// knobs. Build with [`SessionPlan::from_spec`], extend freely, then
+/// [`SessionPlan::run`].
+pub struct SessionPlan {
+    /// Experiment name (tables, output paths).
+    pub name: String,
+    /// The workload every cell trains.
+    pub workload: super::Workload,
+    /// The enumerated grid.
+    pub cells: Vec<CellPlan>,
+    /// Strategy resolution table (builtin flavors preloaded; register
+    /// custom scenarios here).
+    pub registry: Registry,
+    /// Max concurrently executing cells (`0`/`1` = sequential). The
+    /// effective bound is `min(parallel, available cores, cells)`.
+    pub parallel: usize,
+    /// When set, finished cells persist here as JSON and are reloaded
+    /// instead of re-run on the next invocation.
+    pub resume_dir: Option<PathBuf>,
+}
+
+impl SessionPlan {
+    /// Enumerate `spec`'s grid (scale-major, flavor-minor — the order
+    /// [`super::run_experiment`] has always produced) with the spec's
+    /// shared seed in every cell.
+    pub fn from_spec(spec: &ExperimentSpec) -> Self {
+        let mut cells = Vec::with_capacity(spec.scales.len() * spec.flavors.len());
+        for &scale in &spec.scales {
+            for flavor in &spec.flavors {
+                let index = cells.len();
+                cells.push(CellPlan {
+                    index,
+                    scale,
+                    seed: spec.seed,
+                    strategy: StrategyRef::Flavor(flavor.clone()),
+                    config: spec.train_config(scale),
+                });
+            }
+        }
+        SessionPlan {
+            name: spec.name.clone(),
+            workload: spec.workload.clone(),
+            cells,
+            registry: strategy::registry(),
+            parallel: 1,
+            resume_dir: None,
+        }
+    }
+
+    /// Append a cell (index assigned automatically; `config.seed` is
+    /// forced to `seed` so data order follows the cell).
+    pub fn push_cell(
+        &mut self,
+        scale: usize,
+        seed: u64,
+        strategy: StrategyRef,
+        mut config: TrainConfig,
+    ) {
+        config.seed = seed;
+        config.n_workers = scale;
+        self.cells.push(CellPlan {
+            index: self.cells.len(),
+            scale,
+            seed,
+            strategy,
+            config,
+        });
+    }
+
+    /// Execute every cell, returning results in enumeration order.
+    /// Identical output for any `parallel` value; errors surface from
+    /// the lowest-index failing cell. When cells run concurrently,
+    /// cells whose `config.threads` is `0` (auto = all cores) execute
+    /// single-threaded instead — cell-level parallelism and the
+    /// intra-cell pool would otherwise oversubscribe the same cores —
+    /// which is safe because engine results are bit-identical for
+    /// every thread count; an explicit non-zero `threads` is respected.
+    pub fn run(&self) -> Result<Vec<CellResult>> {
+        let workers = self
+            .parallel
+            .max(1)
+            .min(resolve_threads(0))
+            .min(self.cells.len().max(1));
+        let run_one = |cell: &CellPlan| {
+            if workers > 1 && cell.config.threads == 0 {
+                let mut c = cell.clone();
+                c.config.threads = 1;
+                self.run_cell_plan(&c)
+            } else {
+                self.run_cell_plan(cell)
+            }
+        };
+        if workers <= 1 {
+            return self.cells.iter().map(run_one).collect();
+        }
+        let slots: Vec<_> = self.cells.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= self.cells.len() {
+                        break;
+                    }
+                    let r = run_one(&self.cells[i]);
+                    *slots[i].lock().expect("cell slot") = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("cell slot").expect("cell executed"))
+            .collect()
+    }
+
+    /// Execute (or reload) one cell. A persisted result is reused only
+    /// when its recorded [fingerprint](SessionPlan::cell_fingerprint)
+    /// — workload, strategy, seed and every float-affecting config
+    /// field — matches the cell exactly; a rerun with any changed
+    /// configuration re-executes (and overwrites) instead of returning
+    /// stale data.
+    pub fn run_cell_plan(&self, cell: &CellPlan) -> Result<CellResult> {
+        let fingerprint = self.cell_fingerprint(cell);
+        if let Some(dir) = &self.resume_dir {
+            if let Some(prev) = load_cached_cell(&fingerprint, &dir.join(cell.file_name())) {
+                return Ok(prev);
+            }
+        }
+        let dataset = self.workload.dataset(cell.seed)?;
+        let mut model = self.workload.model(cell.scale)?;
+        let instance = cell.strategy.resolve(&self.registry, cell.scale)?;
+        let label = instance.label.clone();
+        let session = TrainSession::builder(model.as_mut(), cell.config.clone())
+            .strategy(instance)
+            .build()?;
+        let (recorder, summary) = session.run(dataset.as_ref())?;
+        let result = CellResult {
+            scale: cell.scale,
+            flavor: label,
+            recorder,
+            summary,
+        };
+        if let Some(dir) = &self.resume_dir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(
+                dir.join(cell.file_name()),
+                cell_json(&fingerprint, &result).to_string(),
+            )?;
+        }
+        Ok(result)
+    }
+
+    /// The cache key of a cell's result: everything that changes the
+    /// produced floats — the workload (dataset shape + model family),
+    /// the strategy reference with its parameters, and every
+    /// result-affecting [`TrainConfig`] field. Deliberately excluded:
+    /// `threads` (bit-identical by the engine's contract, so the cache
+    /// is shared across `parallel`/thread settings) and `record_path`.
+    pub fn cell_fingerprint(&self, cell: &CellPlan) -> String {
+        let c = &cell.config;
+        format!(
+            "workload={:?} strategy={:?} n={} epochs={} seed={} lr={:?} shard={:?} \
+             test_frac={} eval_every={} metrics_every={} max_iters={:?} track={:?} \
+             central_momentum={} drop_prob={} fused={} fused_momentum={}",
+            self.workload,
+            cell.strategy,
+            c.n_workers,
+            c.epochs,
+            c.seed,
+            c.lr,
+            c.shard,
+            c.test_frac,
+            c.eval_every_epochs,
+            c.metrics_every,
+            c.max_iters_per_epoch,
+            c.track_layers,
+            c.central_momentum,
+            c.drop_prob,
+            c.fused,
+            c.fused_momentum,
+        )
+    }
+}
+
+/// The persisted form of a finished cell: the [`CellResult`] JSON plus
+/// the fingerprint that decides whether a later invocation may reuse
+/// it.
+fn cell_json(fingerprint: &str, result: &CellResult) -> Value {
+    let mut v = result.to_json();
+    if let Value::Obj(map) = &mut v {
+        map.insert("fingerprint".to_string(), Value::Str(fingerprint.to_string()));
+    }
+    v
+}
+
+/// Reload a persisted cell, returning it only when its recorded
+/// fingerprint matches; any mismatch (or a missing / unparseable file,
+/// including pre-fingerprint files) re-runs the cell.
+fn load_cached_cell(fingerprint: &str, path: &Path) -> Option<CellResult> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Value::parse(&text).ok()?;
+    if v.str_field("fingerprint").ok()? != fingerprint {
+        return None;
+    }
+    CellResult::from_json(&v).ok()
+}
+
+impl CellResult {
+    /// JSON encoding: summary + full per-iteration records (the
+    /// resumable-pipeline on-disk format).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scale", Value::Num(self.scale as f64)),
+            ("flavor", Value::Str(self.flavor.clone())),
+            ("summary", self.summary.to_json()),
+            (
+                "records",
+                Value::Arr(self.recorder.records().iter().map(IterationRecord::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Decode from JSON (inverse of [`CellResult::to_json`]).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let flavor = v.str_field("flavor")?.to_string();
+        let summary = crate::coordinator::RunSummary::from_json(
+            v.get("summary")
+                .ok_or_else(|| AdaError::Config("cell result missing summary".into()))?,
+        )?;
+        let mut recorder = RunRecorder::in_memory(flavor.clone());
+        for rv in v.arr_field("records")? {
+            recorder.push(IterationRecord::from_json(rv)?)?;
+        }
+        Ok(CellResult {
+            scale: v.usize_field("scale")?,
+            flavor,
+            recorder,
+            summary,
+        })
+    }
+
+    /// Persist to `path` as a single JSON document.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a previously [`CellResult::save`]d result.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ExperimentSpec {
+        let mut s = ExperimentSpec::resnet20_analog();
+        s.scales = vec![4];
+        s.epochs = 2;
+        s.max_iters_per_epoch = Some(4);
+        s.threads = 1;
+        s.flavors = vec![SgdFlavor::DecentralizedRing, SgdFlavor::DecentralizedComplete];
+        s
+    }
+
+    #[test]
+    fn plan_enumerates_scale_major() {
+        let mut spec = tiny_spec();
+        spec.scales = vec![4, 8];
+        let plan = SessionPlan::from_spec(&spec);
+        assert_eq!(plan.cells.len(), 4);
+        assert_eq!(
+            plan.cells.iter().map(|c| (c.scale, c.strategy.key())).collect::<Vec<_>>(),
+            vec![
+                (4, "D_ring".to_string()),
+                (4, "D_complete".to_string()),
+                (8, "D_ring".to_string()),
+                (8, "D_complete".to_string()),
+            ]
+        );
+        for (i, c) in plan.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.seed, spec.seed, "spec cells share the seed");
+            assert_eq!(c.config.n_workers, c.scale);
+        }
+    }
+
+    #[test]
+    fn cell_result_json_roundtrip() {
+        let plan = SessionPlan::from_spec(&tiny_spec());
+        let result = plan.run_cell_plan(&plan.cells[0]).unwrap();
+        let back = CellResult::from_json(&result.to_json()).unwrap();
+        assert_eq!(back.scale, result.scale);
+        assert_eq!(back.flavor, result.flavor);
+        assert_eq!(back.recorder.records().len(), result.recorder.records().len());
+        assert_eq!(
+            back.summary.final_eval.metric,
+            result.summary.final_eval.metric
+        );
+        for (a, b) in back.recorder.records().iter().zip(result.recorder.records()) {
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.bytes_per_node, b.bytes_per_node);
+        }
+    }
+
+    #[test]
+    fn resume_dir_reloads_finished_cells() {
+        let dir = crate::util::scratch_dir("plan_resume").unwrap();
+        let mut plan = SessionPlan::from_spec(&tiny_spec());
+        plan.resume_dir = Some(dir.clone());
+        let first = plan.run().unwrap();
+        for cell in &plan.cells {
+            assert!(dir.join(cell.file_name()).exists(), "{}", cell.file_name());
+        }
+        // Second run must reload byte-identical results from disk.
+        let second = plan.run().unwrap();
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.summary.final_eval.metric, b.summary.final_eval.metric);
+            assert_eq!(a.recorder.records().len(), b.recorder.records().len());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_stale_cells_after_config_change() {
+        let dir = crate::util::scratch_dir("plan_stale").unwrap();
+        let mut spec = tiny_spec();
+        let mut plan = SessionPlan::from_spec(&spec);
+        plan.resume_dir = Some(dir.clone());
+        let short = plan.run().unwrap();
+        // Same grid, more epochs: the persisted 2-epoch cells must NOT
+        // be reused as 3-epoch results.
+        spec.epochs = 3;
+        let mut plan3 = SessionPlan::from_spec(&spec);
+        plan3.resume_dir = Some(dir.clone());
+        let long = plan3.run().unwrap();
+        for (a, b) in short.iter().zip(&long) {
+            assert!(
+                b.recorder.records().len() > a.recorder.records().len(),
+                "{}: stale cell reused ({} vs {} records)",
+                b.flavor,
+                b.recorder.records().len(),
+                a.recorder.records().len()
+            );
+        }
+        // And the refreshed files are reusable again.
+        let again = plan3.run().unwrap();
+        for (a, b) in long.iter().zip(&again) {
+            assert_eq!(a.recorder.records().len(), b.recorder.records().len());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_cell_seeds_are_honored() {
+        let mut plan = SessionPlan::from_spec(&tiny_spec());
+        plan.cells.truncate(1);
+        let base = plan.run_cell_plan(&plan.cells[0]).unwrap();
+        let mut reseeded = plan.cells[0].clone();
+        reseeded.seed = 1234;
+        reseeded.config.seed = 1234;
+        let other = plan.run_cell_plan(&reseeded).unwrap();
+        assert_ne!(
+            base.recorder.records()[0].train_loss,
+            other.recorder.records()[0].train_loss,
+            "a different cell seed must change the data stream"
+        );
+    }
+}

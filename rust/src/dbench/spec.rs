@@ -213,6 +213,30 @@ impl Workload {
             Workload::Hlo { name, .. } => format!("hlo:{name}"),
         }
     }
+
+    /// Train batch rows per worker.
+    pub fn batch_size(&self) -> usize {
+        match self {
+            Workload::SoftmaxImage { batch, .. }
+            | Workload::MlpImage { batch, .. }
+            | Workload::BigramText { batch, .. } => *batch,
+            Workload::Hlo { .. } => 0, // fixed by the artifact manifest
+        }
+    }
+
+    /// Grow the synthetic dataset to at least `min` examples/sequences
+    /// (never shrinks). The scale sweeps use this so shards stay
+    /// non-degenerate at n=512–1024: paired with
+    /// [`ExperimentSpec::max_iters_per_epoch`], large scales get enough
+    /// data per shard while small scales keep bounded epochs.
+    pub fn ensure_examples(&mut self, min: usize) {
+        match self {
+            Workload::SoftmaxImage { n_examples, .. }
+            | Workload::MlpImage { n_examples, .. }
+            | Workload::Hlo { n_examples, .. } => *n_examples = (*n_examples).max(min),
+            Workload::BigramText { n_seq, .. } => *n_seq = (*n_seq).max(min),
+        }
+    }
 }
 
 /// A full DBench experiment: workload × scales × flavors.
@@ -514,6 +538,14 @@ impl ExperimentSpec {
                 gamma_k,
             },
             "one_peer" | "D_one_peer" => SgdFlavor::OnePeer,
+            "var_adaptive" | "D_var_adaptive" => SgdFlavor::VarianceAdaptive {
+                k0: k0.ok_or_else(|| {
+                    AdaError::Config("var_adaptive flavor needs [ada] k0 = <int>".into())
+                })?,
+                step: 2,
+                threshold: 0.002,
+                patience: 1,
+            },
             other => {
                 return Err(AdaError::Config(format!("unknown flavor {other:?}")))
             }
@@ -577,6 +609,20 @@ mod tests {
                 b.x_dim
             });
         }
+    }
+
+    #[test]
+    fn ensure_examples_grows_but_never_shrinks() {
+        let mut w = ExperimentSpec::resnet50_analog().workload;
+        assert_eq!(w.batch_size(), 16);
+        w.ensure_examples(100_000);
+        let d = w.dataset(1).unwrap();
+        assert_eq!(d.len(), 100_000);
+        w.ensure_examples(10); // no shrink
+        assert_eq!(w.dataset(1).unwrap().len(), 100_000);
+        let mut lm = ExperimentSpec::lstm_analog().workload;
+        lm.ensure_examples(5000);
+        assert_eq!(lm.dataset(1).unwrap().len(), 5000);
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //!    for partial-participation rounds) that apply the momentum update
 //!    while each mixed tile is still cache-resident. This is the
 //!    production hot path and the baseline the kernel path is
-//!    benchmarked against.
+//!    benchmarked against. The training loop reaches it through the
+//!    open strategy layer (`crate::coordinator::strategy`): the
+//!    `GossipCombine`/`FusedGossipCombine` strategies call `mix`/
+//!    `mix_step` (or the `_active` variants under failure injection),
+//!    and custom strategies get the same engine via their `StepCtx`.
 //!  * **HLO kernel** (`crate::runtime::GossipKernel`, `pjrt` feature):
 //!    the L1 Pallas `gossip_mix` kernel AOT-lowered to an HLO executable
 //!    and run via PJRT — demonstrating the paper's averaging step as an

@@ -12,9 +12,12 @@
 //!   matrices ([`graph`]), adaptive topology schedules ([`topology`]), the
 //!   gossip mixing engine ([`gossip`]) fanned out over the deterministic
 //!   thread-pool execution engine ([`exec`]), the n-worker decentralized
-//!   training loop ([`coordinator`]), variance metrics and ranking analysis
-//!   ([`metrics`]), the DBench experiment runner ([`dbench`]), and a
-//!   Summit-like analytic network cost model ([`simnet`]).
+//!   training loop ([`coordinator`]) — a `TrainSession` builder over an
+//!   open strategy registry (`coordinator::strategy`) and observer hooks
+//!   (`coordinator::observer`) —, variance metrics and ranking analysis
+//!   ([`metrics`]), the DBench experiment runner ([`dbench`]) with its
+//!   resumable/parallel `SessionPlan` pipeline, and a Summit-like
+//!   analytic network cost model ([`simnet`]).
 //! * **L2 (build-time Python)** — JAX model definitions (`python/compile/`)
 //!   AOT-lowered to HLO text artifacts, loaded and executed from Rust via
 //!   the PJRT C API ([`runtime`]).

@@ -29,6 +29,7 @@ ada <command> [options]
                      kernels and metric capture (0 = all cores; default
                      from launcher config; bit-identical results)
     --fused          fused gossip+SGD execution (combine-then-adapt order)
+  strategies       list the registered SGD strategy names (open registry)
   graphs           print Table 1 for --n nodes (default 96)
   simnet           Summit-model comm costs: --n nodes --params P
   check-artifacts  load every artifact and smoke-test via PJRT (needs
@@ -92,6 +93,12 @@ fn main() -> CliResult {
 
     match args.command.as_deref() {
         Some("run") => cmd_run(&args, &cfg),
+        Some("strategies") => {
+            for name in ada_dist::coordinator::strategy::registry().names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
         Some("graphs") => cmd_graphs(&args),
         Some("simnet") => cmd_simnet(&args),
         Some("check-artifacts") => cmd_check_artifacts(&cfg),

@@ -5,10 +5,12 @@
 //! quartile coefficient of dispersion), plus the variance **ranking
 //! analysis** of §3.3 and structured recorders for the figure data.
 
+mod probe;
 mod ranking;
 mod recorder;
 mod variance;
 
+pub use probe::VarianceProbe;
 pub use ranking::{rank_ascending, RankSummary};
 pub use recorder::{IterationRecord, RunRecorder};
 pub use variance::{

@@ -1,0 +1,91 @@
+//! The pre-averaging variance capture, packaged as a reusable probe —
+//! DBench's §3.1.2 instrumentation point, decoupled from the training
+//! loop so any session (or external harness) can sample it.
+
+use super::{gini_coefficient, per_replica_l2_norms_pooled, VarianceReport};
+use crate::exec::ExecEngine;
+use std::ops::Range;
+
+/// Samples cross-replica variance statistics on a fixed iteration
+/// cadence: the whole-model [`VarianceReport`] plus the gini
+/// coefficient of each tracked parameter-tensor slice (Fig. 4).
+///
+/// All norms fan out over the execution engine's persistent pool
+/// ([`per_replica_l2_norms_pooled`]) — deterministic tiled reductions,
+/// bit-identical for any thread count.
+#[derive(Debug, Clone)]
+pub struct VarianceProbe {
+    every: usize,
+    tracked: Vec<Range<usize>>,
+}
+
+impl VarianceProbe {
+    /// Probe sampling every `every` iterations (`0` disables capture)
+    /// over the given tracked flat-vector slices.
+    pub fn new(every: usize, tracked: Vec<Range<usize>>) -> Self {
+        VarianceProbe { every, tracked }
+    }
+
+    /// Whether `iteration` is a capture point.
+    pub fn due(&self, iteration: usize) -> bool {
+        self.every > 0 && iteration % self.every == 0
+    }
+
+    /// Capture at `iteration`: `Some((whole-model report, per-tracked
+    ///-tensor gini))` on cadence, `None` between capture points.
+    pub fn capture(
+        &self,
+        exec: &ExecEngine,
+        replicas: &[Vec<f32>],
+        iteration: usize,
+    ) -> Option<(VarianceReport, Vec<f64>)> {
+        if !self.due(iteration) {
+            return None;
+        }
+        let p = replicas.first().map(Vec::len).unwrap_or(0);
+        let norms = per_replica_l2_norms_pooled(exec, replicas, 0..p);
+        let report = VarianceReport::of(&norms);
+        let per_tensor: Vec<f64> = self
+            .tracked
+            .iter()
+            .map(|range| {
+                let tn = per_replica_l2_norms_pooled(exec, replicas, range.clone());
+                gini_coefficient(&tn)
+            })
+            .collect();
+        Some((report, per_tensor))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replicas() -> Vec<Vec<f32>> {
+        vec![vec![1.0; 64], vec![2.0; 64], vec![4.0; 64]]
+    }
+
+    #[test]
+    fn cadence_is_respected() {
+        let probe = VarianceProbe::new(3, vec![]);
+        let exec = ExecEngine::serial();
+        let reps = replicas();
+        assert!(probe.capture(&exec, &reps, 0).is_some());
+        assert!(probe.capture(&exec, &reps, 1).is_none());
+        assert!(probe.capture(&exec, &reps, 2).is_none());
+        assert!(probe.capture(&exec, &reps, 3).is_some());
+        let off = VarianceProbe::new(0, vec![]);
+        assert!(off.capture(&exec, &reps, 0).is_none());
+    }
+
+    #[test]
+    fn captures_tracked_slices() {
+        let probe = VarianceProbe::new(1, vec![0..32, 32..64]);
+        let exec = ExecEngine::serial();
+        let (report, per_tensor) = probe.capture(&exec, &replicas(), 0).unwrap();
+        assert!(report.gini > 0.0, "unequal norms must show dispersion");
+        assert_eq!(per_tensor.len(), 2);
+        // Constant-per-replica slices: both halves carry the same gini.
+        assert!((per_tensor[0] - per_tensor[1]).abs() < 1e-12);
+    }
+}

@@ -9,9 +9,11 @@
 //! Alongside [`AdaSchedule`] we provide [`StaticSchedule`] (the fixed
 //! graphs DBench benchmarks against), [`OnePeerExponential`] (a rotating
 //! one-neighbor exponential schedule — the communication-minimal point in
-//! the design space), and [`VarianceAdaptive`] (an extension from the
+//! the design space), [`VarianceAdaptive`] (an extension from the
 //! paper's Observation 4: decay `k` when the measured parameter-tensor
-//! variance drops below a threshold instead of on a fixed epoch clock).
+//! variance drops below a threshold instead of on a fixed epoch clock),
+//! and [`FnSchedule`] (a closure adapter, the quickest way to give a
+//! custom registry strategy its own graph sequence).
 
 mod ada;
 mod one_peer;
@@ -89,6 +91,33 @@ impl TopologySchedule for StaticSchedule {
     }
 }
 
+/// A closure as a schedule — the one-liner adapter for custom registry
+/// strategies (`crate::coordinator::strategy`): wrap any
+/// `Fn(epoch) -> CommGraph` without declaring a new type. Feedback
+/// (`observe`) is ignored; implement the trait directly for schedules
+/// that react to training signals.
+pub struct FnSchedule<F: Fn(usize) -> Result<CommGraph> + Send> {
+    label: String,
+    f: F,
+}
+
+impl<F: Fn(usize) -> Result<CommGraph> + Send> FnSchedule<F> {
+    /// Wrap `f` under a report label.
+    pub fn new(label: impl Into<String>, f: F) -> Self {
+        FnSchedule { label: label.into(), f }
+    }
+}
+
+impl<F: Fn(usize) -> Result<CommGraph> + Send> TopologySchedule for FnSchedule<F> {
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+        (self.f)(epoch)
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +129,19 @@ mod tests {
         let g9 = s.graph_for_epoch(9).unwrap();
         assert_eq!(g0.dense_mixing(), g9.dense_mixing());
         assert_eq!(s.name(), "static(torus)");
+    }
+
+    #[test]
+    fn fn_schedule_wraps_a_closure() {
+        let s = FnSchedule::new("alternating", |epoch| {
+            CommGraph::build(
+                if epoch % 2 == 0 { GraphKind::Ring } else { GraphKind::Complete },
+                8,
+            )
+        });
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 2);
+        assert_eq!(s.graph_for_epoch(1).unwrap().degree(), 7);
+        assert_eq!(s.name(), "alternating");
     }
 
     #[test]

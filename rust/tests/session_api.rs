@@ -1,0 +1,337 @@
+//! Integration tests for the open training API: registry round-trips
+//! against the legacy enum dispatch, observer ordering, checkpoint
+//! observers feeding resume, and the SessionPlan pipeline (parallel ==
+//! sequential, custom strategies end-to-end).
+
+use ada_dist::coordinator::strategy::{self, CombineStrategy, StepCtx, StrategyInstance};
+use ada_dist::coordinator::surrogate::SoftmaxRegression;
+use ada_dist::coordinator::{
+    Checkpoint, CheckpointObserver, EpochInfo, Observer, RunSummary, SgdFlavor, TrainConfig,
+    TrainSession, Trainer,
+};
+use ada_dist::data::{ShardStrategy, SyntheticClassification};
+use ada_dist::dbench::{ExperimentSpec, SessionPlan, StrategyRef};
+use ada_dist::error::Result;
+use ada_dist::metrics::IterationRecord;
+use std::sync::{Arc, Mutex};
+
+fn all_flavors() -> Vec<SgdFlavor> {
+    vec![
+        SgdFlavor::CentralizedComplete,
+        SgdFlavor::DecentralizedComplete,
+        SgdFlavor::DecentralizedRing,
+        SgdFlavor::DecentralizedTorus,
+        SgdFlavor::DecentralizedExponential,
+        SgdFlavor::Ada { k0: 5, gamma_k: 2.0 },
+        SgdFlavor::OnePeer,
+        SgdFlavor::VarianceAdaptive {
+            k0: 5,
+            step: 2,
+            threshold: 0.01,
+            patience: 1,
+        },
+    ]
+}
+
+const N: usize = 8;
+
+fn loss_series_and_metric(
+    run: impl FnOnce(&mut SoftmaxRegression) -> (Vec<f64>, f64),
+) -> (Vec<f64>, f64) {
+    let mut model = SoftmaxRegression::new(8, 4, 16, 32, N, 0.9);
+    run(&mut model)
+}
+
+#[test]
+fn registry_round_trip_is_bit_identical_to_enum_dispatch() {
+    // Acceptance criterion: every SgdFlavor name resolves through the
+    // registry and trains one epoch bit-identically to the enum path
+    // (the Trainer facade).
+    let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+    for flavor in all_flavors() {
+        let cfg = TrainConfig::quick(N, 1);
+        let (enum_losses, enum_metric) = loss_series_and_metric(|model| {
+            let mut t = Trainer::new(model, cfg.clone());
+            let (rec, s) = t.run(&data, &flavor).unwrap();
+            (
+                rec.records().iter().map(|r| r.train_loss).collect(),
+                s.final_eval.metric,
+            )
+        });
+        // The open path: resolve the paper name against the registry by
+        // string, hand the instance to the session builder.
+        let name = flavor.name();
+        let (reg_losses, reg_metric) = loss_series_and_metric(|model| {
+            let inst = strategy::registry()
+                .resolve(&name, &flavor.params(N))
+                .unwrap_or_else(|e| panic!("{name} must resolve: {e}"));
+            let session = TrainSession::builder(model, cfg.clone())
+                .strategy(inst)
+                .build()
+                .unwrap();
+            let (rec, s) = session.run(&data).unwrap();
+            (
+                rec.records().iter().map(|r| r.train_loss).collect(),
+                s.final_eval.metric,
+            )
+        });
+        assert_eq!(enum_losses, reg_losses, "{name}: loss series must be bit-identical");
+        assert_eq!(enum_metric, reg_metric, "{name}: final metric must be bit-identical");
+        assert!(!enum_losses.is_empty(), "{name}: must have trained");
+    }
+}
+
+#[test]
+fn fused_mode_round_trips_through_the_registry_too() {
+    let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 23);
+    let mut cfg = TrainConfig::quick(N, 2);
+    cfg.fused = true;
+    let flavor = SgdFlavor::DecentralizedRing;
+    let (a, ma) = loss_series_and_metric(|model| {
+        let (rec, s) = Trainer::new(model, cfg.clone()).run(&data, &flavor).unwrap();
+        (rec.records().iter().map(|r| r.train_loss).collect(), s.final_eval.metric)
+    });
+    let (b, mb) = loss_series_and_metric(|model| {
+        let inst = strategy::registry().resolve("D_ring", &flavor.params(N)).unwrap();
+        let (rec, s) = TrainSession::builder(model, cfg.clone())
+            .strategy(inst)
+            .build()
+            .unwrap()
+            .run(&data)
+            .unwrap();
+        (rec.records().iter().map(|r| r.train_loss).collect(), s.final_eval.metric)
+    });
+    assert_eq!(a, b);
+    assert_eq!(ma, mb);
+}
+
+/// Logs every hook invocation under a tag into a shared trace.
+struct TraceObserver {
+    tag: &'static str,
+    log: Arc<Mutex<Vec<String>>>,
+}
+
+impl Observer for TraceObserver {
+    fn on_iteration(&mut self, rec: &IterationRecord, replicas: &[Vec<f32>]) -> Result<()> {
+        assert!(!replicas.is_empty(), "observers see live replica state");
+        self.log
+            .lock()
+            .unwrap()
+            .push(format!("{}:iter:{}", self.tag, rec.iteration));
+        Ok(())
+    }
+
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<()> {
+        self.log
+            .lock()
+            .unwrap()
+            .push(format!("{}:epoch:{}", self.tag, info.epoch));
+        Ok(())
+    }
+
+    fn on_complete(&mut self, summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+        self.log
+            .lock()
+            .unwrap()
+            .push(format!("{}:done:{}", self.tag, summary.flavor));
+        Ok(())
+    }
+}
+
+#[test]
+fn observers_fire_in_registration_order_with_epoch_and_completion_hooks() {
+    let data = SyntheticClassification::generate(512, 8, 4, 3.0, 7);
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let mut cfg = TrainConfig::quick(4, 2);
+    cfg.max_iters_per_epoch = Some(3);
+    // Equal shards so the capped 3 iterations/epoch are guaranteed (a
+    // skewed Dirichlet shard could fall below 3 batches).
+    cfg.shard = ShardStrategy::Iid;
+    let mut model = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.9);
+    let session = TrainSession::builder(&mut model, cfg)
+        .flavor(&SgdFlavor::DecentralizedRing)
+        .unwrap()
+        .observer(Box::new(TraceObserver { tag: "A", log: log.clone() }))
+        .observer(Box::new(TraceObserver { tag: "B", log: log.clone() }))
+        .build()
+        .unwrap();
+    let (rec, _) = session.run(&data).unwrap();
+    assert_eq!(rec.records().len(), 6, "2 epochs × 3 capped iterations");
+
+    let mut expected = Vec::new();
+    for epoch in 0..2usize {
+        for b in 0..3usize {
+            let it = epoch * 3 + b;
+            expected.push(format!("A:iter:{it}"));
+            expected.push(format!("B:iter:{it}"));
+        }
+        expected.push(format!("A:epoch:{epoch}"));
+        expected.push(format!("B:epoch:{epoch}"));
+    }
+    expected.push("A:done:D_ring".to_string());
+    expected.push("B:done:D_ring".to_string());
+    assert_eq!(*log.lock().unwrap(), expected);
+}
+
+#[test]
+fn checkpoint_observer_feeds_trainer_resume() {
+    let data = SyntheticClassification::generate(512, 8, 4, 3.0, 77);
+    let dir = std::env::temp_dir().join(format!("ada_session_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let flavor = SgdFlavor::DecentralizedTorus;
+    let mut cfg = TrainConfig::quick(4, 3);
+    cfg.max_iters_per_epoch = Some(4);
+    cfg.shard = ShardStrategy::Iid;
+
+    let mut model = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.9);
+    let session = TrainSession::builder(&mut model, cfg.clone())
+        .flavor(&flavor)
+        .unwrap()
+        .observer(Box::new(CheckpointObserver::new(&dir, 2)))
+        .build()
+        .unwrap();
+    let (_, s1) = session.run(&data).unwrap();
+    assert!(!s1.diverged);
+
+    let path = dir.join("D_torus_epoch0002.ckpt");
+    let ckpt = Checkpoint::load(&path).expect("observer must have checkpointed epoch 2");
+    assert_eq!(ckpt.epoch, 2);
+    assert_eq!(ckpt.flavor, "D_torus");
+
+    let mut cfg6 = cfg.clone();
+    cfg6.epochs = 6;
+    let mut model2 = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.9);
+    let (rec, s2) = Trainer::new(&mut model2, cfg6).resume(&data, &flavor, ckpt).unwrap();
+    assert_eq!(rec.records().first().map(|r| r.epoch), Some(2), "resume starts at saved epoch");
+    assert!(!s2.diverged);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn tiny_spec() -> ExperimentSpec {
+    let mut s = ExperimentSpec::resnet20_analog();
+    s.scales = vec![4, 6];
+    s.epochs = 2;
+    s.max_iters_per_epoch = Some(4);
+    s.threads = 1;
+    s.flavors = vec![SgdFlavor::DecentralizedRing, SgdFlavor::CentralizedComplete];
+    s
+}
+
+#[test]
+fn parallel_and_sequential_plans_produce_identical_cells() {
+    let spec = tiny_spec();
+    let sequential = {
+        let plan = SessionPlan::from_spec(&spec);
+        plan.run().unwrap()
+    };
+    let parallel = {
+        let mut plan = SessionPlan::from_spec(&spec);
+        plan.parallel = 4;
+        plan.run().unwrap()
+    };
+    assert_eq!(sequential.len(), parallel.len());
+    for (a, b) in sequential.iter().zip(&parallel) {
+        assert_eq!(a.scale, b.scale);
+        assert_eq!(a.flavor, b.flavor);
+        assert_eq!(a.summary.final_eval.metric, b.summary.final_eval.metric);
+        assert_eq!(a.summary.bytes_per_node, b.summary.bytes_per_node);
+        let la: Vec<f64> = a.recorder.records().iter().map(|r| r.train_loss).collect();
+        let lb: Vec<f64> = b.recorder.records().iter().map(|r| r.train_loss).collect();
+        assert_eq!(la, lb, "{} @ {}: loss series must be bit-identical", a.flavor, a.scale);
+    }
+}
+
+/// A genuinely new scenario defined entirely in this test file: local
+/// SGD with periodic averaging (sync every `period` iterations).
+struct PeriodicAverage {
+    period: usize,
+    rounds: usize,
+}
+
+impl CombineStrategy for PeriodicAverage {
+    fn name(&self) -> &str {
+        "periodic_average"
+    }
+
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            loss_sum += ctx.model.local_step(w, &mut replicas[w], &batch, ctx.lr)? as f64;
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut [Vec<f32>],
+    ) -> Result<(usize, u64)> {
+        self.rounds += 1;
+        if self.rounds % self.period != 0 {
+            return Ok((0, 0));
+        }
+        let g = ctx.graph.expect("schedule provides a graph");
+        ctx.engine.mix(g, replicas);
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}
+
+#[test]
+fn custom_strategy_trains_end_to_end_from_dbench() {
+    // Acceptance criterion: register a new CombineStrategy and train it
+    // through the experiment pipeline without modifying coordinator/.
+    let mut spec = tiny_spec();
+    spec.scales = vec![6];
+    spec.epochs = 4;
+    spec.flavors = vec![SgdFlavor::DecentralizedComplete];
+    let mut plan = SessionPlan::from_spec(&spec);
+    plan.registry.register("D_periodic", |p| {
+        Ok(StrategyInstance {
+            label: "D_periodic".into(),
+            schedule: ada_dist::coordinator::SgdFlavor::DecentralizedComplete
+                .schedule(p.n_workers)?,
+            k_neighbors: p.n_workers.saturating_sub(1),
+            combine: Some(Box::new(PeriodicAverage { period: 2, rounds: 0 })),
+        })
+    });
+    plan.push_cell(
+        6,
+        spec.seed,
+        StrategyRef::named("D_periodic"),
+        spec.train_config(6),
+    );
+    let cells = plan.run().unwrap();
+    assert_eq!(cells.len(), 2);
+    let baseline = &cells[0];
+    let custom = &cells[1];
+    assert_eq!(custom.flavor, "D_periodic");
+    assert!(!custom.summary.diverged, "custom strategy must train stably");
+    assert!(
+        custom.summary.final_eval.metric > 0.15,
+        "custom strategy must beat chance (0.1): {}",
+        custom.summary.final_eval.metric
+    );
+    assert!(
+        custom.summary.bytes_per_node < baseline.summary.bytes_per_node,
+        "syncing every 2nd round must cut communication: {} vs {}",
+        custom.summary.bytes_per_node,
+        baseline.summary.bytes_per_node
+    );
+}
+
+#[test]
+fn plan_resumes_from_persisted_cells_even_in_parallel_mode() {
+    let dir = std::env::temp_dir().join(format!("ada_plan_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = tiny_spec();
+    let mut plan = SessionPlan::from_spec(&spec);
+    plan.resume_dir = Some(dir.clone());
+    let first = plan.run().unwrap();
+    plan.parallel = 2;
+    let second = plan.run().unwrap();
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.summary.final_eval.metric, b.summary.final_eval.metric);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
