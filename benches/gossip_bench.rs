@@ -10,19 +10,24 @@
 //!   4. **reduce vs serial variance**: the trainer's per-replica L2
 //!      variance capture as a pooled deterministic tiled reduction
 //!      against the old serial O(n·P) pass
-//!   5. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
+//!   5. **simd vs scalar**: the explicit AVX2 kernel layer against its
+//!      fixed-8-lane scalar fallback (axpy, the fused mix_step, and the
+//!      sum-of-squares reduction) at P ∈ {2^16 … 2^22} — results are
+//!      bit-identical, so the sweep is pure wall-clock
+//!   6. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
-//! Sections 2–4 are written to `BENCH_gossip.json` at the repo root.
-//! Results are bit-identical across thread counts (asserted in
-//! `rust/tests/exec_determinism.rs`), so every sweep is purely
-//! wall-clock.
+//! Sections 2–5 are written to `BENCH_gossip.json` at the repo root.
+//! Results are bit-identical across thread counts and across the
+//! SIMD/scalar paths (asserted in `rust/tests/exec_determinism.rs`), so
+//! every sweep is purely wall-clock.
 //!
 //! Run: `cargo bench --bench gossip_bench`.
 //! Knobs: `ADA_BENCH_ITERS` (default 30), `ADA_BENCH_FULL=1` (adds the
 //! paper-scale n=64, P=1M cells to the sweep; they are included by
-//! default too — the flag raises their iteration count).
+//! default too — the flag raises their iteration count), `ADA_SIMD=
+//! scalar` (force the fallback everywhere).
 
-use ada_dist::exec::ExecEngine;
+use ada_dist::exec::{simd, ExecEngine};
 use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::metrics::{l2_norm, per_replica_l2_norms_pooled, VarianceReport};
@@ -30,12 +35,19 @@ use ada_dist::optim::SgdState;
 use ada_dist::util::bench::{bench, env_flag, env_usize, fmt_duration, Table};
 use ada_dist::util::json::Value;
 use ada_dist::util::rng::Rng;
+use ada_dist::ReplicaMatrix;
 
-fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+fn replicas(n: usize, p: usize, seed: u64) -> ReplicaMatrix {
     let mut rng = Rng::seed_from_u64(seed);
-    (0..n)
+    let rows: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
-        .collect()
+        .collect();
+    ReplicaMatrix::from_rows(&rows)
+}
+
+fn flat(p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect()
 }
 
 fn main() {
@@ -44,7 +56,8 @@ fn main() {
     let sweep = threads_sweep(iters);
     let pool = pool_vs_scoped(iters);
     let reduce = reduce_vs_serial_variance(iters);
-    write_bench_json(sweep, pool, reduce);
+    let simd_cells = simd_vs_scalar(iters);
+    write_bench_json(sweep, pool, reduce, simd_cells);
     #[cfg(feature = "pjrt")]
     hlo_section(iters);
     #[cfg(not(feature = "pjrt"))]
@@ -74,8 +87,9 @@ fn native_vs_dense(iters: usize) {
                 format!("{:.2}", touched / tm.median.as_secs_f64() / 1e9),
             ]);
             if p <= 100_000 {
+                let rows = src.to_vecs();
                 let tm = bench(1, (iters / 3).max(3), || {
-                    std::hint::black_box(mix_dense_reference(&g, &src));
+                    std::hint::black_box(mix_dense_reference(&g, &rows));
                 });
                 t.row(vec![
                     kind.to_string(),
@@ -91,8 +105,8 @@ fn native_vs_dense(iters: usize) {
     println!("{}", t.render());
 }
 
-/// The tentpole measurement: serial-vs-parallel SpMM and fused-vs-split
-/// gossip+SGD over threads × graph × P, recorded to BENCH_gossip.json.
+/// Serial-vs-parallel SpMM and fused-vs-split gossip+SGD over
+/// threads × graph × P, recorded to BENCH_gossip.json.
 fn threads_sweep(iters: usize) -> Vec<Value> {
     let full = env_flag("ADA_BENCH_FULL");
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
@@ -119,7 +133,7 @@ fn threads_sweep(iters: usize) -> Vec<Value> {
             let g = CommGraph::build(kind, n).unwrap();
             let touched = ((g.degree() + 2) * n * p * 4) as f64;
             let src = replicas(n, p, 1);
-            let grads = replicas(n, p, 2);
+            let shared_grad = flat(p, 2);
             let mut serial_mix_s = f64::NAN;
             for threads in thread_counts {
                 // -- plain mix --------------------------------------
@@ -141,8 +155,8 @@ fn threads_sweep(iters: usize) -> Vec<Value> {
                     (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
                 let t_split = bench(1, cell_iters, || {
                     split_engine.mix(&g, &mut split_reps);
-                    for (r, s) in split_reps.iter_mut().zip(split_states.iter_mut()) {
-                        s.step(r, &grads[0], 0.01);
+                    for (w, s) in split_states.iter_mut().enumerate() {
+                        s.step(split_reps.row_mut(w), &shared_grad, 0.01);
                     }
                 });
 
@@ -151,7 +165,7 @@ fn threads_sweep(iters: usize) -> Vec<Value> {
                 let mut fused_reps = src.clone();
                 let mut fused_states: Vec<SgdState> =
                     (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
-                let gs: Vec<Vec<f32>> = (0..n).map(|_| grads[0].clone()).collect();
+                let gs = ReplicaMatrix::broadcast(n, &shared_grad);
                 let t_fused = bench(1, cell_iters, || {
                     fused_engine.mix_step(&g, &mut fused_reps, &gs, &mut fused_states, 0.01);
                 });
@@ -256,7 +270,7 @@ fn reduce_vs_serial_variance(iters: usize) -> Vec<Value> {
     let (n, p) = (64usize, 262_144usize);
     let reps = replicas(n, p, 3);
     let serial = bench(2, iters, || {
-        let norms: Vec<f64> = reps.iter().map(|r| l2_norm(r)).collect();
+        let norms: Vec<f64> = reps.rows().map(l2_norm).collect();
         std::hint::black_box(VarianceReport::of(&norms));
     });
     let serial_s = serial.median.as_secs_f64();
@@ -292,7 +306,100 @@ fn reduce_vs_serial_variance(iters: usize) -> Vec<Value> {
     cells
 }
 
-fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>) {
+/// The explicit SIMD layer vs its fixed-8-lane scalar fallback: axpy,
+/// the fused mix_step (single-threaded, so the measurement isolates the
+/// kernels, not the fan-out), and the f64 sum-of-squares reduction, at
+/// P from 2^16 to 2^22. Both paths produce identical bits; the sweep
+/// measures what the explicit vectorization buys over the fallback (on
+/// AVX2 hosts — elsewhere both rows time the same scalar code and
+/// `simd_active` records it).
+fn simd_vs_scalar(iters: usize) -> Vec<Value> {
+    let active = simd::simd_active();
+    println!("== explicit SIMD layer vs fixed-8-lane scalar fallback (avx2 active: {active}) ==");
+    let n = 8usize;
+    let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+    let mut t = Table::new(&["kernel", "P", "scalar", "simd", "speedup"]);
+    let mut cells = Vec::new();
+    for p in [1usize << 16, 1 << 18, 1 << 20, 1 << 22] {
+        // Big vectors get fewer iterations to keep the section bounded.
+        let kernel_iters = if p >= 1 << 21 { (iters / 3).max(3) } else { iters };
+
+        // -- axpy ------------------------------------------------------
+        let src = flat(p, 4);
+        let mut out = flat(p, 5);
+        let mut time_axpy = |scalar: bool| {
+            simd::force_scalar(scalar);
+            let tm = bench(2, kernel_iters, || {
+                simd::axpy(&mut out, &src, 1.000_001);
+                std::hint::black_box(&mut out);
+            });
+            simd::force_scalar(false);
+            tm
+        };
+        let axpy_scalar = time_axpy(true);
+        let axpy_simd = time_axpy(false);
+
+        // -- fused mix_step, 1 thread ---------------------------------
+        let reps0 = replicas(n, p, 6);
+        let gs = ReplicaMatrix::broadcast(n, &flat(p, 7));
+        let time_mix = |scalar: bool| {
+            simd::force_scalar(scalar);
+            let mut engine = GossipEngine::new();
+            let mut reps = reps0.clone();
+            let mut states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, 0.9, 0.0)).collect();
+            let tm = bench(1, kernel_iters, || {
+                engine.mix_step(&g, &mut reps, &gs, &mut states, 0.01);
+            });
+            simd::force_scalar(false);
+            tm
+        };
+        let mix_scalar = time_mix(true);
+        let mix_simd = time_mix(false);
+
+        // -- sum-of-squares reduction ---------------------------------
+        let data = flat(p, 8);
+        let time_reduce = |scalar: bool| {
+            simd::force_scalar(scalar);
+            let tm = bench(2, kernel_iters, || {
+                std::hint::black_box(simd::sumsq_f64(&data));
+            });
+            simd::force_scalar(false);
+            tm
+        };
+        let red_scalar = time_reduce(true);
+        let red_simd = time_reduce(false);
+
+        for (kernel, ts, tv) in [
+            ("axpy", axpy_scalar, axpy_simd),
+            ("mix_step", mix_scalar, mix_simd),
+            ("sumsq_f64", red_scalar, red_simd),
+        ] {
+            let (s, v) = (ts.median.as_secs_f64(), tv.median.as_secs_f64());
+            t.row(vec![
+                kernel.into(),
+                p.to_string(),
+                fmt_duration(ts.median),
+                fmt_duration(tv.median),
+                format!("{:.2}x", s / v),
+            ]);
+            cells.push(Value::obj(vec![
+                ("kernel", Value::Str(kernel.into())),
+                ("p", Value::Num(p as f64)),
+                ("scalar_median_s", Value::Num(s)),
+                ("simd_median_s", Value::Num(v)),
+                ("simd_speedup", Value::Num(s / v)),
+                ("simd_active", Value::Bool(active)),
+                ("iters", Value::Num(kernel_iters as f64)),
+            ]));
+        }
+    }
+    println!("{}", t.render());
+    println!("(both paths are bit-identical — asserted in rust/tests/exec_determinism.rs)");
+    cells
+}
+
+fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>, simd: Vec<Value>) {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let doc = Value::obj(vec![
         ("status", Value::Str("measured".into())),
@@ -301,6 +408,7 @@ fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>) {
         ("sweep", Value::Arr(sweep)),
         ("pool_vs_scoped", Value::Arr(pool)),
         ("reduce_vs_serial_variance", Value::Arr(reduce)),
+        ("simd_vs_scalar", Value::Arr(simd)),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
     match std::fs::write(&out, doc.to_string()) {
@@ -324,7 +432,7 @@ fn hlo_section(iters: usize) {
             };
             for kind in [GraphKind::Ring, GraphKind::Complete] {
                 let g = CommGraph::build(kind, n).unwrap();
-                let mut reps = replicas(n, p, 2);
+                let mut reps = replicas(n, p, 2).to_vecs();
                 let tm = bench(2, (iters / 3).max(3), || {
                     kernel.mix(&g, &mut reps).unwrap();
                 });

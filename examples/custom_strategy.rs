@@ -18,6 +18,7 @@ use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, StrategyRef};
 use ada_dist::error::Result;
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::topology::FnSchedule;
+use ada_dist::ReplicaMatrix;
 
 /// How many local steps between averaging rounds.
 const PERIOD: usize = 4;
@@ -35,11 +36,11 @@ impl CombineStrategy for LocalSgd {
         "local_sgd"
     }
 
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut ReplicaMatrix) -> Result<f64> {
         let mut loss_sum = 0.0f64;
         for (w, loader) in ctx.loaders.iter().enumerate() {
             let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
-            loss_sum += ctx.model.local_step(w, &mut replicas[w], &batch, ctx.lr)? as f64;
+            loss_sum += ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)? as f64;
         }
         Ok(loss_sum / ctx.n as f64)
     }
@@ -47,7 +48,7 @@ impl CombineStrategy for LocalSgd {
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        replicas: &mut [Vec<f32>],
+        replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         self.rounds += 1;
         if self.rounds % self.period != 0 {

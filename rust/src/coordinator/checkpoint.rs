@@ -6,10 +6,15 @@
 //! Format: one JSON header line (versioned, self-describing), then the
 //! replicas as raw little-endian f32, worker-major. A 12M-param × 64
 //! worker checkpoint is ~3 GB, so the format is written streaming and
-//! read with exact preallocation.
+//! read with exact preallocation. The in-memory state is the flat
+//! [`ReplicaMatrix`]; only the `p` live floats of each row hit the file
+//! — the store's alignment padding is a memory-layout detail, never a
+//! wire-format one, so checkpoints stay byte-compatible with the
+//! pre-refactor `Vec<Vec<f32>>` writer.
 
 use crate::error::{AdaError, Result};
 use crate::util::json::Value;
+use crate::util::matrix::ReplicaMatrix;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -25,8 +30,8 @@ pub struct Checkpoint {
     pub flavor: String,
     /// Run seed (resume must keep it for deterministic data order).
     pub seed: u64,
-    /// Per-worker flat parameters.
-    pub replicas: Vec<Vec<f32>>,
+    /// The full replica state (equal parameter counts are structural).
+    pub replicas: ReplicaMatrix,
 }
 
 impl Checkpoint {
@@ -35,12 +40,7 @@ impl Checkpoint {
         if self.replicas.is_empty() {
             return Err(AdaError::Coordinator("cannot checkpoint 0 replicas".into()));
         }
-        let p = self.replicas[0].len();
-        if self.replicas.iter().any(|r| r.len() != p) {
-            return Err(AdaError::Coordinator(
-                "replicas must have equal parameter counts".into(),
-            ));
-        }
+        let p = self.replicas.p();
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -51,12 +51,13 @@ impl Checkpoint {
             ("epoch", Value::Num(self.epoch as f64)),
             ("flavor", Value::Str(self.flavor.clone())),
             ("seed", Value::Num(self.seed as f64)),
-            ("n_workers", Value::Num(self.replicas.len() as f64)),
+            ("n_workers", Value::Num(self.replicas.n() as f64)),
             ("param_count", Value::Num(p as f64)),
         ]);
         writeln!(w, "{}", header.to_string())?;
-        for r in &self.replicas {
-            // Bulk little-endian write, one replica at a time.
+        for r in self.replicas.rows() {
+            // Bulk little-endian write, one replica row at a time (live
+            // elements only — stride padding never reaches the file).
             let mut bytes = Vec::with_capacity(r.len() * 4);
             for &v in r {
                 bytes.extend_from_slice(&v.to_le_bytes());
@@ -99,17 +100,15 @@ impl Checkpoint {
         }
         let n = header.usize_field("n_workers")?;
         let p = header.usize_field("param_count")?;
-        let mut replicas = Vec::with_capacity(n);
+        let mut replicas = ReplicaMatrix::zeros(n, p);
         let mut buf = vec![0u8; p * 4];
         for i in 0..n {
             r.read_exact(&mut buf).map_err(|_| {
                 AdaError::Coordinator(format!("truncated checkpoint at replica {i}"))
             })?;
-            let mut rep = Vec::with_capacity(p);
-            for chunk in buf.chunks_exact(4) {
-                rep.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            for (dst, chunk) in replicas.row_mut(i).iter_mut().zip(buf.chunks_exact(4)) {
+                *dst = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
             }
-            replicas.push(rep);
         }
         Ok(Checkpoint {
             epoch: header.usize_field("epoch")?,
@@ -127,13 +126,14 @@ mod tests {
 
     fn sample(n: usize, p: usize) -> Checkpoint {
         let mut rng = crate::util::rng::Rng::seed_from_u64(3);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.range_f32(-2.0, 2.0)).collect())
+            .collect();
         Checkpoint {
             epoch: 7,
             flavor: "D_adaptive".into(),
             seed: 42,
-            replicas: (0..n)
-                .map(|_| (0..p).map(|_| rng.range_f32(-2.0, 2.0)).collect())
-                .collect(),
+            replicas: crate::util::matrix::ReplicaMatrix::from_rows(&rows),
         }
     }
 
@@ -145,6 +145,23 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stride_padding_never_reaches_the_file() {
+        // 1234 live floats pad to a 1248-float stride in memory; the
+        // file must hold exactly header + n·p·4 bytes, byte-compatible
+        // with the pre-refactor row-vector writer.
+        let dir = scratch_dir("ckpt_pad").unwrap();
+        let path = dir.join("run.ckpt");
+        let (n, p) = (6usize, 1234usize);
+        let ck = sample(n, p);
+        assert!(ck.replicas.stride() > p, "test needs a padded stride");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header_len = bytes.iter().position(|&b| b == b'\n').unwrap() + 1;
+        assert_eq!(bytes.len() - header_len, n * p * 4, "payload is live floats only");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -204,7 +221,10 @@ mod tests {
             epoch: 3,
             flavor: flavor.name(),
             seed: cfg.seed,
-            replicas: vec![model_params(&data, 4, &cfg, &flavor); 4],
+            replicas: crate::util::matrix::ReplicaMatrix::broadcast(
+                4,
+                &model_params(&data, 4, &cfg, &flavor),
+            ),
         };
         ck.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
@@ -258,7 +278,7 @@ mod tests {
             epoch: 1,
             flavor: "D_ring".into(),
             seed: 42,
-            replicas: vec![vec![0.0; 42]; 4],
+            replicas: crate::util::matrix::ReplicaMatrix::zeros(4, 42),
         };
         assert!(trainer
             .resume(&data, &SgdFlavor::DecentralizedTorus, ck)
@@ -266,10 +286,16 @@ mod tests {
     }
 
     #[test]
-    fn rejects_inconsistent_replicas() {
+    fn rejects_empty_checkpoint() {
+        // Raggedness is structurally impossible in the flat store; the
+        // remaining invalid shape is the empty one.
         let dir = scratch_dir("ckpt4").unwrap();
-        let mut ck = sample(3, 10);
-        ck.replicas[1].pop();
+        let ck = Checkpoint {
+            epoch: 0,
+            flavor: "D_ring".into(),
+            seed: 1,
+            replicas: crate::util::matrix::ReplicaMatrix::zeros(0, 0),
+        };
         assert!(ck.save(&dir.join("x.ckpt")).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -53,7 +53,7 @@ impl LocalModel for HloModel {
     fn local_step(
         &mut self,
         _worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32> {

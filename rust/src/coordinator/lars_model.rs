@@ -66,7 +66,7 @@ impl<M: LocalModel> LocalModel for LarsWrapped<M> {
     fn local_step(
         &mut self,
         worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32> {

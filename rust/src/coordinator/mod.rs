@@ -64,12 +64,14 @@ pub trait LocalModel {
     /// Fresh parameters from a seed (identical across workers at start,
     /// like the paper's identical model replicas).
     fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
-    /// Fused local step (fwd + bwd + update) for `worker`; `params`
-    /// updated in place; returns the batch mean loss.
+    /// Fused local step (fwd + bwd + update) for `worker`; `params` —
+    /// typically one row view of the run's
+    /// [`crate::util::matrix::ReplicaMatrix`] — updated in place;
+    /// returns the batch mean loss.
     fn local_step(
         &mut self,
         worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32>;

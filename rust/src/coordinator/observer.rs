@@ -14,6 +14,7 @@ use super::trainer::RunSummary;
 use super::Checkpoint;
 use crate::error::Result;
 use crate::metrics::{IterationRecord, RunRecorder};
+use crate::util::matrix::ReplicaMatrix;
 use std::path::PathBuf;
 
 /// End-of-epoch context handed to [`Observer::on_epoch`].
@@ -24,8 +25,9 @@ pub struct EpochInfo<'a> {
     /// probe was off this epoch) — the same signal the topology
     /// schedule's `observe` consumes.
     pub mean_gini: Option<f64>,
-    /// Current replica parameters (post-averaging).
-    pub replicas: &'a [Vec<f32>],
+    /// Current replica parameters (post-averaging), as the run's flat
+    /// replica store.
+    pub replicas: &'a ReplicaMatrix,
     /// Run label (`C_complete`, `D_ring`, …).
     pub label: &'a str,
     /// Run seed (checkpoint observers persist it for exact resume).
@@ -37,7 +39,7 @@ pub struct EpochInfo<'a> {
 /// run by returning an error (e.g. a full disk under a checkpointer).
 pub trait Observer: Send {
     /// One training iteration finished and its record is final.
-    fn on_iteration(&mut self, _rec: &IterationRecord, _replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_iteration(&mut self, _rec: &IterationRecord, _replicas: &ReplicaMatrix) -> Result<()> {
         Ok(())
     }
 
@@ -47,7 +49,7 @@ pub trait Observer: Send {
     }
 
     /// The run finished and was evaluated.
-    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
         Ok(())
     }
 }
@@ -57,11 +59,11 @@ pub trait Observer: Send {
 /// run completes. The session drives it through this impl, so custom
 /// observers and the built-in recording share one code path.
 impl Observer for RunRecorder {
-    fn on_iteration(&mut self, rec: &IterationRecord, _replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_iteration(&mut self, rec: &IterationRecord, _replicas: &ReplicaMatrix) -> Result<()> {
         self.push(rec.clone())
     }
 
-    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_complete(&mut self, _summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
         self.flush()
     }
 }
@@ -105,7 +107,7 @@ impl Observer for CheckpointObserver {
             epoch: info.epoch + 1,
             flavor: info.label.to_string(),
             seed: info.seed,
-            replicas: info.replicas.to_vec(),
+            replicas: info.replicas.clone(),
         };
         let path = self
             .dir
@@ -138,7 +140,7 @@ mod tests {
     #[test]
     fn recorder_observer_accumulates_records() {
         let mut r = RunRecorder::in_memory("D_ring");
-        let replicas = vec![vec![0.0f32; 4]; 2];
+        let replicas = ReplicaMatrix::zeros(2, 4);
         Observer::on_iteration(&mut r, &rec(0), &replicas).unwrap();
         Observer::on_iteration(&mut r, &rec(1), &replicas).unwrap();
         assert_eq!(r.records().len(), 2);
@@ -149,7 +151,7 @@ mod tests {
     fn checkpoint_observer_writes_on_cadence() {
         let dir = crate::util::scratch_dir("ckpt_obs").unwrap();
         let mut obs = CheckpointObserver::new(&dir, 2);
-        let replicas = vec![vec![1.0f32; 8]; 3];
+        let replicas = ReplicaMatrix::broadcast(3, &[1.0f32; 8]);
         for epoch in 0..4 {
             obs.on_epoch(&EpochInfo {
                 epoch,

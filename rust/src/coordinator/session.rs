@@ -33,6 +33,7 @@ use crate::gossip::{mean_model, GossipEngine};
 use crate::metrics::{IterationRecord, RunRecorder, VarianceProbe, VarianceReport};
 use crate::runtime::ModelKind;
 use crate::topology::TopologySchedule;
+use crate::util::matrix::ReplicaMatrix;
 
 /// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`],
 /// pick a strategy (by [`SgdFlavor`] or custom [`StrategyInstance`]),
@@ -47,7 +48,7 @@ pub struct SessionBuilder<'m> {
     k_neighbors: usize,
     combine: Option<Box<dyn CombineStrategy>>,
     observers: Vec<Box<dyn Observer>>,
-    initial_replicas: Option<Vec<Vec<f32>>>,
+    initial_replicas: Option<ReplicaMatrix>,
     start_epoch: usize,
 }
 
@@ -79,7 +80,7 @@ impl<'m> SessionBuilder<'m> {
 
     /// Resume from saved replica state at `epoch` (shapes validated at
     /// run time against the dataset/model pair).
-    pub fn start_from(mut self, epoch: usize, replicas: Vec<Vec<f32>>) -> Self {
+    pub fn start_from(mut self, epoch: usize, replicas: ReplicaMatrix) -> Self {
         self.start_epoch = epoch;
         self.initial_replicas = Some(replicas);
         self
@@ -134,7 +135,7 @@ pub struct TrainSession<'m> {
     k_neighbors: usize,
     combine: Box<dyn CombineStrategy>,
     observers: Vec<Box<dyn Observer>>,
-    initial_replicas: Option<Vec<Vec<f32>>>,
+    initial_replicas: Option<ReplicaMatrix>,
     start_epoch: usize,
 }
 
@@ -210,21 +211,24 @@ impl<'m> TrainSession<'m> {
             .collect();
         let probe = VarianceProbe::new(cfg.metrics_every, tracked);
 
-        // Identical initial replicas (§2.2's setup), or restored state.
-        let mut replicas: Vec<Vec<f32>> = match self.initial_replicas.take() {
+        // Identical initial replicas (§2.2's setup), or restored state,
+        // in the flat 64-byte-aligned replica store every kernel below
+        // operates on.
+        let mut replicas: ReplicaMatrix = match self.initial_replicas.take() {
             Some(reps) => {
-                if reps.len() != n || reps.iter().any(|r| r.len() != p) {
+                if reps.n() != n || reps.p() != p {
                     return Err(AdaError::Coordinator(format!(
-                        "checkpoint shape ({} replicas) does not match run \
-                         (n={n}, P={p})",
-                        reps.len()
+                        "checkpoint shape ({} replicas × {} params) does not \
+                         match run (n={n}, P={p})",
+                        reps.n(),
+                        reps.p()
                     )));
                 }
                 reps
             }
             None => {
                 let init = self.model.init_params(cfg.seed as i32)?;
-                vec![init; n]
+                ReplicaMatrix::broadcast(n, &init)
             }
         };
         let mut engine = GossipEngine::with_threads(cfg.threads);
@@ -395,7 +399,7 @@ pub(crate) fn evaluate_mean(
     model: &dyn LocalModel,
     dataset: &dyn Dataset,
     test_idx: &[usize],
-    replicas: &[Vec<f32>],
+    replicas: &ReplicaMatrix,
     exec: &ExecEngine,
 ) -> Result<EvalResult> {
     let mean = mean_model(exec, replicas);

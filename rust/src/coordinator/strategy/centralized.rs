@@ -3,6 +3,7 @@
 use super::{CombineStrategy, StepCtx};
 use crate::error::Result;
 use crate::optim::SgdState;
+use crate::util::matrix::ReplicaMatrix;
 
 /// Centralized gradient averaging with one shared momentum buffer (the
 /// PyTorch-DDP baseline of §3.1.2): every iteration computes gradients
@@ -42,7 +43,11 @@ impl CombineStrategy for CentralizedAverage {
         Ok(())
     }
 
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
         let n = ctx.n;
         for a in self.grad_acc.iter_mut() {
             *a = 0.0;
@@ -50,7 +55,7 @@ impl CombineStrategy for CentralizedAverage {
         let mut loss_sum = 0.0f64;
         for (w, loader) in ctx.loaders.iter().enumerate() {
             let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
-            let (loss, g) = ctx.model.loss_and_grad(&replicas[w], &batch)?;
+            let (loss, g) = ctx.model.loss_and_grad(replicas.row(w), &batch)?;
             loss_sum += loss as f64;
             for (a, &gi) in self.grad_acc.iter_mut().zip(&g) {
                 *a += gi;
@@ -60,18 +65,15 @@ impl CombineStrategy for CentralizedAverage {
         for a in self.grad_acc.iter_mut() {
             *a *= inv;
         }
-        self.state.step(&mut replicas[0], &self.grad_acc, ctx.lr);
-        let (head, tail) = replicas.split_at_mut(1);
-        for r in tail {
-            r.copy_from_slice(&head[0]);
-        }
+        self.state.step(replicas.row_mut(0), &self.grad_acc, ctx.lr);
+        replicas.broadcast_first_row();
         Ok(loss_sum / n as f64)
     }
 
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        _replicas: &mut [Vec<f32>],
+        _replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         // Ring allreduce of gradients: 2(n−1)/n · 4P bytes per node.
         let (n, p) = (ctx.n, ctx.param_count);

@@ -5,6 +5,7 @@ use super::{CombineStrategy, StepCtx};
 use crate::error::{AdaError, Result};
 use crate::graph::CommGraph;
 use crate::optim::SgdState;
+use crate::util::matrix::ReplicaMatrix;
 
 fn need_graph<'a>(ctx: &StepCtx<'a>, name: &str) -> Result<&'a CommGraph> {
     ctx.graph.ok_or_else(|| {
@@ -35,11 +36,15 @@ impl CombineStrategy for GossipCombine {
         "gossip"
     }
 
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
         let mut loss_sum = 0.0f64;
         for (w, loader) in ctx.loaders.iter().enumerate() {
             let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
-            let loss = ctx.model.local_step(w, &mut replicas[w], &batch, ctx.lr)?;
+            let loss = ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)?;
             loss_sum += loss as f64;
         }
         Ok(loss_sum / ctx.n as f64)
@@ -48,7 +53,7 @@ impl CombineStrategy for GossipCombine {
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        replicas: &mut [Vec<f32>],
+        replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         let g = need_graph(ctx, "GossipCombine")?;
         match ctx.active {
@@ -73,7 +78,10 @@ impl CombineStrategy for GossipCombine {
 pub struct FusedGossipCombine {
     momentum: f32,
     states: Vec<SgdState>,
-    grads: Vec<Vec<f32>>,
+    /// Gradient stash as a flat store of the same shape as the
+    /// replicas, so the fused tile streams three contiguous,
+    /// identically-strided buffers (params, velocity, grads).
+    grads: ReplicaMatrix,
 }
 
 impl FusedGossipCombine {
@@ -84,7 +92,7 @@ impl FusedGossipCombine {
         FusedGossipCombine {
             momentum,
             states: Vec::new(),
-            grads: Vec::new(),
+            grads: ReplicaMatrix::default(),
         }
     }
 }
@@ -98,17 +106,21 @@ impl CombineStrategy for FusedGossipCombine {
         // Velocity restarts at zero on every fresh run (and on resume),
         // matching the models' internal momentum buffers.
         self.states = (0..n).map(|_| SgdState::new(p, self.momentum, 0.0)).collect();
-        self.grads = vec![Vec::new(); n];
+        self.grads = ReplicaMatrix::zeros(n, p);
         Ok(())
     }
 
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
         let mut loss_sum = 0.0f64;
         for (w, loader) in ctx.loaders.iter().enumerate() {
             let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
-            let (loss, g) = ctx.model.loss_and_grad(&replicas[w], &batch)?;
+            let (loss, g) = ctx.model.loss_and_grad(replicas.row(w), &batch)?;
             loss_sum += loss as f64;
-            self.grads[w] = g;
+            self.grads.row_mut(w).copy_from_slice(&g);
         }
         Ok(loss_sum / ctx.n as f64)
     }
@@ -116,7 +128,7 @@ impl CombineStrategy for FusedGossipCombine {
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        replicas: &mut [Vec<f32>],
+        replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         let g = need_graph(ctx, "FusedGossipCombine")?;
         match ctx.active {

@@ -58,6 +58,7 @@ use crate::data::{Dataset, ShardLoader};
 use crate::error::{AdaError, Result};
 use crate::gossip::GossipEngine;
 use crate::graph::{CommGraph, GraphKind};
+use crate::util::matrix::ReplicaMatrix;
 use crate::topology::{
     AdaSchedule, OnePeerExponential, StaticSchedule, TopologySchedule, VarianceAdaptive,
 };
@@ -117,15 +118,20 @@ pub trait CombineStrategy: Send {
 
     /// Local compute at θ_t for every worker; returns the mean training
     /// loss across replicas. Runs *before* the pre-averaging metric
-    /// capture.
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64>;
+    /// capture. Per-worker parameters are rows of the flat
+    /// [`ReplicaMatrix`] ([`ReplicaMatrix::row_mut`]).
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64>;
 
     /// The combine/update step, *after* the capture point. Returns
     /// `(graph degree, bytes sent per node)` for the iteration record.
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        replicas: &mut [Vec<f32>],
+        replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)>;
 }
 

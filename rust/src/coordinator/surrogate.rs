@@ -144,7 +144,7 @@ impl LocalModel for SoftmaxRegression {
     fn local_step(
         &mut self,
         worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32> {
@@ -354,7 +354,7 @@ impl LocalModel for MlpClassifier {
     fn local_step(
         &mut self,
         worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32> {
@@ -490,7 +490,7 @@ impl LocalModel for BigramLm {
     fn local_step(
         &mut self,
         worker: usize,
-        params: &mut Vec<f32>,
+        params: &mut [f32],
         batch: &Batch,
         lr: f32,
     ) -> Result<f32> {

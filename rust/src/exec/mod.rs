@@ -66,9 +66,20 @@
 //! their owned column ranges is the next rung (see ROADMAP.md §Open
 //! items); `GossipEngine::ensure_scratch` already first-touches scratch
 //! rows inside the owning worker's tile as groundwork.
+//!
+//! ## The SIMD layer underneath
+//!
+//! The inner loops every tile job runs live in [`simd`]: explicit AVX2
+//! `f32x8` kernels behind runtime feature detection, with a
+//! fixed-8-lane scalar fallback sharing the same virtual lane width and
+//! accumulation order. Both paths are bit-identical by construction, so
+//! the determinism argument above is unaffected by *how wide* the
+//! registers are — `threads` and AVX2 availability are both pure
+//! wall-clock knobs.
 
 pub mod pool;
 mod reduce;
+pub mod simd;
 
 pub use pool::WorkerPool;
 pub use reduce::{reduce_tiles, REDUCE_GRANULARITY};

@@ -1,0 +1,497 @@
+//! The explicit SIMD kernel layer — every f32 inner loop of the
+//! training hot path, written twice with **identical semantics**:
+//!
+//! * an **AVX2** path (`f32x8` intrinsics, selected by runtime feature
+//!   detection), and
+//! * a **fixed-8-lane scalar fallback** ([`scalar`]) that uses the same
+//!   virtual lane width and the same per-lane accumulation order.
+//!
+//! ## The bit-identity contract
+//!
+//! The two paths produce **bit-identical results**, by construction:
+//!
+//! * Elementwise kernels ([`axpy`], [`scale`], [`scale_in_place`],
+//!   [`sgd_step`]) compute each output element from its own inputs with
+//!   the same IEEE-754 operation sequence — vectorization only changes
+//!   *which register* holds an element, never its float sequence. The
+//!   AVX2 path deliberately uses separate multiply + add (never FMA,
+//!   whose fused rounding would diverge from the scalar sequence).
+//! * Reduction kernels ([`sumsq_f64`], [`sumsq_f32`]) accumulate into
+//!   **8 virtual lanes** — element `i` always lands in lane `i % 8`,
+//!   in index order within its lane — and both paths combine the final
+//!   lanes in ascending lane order on exit. The scalar fallback keeps
+//!   an 8-wide accumulator array and walks the input in the exact same
+//!   pattern, so the float sequence per lane is shared.
+//!
+//! This is what lets the execution engine's determinism guarantee
+//! (bit-exact across 1/2/4/8 threads, `rust/src/exec/mod.rs`) survive
+//! vectorization unchanged: thread count decides *where* a tile runs,
+//! feature detection decides *how wide* the registers are, and neither
+//! decision can move a bit of output. Proof-by-test in
+//! `rust/tests/exec_determinism.rs`.
+//!
+//! ## Dispatch
+//!
+//! [`simd_active`] reports whether the AVX2 path is in use. It is off
+//! when the CPU lacks AVX2, when the `ADA_SIMD` environment variable is
+//! set to `scalar`/`off`/`0` (the CI fallback job), or after
+//! [`force_scalar`]`(true)` (the process-global test/bench knob the
+//! `simd_vs_scalar` bench section uses to time both paths in one run).
+//! On non-x86_64 targets only the scalar path exists.
+//!
+//! Loads and stores are unaligned (`loadu`/`storeu`): rows of a
+//! [`crate::util::matrix::ReplicaMatrix`] start 64-byte aligned, but
+//! the engine's column tiles begin at arbitrary offsets within a row,
+//! and unaligned AVX2 accesses are free when the address happens to be
+//! aligned.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// The virtual lane width both paths share.
+pub const LANES: usize = 8;
+
+/// Process-global scalar override (test/bench knob).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// `ADA_SIMD` environment override, read once.
+fn env_scalar() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        matches!(
+            std::env::var("ADA_SIMD").as_deref(),
+            Ok("scalar") | Ok("off") | Ok("0") | Ok("false")
+        )
+    })
+}
+
+/// Force the scalar fallback for the rest of the process (`true`) or
+/// return to auto-detection (`false`). Used by the `simd_vs_scalar`
+/// bench section and the bit-identity tests; results are identical
+/// either way — this is purely a wall-clock knob.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether the AVX2 path is currently selected.
+pub fn simd_active() -> bool {
+    if FORCE_SCALAR.load(Ordering::Relaxed) || env_scalar() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// `out[i] += w * src[i]` — the SpMM accumulation inner loop.
+#[inline]
+pub fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+    // Hard assert: a silent partial update from a mismatched tile would
+    // be far worse than the one branch this costs per kernel call.
+    assert_eq!(out.len(), src.len(), "axpy slices must have equal length");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::axpy(out, src, w) };
+        return;
+    }
+    scalar::axpy(out, src, w);
+}
+
+/// `out[i] = w * src[i]` — the SpMM seeding pass (first neighbor).
+#[inline]
+pub fn scale(out: &mut [f32], src: &[f32], w: f32) {
+    assert_eq!(out.len(), src.len(), "scale slices must have equal length");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::scale(out, src, w) };
+        return;
+    }
+    scalar::scale(out, src, w);
+}
+
+/// `out[i] *= w` — the mean pass's final rescale.
+#[inline]
+pub fn scale_in_place(out: &mut [f32], w: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::scale_in_place(out, w) };
+        return;
+    }
+    scalar::scale_in_place(out, w);
+}
+
+/// The momentum-SGD update, elementwise over one row (or one tile of a
+/// row): `eff = g + wd·θ; v = mu·v + eff; θ -= lr·v` — exactly
+/// [`crate::optim::SgdState::step`]'s float sequence, which routes
+/// through this kernel.
+#[inline]
+pub fn sgd_step(params: &mut [f32], vel: &mut [f32], grads: &[f32], mu: f32, wd: f32, lr: f32) {
+    assert_eq!(params.len(), grads.len(), "sgd_step params/grads length mismatch");
+    assert_eq!(params.len(), vel.len(), "sgd_step params/velocity length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::sgd_step(params, vel, grads, mu, wd, lr) };
+        return;
+    }
+    scalar::sgd_step(params, vel, grads, mu, wd, lr);
+}
+
+/// `Σ x_i²` accumulated in f64 over 8 virtual lanes — the L2-norm
+/// primitive of the variance capture. Element `i` lands in lane
+/// `i % 8`; lanes are combined in ascending order.
+#[inline]
+pub fn sumsq_f64(x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { avx2::sumsq_f64(x) };
+    }
+    scalar::sumsq_f64(x)
+}
+
+/// `Σ x_i²` in f32 over the same 8-lane pattern — LARS's per-layer
+/// norm primitive.
+#[inline]
+pub fn sumsq_f32(x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { avx2::sumsq_f32(x) };
+    }
+    scalar::sumsq_f32(x)
+}
+
+/// The fixed-8-lane scalar reference path. Public so tests and the
+/// `simd_vs_scalar` bench can call it directly regardless of dispatch
+/// state; the dispatched functions above must match it bit-for-bit.
+pub mod scalar {
+    use super::LANES;
+
+    /// Scalar [`super::axpy`].
+    pub fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o += w * s;
+        }
+    }
+
+    /// Scalar [`super::scale`].
+    pub fn scale(out: &mut [f32], src: &[f32], w: f32) {
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o = w * s;
+        }
+    }
+
+    /// Scalar [`super::scale_in_place`].
+    pub fn scale_in_place(out: &mut [f32], w: f32) {
+        for v in out.iter_mut() {
+            *v *= w;
+        }
+    }
+
+    /// Scalar [`super::sgd_step`].
+    pub fn sgd_step(
+        params: &mut [f32],
+        vel: &mut [f32],
+        grads: &[f32],
+        mu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        for ((p, v), &g) in params.iter_mut().zip(vel.iter_mut()).zip(grads) {
+            let eff = g + wd * *p;
+            *v = mu * *v + eff;
+            *p -= lr * *v;
+        }
+    }
+
+    /// Scalar [`super::sumsq_f64`]: 8 virtual f64 lanes, element `i` in
+    /// lane `i % 8`, lanes combined ascending.
+    pub fn sumsq_f64(x: &[f32]) -> f64 {
+        let mut lanes = [0.0f64; LANES];
+        let mut chunks = x.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            for (lane, &v) in lanes.iter_mut().zip(c) {
+                let v = v as f64;
+                *lane += v * v;
+            }
+        }
+        for (lane, &v) in lanes.iter_mut().zip(chunks.remainder()) {
+            let v = v as f64;
+            *lane += v * v;
+        }
+        lanes.iter().sum()
+    }
+
+    /// Scalar [`super::sumsq_f32`]: same lane pattern in f32.
+    pub fn sumsq_f32(x: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut chunks = x.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            for (lane, &v) in lanes.iter_mut().zip(c) {
+                *lane += v * v;
+            }
+        }
+        for (lane, &v) in lanes.iter_mut().zip(chunks.remainder()) {
+            *lane += v * v;
+        }
+        lanes.iter().sum()
+    }
+}
+
+/// The AVX2 path. Every function mirrors its [`scalar`] twin's float
+/// sequence exactly — multiply + add, never FMA; reductions keep the
+/// 8-virtual-lane accumulators and combine them in ascending lane
+/// order through the same scalar epilogue.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::LANES;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+        let len = out.len().min(src.len());
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + LANES <= len {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(o, _mm256_mul_ps(wv, s));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        while i < len {
+            out[i] += w * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(out: &mut [f32], src: &[f32], w: f32) {
+        let len = out.len().min(src.len());
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + LANES <= len {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(wv, s));
+            i += LANES;
+        }
+        while i < len {
+            out[i] = w * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_in_place(out: &mut [f32], w: f32) {
+        let len = out.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + LANES <= len {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(wv, o));
+            i += LANES;
+        }
+        while i < len {
+            out[i] *= w;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_step(
+        params: &mut [f32],
+        vel: &mut [f32],
+        grads: &[f32],
+        mu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        let len = params.len().min(vel.len()).min(grads.len());
+        let muv = _mm256_set1_ps(mu);
+        let wdv = _mm256_set1_ps(wd);
+        let lrv = _mm256_set1_ps(lr);
+        let mut i = 0;
+        while i + LANES <= len {
+            let p = _mm256_loadu_ps(params.as_ptr().add(i));
+            let v = _mm256_loadu_ps(vel.as_ptr().add(i));
+            let g = _mm256_loadu_ps(grads.as_ptr().add(i));
+            // eff = g + wd*p; v' = mu*v + eff; p' = p - lr*v' — separate
+            // mul/add/sub so each lane's rounding matches the scalar path.
+            let eff = _mm256_add_ps(g, _mm256_mul_ps(wdv, p));
+            let v2 = _mm256_add_ps(_mm256_mul_ps(muv, v), eff);
+            let p2 = _mm256_sub_ps(p, _mm256_mul_ps(lrv, v2));
+            _mm256_storeu_ps(vel.as_mut_ptr().add(i), v2);
+            _mm256_storeu_ps(params.as_mut_ptr().add(i), p2);
+            i += LANES;
+        }
+        while i < len {
+            let eff = grads[i] + wd * params[i];
+            vel[i] = mu * vel[i] + eff;
+            params[i] -= lr * vel[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq_f64(x: &[f32]) -> f64 {
+        // Lanes 0..4 in acc_lo, lanes 4..8 in acc_hi; element i lands in
+        // lane i % 8 — the exact pattern of the scalar fallback.
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut chunks = x.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_ps(c.as_ptr());
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        for (lane, &v) in lanes.iter_mut().zip(chunks.remainder()) {
+            let v = v as f64;
+            *lane += v * v;
+        }
+        lanes.iter().sum()
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq_f32(x: &[f32]) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut chunks = x.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_ps(c.as_ptr());
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (lane, &v) in lanes.iter_mut().zip(chunks.remainder()) {
+            *lane += v * v;
+        }
+        lanes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vector(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+    }
+
+    /// Lengths that exercise full chunks, the remainder, and both empty
+    /// and sub-lane inputs.
+    const LENS: [usize; 6] = [0, 1, 7, 8, 33, 4096 + 5];
+
+    #[test]
+    fn dispatched_elementwise_kernels_match_scalar_bitwise() {
+        // On AVX2 hosts this compares vector vs scalar bits; elsewhere
+        // both sides are scalar and the test degenerates (still valid).
+        for len in LENS {
+            let src = vector(len, 1);
+            let mut a = vector(len, 2);
+            let mut b = a.clone();
+            axpy(&mut a, &src, 0.37);
+            scalar::axpy(&mut b, &src, 0.37);
+            assert_eq!(a, b, "axpy len {len}");
+
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![0.0f32; len];
+            scale(&mut a, &src, -1.25);
+            scalar::scale(&mut b, &src, -1.25);
+            assert_eq!(a, b, "scale len {len}");
+
+            let mut a = vector(len, 3);
+            let mut b = a.clone();
+            scale_in_place(&mut a, 0.125);
+            scalar::scale_in_place(&mut b, 0.125);
+            assert_eq!(a, b, "scale_in_place len {len}");
+        }
+    }
+
+    #[test]
+    fn dispatched_sgd_step_matches_scalar_bitwise() {
+        for len in LENS {
+            let g = vector(len, 4);
+            let (mut pa, mut va) = (vector(len, 5), vector(len, 6));
+            let (mut pb, mut vb) = (pa.clone(), va.clone());
+            for _ in 0..3 {
+                sgd_step(&mut pa, &mut va, &g, 0.9, 1e-4, 0.05);
+                scalar::sgd_step(&mut pb, &mut vb, &g, 0.9, 1e-4, 0.05);
+            }
+            assert_eq!(pa, pb, "params len {len}");
+            assert_eq!(va, vb, "velocity len {len}");
+        }
+    }
+
+    #[test]
+    fn dispatched_reductions_match_scalar_bitwise() {
+        for len in LENS {
+            let x = vector(len, 7);
+            assert_eq!(
+                sumsq_f64(&x).to_bits(),
+                scalar::sumsq_f64(&x).to_bits(),
+                "sumsq_f64 len {len}"
+            );
+            assert_eq!(
+                sumsq_f32(&x).to_bits(),
+                scalar::sumsq_f32(&x).to_bits(),
+                "sumsq_f32 len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn sumsq_agrees_with_plain_sum_numerically() {
+        let x = vector(10_001, 8);
+        let plain: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let lanes = sumsq_f64(&x);
+        assert!(
+            (plain - lanes).abs() <= 1e-9 * plain.max(1.0),
+            "8-lane regrouping must stay within f64 rounding: {plain} vs {lanes}"
+        );
+        assert_eq!(sumsq_f64(&[]), 0.0);
+        assert_eq!(sumsq_f32(&[]), 0.0);
+    }
+
+    #[test]
+    fn force_scalar_disables_and_restores_dispatch() {
+        let before = simd_active();
+        force_scalar(true);
+        assert!(!simd_active(), "forced scalar must disable the SIMD path");
+        // Kernels still produce the same bits while forced.
+        let src = vector(100, 9);
+        let mut forced = vector(100, 10);
+        let mut auto = forced.clone();
+        axpy(&mut forced, &src, 0.5);
+        force_scalar(false);
+        assert_eq!(simd_active(), before, "auto detection must be restored");
+        axpy(&mut auto, &src, 0.5);
+        assert_eq!(forced, auto, "both paths must agree bitwise");
+    }
+}

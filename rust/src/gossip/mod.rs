@@ -2,10 +2,20 @@
 //! replica parameters, `Θ' = W Θ` (§2.2's neighbor averaging
 //! `Σ_j E_ij θ_j`).
 //!
+//! ## Data plane
+//!
+//! Since the flat-store refactor the replica stack lives in a
+//! [`ReplicaMatrix`] — one 64-byte-aligned contiguous allocation with a
+//! padded row stride (`rust/src/util/matrix.rs` documents the layout
+//! contract) — and every inner loop below runs on the explicit SIMD
+//! kernel layer ([`crate::exec::simd`]): AVX2 `f32x8` behind runtime
+//! feature detection, with a fixed-8-lane scalar fallback that is
+//! bit-identical by construction.
+//!
 //! Two interchangeable execution paths:
 //!  * **native** (this module): sparse row-wise mixing over the graph's
-//!    neighbor lists with reused scratch buffers, an O(nP) fast path for
-//!    uniform complete graphs, and **fused gossip+SGD kernels**
+//!    neighbor lists with a reused scratch matrix, an O(nP) fast path
+//!    for uniform complete graphs, and **fused gossip+SGD kernels**
 //!    ([`GossipEngine::mix_step`], and [`GossipEngine::mix_active_step`]
 //!    for partial-participation rounds) that apply the momentum update
 //!    while each mixed tile is still cache-resident. This is the
@@ -27,18 +37,24 @@
 //! built and parked between rounds: the parameter axis is partitioned
 //! into contiguous column tiles and each worker owns its tiles of
 //! **all** n replicas (a blocked SpMM over the sparse mixing matrix).
-//! Because every output element's reduction order is fixed by its graph
-//! row alone, results are **bit-identical for any thread count** — see
-//! `rust/src/exec/mod.rs` for the full argument and
-//! `rust/tests/exec_determinism.rs` for the proof-by-test. Scratch rows
-//! are first-touched inside the owning worker's tile
+//! [`ReplicaMatrix::rows_mut`] is the split point: disjoint mutable row
+//! views of the flat buffer, transposed into per-worker column views by
+//! [`column_views`]. Because every output element's reduction order is
+//! fixed by its graph row alone — and the SIMD layer never reassociates
+//! an elementwise sequence — results are **bit-identical for any thread
+//! count and for both SIMD and scalar paths** — see
+//! `rust/src/exec/mod.rs` and `rust/src/exec/simd.rs` for the argument
+//! and `rust/tests/exec_determinism.rs` for the proof-by-test. Scratch
+//! pages are first-touched inside the owning worker's column tile
 //! ([`GossipEngine::ensure_scratch`]) so page placement follows tile
 //! ownership — the groundwork for NUMA pinning (ROADMAP §Open items).
 
-use crate::exec::{column_views, ExecEngine};
+use crate::exec::{column_views, simd, ExecEngine};
 use crate::graph::CommGraph;
 use crate::optim::SgdState;
 use std::ops::Range;
+
+pub use crate::util::matrix::ReplicaMatrix;
 
 /// Column-tile width of the blocked SpMM: the working set (one tile of
 /// every replica) stays cache-resident across all n output rows
@@ -52,11 +68,12 @@ const TILE: usize = 4096;
 /// on the calling thread.
 const MIN_COLS_PER_WORKER: usize = TILE;
 
-/// Reusable mixing engine. Holds scratch buffers so steady-state rounds
-/// allocate nothing, plus the execution engine that decides fan-out.
+/// Reusable mixing engine. Holds a scratch matrix so steady-state
+/// rounds allocate nothing, plus the execution engine that decides
+/// fan-out.
 #[derive(Debug, Default)]
 pub struct GossipEngine {
-    scratch: Vec<Vec<f32>>,
+    scratch: ReplicaMatrix,
     mean_scratch: Vec<f32>,
     exec: ExecEngine,
 }
@@ -71,7 +88,7 @@ impl GossipEngine {
     /// Results are bit-identical to [`GossipEngine::new`] for any value.
     pub fn with_threads(threads: usize) -> Self {
         GossipEngine {
-            scratch: Vec::new(),
+            scratch: ReplicaMatrix::default(),
             mean_scratch: Vec::new(),
             exec: ExecEngine::new(threads),
         }
@@ -89,21 +106,17 @@ impl GossipEngine {
         &self.exec
     }
 
-    /// One gossip round in place: `replicas[i] ← Σ_j W_ij · replicas[j]`.
+    /// One gossip round in place: `Θ_i ← Σ_j W_ij · Θ_j`.
     ///
-    /// `replicas.len()` must equal `graph.n()` and all replicas must have
-    /// equal length.
-    pub fn mix(&mut self, graph: &CommGraph, replicas: &mut [Vec<f32>]) {
+    /// `replicas.n()` must equal `graph.n()` (the equal-parameter-count
+    /// invariant is structural in [`ReplicaMatrix`]).
+    pub fn mix(&mut self, graph: &CommGraph, replicas: &mut ReplicaMatrix) {
         let n = graph.n();
-        assert_eq!(replicas.len(), n, "replica count must match graph size");
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
         if n == 0 {
             return;
         }
-        let p = replicas[0].len();
-        assert!(
-            replicas.iter().all(|r| r.len() == p),
-            "replicas must have equal parameter counts"
-        );
+        let p = replicas.p();
 
         // Fast path: uniform complete graph == global mean.
         if is_uniform_complete(graph) {
@@ -114,9 +127,8 @@ impl GossipEngine {
         self.ensure_scratch(n, p);
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         {
-            let reps: &[Vec<f32>] = replicas;
-            let views =
-                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let reps: &ReplicaMatrix = replicas;
+            let views = column_views(self.scratch.rows_mut(), &ranges);
             let jobs: Vec<_> = views
                 .into_iter()
                 .zip(ranges.iter().cloned())
@@ -132,18 +144,19 @@ impl GossipEngine {
     /// `active` keep their parameters; active rows renormalize their
     /// mixing weights over the active participants so the result stays
     /// a convex combination.
-    pub fn mix_active(&mut self, graph: &CommGraph, replicas: &mut [Vec<f32>], active: &[bool]) {
+    pub fn mix_active(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut ReplicaMatrix,
+        active: &[bool],
+    ) {
         let n = graph.n();
-        assert_eq!(replicas.len(), n, "replica count must match graph size");
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
         assert_eq!(active.len(), n, "active mask must match graph size");
         if n == 0 {
             return;
         }
-        let p = replicas[0].len();
-        assert!(
-            replicas.iter().all(|r| r.len() == p),
-            "replicas must have equal parameter counts"
-        );
+        let p = replicas.p();
         if active.iter().all(|&a| a) {
             return self.mix(graph, replicas);
         }
@@ -151,10 +164,9 @@ impl GossipEngine {
         let totals = active_totals(graph, active);
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         {
-            let reps: &[Vec<f32>] = replicas;
+            let reps: &ReplicaMatrix = replicas;
             let totals: &[f32] = &totals;
-            let views =
-                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let views = column_views(self.scratch.rows_mut(), &ranges);
             let jobs: Vec<_> = views
                 .into_iter()
                 .zip(ranges.iter().cloned())
@@ -181,31 +193,25 @@ impl GossipEngine {
     /// graphs where `mix` takes the global-mean fast path (the fused
     /// kernel always runs the general SpMM; results then agree to float
     /// rounding, ~1e-7). `μ_i`/`λ_i` come from each replica's
-    /// [`SgdState`]; `γ` is `lr`.
+    /// [`SgdState`]; `γ` is `lr`. Gradients are a [`ReplicaMatrix`] of
+    /// the same shape, so the fused tile streams three flat buffers.
     pub fn mix_step(
         &mut self,
         graph: &CommGraph,
-        replicas: &mut [Vec<f32>],
-        grads: &[Vec<f32>],
+        replicas: &mut ReplicaMatrix,
+        grads: &ReplicaMatrix,
         states: &mut [SgdState],
         lr: f32,
     ) {
         let n = graph.n();
-        assert_eq!(replicas.len(), n, "replica count must match graph size");
-        assert_eq!(grads.len(), n, "gradient count must match graph size");
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        assert_eq!(grads.n(), n, "gradient count must match graph size");
         assert_eq!(states.len(), n, "optimizer state count must match graph size");
         if n == 0 {
             return;
         }
-        let p = replicas[0].len();
-        assert!(
-            replicas.iter().all(|r| r.len() == p),
-            "replicas must have equal parameter counts"
-        );
-        assert!(
-            grads.iter().all(|g| g.len() == p),
-            "gradients must match parameter counts"
-        );
+        let p = replicas.p();
+        assert_eq!(grads.p(), p, "gradients must match parameter counts");
         assert!(
             states.iter().all(|s| s.len() == p),
             "optimizer states must match parameter counts"
@@ -216,10 +222,9 @@ impl GossipEngine {
             states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         {
-            let reps: &[Vec<f32>] = replicas;
+            let reps: &ReplicaMatrix = replicas;
             let hyper: &[(f32, f32)] = &hyper;
-            let out_views =
-                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let out_views = column_views(self.scratch.rows_mut(), &ranges);
             let vel_views =
                 column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
             let jobs: Vec<_> = out_views
@@ -256,15 +261,15 @@ impl GossipEngine {
     pub fn mix_active_step(
         &mut self,
         graph: &CommGraph,
-        replicas: &mut [Vec<f32>],
-        grads: &[Vec<f32>],
+        replicas: &mut ReplicaMatrix,
+        grads: &ReplicaMatrix,
         states: &mut [SgdState],
         lr: f32,
         active: &[bool],
     ) {
         let n = graph.n();
-        assert_eq!(replicas.len(), n, "replica count must match graph size");
-        assert_eq!(grads.len(), n, "gradient count must match graph size");
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        assert_eq!(grads.n(), n, "gradient count must match graph size");
         assert_eq!(states.len(), n, "optimizer state count must match graph size");
         assert_eq!(active.len(), n, "active mask must match graph size");
         if n == 0 {
@@ -273,15 +278,8 @@ impl GossipEngine {
         if active.iter().all(|&a| a) {
             return self.mix_step(graph, replicas, grads, states, lr);
         }
-        let p = replicas[0].len();
-        assert!(
-            replicas.iter().all(|r| r.len() == p),
-            "replicas must have equal parameter counts"
-        );
-        assert!(
-            grads.iter().all(|g| g.len() == p),
-            "gradients must match parameter counts"
-        );
+        let p = replicas.p();
+        assert_eq!(grads.p(), p, "gradients must match parameter counts");
         assert!(
             states.iter().all(|s| s.len() == p),
             "optimizer states must match parameter counts"
@@ -293,11 +291,10 @@ impl GossipEngine {
             states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         {
-            let reps: &[Vec<f32>] = replicas;
+            let reps: &ReplicaMatrix = replicas;
             let totals: &[f32] = &totals;
             let hyper: &[(f32, f32)] = &hyper;
-            let out_views =
-                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let out_views = column_views(self.scratch.rows_mut(), &ranges);
             let vel_views =
                 column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
             let jobs: Vec<_> = out_views
@@ -319,7 +316,7 @@ impl GossipEngine {
 
     /// Complete-graph fast path: one column-mean pass + one broadcast
     /// copy, both fanned out over the same column ranges.
-    fn mix_complete(&mut self, replicas: &mut [Vec<f32>], p: usize) {
+    fn mix_complete(&mut self, replicas: &mut ReplicaMatrix, p: usize) {
         if self.mean_scratch.len() != p {
             // Fresh lazily-zero-mapped pages; the owning workers'
             // writes in phase 1 below are the first touch.
@@ -330,7 +327,7 @@ impl GossipEngine {
         // the scratch tile (replica 0 seeds it) instead of zeroing and
         // accumulating — one fewer pass over every tile per round.
         {
-            let reps: &[Vec<f32>] = replicas;
+            let reps: &ReplicaMatrix = replicas;
             let mean_views = column_views(vec![self.mean_scratch.as_mut_slice()], &ranges);
             let jobs: Vec<_> = mean_views
                 .into_iter()
@@ -347,8 +344,7 @@ impl GossipEngine {
         // Phase 2: broadcast the mean into every replica.
         {
             let mean: &[f32] = &self.mean_scratch;
-            let rep_views =
-                column_views(replicas.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let rep_views = column_views(replicas.rows_mut(), &ranges);
             let jobs: Vec<_> = rep_views
                 .into_iter()
                 .zip(ranges.iter().cloned())
@@ -366,22 +362,19 @@ impl GossipEngine {
     }
 
     fn ensure_scratch(&mut self, n: usize, p: usize) {
-        if self.scratch.len() == n && self.scratch.first().map(Vec::len) == Some(p) {
+        if self.scratch.n() == n && self.scratch.p() == p {
             return;
         }
-        // Rows are allocated one by one: each `vec![0.0; p]` comes from
-        // the zeroed allocator with its pages still lazily mapped (a
-        // `vec![row; n]` clone would memcpy them resident on the
-        // calling thread). The pooled pass below is then the true first
-        // touch of every page, from the worker that owns those columns
-        // — deciding which core (and on multi-socket hosts, which NUMA
-        // node) backs each tile, aligned with the tile ownership every
-        // later kernel call uses (ROADMAP §NUMA).
-        self.scratch = (0..n).map(|_| vec![0.0f32; p]).collect();
+        // One flat zeroed allocation: the pages come back lazily mapped
+        // from the zeroed allocator, so the pooled pass below is the
+        // true first touch of every page, from the worker that owns
+        // those columns — deciding which core (and on multi-socket
+        // hosts, which NUMA node) backs each tile, aligned with the
+        // tile ownership every later kernel call uses (ROADMAP §NUMA).
+        self.scratch = ReplicaMatrix::zeros(n, p);
         let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
         if ranges.len() > 1 {
-            let views =
-                column_views(self.scratch.iter_mut().map(Vec::as_mut_slice).collect(), &ranges);
+            let views = column_views(self.scratch.rows_mut(), &ranges);
             let jobs: Vec<_> = views
                 .into_iter()
                 .map(|chunks| {
@@ -398,12 +391,12 @@ impl GossipEngine {
         }
     }
 
-    /// Swap scratch rows into `replicas` instead of copying back: saves
-    /// one full O(nP) memory pass per round (§Perf iteration 1).
-    fn swap_in_scratch(&mut self, replicas: &mut [Vec<f32>]) {
-        for (r, s) in replicas.iter_mut().zip(self.scratch.iter_mut()) {
-            std::mem::swap(r, s);
-        }
+    /// Swap the scratch store into `replicas` instead of copying back:
+    /// with the flat layout this is one pointer-triple exchange — the
+    /// old per-row `Vec` swap loop is gone entirely (§Perf iteration 1
+    /// saved the copy; the flat store also saves the n swaps).
+    fn swap_in_scratch(&mut self, replicas: &mut ReplicaMatrix) {
+        std::mem::swap(replicas, &mut self.scratch);
     }
 }
 
@@ -412,7 +405,7 @@ impl GossipEngine {
 /// `range`; reads come from the (shared, immutable) pre-round replicas.
 fn mix_tile(
     graph: &CommGraph,
-    replicas: &[Vec<f32>],
+    replicas: &ReplicaMatrix,
     mut out_rows: Vec<&mut [f32]>,
     range: Range<usize>,
 ) {
@@ -424,14 +417,12 @@ fn mix_tile(
             let out = &mut out_row[lo..hi];
             let mut first = true;
             for (j, w) in graph.row(i) {
-                let src = &replicas[j][start..end];
+                let src = &replicas.row(j)[start..end];
                 if first {
-                    for (o, &s) in out.iter_mut().zip(src.iter()) {
-                        *o = w * s;
-                    }
+                    simd::scale(out, src, w);
                     first = false;
                 } else {
-                    axpy(out, src, w);
+                    simd::axpy(out, src, w);
                 }
             }
         }
@@ -444,7 +435,7 @@ fn mix_tile(
 /// active weight mass `totals[i]`.
 fn mix_active_tile(
     graph: &CommGraph,
-    replicas: &[Vec<f32>],
+    replicas: &ReplicaMatrix,
     active: &[bool],
     totals: &[f32],
     mut out_rows: Vec<&mut [f32]>,
@@ -457,7 +448,7 @@ fn mix_active_tile(
         for (i, out_row) in out_rows.iter_mut().enumerate() {
             let out = &mut out_row[lo..hi];
             if !active[i] {
-                out.copy_from_slice(&replicas[i][start..end]);
+                out.copy_from_slice(&replicas.row(i)[start..end]);
                 continue;
             }
             let total = totals[i];
@@ -467,14 +458,12 @@ fn mix_active_tile(
                     continue;
                 }
                 let w = w / total;
-                let src = &replicas[j][start..end];
+                let src = &replicas.row(j)[start..end];
                 if first {
-                    for (o, &s) in out.iter_mut().zip(src.iter()) {
-                        *o = w * s;
-                    }
+                    simd::scale(out, src, w);
                     first = false;
                 } else {
-                    axpy(out, src, w);
+                    simd::axpy(out, src, w);
                 }
             }
         }
@@ -495,17 +484,16 @@ fn active_totals(graph: &CommGraph, active: &[bool]) -> Vec<f32> {
 
 /// One worker's tile of a column mean: seed with replica 0, accumulate
 /// the rest, scale — no zeroing pass. Per-element operand order is the
-/// replica order, independent of tiling, so the mean is bit-identical
-/// for any thread count.
-fn mean_tile(replicas: &[Vec<f32>], out: &mut [f32], range: Range<usize>) {
-    out.copy_from_slice(&replicas[0][range.clone()]);
-    for r in &replicas[1..] {
-        axpy(out, &r[range.clone()], 1.0);
+/// replica order, independent of tiling and of the SIMD/scalar path
+/// (elementwise kernels never reassociate), so the mean is
+/// bit-identical for any thread count.
+fn mean_tile(replicas: &ReplicaMatrix, out: &mut [f32], range: Range<usize>) {
+    out.copy_from_slice(&replicas.row(0)[range.clone()]);
+    for i in 1..replicas.n() {
+        simd::axpy(out, &replicas.row(i)[range.clone()], 1.0);
     }
-    let inv = 1.0 / replicas.len() as f32;
-    for v in out.iter_mut() {
-        *v *= inv;
-    }
+    let inv = 1.0 / replicas.n() as f32;
+    simd::scale_in_place(out, inv);
 }
 
 /// The replica-averaged model `θ̄ = (1/n) Σ_i θ_i`, fanned out over
@@ -513,13 +501,9 @@ fn mean_tile(replicas: &[Vec<f32>], out: &mut [f32], range: Range<usize>) {
 /// mean-model evaluation (§2.2: "the trained model takes θ as the
 /// average over all θ_i"), which was the last serial O(n·P) pass on the
 /// evaluation path.
-pub fn mean_model(exec: &ExecEngine, replicas: &[Vec<f32>]) -> Vec<f32> {
+pub fn mean_model(exec: &ExecEngine, replicas: &ReplicaMatrix) -> Vec<f32> {
     assert!(!replicas.is_empty(), "mean_model needs at least one replica");
-    let p = replicas[0].len();
-    assert!(
-        replicas.iter().all(|r| r.len() == p),
-        "replicas must have equal parameter counts"
-    );
+    let p = replicas.p();
     let mut mean = vec![0.0f32; p];
     let ranges = exec.partition(p, MIN_COLS_PER_WORKER);
     {
@@ -547,10 +531,10 @@ pub fn mean_model(exec: &ExecEngine, replicas: &[Vec<f32>]) -> Vec<f32> {
 #[allow(clippy::too_many_arguments)]
 fn mix_active_step_tile(
     graph: &CommGraph,
-    replicas: &[Vec<f32>],
+    replicas: &ReplicaMatrix,
     active: &[bool],
     totals: &[f32],
-    grads: &[Vec<f32>],
+    grads: &ReplicaMatrix,
     hyper: &[(f32, f32)],
     lr: f32,
     mut out_rows: Vec<&mut [f32]>,
@@ -573,27 +557,21 @@ fn mix_active_step_tile(
                         continue;
                     }
                     let w = w / total;
-                    let src = &replicas[j][start..end];
+                    let src = &replicas.row(j)[start..end];
                     if first {
-                        for (o, &s) in out.iter_mut().zip(src.iter()) {
-                            *o = w * s;
-                        }
+                        simd::scale(out, src, w);
                         first = false;
                     } else {
-                        axpy(out, src, w);
+                        simd::axpy(out, src, w);
                     }
                 }
             } else {
-                out.copy_from_slice(&replicas[i][start..end]);
+                out.copy_from_slice(&replicas.row(i)[start..end]);
             }
             let (mu, wd) = hyper[i];
             let vel = &mut vel_row[lo..hi];
-            let g = &grads[i][start..end];
-            for k in 0..out.len() {
-                let eff = g[k] + wd * out[k];
-                vel[k] = mu * vel[k] + eff;
-                out[k] -= lr * vel[k];
-            }
+            let g = &grads.row(i)[start..end];
+            simd::sgd_step(out, vel, g, mu, wd, lr);
         }
         start = end;
     }
@@ -601,12 +579,13 @@ fn mix_active_step_tile(
 
 /// One worker's share of the fused gossip+SGD round: SpMM a tile, then
 /// immediately run the momentum update on it (same element ops as
-/// [`SgdState::step`]) before moving to the next tile.
+/// [`SgdState::step`] — both route through [`simd::sgd_step`]) before
+/// moving to the next tile.
 #[allow(clippy::too_many_arguments)]
 fn mix_step_tile(
     graph: &CommGraph,
-    replicas: &[Vec<f32>],
-    grads: &[Vec<f32>],
+    replicas: &ReplicaMatrix,
+    grads: &ReplicaMatrix,
     hyper: &[(f32, f32)],
     lr: f32,
     mut out_rows: Vec<&mut [f32]>,
@@ -623,39 +602,20 @@ fn mix_step_tile(
             let out = &mut out_row[lo..hi];
             let mut first = true;
             for (j, w) in graph.row(i) {
-                let src = &replicas[j][start..end];
+                let src = &replicas.row(j)[start..end];
                 if first {
-                    for (o, &s) in out.iter_mut().zip(src.iter()) {
-                        *o = w * s;
-                    }
+                    simd::scale(out, src, w);
                     first = false;
                 } else {
-                    axpy(out, src, w);
+                    simd::axpy(out, src, w);
                 }
             }
             let (mu, wd) = hyper[i];
             let vel = &mut vel_row[lo..hi];
-            let g = &grads[i][start..end];
-            for k in 0..out.len() {
-                let eff = g[k] + wd * out[k];
-                vel[k] = mu * vel[k] + eff;
-                out[k] -= lr * vel[k];
-            }
+            let g = &grads.row(i)[start..end];
+            simd::sgd_step(out, vel, g, mu, wd, lr);
         }
         start = end;
-    }
-}
-
-/// `out += w * src`, the inner loop of mixing. Lengths must match
-/// exactly (checked in debug builds); the exact-length loop lets LLVM
-/// drop bounds checks and keep the body vectorized.
-#[inline]
-fn axpy(out: &mut [f32], src: &[f32], w: f32) {
-    debug_assert_eq!(out.len(), src.len(), "axpy slices must have equal length");
-    let len = out.len();
-    let (o, s) = (&mut out[..len], &src[..len]);
-    for i in 0..len {
-        o[i] += w * s[i];
     }
 }
 
@@ -670,8 +630,10 @@ fn is_uniform_complete(graph: &CommGraph) -> bool {
     })
 }
 
-/// Reference dense mixing (O(n²P), allocation-heavy) used by tests and
-/// as the criterion baseline.
+/// Reference dense mixing (O(n²P), allocation-heavy) over the
+/// **pre-refactor `Vec<Vec<f32>>` layout** — kept as the independent
+/// criterion baseline the flat-store kernels are tested against
+/// (`ReplicaMatrix::to_vecs` bridges).
 pub fn mix_dense_reference(graph: &CommGraph, replicas: &[Vec<f32>]) -> Vec<Vec<f32>> {
     let n = graph.n();
     let p = replicas[0].len();
@@ -695,22 +657,23 @@ mod tests {
     use super::*;
     use crate::graph::GraphKind;
 
-    fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    fn replicas(n: usize, p: usize, seed: u64) -> ReplicaMatrix {
         let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
-        (0..n)
+        let rows: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
-            .collect()
+            .collect();
+        ReplicaMatrix::from_rows(&rows)
     }
 
-    fn global_mean(replicas: &[Vec<f32>]) -> Vec<f64> {
-        let p = replicas[0].len();
+    fn global_mean(replicas: &ReplicaMatrix) -> Vec<f64> {
+        let p = replicas.p();
         let mut m = vec![0.0f64; p];
-        for r in replicas {
+        for r in replicas.rows() {
             for (mi, &v) in m.iter_mut().zip(r.iter()) {
                 *mi += v as f64;
             }
         }
-        m.iter().map(|v| v / replicas.len() as f64).collect()
+        m.iter().map(|v| v / replicas.n() as f64).collect()
     }
 
     #[test]
@@ -726,7 +689,7 @@ mod tests {
             let n = 16;
             let g = CommGraph::build(kind, n).unwrap();
             let mut reps = replicas(n, 37, 5);
-            let expect = mix_dense_reference(&g, &reps);
+            let expect = mix_dense_reference(&g, &reps.to_vecs());
             GossipEngine::new().mix(&g, &mut reps);
             for i in 0..n {
                 for k in 0..37 {
@@ -769,7 +732,7 @@ mod tests {
         for _ in 0..2000 {
             eng.mix(&g, &mut reps);
         }
-        for r in &reps {
+        for r in reps.rows() {
             for (v, t) in r.iter().zip(&target) {
                 assert!((*v as f64 - t).abs() < 1e-3, "must reach consensus");
             }
@@ -783,7 +746,7 @@ mod tests {
         let mut reps = replicas(n, 11, 3);
         let target = global_mean(&reps);
         GossipEngine::new().mix(&g, &mut reps);
-        for r in &reps {
+        for r in reps.rows() {
             for (v, t) in r.iter().zip(&target) {
                 assert!((*v as f64 - t).abs() < 1e-5);
             }
@@ -797,7 +760,7 @@ mod tests {
         let src = replicas(n, 23, 7);
         let mut fast = src.clone();
         GossipEngine::new().mix(&g, &mut fast);
-        let slow = mix_dense_reference(&g, &src);
+        let slow = mix_dense_reference(&g, &src.to_vecs());
         for i in 0..n {
             for k in 0..23 {
                 assert!((fast[i][k] - slow[i][k]).abs() < 1e-5);
@@ -810,11 +773,11 @@ mod tests {
         let n = 8;
         let g = CommGraph::build(GraphKind::Ring, n).unwrap();
         let mut reps = replicas(n, 7, 1);
-        let frozen = reps[3].clone();
+        let frozen = reps.row(3).to_vec();
         let mut active = vec![true; n];
         active[3] = false;
         GossipEngine::new().mix_active(&g, &mut reps, &active);
-        assert_eq!(reps[3], frozen, "inactive node must not change");
+        assert_eq!(reps.row(3), &frozen[..], "inactive node must not change");
     }
 
     #[test]
@@ -823,13 +786,14 @@ mod tests {
         // result is still a convex combination (no mass loss).
         let n = 6;
         let g = CommGraph::build(GraphKind::Complete, n).unwrap();
-        let mut reps: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32]).collect();
+        let rows: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32]).collect();
+        let mut reps = ReplicaMatrix::from_rows(&rows);
         let mut active = vec![true; n];
         active[5] = false;
         GossipEngine::new().mix_active(&g, &mut reps, &active);
         // Active nodes average over {0..4}: mean 2.0.
-        for (i, r) in reps.iter().enumerate().take(5) {
-            assert!((r[0] - 2.0).abs() < 1e-5, "node {i} got {}", r[0]);
+        for i in 0..5 {
+            assert!((reps[i][0] - 2.0).abs() < 1e-5, "node {i} got {}", reps[i][0]);
         }
         assert_eq!(reps[5][0], 5.0);
     }
@@ -840,16 +804,6 @@ mod tests {
         let g = CommGraph::build(GraphKind::Ring, 4).unwrap();
         let mut reps = replicas(3, 5, 0);
         GossipEngine::new().mix(&g, &mut reps);
-    }
-
-    #[test]
-    #[should_panic(expected = "equal parameter counts")]
-    fn mix_active_rejects_ragged_replicas() {
-        let g = CommGraph::build(GraphKind::Ring, 4).unwrap();
-        let mut reps = replicas(4, 5, 0);
-        reps[2].pop();
-        let active = vec![true, false, true, true];
-        GossipEngine::new().mix_active(&g, &mut reps, &active);
     }
 
     #[test]
@@ -903,8 +857,9 @@ mod tests {
             let mut eng = GossipEngine::new();
             for round in 0..3 {
                 eng.mix(&g, &mut split);
-                for (r, s) in split.iter_mut().zip(split_states.iter_mut()) {
-                    s.step(r, &grads[round % n], lr);
+                let shared = grads.row(round % n).to_vec();
+                for (w, s) in split_states.iter_mut().enumerate() {
+                    s.step(split.row_mut(w), &shared, lr);
                 }
             }
 
@@ -914,7 +869,7 @@ mod tests {
                 (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
             let mut feng = GossipEngine::new();
             for round in 0..3 {
-                let gs: Vec<Vec<f32>> = (0..n).map(|_| grads[round % n].clone()).collect();
+                let gs = ReplicaMatrix::broadcast(n, grads.row(round % n));
                 feng.mix_step(&g, &mut fused, &gs, &mut fused_states, lr);
             }
             // Same element ops in the same order ⇒ exact equality on the
@@ -967,7 +922,7 @@ mod tests {
             for _ in 0..3 {
                 eng.mix_active(&g, &mut split, &active);
                 for (w, s) in split_states.iter_mut().enumerate() {
-                    s.step(&mut split[w], &grads[w], lr);
+                    s.step(split.row_mut(w), grads.row(w), lr);
                 }
             }
 
@@ -1020,7 +975,7 @@ mod tests {
         }
         // And numerically the f32 replica mean.
         for k in (0..p).step_by(997) {
-            let want: f32 = reps.iter().map(|r| r[k]).sum::<f32>() / n as f32;
+            let want: f32 = reps.rows().map(|r| r[k]).sum::<f32>() / n as f32;
             assert!((reference[k] - want).abs() < 1e-5, "col {k}");
         }
     }

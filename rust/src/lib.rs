@@ -60,3 +60,4 @@ pub mod topology;
 pub mod util;
 
 pub use error::{AdaError, Result};
+pub use util::matrix::ReplicaMatrix;

@@ -24,43 +24,45 @@ pub fn l2_norm(v: &[f32]) -> f64 {
     v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
 }
 
-/// L2 norms of a named slice of each replica's flat parameter vector —
+/// L2 norms of a named slice of each replica's row in the flat store —
 /// used to study individual parameter tensors (Fig. 4) rather than the
-/// whole model.
-pub fn per_replica_l2_norms(replicas: &[Vec<f32>], range: std::ops::Range<usize>) -> Vec<f64> {
-    replicas
-        .iter()
-        .map(|p| l2_norm(&p[range.clone()]))
-        .collect()
+/// whole model. Serial reference path (single left-to-right f64 sum).
+pub fn per_replica_l2_norms(
+    replicas: &crate::util::matrix::ReplicaMatrix,
+    range: std::ops::Range<usize>,
+) -> Vec<f64> {
+    replicas.rows().map(|p| l2_norm(&p[range.clone()])).collect()
 }
 
 /// [`per_replica_l2_norms`] fanned out over the execution engine's
 /// persistent pool — the trainer's per-iteration variance capture,
 /// which was the largest remaining serial O(n·P) pass. One fork-join
 /// round covers the whole `replicas × tiles` grid
-/// ([`crate::exec::ExecEngine::run_reduce_rows`]).
+/// ([`crate::exec::ExecEngine::run_reduce_rows`]); each tile's sum of
+/// squares runs on the explicit SIMD layer
+/// ([`crate::exec::simd::sumsq_f64`]).
 ///
 /// The sum of squares is grouped by the engine's fixed
-/// [`crate::exec::REDUCE_GRANULARITY`] tiles, so results are
-/// **bit-identical for every thread count** (including the serial
-/// engine, which walks the same tiles). The tiled grouping differs from
-/// [`l2_norm`]'s single left-to-right f64 sum only in float rounding
-/// (≲1e-12 relative).
+/// [`crate::exec::REDUCE_GRANULARITY`] tiles, and within a tile by the
+/// SIMD layer's fixed 8 virtual lanes — both groupings are independent
+/// of the thread count and of AVX2 availability, so results are
+/// **bit-identical for every thread count and for both SIMD and scalar
+/// paths**. The tiled+laned grouping differs from [`l2_norm`]'s single
+/// left-to-right f64 sum only in float rounding (≲1e-12 relative).
 pub fn per_replica_l2_norms_pooled(
     exec: &crate::exec::ExecEngine,
-    replicas: &[Vec<f32>],
+    replicas: &crate::util::matrix::ReplicaMatrix,
     range: std::ops::Range<usize>,
 ) -> Vec<f64> {
     let base = range.start;
     exec.run_reduce_rows(
-        replicas.len(),
+        replicas.n(),
         range.len(),
         crate::exec::REDUCE_GRANULARITY,
         |row, tile| {
-            replicas[row][base + tile.start..base + tile.end]
-                .iter()
-                .map(|&x| (x as f64) * (x as f64))
-                .sum::<f64>()
+            crate::exec::simd::sumsq_f64(
+                &replicas.row(row)[base + tile.start..base + tile.end],
+            )
         },
         |a, b| a + b,
         0.0,
@@ -99,7 +101,10 @@ mod tests {
 
     #[test]
     fn per_replica_norms_slice_correctly() {
-        let replicas = vec![vec![3.0, 4.0, 100.0], vec![6.0, 8.0, 100.0]];
+        let replicas = crate::util::matrix::ReplicaMatrix::from_rows(&[
+            vec![3.0, 4.0, 100.0],
+            vec![6.0, 8.0, 100.0],
+        ]);
         let norms = per_replica_l2_norms(&replicas, 0..2);
         assert!((norms[0] - 5.0).abs() < 1e-12);
         assert!((norms[1] - 10.0).abs() < 1e-12);
@@ -110,9 +115,10 @@ mod tests {
         use crate::exec::ExecEngine;
         let mut rng = crate::util::rng::Rng::seed_from_u64(9);
         let p = 10_000; // several reduction tiles
-        let replicas: Vec<Vec<f32>> = (0..6)
+        let rows: Vec<Vec<f32>> = (0..6)
             .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
             .collect();
+        let replicas = crate::util::matrix::ReplicaMatrix::from_rows(&rows);
         let serial = per_replica_l2_norms_pooled(&ExecEngine::serial(), &replicas, 0..p);
         for (pooled, reference) in serial.iter().zip(per_replica_l2_norms(&replicas, 0..p)) {
             assert!(

@@ -4,6 +4,7 @@
 
 use super::{gini_coefficient, per_replica_l2_norms_pooled, VarianceReport};
 use crate::exec::ExecEngine;
+use crate::util::matrix::ReplicaMatrix;
 use std::ops::Range;
 
 /// Samples cross-replica variance statistics on a fixed iteration
@@ -36,13 +37,13 @@ impl VarianceProbe {
     pub fn capture(
         &self,
         exec: &ExecEngine,
-        replicas: &[Vec<f32>],
+        replicas: &ReplicaMatrix,
         iteration: usize,
     ) -> Option<(VarianceReport, Vec<f64>)> {
         if !self.due(iteration) {
             return None;
         }
-        let p = replicas.first().map(Vec::len).unwrap_or(0);
+        let p = replicas.p();
         let norms = per_replica_l2_norms_pooled(exec, replicas, 0..p);
         let report = VarianceReport::of(&norms);
         let per_tensor: Vec<f64> = self
@@ -61,8 +62,8 @@ impl VarianceProbe {
 mod tests {
     use super::*;
 
-    fn replicas() -> Vec<Vec<f32>> {
-        vec![vec![1.0; 64], vec![2.0; 64], vec![4.0; 64]]
+    fn replicas() -> ReplicaMatrix {
+        ReplicaMatrix::from_rows(&[vec![1.0; 64], vec![2.0; 64], vec![4.0; 64]])
     }
 
     #[test]

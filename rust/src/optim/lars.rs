@@ -71,8 +71,11 @@ impl Lars {
     }
 }
 
+/// Per-layer L2 norm, on the explicit SIMD layer's fixed-8-lane
+/// sum-of-squares ([`crate::exec::simd::sumsq_f32`]) — bit-identical
+/// between the AVX2 and scalar paths by construction.
 fn l2(v: &[f32]) -> f32 {
-    v.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    crate::exec::simd::sumsq_f32(v).sqrt()
 }
 
 #[cfg(test)]

@@ -23,16 +23,23 @@ impl SgdState {
     }
 
     /// In-place update: `v ← μv + (g + λθ)`, `θ ← θ − γv`.
+    ///
+    /// Routed through the explicit SIMD layer
+    /// ([`crate::exec::simd::sgd_step`]) — the same kernel the fused
+    /// gossip+SGD tiles run, so split and fused execution share one
+    /// float sequence and stay bit-identical (SIMD or scalar path
+    /// alike).
     pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.velocity.len());
-        let mu = self.momentum;
-        let wd = self.weight_decay;
-        for ((p, &g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
-            let eff = g + wd * *p;
-            *v = mu * *v + eff;
-            *p -= lr * *v;
-        }
+        crate::exec::simd::sgd_step(
+            params,
+            &mut self.velocity,
+            grads,
+            self.momentum,
+            self.weight_decay,
+            lr,
+        );
     }
 
     /// Reset accumulated velocity (e.g. after a topology change study).

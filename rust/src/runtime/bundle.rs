@@ -57,7 +57,7 @@ impl ModelBundle {
 
     /// One fused local step (fwd + bwd + SGD update, one PJRT call):
     /// `params` is updated in place; returns the batch loss.
-    pub fn local_step(&self, params: &mut Vec<f32>, batch: &Batch, lr: f32) -> Result<StepOutput> {
+    pub fn local_step(&self, params: &mut [f32], batch: &Batch, lr: f32) -> Result<StepOutput> {
         let m = &self.manifest;
         if batch.batch_size != m.batch_size {
             return Err(AdaError::Runtime(format!(
@@ -73,7 +73,15 @@ impl ModelBundle {
         };
         let p = lit_f32(params, &[m.param_count as i64])?;
         let outs = self.step.run(&[p, x, y, lit_scalar_f32(lr)?])?;
-        *params = to_f32(&outs[0])?;
+        let updated = to_f32(&outs[0])?;
+        if updated.len() != params.len() {
+            return Err(AdaError::Runtime(format!(
+                "step returned {} params, expected {}",
+                updated.len(),
+                params.len()
+            )));
+        }
+        params.copy_from_slice(&updated);
         Ok(StepOutput {
             loss: scalar_f32(&outs[1])?,
         })

@@ -1,0 +1,423 @@
+//! [`ReplicaMatrix`] — the flat replica parameter store.
+//!
+//! The training state of an n-replica run used to live in a
+//! `Vec<Vec<f32>>`: n separate heap allocations with no alignment or
+//! adjacency guarantees. That layout defeats everything the execution
+//! engine's column tiling is built around — aligned vector loads,
+//! hardware prefetch across rows, and the NUMA first-touch placement of
+//! scratch pages. `ReplicaMatrix` replaces it with **one contiguous
+//! allocation**:
+//!
+//! ```text
+//! ┌────────── stride (p rounded up to 16 f32 = 64 B) ──────────┐
+//! │ row 0: p live f32s                        │ zero padding   │
+//! │ row 1: p live f32s                        │ zero padding   │
+//! │ …                                         │                │
+//! │ row n−1                                   │                │
+//! └────────────────────────────────────────────────────────────┘
+//! base pointer and every row start are 64-byte aligned
+//! ```
+//!
+//! ## Layout contract
+//!
+//! * The base allocation is 64-byte aligned ([`ROW_ALIGN`] bytes — one
+//!   cache line, and the natural alignment of an AVX-512 register; AVX2
+//!   needs 32).
+//! * The row stride is `p` rounded up to [`ROW_ALIGN`]`/4` floats, so
+//!   **every row starts 64-byte aligned**. Column tiles *within* a row
+//!   start at arbitrary offsets — the SIMD kernels
+//!   ([`crate::exec::simd`]) therefore use unaligned loads, which cost
+//!   nothing on current x86 when the data is in fact aligned.
+//! * Padding floats are **always zero**: rows are only ever exposed as
+//!   `&[f32]`/`&mut [f32]` of length `p`, so no kernel can write (or
+//!   observe) padding. Equality compares live elements only.
+//!
+//! ## Tile ownership
+//!
+//! [`ReplicaMatrix::rows_mut`] splits the buffer into n disjoint
+//! mutable row views — the hand-off point to
+//! [`crate::exec::column_views`], which transposes them into per-worker
+//! column tiles. One worker owns one contiguous column range of *every*
+//! row for a whole kernel call (see `rust/src/exec/mod.rs`), and the
+//! allocation being a single flat block is what lets consecutive rows
+//! of one tile prefetch into the same cache set predictably.
+//!
+//! The store is deliberately dumb: no growth, no raggedness (the
+//! equal-parameter-count invariant of the old `Vec<Vec<f32>>` asserts
+//! is now structural), no interior mutability.
+
+use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+use std::ptr::NonNull;
+
+/// Row alignment in bytes: one cache line. Every row of a
+/// [`ReplicaMatrix`] starts on this boundary.
+pub const ROW_ALIGN: usize = 64;
+
+/// Row alignment in f32 elements (16).
+const ALIGN_F32: usize = ROW_ALIGN / std::mem::size_of::<f32>();
+
+/// A 64-byte-aligned heap buffer of f32s. Plain data: no interior
+/// mutability, freed on drop.
+struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: the buffer is plain `f32` data behind a unique owner; access
+// is governed by ordinary borrows on the wrapper.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f32>(), ROW_ALIGN)
+            .expect("replica matrix layout")
+    }
+
+    /// Zeroed buffer of `len` floats. Uses the zeroed allocator so
+    /// large buffers come back as lazily-mapped zero pages — the first
+    /// *write* to each page decides its physical placement, which the
+    /// gossip engine exploits for NUMA-aligned first touch.
+    fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size.
+        let raw = unsafe { alloc_zeroed(layout) } as *mut f32;
+        let Some(ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout);
+        };
+        AlignedBuf { ptr, len }
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        // SAFETY: ptr/len describe the owned allocation (or a dangling
+        // ptr with len 0, for which from_raw_parts is defined).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus unique access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len != 0 {
+            // SAFETY: allocated with the identical layout in `zeroed`/`clone`.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        if self.len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(self.len);
+        // SAFETY: non-zero size; contents copied below before any read.
+        let raw = unsafe { alloc(layout) } as *mut f32;
+        let Some(ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout);
+        };
+        // SAFETY: both buffers hold `len` floats and do not overlap.
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len) };
+        AlignedBuf { ptr, len: self.len }
+    }
+}
+
+/// The flat replica parameter store: `n` rows of `p` live f32s in one
+/// 64-byte-aligned allocation with a padded row stride. See the module
+/// docs for the layout contract.
+#[derive(Clone)]
+pub struct ReplicaMatrix {
+    buf: AlignedBuf,
+    n: usize,
+    p: usize,
+    stride: usize,
+}
+
+impl ReplicaMatrix {
+    /// The padded row stride for `p` live elements.
+    fn stride_for(p: usize) -> usize {
+        p.div_ceil(ALIGN_F32) * ALIGN_F32
+    }
+
+    /// A zeroed `n × p` matrix. Pages are lazily mapped (zeroed
+    /// allocator) so the first write to each page decides placement.
+    pub fn zeros(n: usize, p: usize) -> Self {
+        let stride = Self::stride_for(p);
+        ReplicaMatrix {
+            buf: AlignedBuf::zeroed(n * stride),
+            n,
+            p,
+            stride,
+        }
+    }
+
+    /// Build from equal-length rows (panics on ragged input — the
+    /// invariant every old `Vec<Vec<f32>>` call site asserted is now
+    /// enforced at construction, once).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let p = rows.first().map(Vec::len).unwrap_or(0);
+        assert!(
+            rows.iter().all(|r| r.len() == p),
+            "replicas must have equal parameter counts"
+        );
+        let mut m = Self::zeros(rows.len(), p);
+        for (i, r) in rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        m
+    }
+
+    /// `n` identical rows — §2.2's identical initial replicas.
+    pub fn broadcast(n: usize, row: &[f32]) -> Self {
+        let mut m = Self::zeros(n, row.len());
+        for i in 0..n {
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Replica count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Live parameters per replica.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Row stride in f32 elements (`p` rounded up to 16).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// True when the matrix holds no replicas.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Row `i` (the live `p` elements; padding is never exposed).
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.n, "row {i} out of range (n = {})", self.n);
+        &self.buf.as_slice()[i * self.stride..i * self.stride + self.p]
+    }
+
+    /// Mutable row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(i < self.n, "row {i} out of range (n = {})", self.n);
+        let (stride, p) = (self.stride, self.p);
+        &mut self.buf.as_mut_slice()[i * stride..i * stride + p]
+    }
+
+    /// All `n` rows, in order (empty slices when `p == 0`, so the row
+    /// count always agrees with [`ReplicaMatrix::n`]).
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        let (stride, p) = (self.stride, self.p);
+        let buf = self.buf.as_slice();
+        (0..self.n).map(move |i| &buf[i * stride..i * stride + p])
+    }
+
+    /// Split-row mutable access: all `n` rows as disjoint mutable
+    /// views, the hand-off point to the execution engine's
+    /// [`crate::exec::column_views`] tiling. Always `n` entries.
+    pub fn rows_mut(&mut self) -> Vec<&mut [f32]> {
+        let (stride, p, n) = (self.stride, self.p, self.n);
+        if p == 0 {
+            // Zero-width rows share no storage; hand out promoted
+            // empty slices so the count still matches `n`.
+            return (0..n).map(|_| &mut [] as &mut [f32]).collect();
+        }
+        self.buf
+            .as_mut_slice()
+            .chunks_exact_mut(stride)
+            .take(n)
+            .map(|c| &mut c[..p])
+            .collect()
+    }
+
+    /// Copy row 0 into every other row (the centralized strategy's
+    /// post-step broadcast), without intermediate allocation.
+    pub fn broadcast_first_row(&mut self) {
+        if self.n <= 1 || self.p == 0 {
+            return;
+        }
+        let (stride, p) = (self.stride, self.p);
+        let (head, rest) = self.buf.as_mut_slice().split_at_mut(stride);
+        let src = &head[..p];
+        for chunk in rest.chunks_exact_mut(stride).take(self.n - 1) {
+            chunk[..p].copy_from_slice(src);
+        }
+    }
+
+    /// Back to the legacy row-vector form (tests, the dense reference
+    /// path, external tooling).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        self.rows().map(<[f32]>::to_vec).collect()
+    }
+}
+
+impl Default for ReplicaMatrix {
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
+}
+
+impl Index<usize> for ReplicaMatrix {
+    type Output = [f32];
+
+    fn index(&self, i: usize) -> &[f32] {
+        self.row(i)
+    }
+}
+
+impl IndexMut<usize> for ReplicaMatrix {
+    fn index_mut(&mut self, i: usize) -> &mut [f32] {
+        self.row_mut(i)
+    }
+}
+
+impl PartialEq for ReplicaMatrix {
+    /// Live elements only — padding does not participate.
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.p == other.p
+            && self.rows().zip(other.rows()).all(|(a, b)| a == b)
+    }
+}
+
+impl fmt::Debug for ReplicaMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ReplicaMatrix")
+            .field("n", &self.n)
+            .field("p", &self.p)
+            .field("stride", &self.stride)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_row_is_cache_line_aligned() {
+        for (n, p) in [(1, 1), (3, 17), (8, 4096), (5, 4097), (16, 15)] {
+            let m = ReplicaMatrix::zeros(n, p);
+            assert_eq!(m.stride() % ALIGN_F32, 0);
+            assert!(m.stride() >= p);
+            assert!(m.stride() < p + ALIGN_F32);
+            for i in 0..n {
+                assert_eq!(
+                    m.row(i).as_ptr() as usize % ROW_ALIGN,
+                    0,
+                    "row {i} of {n}×{p} must start 64-byte aligned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_rows_roundtrips_through_to_vecs() {
+        let rows = vec![vec![1.0f32, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let m = ReplicaMatrix::from_rows(&rows);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.p(), 3);
+        assert_eq!(m.to_vecs(), rows);
+        assert_eq!(&m[1][..2], &[4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal parameter counts")]
+    fn from_rows_rejects_ragged_input() {
+        ReplicaMatrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn rows_mut_views_are_disjoint_and_cover() {
+        let mut m = ReplicaMatrix::zeros(4, 5);
+        {
+            let rows = m.rows_mut();
+            assert_eq!(rows.len(), 4);
+            for (i, r) in rows.into_iter().enumerate() {
+                assert_eq!(r.len(), 5);
+                r.fill(i as f32 + 1.0);
+            }
+        }
+        for i in 0..4 {
+            assert!(m.row(i).iter().all(|&v| v == i as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn broadcast_fills_identical_rows() {
+        let m = ReplicaMatrix::broadcast(3, &[7.0, 8.0]);
+        for i in 0..3 {
+            assert_eq!(m.row(i), &[7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_first_row_copies_over_all_rows() {
+        let mut m = ReplicaMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ]);
+        m.broadcast_first_row();
+        assert_eq!(m, ReplicaMatrix::broadcast(3, &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn equality_is_shape_and_live_elements() {
+        let a = ReplicaMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        b.row_mut(1)[0] = 9.0;
+        assert_ne!(a, b);
+        assert_ne!(a, ReplicaMatrix::zeros(2, 3));
+        assert_ne!(a, ReplicaMatrix::zeros(3, 2));
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let a = ReplicaMatrix::broadcast(2, &[1.0; 33]);
+        let mut b = a.clone();
+        b.row_mut(0)[32] = -1.0;
+        assert_eq!(a.row(0)[32], 1.0, "clone must not alias");
+    }
+
+    #[test]
+    fn swap_exchanges_whole_stores() {
+        let mut a = ReplicaMatrix::broadcast(2, &[1.0, 2.0]);
+        let mut b = ReplicaMatrix::broadcast(2, &[3.0, 4.0]);
+        std::mem::swap(&mut a, &mut b);
+        assert_eq!(a.row(0), &[3.0, 4.0]);
+        assert_eq!(b.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_matrices_are_safe() {
+        let mut m = ReplicaMatrix::zeros(0, 0);
+        assert!(m.is_empty());
+        assert_eq!(m.rows().count(), 0);
+        assert!(m.rows_mut().is_empty());
+        assert_eq!(m, ReplicaMatrix::default());
+        // Zero-width rows still count n rows everywhere.
+        let mut z = ReplicaMatrix::zeros(3, 0);
+        assert_eq!(z.n(), 3);
+        assert_eq!(z.rows().count(), 3);
+        assert_eq!(z.rows_mut().len(), 3);
+        assert!(z.rows().all(<[f32]>::is_empty));
+        assert_eq!(z.to_vecs(), vec![Vec::<f32>::new(); 3]);
+        assert_eq!(ReplicaMatrix::from_rows(&z.to_vecs()), z, "roundtrip at p = 0");
+    }
+}

@@ -1,20 +1,27 @@
-//! Determinism property tests for the multi-threaded execution engine:
-//! `mix`, `mix_active`, the fused `mix_step`/`mix_active_step`, and the
-//! pooled reductions (`run_reduce`, the trainer's variance capture)
-//! must produce **bit-identical** output for 1, 2, 4 and 8 threads on
-//! every [`GraphKind`], and the fused kernels must agree with their
+//! Determinism property tests for the multi-threaded execution engine
+//! and the explicit SIMD kernel layer: `mix`, `mix_active`, the fused
+//! `mix_step`/`mix_active_step`, and the pooled reductions
+//! (`run_reduce`, the trainer's variance capture) must produce
+//! **bit-identical** output for 1, 2, 4 and 8 threads on every
+//! [`GraphKind`] — and, since the flat-store refactor, for both the
+//! AVX2 path and the fixed-8-lane scalar fallback
+//! (`ada_dist::exec::simd`). The fused kernels must agree with their
 //! split sequences within 1e-6 (exactly, off the complete-graph fast
-//! path). Also proves the persistent-pool lifecycle contract: workers
-//! are spawned once, reused across calls without drift, and joined on
-//! drop. This is the contract that makes `--threads` a pure wall-clock
-//! knob — see `rust/src/exec/mod.rs` for the argument.
+//! path), and the engine must agree with the pre-refactor
+//! `Vec<Vec<f32>>` dense reference (`mix_dense_reference`) within float
+//! tolerance. Also proves the persistent-pool lifecycle contract:
+//! workers are spawned once, reused across calls without drift, and
+//! joined on drop. This is the contract that makes `--threads` a pure
+//! wall-clock knob — see `rust/src/exec/mod.rs` and
+//! `rust/src/exec/simd.rs` for the argument.
 
-use ada_dist::exec::{ExecEngine, REDUCE_GRANULARITY};
-use ada_dist::gossip::GossipEngine;
+use ada_dist::exec::{simd, ExecEngine, REDUCE_GRANULARITY};
+use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::metrics::per_replica_l2_norms_pooled;
 use ada_dist::optim::SgdState;
 use ada_dist::util::rng::Rng;
+use ada_dist::ReplicaMatrix;
 use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 
@@ -35,15 +42,22 @@ fn all_kinds() -> Vec<GraphKind> {
     ]
 }
 
-fn replicas(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+fn replicas(n: usize, p: usize, seed: u64) -> ReplicaMatrix {
     let mut rng = Rng::seed_from_u64(seed);
-    (0..n)
+    let rows: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
-        .collect()
+        .collect();
+    ReplicaMatrix::from_rows(&rows)
+}
+
+fn flat(p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect()
 }
 
 // P just above two tile widths so 4- and 8-thread runs split unevenly
-// (the interesting case for tile-boundary bugs).
+// (the interesting case for tile-boundary bugs), and not a multiple of
+// 8 so the SIMD remainder lanes are exercised.
 const P: usize = 2 * 4096 + 137;
 const N: usize = 16;
 
@@ -52,7 +66,7 @@ fn mix_is_bit_identical_for_every_thread_count_and_graph() {
     for (case, kind) in all_kinds().into_iter().enumerate() {
         let g = CommGraph::build(kind, N).unwrap();
         let src = replicas(N, P, 100 + case as u64);
-        let mut reference: Option<Vec<Vec<f32>>> = None;
+        let mut reference: Option<ReplicaMatrix> = None;
         for threads in THREAD_COUNTS {
             let mut reps = src.clone();
             let mut engine = GossipEngine::with_threads(threads);
@@ -77,7 +91,7 @@ fn mix_active_is_bit_identical_for_every_thread_count_and_graph() {
         let src = replicas(N, P, 200 + case as u64);
         // Deterministic mask with a mix of active and inactive rows.
         let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
-        let mut reference: Option<Vec<Vec<f32>>> = None;
+        let mut reference: Option<ReplicaMatrix> = None;
         for threads in THREAD_COUNTS {
             let mut reps = src.clone();
             GossipEngine::with_threads(threads).mix_active(&g, &mut reps, &active);
@@ -98,7 +112,7 @@ fn fused_step_is_bit_identical_for_every_thread_count_and_graph() {
         let g = CommGraph::build(kind, N).unwrap();
         let src = replicas(N, P, 300 + case as u64);
         let grads = replicas(N, P, 400 + case as u64);
-        let mut reference: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
+        let mut reference: Option<(ReplicaMatrix, Vec<Vec<f32>>)> = None;
         for threads in THREAD_COUNTS {
             let mut reps = src.clone();
             let mut states: Vec<SgdState> =
@@ -133,7 +147,7 @@ fn fused_equals_split_mix_then_step_within_1e6() {
     for (case, kind) in all_kinds().into_iter().enumerate() {
         let g = CommGraph::build(kind, N).unwrap();
         let src = replicas(N, P, 500 + case as u64);
-        let grads = replicas(N, P, 600 + case as u64);
+        let shared_grad = flat(P, 600 + case as u64);
         let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
 
         let mut split = src.clone();
@@ -144,13 +158,13 @@ fn fused_equals_split_mix_then_step_within_1e6() {
         let mut fused_states: Vec<SgdState> =
             (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
         let mut fused_engine = GossipEngine::with_threads(4);
+        let gs = ReplicaMatrix::broadcast(N, &shared_grad);
 
         for _round in 0..3 {
             split_engine.mix(&g, &mut split);
-            for (r, s) in split.iter_mut().zip(split_states.iter_mut()) {
-                s.step(r, &grads[0], lr);
+            for (w, s) in split_states.iter_mut().enumerate() {
+                s.step(split.row_mut(w), &shared_grad, lr);
             }
-            let gs: Vec<Vec<f32>> = (0..N).map(|_| grads[0].clone()).collect();
             fused_engine.mix_step(&g, &mut fused, &gs, &mut fused_states, lr);
         }
         for i in 0..N {
@@ -173,8 +187,142 @@ fn mix_active_with_full_mask_equals_mix() {
     let mut via_mix = src.clone();
     GossipEngine::with_threads(4).mix(&g, &mut via_mix);
     let mut via_active = src.clone();
-    GossipEngine::with_threads(4).mix_active(&g, &mut via_active, &vec![true; N]);
+    GossipEngine::with_threads(4).mix_active(&g, &mut via_active, &[true; N]);
     assert_eq!(via_mix, via_active);
+}
+
+// ---------------------------------------------------------------------
+// Explicit SIMD layer (PR 4): the AVX2 path and the fixed-8-lane scalar
+// fallback must be bit-identical — per kernel, and end-to-end through
+// every gossip kernel on every graph at every thread count — and the
+// engine must still match the pre-refactor Vec<Vec<f32>> dense
+// reference.
+// ---------------------------------------------------------------------
+
+/// Serializes the tests that flip the process-global scalar override so
+/// they cannot interleave with each other.
+static SIMD_MODE_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn simd_kernels_match_fixed_lane_scalar_bitwise() {
+    // Remainder-heavy lengths included: the virtual-lane contract must
+    // hold on partial final chunks too.
+    for len in [0usize, 1, 7, 8, 9, 255, 4096, P] {
+        let src = flat(len, 10);
+        let mut a = flat(len, 11);
+        let mut b = a.clone();
+        simd::axpy(&mut a, &src, 0.731);
+        simd::scalar::axpy(&mut b, &src, 0.731);
+        assert_eq!(a, b, "axpy len {len}");
+
+        let mut a = vec![0.0f32; len];
+        let mut b = vec![0.0f32; len];
+        simd::scale(&mut a, &src, -0.125);
+        simd::scalar::scale(&mut b, &src, -0.125);
+        assert_eq!(a, b, "scale len {len}");
+
+        let g = flat(len, 12);
+        let (mut pa, mut va) = (flat(len, 13), flat(len, 14));
+        let (mut pb, mut vb) = (pa.clone(), va.clone());
+        simd::sgd_step(&mut pa, &mut va, &g, 0.9, 1e-4, 0.05);
+        simd::scalar::sgd_step(&mut pb, &mut vb, &g, 0.9, 1e-4, 0.05);
+        assert_eq!(pa, pb, "sgd params len {len}");
+        assert_eq!(va, vb, "sgd velocity len {len}");
+
+        assert_eq!(
+            simd::sumsq_f64(&src).to_bits(),
+            simd::scalar::sumsq_f64(&src).to_bits(),
+            "sumsq_f64 len {len}"
+        );
+        assert_eq!(
+            simd::sumsq_f32(&src).to_bits(),
+            simd::scalar::sumsq_f32(&src).to_bits(),
+            "sumsq_f32 len {len}"
+        );
+    }
+}
+
+#[test]
+fn gossip_kernels_are_bit_identical_between_simd_and_forced_scalar() {
+    // End-to-end: every kernel × every graph × serial and 4-thread
+    // engines, AVX2 dispatch vs the forced scalar fallback.
+    let _guard = SIMD_MODE_LOCK.lock().unwrap();
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 2000 + case as u64);
+        let grads = replicas(N, P, 2100 + case as u64);
+        let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
+
+        let run = |threads: usize| {
+            let mut reps = src.clone();
+            let mut states: Vec<SgdState> =
+                (0..N).map(|_| SgdState::new(P, 0.9, 1e-4)).collect();
+            let mut engine = GossipEngine::with_threads(threads);
+            engine.mix(&g, &mut reps);
+            engine.mix_active(&g, &mut reps, &active);
+            engine.mix_step(&g, &mut reps, &grads, &mut states, 0.05);
+            engine.mix_active_step(&g, &mut reps, &grads, &mut states, 0.05, &active);
+            let norms =
+                per_replica_l2_norms_pooled(engine.exec(), &reps, 0..P);
+            (reps, norms)
+        };
+
+        simd::force_scalar(false);
+        let auto_serial = run(1);
+        let auto_pooled = run(4);
+        simd::force_scalar(true);
+        let scalar_serial = run(1);
+        let scalar_pooled = run(4);
+        simd::force_scalar(false);
+
+        assert_eq!(auto_serial, scalar_serial, "{kind}: serial SIMD vs scalar");
+        assert_eq!(auto_pooled, scalar_pooled, "{kind}: pooled SIMD vs scalar");
+        assert_eq!(auto_serial, auto_pooled, "{kind}: serial vs 4 threads");
+    }
+}
+
+#[test]
+fn engine_matches_pre_refactor_dense_reference_on_every_graph() {
+    // The flat-store engine vs the kept Vec<Vec<f32>> reference
+    // implementation (different summation grouping ⇒ tolerance, not
+    // bits), across thread counts.
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, 513, 2200 + case as u64);
+        let want = mix_dense_reference(&g, &src.to_vecs());
+        for threads in [1usize, 4] {
+            let mut reps = src.clone();
+            GossipEngine::with_threads(threads).mix(&g, &mut reps);
+            for i in 0..N {
+                for k in 0..513 {
+                    assert!(
+                        (reps[i][k] - want[i][k]).abs() < 1e-5,
+                        "{kind} @ {threads}t: dense-reference mismatch at [{i}][{k}]"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrips_the_flat_replica_store() {
+    // ReplicaMatrix → .ckpt → ReplicaMatrix is bit-exact, including a
+    // padded stride (P is not a multiple of 16).
+    use ada_dist::coordinator::Checkpoint;
+    let dir = ada_dist::util::scratch_dir("exec_det_ckpt").unwrap();
+    let path = dir.join("flat.ckpt");
+    let ck = Checkpoint {
+        epoch: 3,
+        flavor: "D_ring".into(),
+        seed: 99,
+        replicas: replicas(N, P, 2300),
+    };
+    assert!(ck.replicas.stride() > P, "P must exercise stride padding");
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck, back, "checkpoint roundtrip must be bit-exact");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---------------------------------------------------------------------
@@ -184,7 +332,7 @@ fn mix_active_with_full_mask_equals_mix() {
 
 #[test]
 fn reductions_are_bit_identical_for_every_thread_count() {
-    let data = replicas(1, P, 800).pop().unwrap();
+    let data = flat(P, 800);
     let run = |threads: usize| {
         let e = ExecEngine::new(threads);
         let sum = e.run_reduce(
@@ -257,7 +405,7 @@ fn fused_active_step_is_bit_identical_for_every_thread_count_and_graph() {
         let src = replicas(N, P, 900 + case as u64);
         let grads = replicas(N, P, 950 + case as u64);
         let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
-        let mut reference: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
+        let mut reference: Option<(ReplicaMatrix, Vec<Vec<f32>>)> = None;
         for threads in THREAD_COUNTS {
             let mut reps = src.clone();
             let mut states: Vec<SgdState> =
@@ -306,7 +454,7 @@ fn fused_active_step_equals_split_within_1e6_under_partial_participation() {
         for _round in 0..3 {
             split_engine.mix_active(&g, &mut split, &active);
             for (w, s) in split_states.iter_mut().enumerate() {
-                s.step(&mut split[w], &grads[w], lr);
+                s.step(split.row_mut(w), grads.row(w), lr);
             }
             fused_engine.mix_active_step(&g, &mut fused, &grads, &mut fused_states, lr, &active);
         }
@@ -330,7 +478,7 @@ fn fused_active_step_equals_split_within_1e6_under_partial_participation() {
 #[test]
 fn pool_is_reused_across_100_calls_without_drift() {
     let engine = ExecEngine::new(4);
-    let data = replicas(1, P, 1200).pop().unwrap();
+    let data = flat(P, 1200);
     let observed = Mutex::new(std::collections::HashSet::new());
     let mut reference: Option<u64> = None;
     for call in 0..100 {

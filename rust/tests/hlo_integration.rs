@@ -101,7 +101,7 @@ fn gossip_kernel_matches_native_engine() {
         let src: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect())
             .collect();
-        let mut native = src.clone();
+        let mut native = ada_dist::ReplicaMatrix::from_rows(&src);
         GossipEngine::new().mix(&g, &mut native);
         let mut hlo = src.clone();
         kernel.mix(&g, &mut hlo).unwrap();

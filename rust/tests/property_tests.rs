@@ -69,10 +69,11 @@ fn prop_gossip_preserves_mean_and_matches_dense() {
             Ok(g) => g,
             Err(_) => continue,
         };
-        let src: Vec<Vec<f32>> = (0..n)
+        let src_rows: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..p).map(|_| rng.range_f32(-2.0, 2.0)).collect())
             .collect();
-        let want = mix_dense_reference(&g, &src);
+        let src = ada_dist::ReplicaMatrix::from_rows(&src_rows);
+        let want = mix_dense_reference(&g, &src_rows);
         let mut got = src.clone();
         engine.mix(&g, &mut got);
         for i in 0..n {
@@ -85,8 +86,8 @@ fn prop_gossip_preserves_mean_and_matches_dense() {
         }
         // Mean preservation.
         for k in 0..p {
-            let before: f64 = src.iter().map(|r| r[k] as f64).sum();
-            let after: f64 = got.iter().map(|r| r[k] as f64).sum();
+            let before: f64 = src.rows().map(|r| r[k] as f64).sum();
+            let after: f64 = got.rows().map(|r| r[k] as f64).sum();
             assert!((before - after).abs() < 1e-3, "case {case} mean drift col {k}");
         }
     }

@@ -13,6 +13,7 @@ use ada_dist::data::{ShardStrategy, SyntheticClassification};
 use ada_dist::dbench::{ExperimentSpec, SessionPlan, StrategyRef};
 use ada_dist::error::Result;
 use ada_dist::metrics::IterationRecord;
+use ada_dist::ReplicaMatrix;
 use std::sync::{Arc, Mutex};
 
 fn all_flavors() -> Vec<SgdFlavor> {
@@ -112,7 +113,7 @@ struct TraceObserver {
 }
 
 impl Observer for TraceObserver {
-    fn on_iteration(&mut self, rec: &IterationRecord, replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_iteration(&mut self, rec: &IterationRecord, replicas: &ReplicaMatrix) -> Result<()> {
         assert!(!replicas.is_empty(), "observers see live replica state");
         self.log
             .lock()
@@ -129,7 +130,7 @@ impl Observer for TraceObserver {
         Ok(())
     }
 
-    fn on_complete(&mut self, summary: &RunSummary, _replicas: &[Vec<f32>]) -> Result<()> {
+    fn on_complete(&mut self, summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
         self.log
             .lock()
             .unwrap()
@@ -253,11 +254,11 @@ impl CombineStrategy for PeriodicAverage {
         "periodic_average"
     }
 
-    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut [Vec<f32>]) -> Result<f64> {
+    fn local_phase(&mut self, ctx: &mut StepCtx<'_>, replicas: &mut ReplicaMatrix) -> Result<f64> {
         let mut loss_sum = 0.0f64;
         for (w, loader) in ctx.loaders.iter().enumerate() {
             let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
-            loss_sum += ctx.model.local_step(w, &mut replicas[w], &batch, ctx.lr)? as f64;
+            loss_sum += ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)? as f64;
         }
         Ok(loss_sum / ctx.n as f64)
     }
@@ -265,7 +266,7 @@ impl CombineStrategy for PeriodicAverage {
     fn combine_phase(
         &mut self,
         ctx: &mut StepCtx<'_>,
-        replicas: &mut [Vec<f32>],
+        replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         self.rounds += 1;
         if self.rounds % self.period != 0 {
