@@ -19,7 +19,7 @@ use ada_dist::coordinator::SgdFlavor;
 use ada_dist::dbench::{format_table, run_experiment, ExperimentSpec};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::simnet::{ClusterSpec, SimNet};
-use ada_dist::topology::{AdaSchedule, TopologySchedule};
+use ada_dist::topology::{AdaSchedule, TopologyPolicy};
 use ada_dist::util::bench::{env_flag, env_usize, Table};
 
 fn main() {

@@ -1,24 +1,30 @@
-//! A custom SGD scenario registered from *outside* `coordinator/` and
-//! trained end-to-end through the DBench pipeline — the open strategy
-//! layer in ~60 lines.
+//! Custom SGD scenarios registered from *outside* `coordinator/` and
+//! `topology/`, trained end-to-end through the DBench pipeline — the
+//! open strategy **and** topology layers in ~100 lines.
 //!
 //!     cargo run --release --example custom_strategy
 //!
-//! The scenario is **local SGD with periodic averaging** (Stich 2018):
-//! workers run momentum-SGD locally and only gossip every `PERIOD`
-//! iterations, cutting communication by ~PERIOD× against the same
-//! graph. It needs a new per-iteration combine rule — exactly what
-//! [`CombineStrategy`] opens up: implement the trait, register a
-//! constructor under a name, add a plan cell referencing that name.
-//! No `ada_dist` source is touched.
+//! Two extensions, neither touching `ada_dist` source:
+//!
+//! 1. A combine strategy: **local SGD with periodic averaging**
+//!    (Stich 2018) — workers run momentum-SGD locally and only gossip
+//!    every `PERIOD` iterations, cutting communication by ~PERIOD×
+//!    against the same graph ([`CombineStrategy`] + strategy registry).
+//! 2. A topology policy: **loss-plateau decay** — keep the lattice
+//!    dense while the training loss is still falling fast, decay its
+//!    coordination number once progress plateaus. It reads
+//!    [`TrainSignals::train_loss`], one of the structured feedback
+//!    signals every policy receives per epoch ([`TopologyPolicy`] +
+//!    topology registry, referenced from a plan cell by name).
 
 use ada_dist::coordinator::strategy::{CombineStrategy, StepCtx, StrategyInstance};
 use ada_dist::coordinator::SgdFlavor;
-use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, StrategyRef};
+use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, StrategyRef, TopologyRef};
 use ada_dist::error::Result;
 use ada_dist::graph::{CommGraph, GraphKind};
-use ada_dist::topology::FnSchedule;
+use ada_dist::topology::{FnSchedule, TopologyPolicy, TrainSignals};
 use ada_dist::ReplicaMatrix;
+use std::sync::Mutex;
 
 /// How many local steps between averaging rounds.
 const PERIOD: usize = 4;
@@ -63,6 +69,53 @@ impl CombineStrategy for LocalSgd {
     }
 }
 
+/// A custom topology policy: hold a dense `k`-lattice while the mean
+/// training loss still improves by at least `min_drop` per epoch, halve
+/// `k` (floor 2) once it plateaus. Entirely out-of-crate: it only
+/// implements [`TopologyPolicy`] and reads the [`TrainSignals`] the
+/// session feeds every policy.
+struct LossPlateauDecay {
+    n: usize,
+    min_drop: f64,
+    state: Mutex<PlateauState>,
+}
+
+struct PlateauState {
+    k: usize,
+    last_loss: Option<f64>,
+}
+
+impl LossPlateauDecay {
+    fn new(n: usize, k0: usize, min_drop: f64) -> Self {
+        LossPlateauDecay {
+            n,
+            min_drop,
+            state: Mutex::new(PlateauState { k: k0.max(2), last_loss: None }),
+        }
+    }
+}
+
+impl TopologyPolicy for LossPlateauDecay {
+    fn graph_for(&self, _epoch: usize, _iter: usize) -> Result<CommGraph> {
+        let k = self.state.lock().expect("state").k;
+        CommGraph::build(GraphKind::AdaLattice { k }, self.n)
+    }
+
+    fn observe(&mut self, signals: &TrainSignals) {
+        let mut st = self.state.lock().expect("state");
+        if let Some(prev) = st.last_loss {
+            if prev - signals.train_loss < self.min_drop {
+                st.k = (st.k / 2).max(2); // plateau: halve the density
+            }
+        }
+        st.last_loss = Some(signals.train_loss);
+    }
+
+    fn name(&self) -> String {
+        format!("loss_plateau(min_drop={})", self.min_drop)
+    }
+}
+
 fn main() -> std::result::Result<(), Box<dyn std::error::Error>> {
     let workers = 8;
     let mut spec = ExperimentSpec::resnet20_analog();
@@ -95,13 +148,31 @@ fn main() -> std::result::Result<(), Box<dyn std::error::Error>> {
         spec.train_config(workers),
     );
 
+    // The custom topology policy: registered by name in the plan's
+    // topology registry, then referenced from a cell that keeps the
+    // stock gossip combine but swaps the graph policy.
+    plan.topologies.register("loss_plateau", |n, params| {
+        Ok(Box::new(LossPlateauDecay::new(
+            n,
+            params.usize_or("k0", n.saturating_sub(1).max(2))?,
+            params.f64_or("min_drop", 0.02)?,
+        )))
+    });
+    plan.push_cell_with_topology(
+        workers,
+        spec.seed,
+        StrategyRef::Flavor(SgdFlavor::DecentralizedComplete),
+        TopologyRef::parse("loss_plateau:min_drop=0.02")?,
+        spec.train_config(workers),
+    );
+
     let t0 = std::time::Instant::now();
     let cells = plan.run()?;
     println!(
         "{}",
         format_table(
             &format!(
-                "custom strategy: local SGD (sync every {PERIOD}) vs gossip baselines \
+                "custom strategy + custom topology policy vs gossip baselines \
                  @ {workers} workers ({:.1?})",
                 t0.elapsed()
             ),
@@ -110,7 +181,9 @@ fn main() -> std::result::Result<(), Box<dyn std::error::Error>> {
     );
     println!(
         "expected shape: D_local_sgd sends ~1/{PERIOD} of D_complete's bytes while\n\
-         staying close in accuracy (periodic averaging trades freshness for cost)."
+         staying close in accuracy (periodic averaging trades freshness for cost);\n\
+         D_complete+loss_plateau starts dense and sheds neighbors once the loss\n\
+         plateaus, landing between D_complete and D_ring in bytes/node."
     );
     Ok(())
 }

@@ -14,7 +14,8 @@
 use ada_dist::config::LauncherConfig;
 use ada_dist::coordinator::{strategy, SgdFlavor};
 use ada_dist::dbench::{
-    format_table, rank_analysis, run_experiment, ExperimentSpec, SessionPlan,
+    format_stats_table, format_table, rank_analysis, run_experiment, seed_stats,
+    ExperimentSpec, SessionPlan, TopologyRef,
 };
 use ada_dist::optim::ScalingRule;
 use ada_dist::util::cli::Args;
@@ -26,9 +27,15 @@ const USAGE: &str = "\
 dbench <command> [options]
   list        built-in application specs
   strategies  registered SGD strategy names (the open registry)
+  topologies  registered topology policy names (the topology registry)
   run         experiment grid (Fig 2/3/4/5-style), on the SessionPlan pipeline
     --app resnet20|resnet50|densenet|lstm | --spec FILE.toml
     --scales 8,16,32 --epochs N --max-iters N --sqrt-scaling --save-records
+    --topology name[:k=v,...]   override every decentralized cell's graph
+                        policy with one from the topology registry
+    --seeds K           run every cell K times with derived seeds and
+                        report mean ± stderr per cell (variance of the
+                        estimate; the paper reports single seeds)
     --threads N (0 = all cores; bit-identical results)  --fused
     --cell-parallel N   run up to N grid cells concurrently (bounded by
                         cores; auto-threaded cells then run 1 thread
@@ -37,6 +44,7 @@ dbench <command> [options]
                         whose seed/epochs/scale still match
   ada         Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
     --app NAME --workers N --epochs N --k0 N --gamma-k F
+    --topology name[:k=v,...]
   (global) --config PATH   launcher TOML";
 
 fn builtin(app: &str) -> Result<ExperimentSpec, String> {
@@ -80,6 +88,12 @@ fn main() -> CliResult {
             }
             Ok(())
         }
+        Some("topologies") => {
+            for name in ada_dist::topology::registry().names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
         Some("run") => cmd_run(&args, &cfg),
         Some("ada") => cmd_ada(&args, &cfg),
         _ => {
@@ -111,25 +125,45 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     if args.has_flag("fused") {
         spec.fused = true;
     }
+    if let Some(t) = args.get("topology") {
+        spec.topology = Some(TopologyRef::parse(t)?);
+    }
+    let seeds: usize = args.get_parse("seeds", 1)?;
     let mut plan = SessionPlan::from_spec(&spec);
+    plan.expand_seeds(seeds);
     plan.parallel = args.get_parse("cell-parallel", 1)?;
     plan.resume_dir = args.get("resume-dir").map(std::path::PathBuf::from);
     let t0 = std::time::Instant::now();
     let cells = plan.run()?;
-    println!(
-        "{}",
-        format_table(&format!("{} ({:.1?})", spec.name, t0.elapsed()), &cells)
-    );
-    // Per-scale ranking analysis (Fig. 5).
-    for &scale in &spec.scales {
-        let scale_cells: Vec<_> = cells.iter().filter(|c| c.scale == scale).collect();
-        if scale_cells.len() < 2 {
-            continue;
-        }
-        let rank = rank_analysis(scale_cells.iter().copied());
-        println!("variance ranks @ {scale} workers (1 = lowest variance):");
-        for (name, mean) in rank.ordering() {
-            println!("  {name:<16} mean rank {mean:.2}");
+    if seeds > 1 {
+        println!(
+            "{}",
+            format_stats_table(
+                &format!("{} × {seeds} seeds ({:.1?})", spec.name, t0.elapsed()),
+                &seed_stats(&cells)
+            )
+        );
+    } else {
+        println!(
+            "{}",
+            format_table(&format!("{} ({:.1?})", spec.name, t0.elapsed()), &cells)
+        );
+    }
+    // Per-scale ranking analysis (Fig. 5). Skipped in seeds mode: the
+    // replicated cells would compete as separate entrants (ranks
+    // 1..K·m instead of 1..m) while merging counts under one name —
+    // not comparable to the single-seed figure.
+    if seeds <= 1 {
+        for &scale in &spec.scales {
+            let scale_cells: Vec<_> = cells.iter().filter(|c| c.scale == scale).collect();
+            if scale_cells.len() < 2 {
+                continue;
+            }
+            let rank = rank_analysis(scale_cells.iter().copied());
+            println!("variance ranks @ {scale} workers (1 = lowest variance):");
+            for (name, mean) in rank.ordering() {
+                println!("  {name:<16} mean rank {mean:.2}");
+            }
         }
     }
     if args.has_flag("save-records") {
@@ -168,6 +202,9 @@ fn cmd_ada(args: &Args, cfg: &LauncherConfig) -> CliResult {
             gamma_k,
         },
     ];
+    if let Some(t) = args.get("topology") {
+        spec.topology = Some(TopologyRef::parse(t)?);
+    }
     let t0 = std::time::Instant::now();
     let cells = run_experiment(&spec)?;
     println!(

@@ -39,7 +39,10 @@ pub use checkpoint::Checkpoint;
 #[cfg(feature = "pjrt")]
 pub use hlo_model::HloModel;
 pub use lars_model::LarsWrapped;
-pub use observer::{CheckpointObserver, EpochInfo, Observer};
+pub use observer::{
+    CheckpointObserver, ControlFlow, DivergenceStreakStop, EpochInfo, Observer,
+    TargetAccuracyStop,
+};
 pub use session::{SessionBuilder, TrainSession};
 pub use strategy::{CombineStrategy, Registry, StepCtx, StrategyInstance, StrategyParams};
 pub use trainer::{LrPolicy, RunSummary, SgdFlavor, TrainConfig, Trainer};

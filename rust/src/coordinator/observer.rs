@@ -1,4 +1,4 @@
-//! Run observers: the open instrumentation layer of
+//! Run observers: the open instrumentation **and control** layer of
 //! [`crate::coordinator::TrainSession`].
 //!
 //! The old trainer hard-wired its monitoring — records pushed straight
@@ -9,6 +9,14 @@
 //! round), and `on_complete` (after the final evaluation). The session
 //! invokes its own recorder through the same trait — it is simply the
 //! first observer — followed by user observers in registration order.
+//!
+//! The channel is **bidirectional**: `on_iteration` and `on_epoch`
+//! return a [`ControlFlow`], and the session honors [`ControlFlow::Stop`]
+//! by ending the run early — final evaluation and `on_complete` still
+//! run, so an early-stopped run produces a complete summary. The
+//! built-in stoppers are [`TargetAccuracyStop`] (halt once the
+//! evaluated metric reaches a target) and [`DivergenceStreakStop`]
+//! (halt after a streak of worsening training losses).
 
 use super::trainer::RunSummary;
 use super::Checkpoint;
@@ -17,13 +25,41 @@ use crate::metrics::{IterationRecord, RunRecorder};
 use crate::util::matrix::ReplicaMatrix;
 use std::path::PathBuf;
 
+/// What an observer asks the session to do next. Hooks combine across
+/// observers with [`ControlFlow::merge`]: any `Stop` wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ControlFlow {
+    /// Keep training (the default).
+    #[default]
+    Continue,
+    /// End the run after this hook: skip the remaining iterations and
+    /// epochs, then evaluate and fire `on_complete` as usual.
+    Stop,
+}
+
+impl ControlFlow {
+    /// Combine two verdicts: `Stop` dominates.
+    pub fn merge(self, other: ControlFlow) -> ControlFlow {
+        if self == ControlFlow::Stop || other == ControlFlow::Stop {
+            ControlFlow::Stop
+        } else {
+            ControlFlow::Continue
+        }
+    }
+
+    /// Whether this verdict ends the run.
+    pub fn is_stop(&self) -> bool {
+        *self == ControlFlow::Stop
+    }
+}
+
 /// End-of-epoch context handed to [`Observer::on_epoch`].
 pub struct EpochInfo<'a> {
     /// The 0-based epoch that just finished.
     pub epoch: usize,
     /// Mean captured gini over the epoch (`None` when the variance
     /// probe was off this epoch) — the same signal the topology
-    /// schedule's `observe` consumes.
+    /// policy's `observe` consumes.
     pub mean_gini: Option<f64>,
     /// Current replica parameters (post-averaging), as the run's flat
     /// replica store.
@@ -34,21 +70,29 @@ pub struct EpochInfo<'a> {
     pub seed: u64,
 }
 
-/// A training-progress consumer. All hooks default to no-ops so
-/// implementations opt into the events they need; any hook may fail the
-/// run by returning an error (e.g. a full disk under a checkpointer).
+/// A training-progress consumer (and, through [`ControlFlow`], a run
+/// controller). All hooks default to no-ops so implementations opt into
+/// the events they need; any hook may fail the run by returning an
+/// error (e.g. a full disk under a checkpointer).
 pub trait Observer: Send {
-    /// One training iteration finished and its record is final.
-    fn on_iteration(&mut self, _rec: &IterationRecord, _replicas: &ReplicaMatrix) -> Result<()> {
-        Ok(())
+    /// One training iteration finished and its record is final. Return
+    /// [`ControlFlow::Stop`] to end the run after this iteration.
+    fn on_iteration(
+        &mut self,
+        _rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        Ok(ControlFlow::Continue)
     }
 
-    /// One epoch finished (after its last combine round).
-    fn on_epoch(&mut self, _info: &EpochInfo<'_>) -> Result<()> {
-        Ok(())
+    /// One epoch finished (after its last combine round). Return
+    /// [`ControlFlow::Stop`] to end the run after this epoch.
+    fn on_epoch(&mut self, _info: &EpochInfo<'_>) -> Result<ControlFlow> {
+        Ok(ControlFlow::Continue)
     }
 
-    /// The run finished and was evaluated.
+    /// The run finished (normally or by an early stop) and was
+    /// evaluated.
     fn on_complete(&mut self, _summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
         Ok(())
     }
@@ -59,8 +103,13 @@ pub trait Observer: Send {
 /// run completes. The session drives it through this impl, so custom
 /// observers and the built-in recording share one code path.
 impl Observer for RunRecorder {
-    fn on_iteration(&mut self, rec: &IterationRecord, _replicas: &ReplicaMatrix) -> Result<()> {
-        self.push(rec.clone())
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        self.push(rec.clone())?;
+        Ok(ControlFlow::Continue)
     }
 
     fn on_complete(&mut self, _summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
@@ -99,9 +148,9 @@ impl CheckpointObserver {
 }
 
 impl Observer for CheckpointObserver {
-    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<()> {
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<ControlFlow> {
         if (info.epoch + 1) % self.every_epochs != 0 {
-            return Ok(());
+            return Ok(ControlFlow::Continue);
         }
         let ckpt = Checkpoint {
             epoch: info.epoch + 1,
@@ -114,7 +163,99 @@ impl Observer for CheckpointObserver {
             .join(format!("{}_epoch{:04}.ckpt", info.label, info.epoch + 1));
         ckpt.save(&path)?;
         self.written.push(path);
-        Ok(())
+        Ok(ControlFlow::Continue)
+    }
+}
+
+/// Early stopping on a target evaluation metric: stop as soon as an
+/// evaluated iteration reports `test_metric ≥ target` — the
+/// "train to X% accuracy, then stop paying for communication" scenario
+/// (classification metrics, where higher is better).
+pub struct TargetAccuracyStop {
+    target: f64,
+    stopped_at: Option<usize>,
+}
+
+impl TargetAccuracyStop {
+    /// Stop once an evaluation reaches `target`.
+    pub fn new(target: f64) -> Self {
+        TargetAccuracyStop { target, stopped_at: None }
+    }
+
+    /// The iteration the target was reached at, once stopped.
+    pub fn stopped_at(&self) -> Option<usize> {
+        self.stopped_at
+    }
+}
+
+impl Observer for TargetAccuracyStop {
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        if let Some(metric) = rec.test_metric {
+            if metric >= self.target {
+                self.stopped_at.get_or_insert(rec.iteration);
+                return Ok(ControlFlow::Stop);
+            }
+        }
+        Ok(ControlFlow::Continue)
+    }
+}
+
+/// Early stopping on a divergence streak: stop after `streak`
+/// consecutive iterations whose training loss worsened (or immediately
+/// on a non-finite loss) — cheaper than waiting for the session's
+/// NaN-divergence break when a run is clearly running away.
+pub struct DivergenceStreakStop {
+    streak: usize,
+    prev_loss: Option<f64>,
+    run_length: usize,
+    stopped_at: Option<usize>,
+}
+
+impl DivergenceStreakStop {
+    /// Stop after `streak` consecutive worsening iterations (`0` is
+    /// treated as 1).
+    pub fn new(streak: usize) -> Self {
+        DivergenceStreakStop {
+            streak: streak.max(1),
+            prev_loss: None,
+            run_length: 0,
+            stopped_at: None,
+        }
+    }
+
+    /// The iteration the streak completed at, once stopped.
+    pub fn stopped_at(&self) -> Option<usize> {
+        self.stopped_at
+    }
+}
+
+impl Observer for DivergenceStreakStop {
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        if !rec.train_loss.is_finite() {
+            self.stopped_at.get_or_insert(rec.iteration);
+            return Ok(ControlFlow::Stop);
+        }
+        if let Some(prev) = self.prev_loss {
+            if rec.train_loss > prev {
+                self.run_length += 1;
+            } else {
+                self.run_length = 0;
+            }
+        }
+        self.prev_loss = Some(rec.train_loss);
+        if self.run_length >= self.streak {
+            self.stopped_at.get_or_insert(rec.iteration);
+            return Ok(ControlFlow::Stop);
+        }
+        Ok(ControlFlow::Continue)
     }
 }
 
@@ -138,10 +279,23 @@ mod tests {
     }
 
     #[test]
+    fn control_flow_merges_toward_stop() {
+        use ControlFlow::{Continue, Stop};
+        assert_eq!(Continue.merge(Continue), Continue);
+        assert_eq!(Continue.merge(Stop), Stop);
+        assert_eq!(Stop.merge(Continue), Stop);
+        assert!(Stop.is_stop() && !Continue.is_stop());
+        assert_eq!(ControlFlow::default(), Continue);
+    }
+
+    #[test]
     fn recorder_observer_accumulates_records() {
         let mut r = RunRecorder::in_memory("D_ring");
         let replicas = ReplicaMatrix::zeros(2, 4);
-        Observer::on_iteration(&mut r, &rec(0), &replicas).unwrap();
+        assert_eq!(
+            Observer::on_iteration(&mut r, &rec(0), &replicas).unwrap(),
+            ControlFlow::Continue
+        );
         Observer::on_iteration(&mut r, &rec(1), &replicas).unwrap();
         assert_eq!(r.records().len(), 2);
         assert_eq!(r.records()[1].iteration, 1);
@@ -153,14 +307,16 @@ mod tests {
         let mut obs = CheckpointObserver::new(&dir, 2);
         let replicas = ReplicaMatrix::broadcast(3, &[1.0f32; 8]);
         for epoch in 0..4 {
-            obs.on_epoch(&EpochInfo {
-                epoch,
-                mean_gini: None,
-                replicas: &replicas,
-                label: "D_torus",
-                seed: 7,
-            })
-            .unwrap();
+            let flow = obs
+                .on_epoch(&EpochInfo {
+                    epoch,
+                    mean_gini: None,
+                    replicas: &replicas,
+                    label: "D_torus",
+                    seed: 7,
+                })
+                .unwrap();
+            assert_eq!(flow, ControlFlow::Continue);
         }
         assert_eq!(obs.written().len(), 2, "epochs 2 and 4");
         let back = Checkpoint::load(&obs.written()[1]).unwrap();
@@ -169,5 +325,50 @@ mod tests {
         assert_eq!(back.seed, 7);
         assert_eq!(back.replicas, replicas);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn target_accuracy_stops_only_on_evaluated_iterations() {
+        let mut obs = TargetAccuracyStop::new(0.9);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        let mut r = rec(0);
+        assert!(!obs.on_iteration(&r, &replicas).unwrap().is_stop(), "no eval yet");
+        r.iteration = 1;
+        r.test_metric = Some(0.5);
+        assert!(!obs.on_iteration(&r, &replicas).unwrap().is_stop(), "below target");
+        r.iteration = 2;
+        r.test_metric = Some(0.95);
+        assert!(obs.on_iteration(&r, &replicas).unwrap().is_stop());
+        assert_eq!(obs.stopped_at(), Some(2));
+    }
+
+    #[test]
+    fn divergence_streak_counts_consecutive_worsening() {
+        let mut obs = DivergenceStreakStop::new(2);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        let losses = [1.0, 0.9, 1.1, 0.8, 0.9, 1.0];
+        let mut stopped = None;
+        for (i, &l) in losses.iter().enumerate() {
+            let mut r = rec(i);
+            r.train_loss = l;
+            if obs.on_iteration(&r, &replicas).unwrap().is_stop() {
+                stopped = Some(i);
+                break;
+            }
+        }
+        // 0.9→1.1 is one rise (reset by 0.8); 0.8→0.9→1.0 completes the
+        // streak of two at index 5.
+        assert_eq!(stopped, Some(5));
+        assert_eq!(obs.stopped_at(), Some(5));
+    }
+
+    #[test]
+    fn divergence_streak_stops_immediately_on_nan() {
+        let mut obs = DivergenceStreakStop::new(10);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        let mut r = rec(0);
+        r.train_loss = f64::NAN;
+        assert!(obs.on_iteration(&r, &replicas).unwrap().is_stop());
+        assert_eq!(obs.stopped_at(), Some(0));
     }
 }

@@ -4,20 +4,26 @@
 //! A session is assembled from four open parts:
 //!
 //! * a **strategy** ([`crate::coordinator::strategy::CombineStrategy`] +
-//!   optional [`TopologySchedule`]), resolved from a
+//!   optional [`TopologyPolicy`]), resolved from a
 //!   [`StrategyInstance`] — by flavor name through the registry, or a
-//!   custom instance the caller built;
+//!   custom instance the caller built — with an optional
+//!   [`topology`](SessionBuilder::topology) override swapping in any
+//!   policy (e.g. one resolved from `crate::topology::registry`);
 //! * a **variance probe** ([`VarianceProbe`]) sampling the §3.1.2
 //!   pre-averaging instrumentation point;
 //! * **observers** ([`Observer`]) — the run's own [`RunRecorder`]
 //!   driven through the same trait, followed by user observers in
-//!   registration order;
+//!   registration order; their [`ControlFlow`](super::observer::ControlFlow)
+//!   verdicts flow *back* into the loop (observer-driven early stopping);
 //! * the **config** ([`TrainConfig`]), unchanged from the closed API.
 //!
 //! The loop itself is the §2.1 iteration structure the old 961-line
 //! trainer hard-wired: local phase → capture → combine phase → eval +
 //! record, with failure injection, LR schedules, checkpoint resume and
 //! the deterministic execution engine all preserved bit-for-bit.
+//! Topology policies get iteration-level decision points
+//! ([`crate::topology::TopologyPolicy::graph_for`]) and a structured
+//! [`TrainSignals`] feedback bundle after every epoch.
 
 use super::observer::{EpochInfo, Observer};
 use super::strategy::{
@@ -30,9 +36,11 @@ use crate::data::{shard_indices, train_test_split, Dataset, ShardLoader};
 use crate::error::{AdaError, Result};
 use crate::exec::ExecEngine;
 use crate::gossip::{mean_model, GossipEngine};
-use crate::metrics::{IterationRecord, RunRecorder, VarianceProbe, VarianceReport};
+use crate::metrics::{
+    consensus_distance, IterationRecord, RunRecorder, VarianceProbe, VarianceReport,
+};
 use crate::runtime::ModelKind;
-use crate::topology::TopologySchedule;
+use crate::topology::{RunInfo, TopologyPolicy, TrainSignals};
 use crate::util::matrix::ReplicaMatrix;
 
 /// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`],
@@ -44,9 +52,10 @@ pub struct SessionBuilder<'m> {
     model: &'m mut dyn LocalModel,
     config: TrainConfig,
     label: Option<String>,
-    schedule: Option<Box<dyn TopologySchedule>>,
+    schedule: Option<Box<dyn TopologyPolicy>>,
     k_neighbors: usize,
     combine: Option<Box<dyn CombineStrategy>>,
+    topology_override: Option<Box<dyn TopologyPolicy>>,
     observers: Vec<Box<dyn Observer>>,
     initial_replicas: Option<ReplicaMatrix>,
     start_epoch: usize,
@@ -68,6 +77,24 @@ impl<'m> SessionBuilder<'m> {
         self.schedule = inst.schedule;
         self.k_neighbors = inst.k_neighbors;
         self.combine = inst.combine;
+        self
+    }
+
+    /// Replace the strategy's communication-graph policy with `policy`
+    /// (e.g. one resolved by name from [`crate::topology::registry`]).
+    /// `k_neighbors` — the Table 2 LR-scaling input — is re-derived
+    /// from the policy's [`k_hint`](TopologyPolicy::k_hint). Applies on
+    /// [`build`](SessionBuilder::build), whatever the call order.
+    ///
+    /// The strategy must already be decentralized: overriding a
+    /// schedule-less (centralized) strategy is a [`build`] error —
+    /// silently rewiring it into gossip would belie its label, and
+    /// [`crate::dbench::SessionPlan`] skips such overrides for the same
+    /// reason.
+    ///
+    /// [`build`]: SessionBuilder::build
+    pub fn topology(mut self, policy: Box<dyn TopologyPolicy>) -> Self {
+        self.topology_override = Some(policy);
         self
     }
 
@@ -100,10 +127,27 @@ impl<'m> SessionBuilder<'m> {
         if self.config.n_workers < 2 {
             return Err(AdaError::Coordinator("need at least 2 workers".into()));
         }
+        // A topology override replaces the strategy's own schedule and
+        // re-derives the LR-scaling neighbor count from the policy.
+        let (schedule, k_neighbors) = match self.topology_override {
+            Some(policy) => {
+                if self.schedule.is_none() {
+                    return Err(AdaError::Coordinator(format!(
+                        "topology override {:?} needs a decentralized strategy \
+                         ({:?} has no graph schedule to replace)",
+                        policy.name(),
+                        label
+                    )));
+                }
+                let k = policy.k_hint();
+                (Some(policy), k)
+            }
+            None => (self.schedule, self.k_neighbors),
+        };
         let combine: Box<dyn CombineStrategy> = match self.combine {
             Some(c) => c,
             None => {
-                if self.schedule.is_none() {
+                if schedule.is_none() {
                     Box::new(CentralizedAverage::new(self.config.central_momentum))
                 } else if self.config.fused && self.model.supports_loss_and_grad() {
                     Box::new(FusedGossipCombine::new(self.config.fused_momentum))
@@ -116,8 +160,8 @@ impl<'m> SessionBuilder<'m> {
             model: self.model,
             config: self.config,
             label,
-            schedule: self.schedule,
-            k_neighbors: self.k_neighbors,
+            schedule,
+            k_neighbors,
             combine,
             observers: self.observers,
             initial_replicas: self.initial_replicas,
@@ -131,7 +175,7 @@ pub struct TrainSession<'m> {
     model: &'m mut dyn LocalModel,
     config: TrainConfig,
     label: String,
-    schedule: Option<Box<dyn TopologySchedule>>,
+    schedule: Option<Box<dyn TopologyPolicy>>,
     k_neighbors: usize,
     combine: Box<dyn CombineStrategy>,
     observers: Vec<Box<dyn Observer>>,
@@ -149,6 +193,7 @@ impl<'m> TrainSession<'m> {
             schedule: None,
             k_neighbors: 0,
             combine: None,
+            topology_override: None,
             observers: Vec::new(),
             initial_replicas: None,
             start_epoch: 0,
@@ -233,6 +278,18 @@ impl<'m> TrainSession<'m> {
         };
         let mut engine = GossipEngine::with_threads(cfg.threads);
         self.combine.prepare(n, p)?;
+        if let Some(s) = &mut self.schedule {
+            s.on_run_start(&RunInfo {
+                n_workers: n,
+                param_count: p,
+                epochs: cfg.epochs,
+                iters_per_epoch,
+            });
+        }
+        // Epoch-scoped policies (the default) resolve their graph once
+        // per epoch — graph construction and cloning stay off the
+        // iteration path, exactly as before the policy redesign.
+        let iteration_scoped = self.schedule.as_ref().is_some_and(|s| s.iteration_scoped());
         // Failure-injection stream (deterministic under the run seed).
         let mut drop_rng = crate::util::rng::Rng::seed_from_u64(cfg.seed ^ 0xD209);
 
@@ -242,15 +299,25 @@ impl<'m> TrainSession<'m> {
         };
         let mut diverged = false;
         let mut iteration = 0usize;
+        let mut total_bytes_per_node = 0u64;
 
         'epochs: for epoch in self.start_epoch..cfg.epochs {
-            let graph = match &self.schedule {
-                Some(s) => Some(s.graph_for_epoch(epoch)?),
-                None => None,
+            let epoch_graph = match &self.schedule {
+                Some(s) if !iteration_scoped => Some(s.graph_for(epoch, 0)?),
+                _ => None,
             };
             let mut epoch_gini_sum = 0.0f64;
+            let mut epoch_var_sum = 0.0f64;
             let mut epoch_gini_count = 0usize;
+            let mut epoch_loss_sum = 0.0f64;
+            let mut epoch_iter_count = 0usize;
+            let mut epoch_test_metric: Option<f64> = None;
             for b in 0..iters_per_epoch {
+                let iter_graph = match &self.schedule {
+                    Some(s) if iteration_scoped => Some(s.graph_for(epoch, b)?),
+                    _ => None,
+                };
+                let graph = iter_graph.as_ref().or(epoch_graph.as_ref());
                 let frac_epoch = epoch as f64 + b as f64 / iters_per_epoch as f64;
                 let lr = lr_schedule.lr_at(frac_epoch) as f32;
                 // --- local phase (strategy) --------------------------
@@ -260,7 +327,7 @@ impl<'m> TrainSession<'m> {
                         dataset,
                         loaders: &loaders,
                         engine: &mut engine,
-                        graph: graph.as_ref(),
+                        graph,
                         active: None,
                         epoch,
                         batch: b,
@@ -273,15 +340,20 @@ impl<'m> TrainSession<'m> {
                 if !train_loss.is_finite() {
                     diverged = true;
                 }
+                epoch_loss_sum += train_loss;
+                epoch_iter_count += 1;
 
                 // --- pre-averaging metric capture (DBench §3.1.2) ----
                 let captured = probe.capture(engine.exec(), &replicas, iteration);
-                if let Some((v, _)) = &captured {
-                    epoch_gini_sum += v.gini;
+                if let Some(sample) = &captured {
+                    epoch_gini_sum += sample.report.gini;
+                    epoch_var_sum += crate::metrics::variance(&sample.norms);
                     epoch_gini_count += 1;
                 }
-                let (variance, per_tensor) =
-                    captured.unwrap_or_else(|| (VarianceReport::of(&[]), Vec::new()));
+                let (variance, per_tensor) = match captured {
+                    Some(sample) => (sample.report, sample.per_tensor_gini),
+                    None => (VarianceReport::of(&[]), Vec::new()),
+                };
 
                 // --- combine phase (strategy) ------------------------
                 // The failure-injection mask is drawn here — by the
@@ -301,7 +373,7 @@ impl<'m> TrainSession<'m> {
                         dataset,
                         loaders: &loaders,
                         engine: &mut engine,
-                        graph: graph.as_ref(),
+                        graph,
                         active: active_mask.as_deref(),
                         epoch,
                         batch: b,
@@ -311,6 +383,7 @@ impl<'m> TrainSession<'m> {
                     };
                     self.combine.combine_phase(&mut ctx, &mut replicas)?
                 };
+                total_bytes_per_node += bytes;
 
                 // --- eval + record + observers -----------------------
                 let eval_now = b + 1 == iters_per_epoch
@@ -331,6 +404,9 @@ impl<'m> TrainSession<'m> {
                 } else {
                     None
                 };
+                if test_metric.is_some() {
+                    epoch_test_metric = test_metric;
+                }
                 let rec = IterationRecord {
                     iteration,
                     epoch,
@@ -342,12 +418,18 @@ impl<'m> TrainSession<'m> {
                     bytes_per_node: bytes,
                     lr: lr as f64,
                 };
-                Observer::on_iteration(&mut recorder, &rec, &replicas)?;
+                let mut flow = Observer::on_iteration(&mut recorder, &rec, &replicas)?;
                 for obs in &mut self.observers {
-                    obs.on_iteration(&rec, &replicas)?;
+                    flow = flow.merge(obs.on_iteration(&rec, &replicas)?);
                 }
                 iteration += 1;
                 if diverged {
+                    break 'epochs;
+                }
+                if flow.is_stop() {
+                    // Observer-driven early stop: like the divergence
+                    // break, the run ends here and proceeds straight to
+                    // the final evaluation and `on_complete`.
                     break 'epochs;
                 }
             }
@@ -356,8 +438,36 @@ impl<'m> TrainSession<'m> {
             } else {
                 None
             };
-            if let (Some(s), Some(g)) = (&mut self.schedule, mean_gini) {
-                s.observe(epoch, g);
+            if let Some(s) = &mut self.schedule {
+                // The structured feedback bundle. The consensus
+                // distance costs two O(n·P) passes, so it is measured
+                // only for policies that opted in — static benchmark
+                // schedules (and centralized sessions) pay nothing.
+                let distance = if s.wants_consensus_distance() {
+                    let mean = mean_model(engine.exec(), &replicas);
+                    Some(consensus_distance(engine.exec(), &replicas, &mean))
+                } else {
+                    None
+                };
+                let l2_variance = if epoch_gini_count > 0 {
+                    Some(epoch_var_sum / epoch_gini_count as f64)
+                } else {
+                    None
+                };
+                let signals = TrainSignals {
+                    epoch,
+                    gini: mean_gini,
+                    l2_variance,
+                    consensus_distance: distance,
+                    train_loss: if epoch_iter_count > 0 {
+                        epoch_loss_sum / epoch_iter_count as f64
+                    } else {
+                        f64::NAN
+                    },
+                    test_metric: epoch_test_metric,
+                    comm_bytes_per_node: total_bytes_per_node,
+                };
+                s.observe(&signals);
             }
             let info = EpochInfo {
                 epoch,
@@ -366,9 +476,12 @@ impl<'m> TrainSession<'m> {
                 label: &self.label,
                 seed: cfg.seed,
             };
-            Observer::on_epoch(&mut recorder, &info)?;
+            let mut flow = Observer::on_epoch(&mut recorder, &info)?;
             for obs in &mut self.observers {
-                obs.on_epoch(&info)?;
+                flow = flow.merge(obs.on_epoch(&info)?);
+            }
+            if flow.is_stop() {
+                break 'epochs;
             }
         }
 

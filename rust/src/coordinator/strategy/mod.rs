@@ -4,8 +4,9 @@
 //! combine mechanism and communication graph a run uses (Observations
 //! 2–3, Ada §4). This module makes that axis **open**: a per-iteration
 //! [`CombineStrategy`] (how replicas compute and exchange updates), a
-//! per-epoch [`TopologySchedule`] (which graph they exchange over), and
-//! a name-keyed [`Registry`] that constructs both, so new scenarios —
+//! [`TopologyPolicy`] (which graph they exchange over, with its own
+//! name-keyed registry in `crate::topology::registry`), and a
+//! name-keyed [`Registry`] that constructs both, so new scenarios —
 //! a D² variance-correction update, consensus-controlled mixing, local
 //! SGD with periodic averaging — plug in without touching the session
 //! loop or this crate at all.
@@ -45,7 +46,7 @@
 //! complete out-of-crate strategy registered and trained end-to-end.
 //!
 //! [`SgdFlavor`]: crate::coordinator::SgdFlavor
-//! [`TopologySchedule`]: crate::topology::TopologySchedule
+//! [`TopologyPolicy`]: crate::topology::TopologyPolicy
 
 mod centralized;
 mod gossip;
@@ -59,8 +60,9 @@ use crate::error::{AdaError, Result};
 use crate::gossip::GossipEngine;
 use crate::graph::{CommGraph, GraphKind};
 use crate::util::matrix::ReplicaMatrix;
+use crate::util::params::ParamTable;
 use crate::topology::{
-    AdaSchedule, OnePeerExponential, StaticSchedule, TopologySchedule, VarianceAdaptive,
+    AdaSchedule, OnePeerExponential, StaticSchedule, TopologyPolicy, VarianceAdaptive,
 };
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -172,6 +174,22 @@ impl StrategyParams {
             AdaError::Config(format!("strategy {name} needs k0 (initial coordination number)"))
         })
     }
+
+    /// Build params from a [`ParamTable`] — the shape behind spec TOML
+    /// `[strategy.<name>]` sections and CLI `name:k=v,…` arguments
+    /// (shared with the topology registry). Unknown keys error.
+    pub fn from_table(n: usize, table: &ParamTable) -> Result<Self> {
+        table.expect_only(&["k0", "gamma_k", "step", "threshold", "patience"])?;
+        let mut p = Self::for_n(n);
+        if let Some(v) = table.get_usize("k0")? {
+            p.k0 = Some(v);
+        }
+        p.gamma_k = table.f64_or("gamma_k", p.gamma_k)?;
+        p.step = table.usize_or("step", p.step)?;
+        p.threshold = table.f64_or("threshold", p.threshold)?;
+        p.patience = table.usize_or("patience", p.patience)?;
+        Ok(p)
+    }
 }
 
 /// A fully resolved, ready-to-train scenario: what a [`Registry`]
@@ -181,8 +199,8 @@ pub struct StrategyInstance {
     /// Run label (paper-style: `C_complete`, `D_ring`, …) used in
     /// records, tables and summaries.
     pub label: String,
-    /// Per-epoch communication graph; `None` = centralized.
-    pub schedule: Option<Box<dyn TopologySchedule>>,
+    /// Communication-graph policy; `None` = centralized.
+    pub schedule: Option<Box<dyn TopologyPolicy>>,
     /// Neighbor count `k` for Table 2's LR scaling
     /// (`s = batch·(k+1)/divisor`): the densest phase of adaptive
     /// schedules sets the safe LR.
@@ -426,6 +444,25 @@ mod tests {
             reg.resolve("D_ring", &StrategyParams::for_n(6)).unwrap().label,
             "D_ring_override"
         );
+    }
+
+    #[test]
+    fn params_from_table_map_known_keys_and_reject_typos() {
+        let t = ParamTable::parse_kv("k0=10,gamma_k=0.5,step=3,threshold=0.01,patience=2")
+            .unwrap();
+        let p = StrategyParams::from_table(8, &t).unwrap();
+        assert_eq!(p.n_workers, 8);
+        assert_eq!(p.k0, Some(10));
+        assert_eq!(p.gamma_k, 0.5);
+        assert_eq!(p.step, 3);
+        assert_eq!(p.threshold, 0.01);
+        assert_eq!(p.patience, 2);
+        // Empty table = defaults.
+        let d = StrategyParams::from_table(8, &ParamTable::new()).unwrap();
+        assert_eq!(d, StrategyParams::for_n(8));
+        // Typos are loud.
+        let bad = ParamTable::parse_kv("kO=10").unwrap();
+        assert!(StrategyParams::from_table(8, &bad).is_err());
     }
 
     #[test]

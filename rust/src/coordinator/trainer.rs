@@ -16,7 +16,7 @@ use crate::data::{Dataset, ShardStrategy};
 use crate::error::{AdaError, Result};
 use crate::metrics::RunRecorder;
 use crate::optim::{LrSchedule, ScalingRule};
-use crate::topology::TopologySchedule;
+use crate::topology::TopologyPolicy;
 use crate::util::json::Value;
 use std::path::PathBuf;
 
@@ -99,14 +99,14 @@ impl SgdFlavor {
         p
     }
 
-    /// Topology schedule for decentralized flavors (`None` =
+    /// Topology policy for decentralized flavors (`None` =
     /// centralized), resolved through the builtin strategy registry.
     /// The registry's [`StrategyInstance`] is also the single source of
     /// the flavor's `k_neighbors` (Table 2's LR-scaling input) — there
     /// is deliberately no duplicate per-flavor formula here.
     ///
     /// [`StrategyInstance`]: crate::coordinator::strategy::StrategyInstance
-    pub fn schedule(&self, n: usize) -> Result<Option<Box<dyn TopologySchedule>>> {
+    pub fn schedule(&self, n: usize) -> Result<Option<Box<dyn TopologyPolicy>>> {
         Ok(strategy::registry()
             .resolve(&self.name(), &self.params(n))?
             .schedule)

@@ -16,7 +16,7 @@
 mod plan;
 mod spec;
 
-pub use plan::{CellPlan, SessionPlan, StrategyRef};
+pub use plan::{CellPlan, SessionPlan, StrategyRef, TopologyRef};
 pub use spec::{ExperimentSpec, Workload};
 
 use crate::coordinator::{SgdFlavor, TrainConfig, Trainer};
@@ -85,6 +85,126 @@ pub fn rank_analysis<'a>(cells: impl IntoIterator<Item = &'a CellResult>) -> Ran
         summary.record(&entries);
     }
     summary
+}
+
+/// One `(scale, flavor)` group of seed-replicated cells, folded into
+/// mean ± standard-error estimates — the variance-of-the-estimate view
+/// the paper's single-seed tables lack.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    /// Training scale (worker count).
+    pub scale: usize,
+    /// Flavor / strategy label.
+    pub flavor: String,
+    /// Number of seed replicates folded in.
+    pub seeds: usize,
+    /// Mean final metric across seeds.
+    pub mean_metric: f64,
+    /// Standard error of the final metric (0 for a single seed).
+    pub stderr_metric: f64,
+    /// Mean final loss across seeds.
+    pub mean_loss: f64,
+    /// Standard error of the final loss.
+    pub stderr_loss: f64,
+    /// Mean bytes sent per node.
+    pub mean_bytes_per_node: f64,
+    /// How many replicates diverged.
+    pub diverged: usize,
+}
+
+fn mean_stderr(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, (var / n).sqrt())
+}
+
+/// Fold seed-replicated cells (see [`SessionPlan::expand_seeds`]) into
+/// one [`CellStats`] row per `(scale, flavor)` group, preserving first
+/// appearance order. Works on single-seed runs too (stderr 0).
+///
+/// Diverged replicates are **excluded** from the metric/loss estimates
+/// (their NaN losses would poison the whole row) and reported through
+/// [`CellStats::diverged`] instead; a row whose every replicate
+/// diverged gets NaN means.
+pub fn seed_stats(cells: &[CellResult]) -> Vec<CellStats> {
+    let mut order: Vec<(usize, &str)> = Vec::new();
+    for c in cells {
+        if !order.iter().any(|&(s, f)| s == c.scale && f == c.flavor) {
+            order.push((c.scale, &c.flavor));
+        }
+    }
+    order
+        .into_iter()
+        .map(|(scale, flavor)| {
+            let group: Vec<&CellResult> = cells
+                .iter()
+                .filter(|c| c.scale == scale && c.flavor == flavor)
+                .collect();
+            let healthy: Vec<&&CellResult> =
+                group.iter().filter(|c| !c.summary.diverged).collect();
+            let metrics: Vec<f64> =
+                healthy.iter().map(|c| c.summary.final_eval.metric).collect();
+            let losses: Vec<f64> =
+                healthy.iter().map(|c| c.summary.final_eval.loss).collect();
+            let (mean_metric, stderr_metric) = if healthy.is_empty() {
+                (f64::NAN, 0.0)
+            } else {
+                mean_stderr(&metrics)
+            };
+            let (mean_loss, stderr_loss) = if healthy.is_empty() {
+                (f64::NAN, 0.0)
+            } else {
+                mean_stderr(&losses)
+            };
+            let bytes =
+                group.iter().map(|c| c.summary.bytes_per_node as f64).sum::<f64>()
+                    / group.len() as f64;
+            CellStats {
+                scale,
+                flavor: flavor.to_string(),
+                seeds: group.len(),
+                mean_metric,
+                stderr_metric,
+                mean_loss,
+                stderr_loss,
+                mean_bytes_per_node: bytes,
+                diverged: group.len() - healthy.len(),
+            }
+        })
+        .collect()
+}
+
+/// Render seed statistics as an aligned text table with mean ± stderr
+/// columns (the k-seeds-per-cell companion of [`format_table`]).
+pub fn format_stats_table(title: &str, stats: &[CellStats]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<8} {:<24} {:>6} {:>20} {:>20} {:>14} {:>6}\n",
+        "scale", "flavor", "seeds", "metric (mean±se)", "loss (mean±se)", "MB/node", "div"
+    ));
+    for s in stats {
+        out.push_str(&format!(
+            "{:<8} {:<24} {:>6} {:>12.4}±{:<7.4} {:>12.4}±{:<7.4} {:>14.2} {:>6}\n",
+            s.scale,
+            s.flavor,
+            s.seeds,
+            s.mean_metric,
+            s.stderr_metric,
+            s.mean_loss,
+            s.stderr_loss,
+            s.mean_bytes_per_node / 1e6,
+            s.diverged,
+        ));
+    }
+    out
 }
 
 /// Render cells as an aligned text table (the bench harness output).
@@ -179,6 +299,83 @@ mod tests {
         let ranks = rank_analysis(&cells);
         assert!(ranks.count("D_ring") > 0);
         assert_eq!(ranks.count("D_ring"), ranks.count("D_complete"));
+    }
+
+    #[test]
+    fn seed_stats_fold_replicates_into_mean_and_stderr() {
+        let mut spec = tiny_spec();
+        spec.flavors = vec![SgdFlavor::DecentralizedRing];
+        let mut plan = SessionPlan::from_spec(&spec);
+        plan.expand_seeds(3);
+        assert_eq!(plan.cells.len(), 3, "one cell × 3 seed replicates");
+        let seeds: Vec<u64> = plan.cells.iter().map(|c| c.seed).collect();
+        assert_eq!(seeds, vec![spec.seed, spec.seed + 1, spec.seed + 2]);
+        let cells = plan.run().unwrap();
+        let stats = seed_stats(&cells);
+        assert_eq!(stats.len(), 1, "replicates fold back into one row");
+        let s = &stats[0];
+        assert_eq!(s.seeds, 3);
+        assert_eq!(s.flavor, "D_ring");
+        assert!(
+            s.stderr_metric > 0.0,
+            "different seeds must disperse the estimate: {}",
+            s.stderr_metric
+        );
+        let within = cells
+            .iter()
+            .all(|c| (c.summary.final_eval.metric - s.mean_metric).abs() < 0.5);
+        assert!(within, "mean must sit among the replicates");
+        let table = format_stats_table("stats", &stats);
+        assert!(table.contains('±'), "{table}");
+        assert!(table.contains("D_ring"), "{table}");
+    }
+
+    #[test]
+    fn seed_stats_exclude_diverged_replicates_from_the_estimates() {
+        use crate::coordinator::EvalResult;
+        let cell = |metric: f64, loss: f64, diverged: bool| CellResult {
+            scale: 8,
+            flavor: "D_ring".into(),
+            recorder: RunRecorder::in_memory("D_ring"),
+            summary: crate::coordinator::RunSummary {
+                flavor: "D_ring".into(),
+                final_eval: EvalResult { loss, metric },
+                diverged,
+                bytes_per_node: 100,
+                early_gini: 0.0,
+                late_gini: 0.0,
+            },
+        };
+        let cells = vec![
+            cell(0.8, 0.5, false),
+            cell(0.6, 0.7, false),
+            cell(f64::NAN, f64::NAN, true), // must not poison the row
+        ];
+        let stats = seed_stats(&cells);
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.seeds, 3);
+        assert_eq!(s.diverged, 1);
+        assert!((s.mean_metric - 0.7).abs() < 1e-12, "{}", s.mean_metric);
+        assert!((s.mean_loss - 0.6).abs() < 1e-12, "{}", s.mean_loss);
+        assert!(s.stderr_metric.is_finite() && s.stderr_metric > 0.0);
+        // All replicates diverged: NaN means, but the row still exists.
+        let all_bad = vec![cell(f64::NAN, f64::NAN, true)];
+        let s = &seed_stats(&all_bad)[0];
+        assert!(s.mean_metric.is_nan());
+        assert_eq!(s.diverged, 1);
+    }
+
+    #[test]
+    fn seed_stats_on_single_seed_runs_have_zero_stderr() {
+        let spec = tiny_spec();
+        let cells = run_experiment(&spec).unwrap();
+        let stats = seed_stats(&cells);
+        assert_eq!(stats.len(), cells.len());
+        for s in &stats {
+            assert_eq!(s.seeds, 1);
+            assert_eq!(s.stderr_metric, 0.0);
+        }
     }
 
     #[test]

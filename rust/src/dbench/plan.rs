@@ -11,7 +11,11 @@
 //!   [`SgdFlavor`] or by registry name ([`StrategyRef::Named`]),
 //!   resolved per cell against a [`Registry`] the caller may extend —
 //!   a new [`crate::coordinator::strategy::CombineStrategy`] trains
-//!   end-to-end from here without touching `coordinator/` source;
+//!   end-to-end from here without touching `coordinator/` source; a
+//!   cell may additionally carry a [`TopologyRef`] that swaps the
+//!   strategy's communication-graph policy for one resolved by name
+//!   (with a parameter table) against the plan's
+//!   [`topologies`](SessionPlan::topologies) registry;
 //! * **execution** — sequential by default; `parallel > 1` opts into a
 //!   bounded cell executor (scoped threads over an atomic work queue,
 //!   capped by the machine's core count), and `resume_dir` makes cells
@@ -36,7 +40,9 @@ use crate::coordinator::{SgdFlavor, TrainConfig, TrainSession};
 use crate::error::{AdaError, Result};
 use crate::exec::resolve_threads;
 use crate::metrics::{IterationRecord, RunRecorder};
+use crate::topology::{self, TopologyRegistry};
 use crate::util::json::Value;
+use crate::util::params::ParamTable;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -54,6 +60,50 @@ pub enum StrategyRef {
         /// Constructor parameters.
         params: StrategyParams,
     },
+}
+
+/// A by-name reference to a topology policy, resolved per cell against
+/// the plan's [`TopologyRegistry`] and applied **over** the strategy's
+/// own schedule: the policy replaces the instance's graph schedule, the
+/// LR-scaling neighbor count is re-derived from the policy's `k_hint`,
+/// and the cell label gains a `+<name>` suffix. Strategies that resolve
+/// *without* a schedule (centralized) ignore the override and keep
+/// their label. The same shape backs spec TOML `[topology.<name>]`
+/// tables and the CLI `--topology name:k=v,…` flag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyRef {
+    /// Registry key.
+    pub name: String,
+    /// Constructor parameters.
+    pub params: ParamTable,
+}
+
+impl TopologyRef {
+    /// A named reference with default params.
+    pub fn named(name: impl Into<String>) -> Self {
+        TopologyRef {
+            name: name.into(),
+            params: ParamTable::new(),
+        }
+    }
+
+    /// Parse the CLI form `name` or `name:k=v,k2=v2`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (name, rest) = match text.split_once(':') {
+            Some((name, rest)) => (name, rest),
+            None => (text, ""),
+        };
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(AdaError::Config(format!(
+                "topology reference {text:?} is missing a name (name:k=v,…)"
+            )));
+        }
+        Ok(TopologyRef {
+            name: name.to_string(),
+            params: ParamTable::parse_kv(rest)?,
+        })
+    }
 }
 
 impl StrategyRef {
@@ -101,6 +151,10 @@ pub struct CellPlan {
     pub seed: u64,
     /// The strategy to train.
     pub strategy: StrategyRef,
+    /// Optional topology override, resolved against
+    /// [`SessionPlan::topologies`] (`None` = the strategy's own
+    /// schedule).
+    pub topology: Option<TopologyRef>,
     /// The per-run configuration.
     pub config: TrainConfig,
 }
@@ -125,6 +179,9 @@ pub struct SessionPlan {
     /// Strategy resolution table (builtin flavors preloaded; register
     /// custom scenarios here).
     pub registry: Registry,
+    /// Topology resolution table (builtin policies preloaded; register
+    /// custom graph policies here).
+    pub topologies: TopologyRegistry,
     /// Max concurrently executing cells (`0`/`1` = sequential). The
     /// effective bound is `min(parallel, available cores, cells)`.
     pub parallel: usize,
@@ -134,19 +191,42 @@ pub struct SessionPlan {
 }
 
 impl SessionPlan {
-    /// Enumerate `spec`'s grid (scale-major, flavor-minor — the order
+    /// Enumerate `spec`'s grid (scale-major, flavor-minor with named
+    /// registry strategies after the flavors — the order
     /// [`super::run_experiment`] has always produced) with the spec's
-    /// shared seed in every cell.
+    /// shared seed in every cell. The spec's topology override (TOML
+    /// `topology = "<name>"` + `[topology.<name>]`) lands on every
+    /// decentralized cell; `C_complete` keeps its centralized path
+    /// (and [`SessionPlan::run_cell_plan`] skips the override for any
+    /// strategy that resolves without a graph schedule, so named
+    /// centralized strategies behave identically to the flavor).
     pub fn from_spec(spec: &ExperimentSpec) -> Self {
-        let mut cells = Vec::with_capacity(spec.scales.len() * spec.flavors.len());
+        let per_scale = spec.flavors.len() + spec.strategies.len();
+        let mut cells = Vec::with_capacity(spec.scales.len() * per_scale);
         for &scale in &spec.scales {
             for flavor in &spec.flavors {
+                let topology = match flavor {
+                    SgdFlavor::CentralizedComplete => None,
+                    _ => spec.topology.clone(),
+                };
                 let index = cells.len();
                 cells.push(CellPlan {
                     index,
                     scale,
                     seed: spec.seed,
                     strategy: StrategyRef::Flavor(flavor.clone()),
+                    topology,
+                    config: spec.train_config(scale),
+                });
+            }
+            for named in &spec.strategies {
+                let index = cells.len();
+                cells.push(CellPlan {
+                    index,
+                    scale,
+                    seed: spec.seed,
+                    strategy: named.clone(),
+                    topology: spec.topology.clone(),
                     config: spec.train_config(scale),
                 });
             }
@@ -156,6 +236,7 @@ impl SessionPlan {
             workload: spec.workload.clone(),
             cells,
             registry: strategy::registry(),
+            topologies: topology::registry(),
             parallel: 1,
             resume_dir: None,
         }
@@ -177,8 +258,46 @@ impl SessionPlan {
             scale,
             seed,
             strategy,
+            topology: None,
             config,
         });
+    }
+
+    /// Append a cell whose graph policy is resolved by name against
+    /// [`SessionPlan::topologies`] instead of coming from the strategy.
+    pub fn push_cell_with_topology(
+        &mut self,
+        scale: usize,
+        seed: u64,
+        strategy: StrategyRef,
+        topology: TopologyRef,
+        config: TrainConfig,
+    ) {
+        self.push_cell(scale, seed, strategy, config);
+        self.cells.last_mut().expect("cell just pushed").topology = Some(topology);
+    }
+
+    /// Replicate every cell `k` times with derived per-replicate seeds
+    /// (`seed, seed+1, …, seed+k−1`) — the variance-of-the-estimate
+    /// mode. Cells re-enumerate replicate-minor, so
+    /// [`super::seed_stats`] can fold the results back into one row of
+    /// mean ± stderr per original cell. `k ≤ 1` leaves the plan
+    /// unchanged.
+    pub fn expand_seeds(&mut self, k: usize) {
+        if k <= 1 {
+            return;
+        }
+        let mut cells = Vec::with_capacity(self.cells.len() * k);
+        for cell in &self.cells {
+            for r in 0..k as u64 {
+                let mut c = cell.clone();
+                c.index = cells.len();
+                c.seed = cell.seed + r;
+                c.config.seed = c.seed;
+                cells.push(c);
+            }
+        }
+        self.cells = cells;
     }
 
     /// Execute every cell, returning results in enumeration order.
@@ -242,11 +361,20 @@ impl SessionPlan {
         }
         let dataset = self.workload.dataset(cell.seed)?;
         let mut model = self.workload.model(cell.scale)?;
-        let instance = cell.strategy.resolve(&self.registry, cell.scale)?;
+        let mut instance = cell.strategy.resolve(&self.registry, cell.scale)?;
+        let mut builder = TrainSession::builder(model.as_mut(), cell.config.clone());
+        // The override only applies to strategies that already exchange
+        // over a graph — centralized instances (no schedule) keep their
+        // path and label, however the cell was referenced.
+        if let (Some(tref), true) = (&cell.topology, instance.schedule.is_some()) {
+            instance.label = format!("{}+{}", instance.label, tref.name);
+            let policy = self
+                .topologies
+                .resolve(&tref.name, cell.scale, &tref.params)?;
+            builder = builder.topology(policy);
+        }
         let label = instance.label.clone();
-        let session = TrainSession::builder(model.as_mut(), cell.config.clone())
-            .strategy(instance)
-            .build()?;
+        let session = builder.strategy(instance).build()?;
         let (recorder, summary) = session.run(dataset.as_ref())?;
         let result = CellResult {
             scale: cell.scale,
@@ -266,16 +394,23 @@ impl SessionPlan {
 
     /// The cache key of a cell's result: everything that changes the
     /// produced floats — the workload (dataset shape + model family),
-    /// the strategy reference with its parameters, and every
-    /// result-affecting [`TrainConfig`] field. Deliberately excluded:
-    /// `threads` (bit-identical by the engine's contract, so the cache
-    /// is shared across `parallel`/thread settings) and `record_path`.
+    /// the strategy reference with its parameters, the topology
+    /// override (when present), and every result-affecting
+    /// [`TrainConfig`] field. Deliberately excluded: `threads`
+    /// (bit-identical by the engine's contract, so the cache is shared
+    /// across `parallel`/thread settings) and `record_path`. Cells
+    /// without a topology override keep their pre-redesign fingerprint,
+    /// so existing resume caches stay valid.
     pub fn cell_fingerprint(&self, cell: &CellPlan) -> String {
         let c = &cell.config;
+        let topology = match &cell.topology {
+            Some(t) => format!(" topology={t:?}"),
+            None => String::new(),
+        };
         format!(
             "workload={:?} strategy={:?} n={} epochs={} seed={} lr={:?} shard={:?} \
              test_frac={} eval_every={} metrics_every={} max_iters={:?} track={:?} \
-             central_momentum={} drop_prob={} fused={} fused_momentum={}",
+             central_momentum={} drop_prob={} fused={} fused_momentum={}{}",
             self.workload,
             cell.strategy,
             c.n_workers,
@@ -292,6 +427,7 @@ impl SessionPlan {
             c.drop_prob,
             c.fused,
             c.fused_momentum,
+            topology,
         )
     }
 }
@@ -470,6 +606,118 @@ mod tests {
             assert_eq!(a.recorder.records().len(), b.recorder.records().len());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn topology_ref_parses_cli_syntax() {
+        let t = TopologyRef::parse("ada:k0=10,gamma_k=0.5").unwrap();
+        assert_eq!(t.name, "ada");
+        assert_eq!(t.params.get_usize("k0").unwrap(), Some(10));
+        assert_eq!(t.params.get_f64("gamma_k").unwrap(), Some(0.5));
+        let bare = TopologyRef::parse("one_peer").unwrap();
+        assert_eq!(bare.name, "one_peer");
+        assert!(bare.params.is_empty());
+        assert!(TopologyRef::parse(":k=1").is_err());
+        assert!(TopologyRef::parse("ada:k0").is_err());
+    }
+
+    #[test]
+    fn topology_cells_resolve_and_label_with_suffix() {
+        let mut spec = tiny_spec();
+        spec.flavors = vec![SgdFlavor::DecentralizedRing];
+        let mut plan = SessionPlan::from_spec(&spec);
+        plan.push_cell_with_topology(
+            4,
+            spec.seed,
+            StrategyRef::Flavor(SgdFlavor::DecentralizedRing),
+            TopologyRef::parse("static:graph=complete").unwrap(),
+            spec.train_config(4),
+        );
+        let cells = plan.run().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].flavor, "D_ring");
+        assert_eq!(cells[1].flavor, "D_ring+static");
+        // Complete-graph gossip sends more bytes than the ring override
+        // it replaced — proof the policy actually drove the run.
+        assert!(
+            cells[1].summary.bytes_per_node > cells[0].summary.bytes_per_node,
+            "{} vs {}",
+            cells[1].summary.bytes_per_node,
+            cells[0].summary.bytes_per_node
+        );
+        // An unknown topology name fails at resolution with the
+        // registered list in the message.
+        let mut bad = SessionPlan::from_spec(&spec);
+        bad.push_cell_with_topology(
+            4,
+            spec.seed,
+            StrategyRef::Flavor(SgdFlavor::DecentralizedRing),
+            TopologyRef::named("mystery"),
+            spec.train_config(4),
+        );
+        let err = bad.run_cell_plan(&bad.cells[1]).unwrap_err().to_string();
+        assert!(err.contains("mystery"), "{err}");
+    }
+
+    #[test]
+    fn spec_topology_override_skips_centralized_cells() {
+        let mut spec = tiny_spec();
+        spec.flavors = vec![
+            SgdFlavor::CentralizedComplete,
+            SgdFlavor::DecentralizedRing,
+        ];
+        spec.topology = Some(TopologyRef::named("one_peer"));
+        let plan = SessionPlan::from_spec(&spec);
+        assert_eq!(plan.cells[0].topology, None, "C_complete stays centralized");
+        assert_eq!(
+            plan.cells[1].topology.as_ref().map(|t| t.name.as_str()),
+            Some("one_peer")
+        );
+    }
+
+    #[test]
+    fn named_centralized_strategies_ignore_the_override_too() {
+        // A cell that *explicitly* carries a TopologyRef but resolves to
+        // a schedule-less (centralized) instance: the override is
+        // skipped at resolution time — same rule as the flavor path —
+        // so the run stays centralized and the label unsuffixed.
+        let mut plan = SessionPlan::from_spec(&tiny_spec());
+        plan.cells.clear();
+        plan.push_cell_with_topology(
+            4,
+            42,
+            StrategyRef::named("C_complete"),
+            TopologyRef::named("one_peer"),
+            tiny_spec().train_config(4),
+        );
+        let with_override = plan.run_cell_plan(&plan.cells[0]).unwrap();
+        assert_eq!(with_override.flavor, "C_complete", "no +one_peer suffix");
+        // Bit-identical to the same cell without the (ignored) override.
+        let mut bare = plan.cells[0].clone();
+        bare.topology = None;
+        let plain = plan.run_cell_plan(&bare).unwrap();
+        assert_eq!(
+            with_override.summary.final_eval.metric,
+            plain.summary.final_eval.metric
+        );
+        assert_eq!(
+            with_override.summary.bytes_per_node,
+            plain.summary.bytes_per_node
+        );
+    }
+
+    #[test]
+    fn expanded_seed_cells_fingerprint_differently() {
+        let mut plan = SessionPlan::from_spec(&tiny_spec());
+        plan.cells.truncate(1);
+        plan.expand_seeds(2);
+        assert_eq!(plan.cells.len(), 2);
+        assert_eq!(plan.cells[1].index, 1);
+        assert_ne!(
+            plan.cell_fingerprint(&plan.cells[0]),
+            plan.cell_fingerprint(&plan.cells[1]),
+            "replicates must not share a resume cache entry"
+        );
     }
 
     #[test]

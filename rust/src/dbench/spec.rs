@@ -1,16 +1,18 @@
 //! Experiment specifications: the four application analogs of Table 2/3
 //! plus HLO-artifact workloads, with TOML-loadable parameters.
 
+use super::plan::{StrategyRef, TopologyRef};
 use crate::coordinator::surrogate::{BigramLm, MlpClassifier, SoftmaxRegression};
 #[cfg(feature = "pjrt")]
 use crate::coordinator::HloModel;
-use crate::coordinator::{LocalModel, SgdFlavor};
+use crate::coordinator::{LocalModel, SgdFlavor, StrategyParams};
 use crate::coordinator::trainer::{LrPolicy, TrainConfig};
 use crate::data::{Dataset, ShardStrategy, SyntheticClassification, SyntheticLm};
 use crate::error::{AdaError, Result};
 use crate::optim::ScalingRule;
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjRtRuntime;
+use crate::util::params::ParamTable;
 use crate::util::tomlmini::{TomlDoc, TomlValue};
 
 /// The workload of an experiment: which model family + synthetic dataset.
@@ -250,6 +252,15 @@ pub struct ExperimentSpec {
     pub scales: Vec<usize>,
     /// SGD flavors to run.
     pub flavors: Vec<SgdFlavor>,
+    /// Registry strategies to run alongside the flavors, named with
+    /// parameter tables (TOML `strategies = [...]` + `[strategy.<name>]`
+    /// sections — scenarios the closed flavor list cannot name run from
+    /// `dbench --spec` without code).
+    pub strategies: Vec<StrategyRef>,
+    /// Topology override applied to every decentralized cell, resolved
+    /// by name through `crate::topology::registry` (TOML
+    /// `topology = "<name>"` + an optional `[topology.<name>]` table).
+    pub topology: Option<TopologyRef>,
     /// Epochs per run.
     pub epochs: usize,
     /// Shared seed (controlled experiments).
@@ -296,6 +307,8 @@ impl ExperimentSpec {
             workload,
             scales: vec![8, 16, 32, 64],
             flavors: Self::five_sgd_implementations(),
+            strategies: Vec::new(),
+            topology: None,
             epochs: 6,
             seed: 42,
             skew_alpha: Some(0.3),
@@ -513,6 +526,57 @@ impl ExperimentSpec {
             }
             spec.flavors = flavors;
         }
+        // Registry strategies by name, each with an optional
+        // `[strategy.<name>]` parameter table.
+        if let Some(TomlValue::Arr(names)) = doc.get("strategies") {
+            for v in names {
+                let name = v.as_str().ok_or_else(|| {
+                    AdaError::Config("strategies must be strings".into())
+                })?;
+                let table = section_params(&doc, "strategy", name);
+                let params = StrategyParams::from_table(0, &table)
+                    .map_err(|e| AdaError::Config(format!("[strategy.{name}]: {e}")))?;
+                spec.strategies.push(StrategyRef::Named {
+                    name: name.to_string(),
+                    params,
+                });
+            }
+        }
+        // Topology override by name, with an optional `[topology.<name>]`
+        // parameter table, resolved through the topology registry at
+        // plan time.
+        if let Some(name) = doc.get("topology").and_then(TomlValue::as_str) {
+            spec.topology = Some(TopologyRef {
+                name: name.to_string(),
+                params: section_params(&doc, "topology", name),
+            });
+        }
+        // Orphaned param tables are loud, like unknown keys inside
+        // them: a `[topology.X]`/`[strategy.X]` section whose X is not
+        // the referenced name would otherwise silently fall back to
+        // defaults (the classic typo'd-section trap).
+        for section in doc.sections.keys() {
+            if let Some(suffix) = section.strip_prefix("topology.") {
+                if spec.topology.as_ref().map(|t| t.name.as_str()) != Some(suffix) {
+                    return Err(AdaError::Config(format!(
+                        "[{section}] does not match the referenced topology \
+                         ({:?}) — typo, or missing `topology = \"{suffix}\"`?",
+                        spec.topology.as_ref().map(|t| t.name.as_str())
+                    )));
+                }
+            } else if let Some(suffix) = section.strip_prefix("strategy.") {
+                let referenced = spec.strategies.iter().any(|s| match s {
+                    StrategyRef::Named { name, .. } => name == suffix,
+                    StrategyRef::Flavor(f) => f.name() == suffix,
+                });
+                if !referenced {
+                    return Err(AdaError::Config(format!(
+                        "[{section}] does not match any name in \
+                         `strategies = [...]` — typo, or missing entry?"
+                    )));
+                }
+            }
+        }
         Ok(spec)
     }
 
@@ -553,6 +617,15 @@ impl ExperimentSpec {
     }
 }
 
+/// The `[kind.<name>]` section as a [`ParamTable`] (empty when the
+/// section is absent) — the one parser behind `[strategy.<name>]` and
+/// `[topology.<name>]` tables.
+fn section_params(doc: &TomlDoc, kind: &str, name: &str) -> ParamTable {
+    doc.section(&format!("{kind}.{name}"))
+        .map(ParamTable::from_toml_section)
+        .unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -584,6 +657,89 @@ mod tests {
             spec.flavors[1],
             SgdFlavor::Ada { k0: 10, gamma_k: 0.5 }
         );
+    }
+
+    #[test]
+    fn toml_names_registry_strategies_with_param_tables() {
+        let spec = ExperimentSpec::from_toml_str(
+            r#"
+            base = "resnet20"
+            scales = [8]
+            flavors = ["d_ring"]
+            strategies = ["D_var_adaptive"]
+
+            [strategy.D_var_adaptive]
+            k0 = 6
+            step = 1
+            threshold = 0.01
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.strategies.len(), 1);
+        match &spec.strategies[0] {
+            StrategyRef::Named { name, params } => {
+                assert_eq!(name, "D_var_adaptive");
+                assert_eq!(params.k0, Some(6));
+                assert_eq!(params.step, 1);
+                assert_eq!(params.threshold, 0.01);
+            }
+            other => panic!("expected a named strategy, got {other:?}"),
+        }
+        // Unknown keys inside the table are loud.
+        assert!(ExperimentSpec::from_toml_str(
+            "base = \"resnet20\"\nstrategies = [\"x\"]\n[strategy.x]\nnope = 1\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn toml_topology_override_with_param_table() {
+        let spec = ExperimentSpec::from_toml_str(
+            r#"
+            base = "densenet"
+            flavors = ["d_ring", "c_complete"]
+            topology = "comm_budget"
+
+            [topology.comm_budget]
+            budget_mb = 2.5
+            k0 = 6
+            "#,
+        )
+        .unwrap();
+        let t = spec.topology.as_ref().expect("topology parsed");
+        assert_eq!(t.name, "comm_budget");
+        assert_eq!(t.params.get_f64("budget_mb").unwrap(), Some(2.5));
+        assert_eq!(t.params.get_usize("k0").unwrap(), Some(6));
+        // A topology with no param table parses to an empty table.
+        let bare = ExperimentSpec::from_toml_str(
+            "base = \"densenet\"\ntopology = \"one_peer\"\n",
+        )
+        .unwrap();
+        assert!(bare.topology.as_ref().unwrap().params.is_empty());
+    }
+
+    #[test]
+    fn orphaned_param_sections_are_rejected() {
+        // A typo'd section name must not silently fall back to defaults.
+        let err = ExperimentSpec::from_toml_str(
+            "base = \"densenet\"\ntopology = \"one_peer\"\n\
+             [topology.one_per]\nper_iter = true\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("one_per"), "{err}");
+        // Same for a [strategy.X] whose X is not in `strategies`.
+        let err = ExperimentSpec::from_toml_str(
+            "base = \"densenet\"\n[strategy.D_var_adaptive]\nk0 = 4\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("strategy.D_var_adaptive"), "{err}");
+        // A topology section without any `topology = ...` reference.
+        assert!(ExperimentSpec::from_toml_str(
+            "base = \"densenet\"\n[topology.ada]\nk0 = 4\n"
+        )
+        .is_err());
     }
 
     #[test]

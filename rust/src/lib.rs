@@ -9,7 +9,8 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordinator: communication graphs and mixing
-//!   matrices ([`graph`]), adaptive topology schedules ([`topology`]), the
+//!   matrices ([`graph`]), adaptive topology policies with their own
+//!   name registry ([`topology`]), the
 //!   gossip mixing engine ([`gossip`]) fanned out over the deterministic
 //!   thread-pool execution engine ([`exec`]), the n-worker decentralized
 //!   training loop ([`coordinator`]) — a `TrainSession` builder over an
@@ -31,7 +32,7 @@
 //!
 //! ```no_run
 //! use ada_dist::graph::{CommGraph, GraphKind};
-//! use ada_dist::topology::{AdaSchedule, TopologySchedule};
+//! use ada_dist::topology::{AdaSchedule, TopologyPolicy};
 //!
 //! // A 16-node torus mixing matrix:
 //! let g = CommGraph::build(GraphKind::Torus, 16).unwrap();

@@ -11,8 +11,8 @@
 //! ```
 
 use ada_dist::config::LauncherConfig;
-use ada_dist::coordinator::{SgdFlavor, Trainer};
-use ada_dist::dbench::{format_table, CellResult, ExperimentSpec, Workload};
+use ada_dist::coordinator::SgdFlavor;
+use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, TopologyRef, Workload};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::simnet::{ClusterSpec, SimNet};
 use ada_dist::util::cli::Args;
@@ -25,11 +25,15 @@ ada <command> [options]
     --workload softmax|mlp|mlp_large|bigram|hlo:<name>   (default softmax)
     --flavor c_complete|d_complete|d_ring|d_torus|d_exponential|ada|one_peer|var_adaptive
     --workers N --epochs N --k0 N --gamma-k F --seed N --record PATH
+    --topology name[:k=v,...]   override the flavor's communication-graph
+                     policy with one from the topology registry (see
+                     `ada topologies`); decentralized flavors only
     --threads N      persistent worker-pool fan-out for the gossip/fused
                      kernels and metric capture (0 = all cores; default
                      from launcher config; bit-identical results)
     --fused          fused gossip+SGD execution (combine-then-adapt order)
   strategies       list the registered SGD strategy names (open registry)
+  topologies       list the registered topology policy names
   graphs           print Table 1 for --n nodes (default 96)
   simnet           Summit-model comm costs: --n nodes --params P
   check-artifacts  load every artifact and smoke-test via PJRT (needs
@@ -99,6 +103,12 @@ fn main() -> CliResult {
             }
             Ok(())
         }
+        Some("topologies") => {
+            for name in ada_dist::topology::registry().names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
         Some("graphs") => cmd_graphs(&args),
         Some("simnet") => cmd_simnet(&args),
         Some("check-artifacts") => cmd_check_artifacts(&cfg),
@@ -122,21 +132,19 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     spec.workload = workload;
     spec.epochs = epochs;
     spec.seed = seed;
-    let dataset = spec.workload.dataset(spec.seed)?;
-    let mut model = spec.workload.model(workers)?;
-    let mut train_cfg = spec.train_config(workers);
-    train_cfg.threads = args.threads(cfg.threads)?;
-    train_cfg.fused = args.has_flag("fused");
-    train_cfg.record_path = args.get("record").map(std::path::PathBuf::from);
-    let mut trainer = Trainer::new(model.as_mut(), train_cfg);
+    spec.scales = vec![workers];
+    spec.flavors = vec![flavor];
+    spec.threads = args.threads(cfg.threads)?;
+    spec.fused = args.has_flag("fused");
+    if let Some(t) = args.get("topology") {
+        // Resolved by name through the topology registry; `ada
+        // topologies` lists the choices. C_complete stays centralized.
+        spec.topology = Some(TopologyRef::parse(t)?);
+    }
+    let mut plan = SessionPlan::from_spec(&spec);
+    plan.cells[0].config.record_path = args.get("record").map(std::path::PathBuf::from);
     let t0 = std::time::Instant::now();
-    let (recorder, summary) = trainer.run(dataset.as_ref(), &flavor)?;
-    let cell = CellResult {
-        scale: workers,
-        flavor: summary.flavor.clone(),
-        recorder,
-        summary,
-    };
+    let cells = plan.run()?;
     println!(
         "{}",
         format_table(
@@ -145,7 +153,7 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
                 spec.workload.name(),
                 t0.elapsed()
             ),
-            &[cell]
+            &cells
         )
     );
     Ok(())

@@ -10,7 +10,7 @@ mod ranking;
 mod recorder;
 mod variance;
 
-pub use probe::VarianceProbe;
+pub use probe::{ProbeSample, VarianceProbe};
 pub use ranking::{rank_ascending, RankSummary};
 pub use recorder::{IterationRecord, RunRecorder};
 pub use variance::{
@@ -72,6 +72,51 @@ pub fn per_replica_l2_norms_pooled(
     .collect()
 }
 
+/// Mean L2 distance of the replicas to an explicit mean model — the
+/// **consensus distance** of Kong et al. 2021 (*Consensus Control for
+/// Decentralized Deep Learning*), one of the feedback signals
+/// [`crate::topology::TrainSignals`] carries to topology policies.
+///
+/// Fanned out over the execution engine like
+/// [`per_replica_l2_norms_pooled`]: one partial per fixed
+/// [`crate::exec::REDUCE_GRANULARITY`] tile, folded ascending in f64 —
+/// bit-identical for every thread count (the per-tile sum is a plain
+/// scalar f64 loop, so SIMD dispatch cannot change it either).
+pub fn consensus_distance(
+    exec: &crate::exec::ExecEngine,
+    replicas: &crate::util::matrix::ReplicaMatrix,
+    mean_model: &[f32],
+) -> f64 {
+    let n = replicas.n();
+    if n == 0 {
+        return 0.0;
+    }
+    debug_assert_eq!(mean_model.len(), replicas.p());
+    let dists: Vec<f64> = exec
+        .run_reduce_rows(
+            n,
+            replicas.p(),
+            crate::exec::REDUCE_GRANULARITY,
+            |row, tile| {
+                let r = &replicas.row(row)[tile.start..tile.end];
+                let m = &mean_model[tile.start..tile.end];
+                r.iter()
+                    .zip(m)
+                    .map(|(&a, &b)| {
+                        let d = a as f64 - b as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+            },
+            |a, b| a + b,
+            0.0,
+        )
+        .into_iter()
+        .map(f64::sqrt)
+        .collect();
+    dists.iter().sum::<f64>() / n as f64
+}
+
 /// Mean of a sample.
 pub(crate) fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -108,6 +153,26 @@ mod tests {
         let norms = per_replica_l2_norms(&replicas, 0..2);
         assert!((norms[0] - 5.0).abs() < 1e-12);
         assert!((norms[1] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_distance_matches_manual_and_is_thread_invariant() {
+        use crate::exec::ExecEngine;
+        let replicas = crate::util::matrix::ReplicaMatrix::from_rows(&[
+            vec![1.0; 64],
+            vec![3.0; 64],
+        ]);
+        let mean_model = vec![2.0f32; 64];
+        // Every replica is exactly 1.0 away per element: ||diff|| = 8.
+        let d = consensus_distance(&ExecEngine::serial(), &replicas, &mean_model);
+        assert!((d - 8.0).abs() < 1e-12, "{d}");
+        for threads in [2, 4] {
+            let eng = ExecEngine::new(threads);
+            assert_eq!(d, consensus_distance(&eng, &replicas, &mean_model));
+        }
+        // Identical replicas ⇒ zero consensus distance.
+        let same = crate::util::matrix::ReplicaMatrix::broadcast(3, &mean_model);
+        assert_eq!(consensus_distance(&ExecEngine::serial(), &same, &mean_model), 0.0);
     }
 
     #[test]

@@ -7,6 +7,20 @@ use crate::exec::ExecEngine;
 use crate::util::matrix::ReplicaMatrix;
 use std::ops::Range;
 
+/// One capture of the probe: the whole-model statistics, the tracked
+/// per-tensor ginis, and the raw pooled per-replica L2 norms the
+/// statistics were computed from (the series
+/// [`crate::topology::TrainSignals`] aggregates per epoch).
+#[derive(Debug, Clone)]
+pub struct ProbeSample {
+    /// Whole-model cross-replica variance statistics.
+    pub report: VarianceReport,
+    /// Gini of each tracked parameter-tensor slice (Fig. 4).
+    pub per_tensor_gini: Vec<f64>,
+    /// The pooled per-replica L2 norms themselves, one per replica.
+    pub norms: Vec<f64>,
+}
+
 /// Samples cross-replica variance statistics on a fixed iteration
 /// cadence: the whole-model [`VarianceReport`] plus the gini
 /// coefficient of each tracked parameter-tensor slice (Fig. 4).
@@ -32,14 +46,14 @@ impl VarianceProbe {
         self.every > 0 && iteration % self.every == 0
     }
 
-    /// Capture at `iteration`: `Some((whole-model report, per-tracked
-    ///-tensor gini))` on cadence, `None` between capture points.
+    /// Capture at `iteration`: a full [`ProbeSample`] on cadence,
+    /// `None` between capture points.
     pub fn capture(
         &self,
         exec: &ExecEngine,
         replicas: &ReplicaMatrix,
         iteration: usize,
-    ) -> Option<(VarianceReport, Vec<f64>)> {
+    ) -> Option<ProbeSample> {
         if !self.due(iteration) {
             return None;
         }
@@ -54,7 +68,11 @@ impl VarianceProbe {
                 gini_coefficient(&tn)
             })
             .collect();
-        Some((report, per_tensor))
+        Some(ProbeSample {
+            report,
+            per_tensor_gini: per_tensor,
+            norms,
+        })
     }
 }
 
@@ -83,10 +101,13 @@ mod tests {
     fn captures_tracked_slices() {
         let probe = VarianceProbe::new(1, vec![0..32, 32..64]);
         let exec = ExecEngine::serial();
-        let (report, per_tensor) = probe.capture(&exec, &replicas(), 0).unwrap();
-        assert!(report.gini > 0.0, "unequal norms must show dispersion");
-        assert_eq!(per_tensor.len(), 2);
+        let sample = probe.capture(&exec, &replicas(), 0).unwrap();
+        assert!(sample.report.gini > 0.0, "unequal norms must show dispersion");
+        assert_eq!(sample.per_tensor_gini.len(), 2);
         // Constant-per-replica slices: both halves carry the same gini.
-        assert!((per_tensor[0] - per_tensor[1]).abs() < 1e-12);
+        assert!((sample.per_tensor_gini[0] - sample.per_tensor_gini[1]).abs() < 1e-12);
+        // The raw norms ride along (one per replica, ordered).
+        assert_eq!(sample.norms.len(), 3);
+        assert!(sample.norms[0] < sample.norms[1] && sample.norms[1] < sample.norms[2]);
     }
 }

@@ -12,7 +12,7 @@
 //! sparse lattice, keeping `k ≥ 2`. Table 4 of the paper uses
 //! `(k0, γk) = (10, 0.02)` at 96 GPUs and `(112, 1)` at 1008 GPUs.
 
-use super::TopologySchedule;
+use super::TopologyPolicy;
 use crate::error::Result;
 use crate::graph::{CommGraph, GraphKind};
 use std::collections::HashMap;
@@ -71,8 +71,8 @@ impl AdaSchedule {
     }
 }
 
-impl TopologySchedule for AdaSchedule {
-    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+impl TopologyPolicy for AdaSchedule {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
         let k = self.k_for_epoch(epoch);
         let mut cache = self.cache.lock().expect("ada cache poisoned");
         if let Some(g) = cache.get(&k) {
@@ -85,6 +85,11 @@ impl TopologySchedule for AdaSchedule {
 
     fn name(&self) -> String {
         format!("ada(k0={},γk={})", self.k0, self.gamma_k)
+    }
+
+    fn k_hint(&self) -> usize {
+        // Algorithm 1 starts at its densest phase; k0 sets the safe LR.
+        self.k0.max(2)
     }
 }
 

@@ -1,0 +1,240 @@
+//! Communication-budget-aware topology — pick the **densest graph
+//! affordable** under a bytes-per-node budget for the whole run, in the
+//! communication/topology co-design spirit of Wang et al. 2024 (*From
+//! Promise to Practice*).
+//!
+//! The Ada lattice family prices linearly: a `k`-lattice epoch costs
+//! `k · 4 · P · iters_per_epoch` bytes per node (each round every node
+//! sends its `P` f32 parameters to `k` neighbors). Given the run
+//! geometry from [`TopologyPolicy::on_run_start`] and the cumulative
+//! spend reported through [`TrainSignals::comm_bytes_per_node`], each
+//! epoch `e` picks
+//!
+//! ```text
+//! k_e = clamp( (budget − spent) / (4·P·iters · (epochs − e)), 2 ..= k0 )
+//! ```
+//!
+//! — the densest sustainable coordination number if the remaining
+//! budget were spread evenly over the remaining epochs. Under-spending
+//! early (because `k` is capped at `k0`) automatically rolls the savings
+//! forward into denser later epochs; over-budget configurations degrade
+//! to the `k = 2` ring floor rather than erroring. The pricing treats
+//! `k` as the degree, which over-estimates odd `k` (the lattice builder
+//! truncates to `2·⌊k/2⌋` neighbors) — conservative, and corrected each
+//! epoch anyway because [`observe`](TopologyPolicy::observe) feeds back
+//! the *measured* spend.
+
+use super::{RunInfo, TopologyPolicy, TrainSignals};
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Budget-constrained densest-affordable-lattice policy.
+///
+/// The budget covers one session: a checkpoint-resumed run re-budgets
+/// the remaining epochs from zero spend, because
+/// [`TrainSignals::comm_bytes_per_node`] counts per session leg (the
+/// checkpoint format carries no byte ledger). Size `budget_mb` per leg
+/// when resuming.
+#[derive(Debug)]
+pub struct CommBudget {
+    n: usize,
+    /// Densest allowed coordination number (cap).
+    k0: usize,
+    /// Whole-run budget, bytes per node.
+    budget_bytes: u64,
+    state: Mutex<State>,
+}
+
+#[derive(Debug)]
+struct State {
+    /// Bytes per node per unit k per epoch (`4·P·iters`); 0 until
+    /// `on_run_start` delivers the geometry.
+    epoch_cost_per_k: u64,
+    /// Total epochs of the run.
+    epochs: usize,
+    /// Cumulative spend after the most recently observed epoch.
+    spent: u64,
+    /// k pinned per epoch, assigned the first time the epoch is priced.
+    history: HashMap<usize, usize>,
+    cache: HashMap<usize, CommGraph>,
+}
+
+impl CommBudget {
+    /// A policy over `n` nodes capped at coordination number `k0`,
+    /// spending at most `budget_bytes` per node across the whole run.
+    pub fn new(n: usize, k0: usize, budget_bytes: u64) -> Self {
+        CommBudget {
+            n,
+            k0: k0.max(2),
+            budget_bytes,
+            state: Mutex::new(State {
+                epoch_cost_per_k: 0,
+                epochs: 0,
+                spent: 0,
+                history: HashMap::new(),
+                cache: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Convenience constructor taking the budget in megabytes (the
+    /// registry's `budget_mb` parameter).
+    pub fn with_budget_mb(n: usize, k0: usize, budget_mb: f64) -> Self {
+        Self::new(n, k0, (budget_mb.max(0.0) * 1e6) as u64)
+    }
+
+    /// The k this policy would run `epoch` with, given what it has
+    /// observed so far.
+    pub fn k_for_epoch(&self, epoch: usize) -> usize {
+        let mut st = self.state.lock().expect("state poisoned");
+        self.price_epoch(&mut st, epoch)
+    }
+
+    /// Affordable k at `epoch`, pinning it in the history. Before
+    /// `on_run_start` no pricing is possible and the floor `k = 2` is
+    /// used (a session always delivers the geometry first).
+    fn price_epoch(&self, st: &mut State, epoch: usize) -> usize {
+        if let Some(&k) = st.history.get(&epoch) {
+            return k;
+        }
+        let k = if st.epoch_cost_per_k == 0 || epoch >= st.epochs {
+            2
+        } else {
+            let remaining_epochs = (st.epochs - epoch) as u64;
+            let remaining_budget = self.budget_bytes.saturating_sub(st.spent);
+            let affordable = remaining_budget / (st.epoch_cost_per_k * remaining_epochs);
+            (affordable as usize).clamp(2, self.k0)
+        };
+        st.history.insert(epoch, k);
+        k
+    }
+}
+
+impl TopologyPolicy for CommBudget {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
+        let mut st = self.state.lock().expect("state poisoned");
+        let k = self.price_epoch(&mut st, epoch);
+        if let Some(g) = st.cache.get(&k) {
+            return Ok(g.clone());
+        }
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, self.n)?;
+        st.cache.insert(k, g.clone());
+        Ok(g)
+    }
+
+    fn on_run_start(&mut self, info: &RunInfo) {
+        let mut st = self.state.lock().expect("state poisoned");
+        st.epoch_cost_per_k = 4 * info.param_count as u64 * info.iters_per_epoch.max(1) as u64;
+        st.epochs = info.epochs;
+    }
+
+    fn observe(&mut self, signals: &TrainSignals) {
+        let mut st = self.state.lock().expect("state poisoned");
+        // The session reports *measured* cumulative spend, which also
+        // absorbs rounds the pricing could not foresee (failure
+        // injection, strategies that skip exchanges).
+        st.spent = signals.comm_bytes_per_node;
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "comm_budget(k0={},budget={:.1}MB)",
+            self.k0,
+            self.budget_bytes as f64 / 1e6
+        )
+    }
+
+    fn k_hint(&self) -> usize {
+        // Deliberately the floor, not k0: the hint feeds Table 2's LR
+        // scaling (`s = batch·(k+1)/divisor`), and a tight budget may
+        // never afford k0 — scaling the LR for a density that never
+        // executes risks divergence on the ring-floor epochs. The
+        // sparse-safe LR merely under-serves denser epochs.
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn started(
+        n: usize,
+        k0: usize,
+        budget: u64,
+        p: usize,
+        iters: usize,
+        epochs: usize,
+    ) -> CommBudget {
+        let mut s = CommBudget::new(n, k0, budget);
+        s.on_run_start(&RunInfo {
+            n_workers: n,
+            param_count: p,
+            epochs,
+            iters_per_epoch: iters,
+        });
+        s
+    }
+
+    fn spent(epoch: usize, bytes: u64) -> TrainSignals {
+        TrainSignals {
+            epoch,
+            comm_bytes_per_node: bytes,
+            ..TrainSignals::default()
+        }
+    }
+
+    #[test]
+    fn picks_the_densest_sustainable_k() {
+        // 4·P·iters = 4·1000·10 = 40_000 bytes per unit k per epoch.
+        // Budget 800_000 over 5 epochs → 160_000/epoch → k = 4.
+        let s = started(16, 12, 800_000, 1000, 10, 5);
+        assert_eq!(s.k_for_epoch(0), 4);
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 4);
+    }
+
+    #[test]
+    fn caps_at_k0_and_rolls_savings_forward() {
+        // Budget would afford k = 20/epoch but the cap is 6: early
+        // under-spend leaves more than enough for k = 6 throughout.
+        let s = started(32, 6, 4_000_000, 1000, 10, 5);
+        assert_eq!(s.k_for_epoch(0), 6);
+        let mut s = s;
+        // After one 6-lattice epoch (240_000 bytes), remaining budget
+        // still affords the cap for the remaining 4 epochs.
+        s.observe(&spent(0, 240_000));
+        assert_eq!(s.k_for_epoch(1), 6);
+    }
+
+    #[test]
+    fn overspending_degrades_toward_the_ring_floor() {
+        // Budget 400_000 over 4 epochs at 40_000/k/epoch → k = 2 (floor:
+        // sustainable would be 2.5). Report a blowout and it stays 2.
+        let mut s = started(16, 12, 400_000, 1000, 10, 4);
+        assert_eq!(s.k_for_epoch(0), 2);
+        s.observe(&spent(0, 399_999));
+        assert_eq!(s.k_for_epoch(1), 2, "floor even with nothing left");
+    }
+
+    #[test]
+    fn unpriced_runs_floor_and_epochs_pin_their_k() {
+        let s = CommBudget::new(16, 8, 1_000_000);
+        assert_eq!(s.k_for_epoch(0), 2, "no geometry yet → floor");
+        let mut s = started(16, 8, 3_200_000, 1000, 10, 5);
+        assert_eq!(s.k_for_epoch(0), 8); // 640_000/epoch → k capped at 8
+        // A later blowout must not rewrite epoch 0's pinned k.
+        s.observe(&spent(0, 3_000_000));
+        assert_eq!(s.k_for_epoch(0), 8, "epoch 0 keeps the k it ran with");
+        assert_eq!(s.k_for_epoch(1), 2, "epoch 1 repriced after the blowout");
+    }
+
+    #[test]
+    fn budget_mb_constructor_converts() {
+        let s = CommBudget::with_budget_mb(16, 8, 1.5);
+        assert_eq!(s.budget_bytes, 1_500_000);
+        assert_eq!(s.name(), "comm_budget(k0=8,budget=1.5MB)");
+        assert_eq!(s.k_hint(), 2, "LR hint stays sparse-safe, not k0");
+    }
+}

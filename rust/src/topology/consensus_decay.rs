@@ -1,0 +1,186 @@
+//! Consensus-distance-triggered decay — a feedback controller in the
+//! spirit of Kong et al. 2021 (*Consensus Control for Decentralized
+//! Deep Learning*), built on the richer [`TrainSignals`] channel.
+//!
+//! Kong et al. show the mean L2 distance of the replicas to the mean
+//! model (the **consensus distance**) is the quantity that predicts
+//! whether decentralized training matches its centralized counterpart:
+//! early in training a *large* consensus distance is harmless (even
+//! beneficial), late in training it must shrink. Dense graphs buy small
+//! consensus distance with communication. This policy runs that logic
+//! in reverse to save bandwidth: start dense at `k0` and step the
+//! lattice's coordination number down whenever the observed consensus
+//! distance has already collapsed relative to its starting level —
+//! i.e. the graph is denser than the replicas need.
+//!
+//! Concretely, with `d_0` the first observed consensus distance, the
+//! policy decays `k` by `step` whenever `d_t < threshold · d_0` for
+//! `patience` consecutive epochs, flooring at `k = 2` (Algorithm 1's
+//! floor). Epochs pin the `k` they actually ran with, like
+//! [`super::VarianceAdaptive`].
+
+use super::{TopologyPolicy, TrainSignals};
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Consensus-distance feedback controller over the Ada lattice family.
+#[derive(Debug)]
+pub struct ConsensusDecay {
+    n: usize,
+    k0: usize,
+    /// Decay k by this much per trigger.
+    step: usize,
+    /// Relative threshold: decay when `d_t < threshold · d_0`.
+    threshold: f64,
+    /// Consecutive below-threshold epochs required before decaying.
+    patience: usize,
+    state: Mutex<State>,
+}
+
+#[derive(Debug)]
+struct State {
+    k: usize,
+    /// First observed consensus distance (the reference level `d_0`).
+    initial_distance: Option<f64>,
+    below_count: usize,
+    /// k effective per epoch, recorded as observations arrive; epochs
+    /// not yet observed use the current k.
+    history: HashMap<usize, usize>,
+    cache: HashMap<usize, CommGraph>,
+}
+
+impl ConsensusDecay {
+    /// `threshold` is *relative* to the first observed consensus
+    /// distance (e.g. `0.25` = decay once the replicas are 4× closer to
+    /// the mean model than they started out).
+    ///
+    /// `k0` should leave the lattice *incomplete* (`k0 < n − 1`): the
+    /// distance is measured post-averaging, and a complete lattice
+    /// equalizes the replicas every round, pinning the signal (and the
+    /// `d0` reference) at ~0 so no decay ever triggers. The registry
+    /// defaults to `n / 2` for exactly this reason.
+    pub fn new(n: usize, k0: usize, step: usize, threshold: f64, patience: usize) -> Self {
+        ConsensusDecay {
+            n,
+            k0,
+            step: step.max(1),
+            threshold,
+            patience: patience.max(1),
+            state: Mutex::new(State {
+                k: k0,
+                initial_distance: None,
+                below_count: 0,
+                history: HashMap::new(),
+                cache: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Current coordination number.
+    pub fn current_k(&self) -> usize {
+        self.state.lock().expect("state poisoned").k
+    }
+}
+
+impl TopologyPolicy for ConsensusDecay {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
+        let mut st = self.state.lock().expect("state poisoned");
+        let k = st.history.get(&epoch).copied().unwrap_or(st.k);
+        if let Some(g) = st.cache.get(&k) {
+            return Ok(g.clone());
+        }
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, self.n)?;
+        st.cache.insert(k, g.clone());
+        Ok(g)
+    }
+
+    fn wants_consensus_distance(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, signals: &TrainSignals) {
+        let mut st = self.state.lock().expect("state poisoned");
+        let current_k = st.k;
+        st.history.insert(signals.epoch, current_k);
+        let Some(d) = signals.consensus_distance else { return };
+        let d0 = *st.initial_distance.get_or_insert(d);
+        if d0 > 0.0 && d < self.threshold * d0 {
+            st.below_count += 1;
+            if st.below_count >= self.patience {
+                st.k = st.k.saturating_sub(self.step).max(2);
+                st.below_count = 0;
+            }
+        } else {
+            st.below_count = 0;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "consensus_decay(k0={},step={},thr={})",
+            self.k0, self.step, self.threshold
+        )
+    }
+
+    fn k_hint(&self) -> usize {
+        self.k0.max(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist(epoch: usize, d: f64) -> TrainSignals {
+        TrainSignals {
+            epoch,
+            consensus_distance: Some(d),
+            ..TrainSignals::default()
+        }
+    }
+
+    #[test]
+    fn first_observation_sets_the_reference_level() {
+        let mut s = ConsensusDecay::new(16, 8, 2, 0.25, 1);
+        s.observe(&dist(0, 2.0)); // d0 = 2.0; 2.0 ≥ 0.25·2.0 → no decay
+        assert_eq!(s.current_k(), 8);
+        s.observe(&dist(1, 1.0)); // 1.0 ≥ 0.5 → still no decay
+        assert_eq!(s.current_k(), 8);
+        s.observe(&dist(2, 0.4)); // 0.4 < 0.5 → decay
+        assert_eq!(s.current_k(), 6);
+    }
+
+    #[test]
+    fn patience_requires_consecutive_collapsed_epochs() {
+        let mut s = ConsensusDecay::new(16, 8, 2, 0.5, 2);
+        s.observe(&dist(0, 1.0)); // d0 = 1.0
+        s.observe(&dist(1, 0.1));
+        assert_eq!(s.current_k(), 8, "patience not yet met");
+        s.observe(&dist(2, 0.9)); // consensus re-opened → reset
+        s.observe(&dist(3, 0.1));
+        assert_eq!(s.current_k(), 8, "spike must reset the counter");
+        s.observe(&dist(4, 0.1));
+        assert_eq!(s.current_k(), 6);
+    }
+
+    #[test]
+    fn floors_at_k2_and_pins_history() {
+        let mut s = ConsensusDecay::new(16, 4, 10, 0.9, 1);
+        s.observe(&dist(0, 1.0)); // reference
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 4);
+        s.observe(&dist(1, 0.0));
+        assert_eq!(s.current_k(), 2, "k never drops below 2");
+        assert_eq!(s.graph_for_epoch(2).unwrap().degree(), 2);
+        // Epoch 0 is pinned to the k it actually ran with.
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 4);
+    }
+
+    #[test]
+    fn missing_signal_is_ignored() {
+        let mut s = ConsensusDecay::new(16, 8, 2, 0.5, 1);
+        s.observe(&TrainSignals::for_epoch_gini(0, 0.0)); // gini only
+        assert_eq!(s.current_k(), 8, "no consensus signal → no reference, no decay");
+    }
+}

@@ -1,49 +1,179 @@
-//! Topology schedules: which communication graph each epoch uses.
+//! Topology policies: which communication graph each gossip round uses,
+//! and the feedback signals that drive adaptation.
 //!
-//! The paper's contribution, **Ada** (§4), is a schedule: start from a
+//! The paper's contribution, **Ada** (§4), is a policy: start from a
 //! highly connected ring lattice and decay its coordination number `k`
 //! per epoch (Algorithm 1), trading connectivity for communication cost
 //! exactly when the white-box analysis (§3.3) shows the cross-graph
 //! variance differences have diminished.
 //!
-//! Alongside [`AdaSchedule`] we provide [`StaticSchedule`] (the fixed
-//! graphs DBench benchmarks against), [`OnePeerExponential`] (a rotating
-//! one-neighbor exponential schedule — the communication-minimal point in
-//! the design space), [`VarianceAdaptive`] (an extension from the
-//! paper's Observation 4: decay `k` when the measured parameter-tensor
-//! variance drops below a threshold instead of on a fixed epoch clock),
-//! and [`FnSchedule`] (a closure adapter, the quickest way to give a
-//! custom registry strategy its own graph sequence).
+//! [`TopologyPolicy`] is the open form of that idea: a policy picks a
+//! graph at **iteration** granularity (`graph_for(epoch, iter)` — so
+//! one-peer-style rotating schedules can rotate within an epoch instead
+//! of faking it through epochs) and receives a structured
+//! [`TrainSignals`] feedback bundle each epoch — gini coefficient,
+//! pooled per-replica L2 variance, consensus distance to the mean model
+//! (Kong et al. 2021's control signal), train loss, latest eval metric
+//! and cumulative communication spend — instead of the bare `gini: f64`
+//! the old `TopologySchedule` trait carried.
+//!
+//! Policies are constructible **by name with a parameter table** through
+//! [`registry()`] — the same `Arc`-shared extensible shape as the
+//! combine-strategy registry (`crate::coordinator::strategy`) — so graph
+//! adaptation plugs into spec TOML (`[topology.<name>]`), both CLIs
+//! (`--topology name:k=v,…`) and [`crate::dbench::SessionPlan`] cells
+//! without touching this crate.
+//!
+//! Built-in policies: [`StaticSchedule`] (the fixed graphs DBench
+//! benchmarks against), [`AdaSchedule`] (Algorithm 1),
+//! [`OnePeerExponential`] (rotating one-neighbor exponential, per-epoch
+//! or per-iteration), [`VarianceAdaptive`] (gini-triggered decay,
+//! Observation 4), [`ConsensusDecay`] (consensus-distance-triggered
+//! decay in the spirit of Kong et al. 2021), [`CommBudget`] (densest
+//! lattice affordable under a bytes-per-node budget), and
+//! [`FnSchedule`] (a closure adapter — the quickest way to register a
+//! custom graph sequence at runtime).
 
 mod ada;
+mod comm_budget;
+mod consensus_decay;
 mod one_peer;
+mod registry;
 mod variance_adaptive;
 
 pub use ada::AdaSchedule;
+pub use comm_budget::CommBudget;
+pub use consensus_decay::ConsensusDecay;
 pub use one_peer::OnePeerExponential;
+pub use registry::{registry, PolicyCtor, TopologyRegistry};
 pub use variance_adaptive::VarianceAdaptive;
 
 use crate::error::Result;
 use crate::graph::{CommGraph, GraphKind};
 
-/// A per-epoch communication-graph policy.
-///
-/// Schedules may react to training feedback (e.g. the measured
-/// parameter-tensor variance) via [`TopologySchedule::observe`].
-pub trait TopologySchedule: Send {
-    /// The graph to gossip over during `epoch` (0-based).
-    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph>;
+/// Everything a policy learns about the run before the first iteration —
+/// scale, model size and loop geometry. Delivered once through
+/// [`TopologyPolicy::on_run_start`]; budget-style policies need it to
+/// price a graph (bytes per round = degree × 4 × `param_count`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunInfo {
+    /// Worker count (graph nodes).
+    pub n_workers: usize,
+    /// Flat parameter count per replica.
+    pub param_count: usize,
+    /// Total epochs the run will execute.
+    pub epochs: usize,
+    /// Gossip rounds per epoch.
+    pub iters_per_epoch: usize,
+}
 
-    /// Feed back the cross-replica parameter variance (gini coefficient)
-    /// measured at the end of `epoch`. Default: ignored.
-    fn observe(&mut self, _epoch: usize, _gini: f64) {}
+/// The per-epoch feedback bundle handed to [`TopologyPolicy::observe`]
+/// — the structured replacement for the old bare `gini: f64` channel.
+///
+/// Signals derived from the variance probe (`gini`, `l2_variance`) are
+/// `None` on epochs where the probe captured nothing
+/// (`metrics_every = 0` or a cadence that skipped the epoch);
+/// `consensus_distance` is `None` for centralized runs (no mean-model
+/// divergence to measure) and `test_metric` is `None` on epochs without
+/// an evaluation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainSignals {
+    /// The 0-based epoch that just finished.
+    pub epoch: usize,
+    /// Mean gini coefficient of the per-replica L2 norms over the
+    /// epoch's captures (the paper's reported dispersion metric).
+    pub gini: Option<f64>,
+    /// Mean population variance of the same pooled per-replica L2 norms
+    /// (`metrics::VarianceProbe` captures them pre-averaging).
+    pub l2_variance: Option<f64>,
+    /// Mean L2 distance of the replicas to the mean model at epoch end —
+    /// the consensus-distance signal of Kong et al. 2021. `None` unless
+    /// the policy opted in via
+    /// [`TopologyPolicy::wants_consensus_distance`] (it costs two
+    /// O(n·P) passes per epoch, which static benchmark schedules
+    /// shouldn't pay).
+    pub consensus_distance: Option<f64>,
+    /// Mean training loss over the epoch's iterations.
+    pub train_loss: f64,
+    /// The latest evaluation metric, when this epoch evaluated.
+    pub test_metric: Option<f64>,
+    /// Cumulative communication spend per node since this session
+    /// started, in bytes — the budget side of the accuracy/cost
+    /// trade-off. A checkpoint-resumed session counts from its resume
+    /// point (the checkpoint format carries no byte ledger), matching
+    /// the recorder's own per-leg accounting; budget-style policies
+    /// therefore budget each session leg, not the concatenated run.
+    pub comm_bytes_per_node: u64,
+}
+
+impl TrainSignals {
+    /// A minimal bundle carrying only the legacy `(epoch, gini)` pair —
+    /// what unit tests and simple controllers feed policies directly.
+    pub fn for_epoch_gini(epoch: usize, gini: f64) -> Self {
+        TrainSignals {
+            epoch,
+            gini: Some(gini),
+            ..TrainSignals::default()
+        }
+    }
+}
+
+/// A communication-graph policy with iteration-level decision points
+/// and a structured feedback/control channel.
+///
+/// The session calls [`graph_for`](TopologyPolicy::graph_for) once per
+/// epoch when [`iteration_scoped`](TopologyPolicy::iteration_scoped) is
+/// `false` (the default — graph construction and cloning stay off the
+/// iteration path, and pre-redesign runs keep their exact floats), or
+/// once per iteration when it is `true`. Feedback arrives through
+/// [`observe`](TopologyPolicy::observe) after every epoch.
+pub trait TopologyPolicy: Send {
+    /// The graph to gossip over during iteration `iter` of `epoch`
+    /// (both 0-based). Policies that only vary per epoch ignore `iter`.
+    fn graph_for(&self, epoch: usize, iter: usize) -> Result<CommGraph>;
+
+    /// The epoch-level decision point: the graph in effect at the start
+    /// of `epoch` (iteration 0).
+    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+        self.graph_for(epoch, 0)
+    }
+
+    /// Whether the graph may change *within* an epoch. When `false`
+    /// (default) the session resolves the graph once per epoch.
+    fn iteration_scoped(&self) -> bool {
+        false
+    }
+
+    /// Run geometry, delivered once before the first iteration.
+    fn on_run_start(&mut self, _info: &RunInfo) {}
+
+    /// Whether this policy reads
+    /// [`TrainSignals::consensus_distance`]. Measuring it costs a
+    /// mean-model build plus a distance reduction — two O(n·P) passes
+    /// per epoch — so the session only runs them when a policy opts in
+    /// (`false` by default; the probe-derived signals are always
+    /// present).
+    fn wants_consensus_distance(&self) -> bool {
+        false
+    }
+
+    /// End-of-epoch feedback. Default: ignored.
+    fn observe(&mut self, _signals: &TrainSignals) {}
 
     /// Human-readable name for reports.
     fn name(&self) -> String;
 
-    /// Total bytes each node sends over `epochs` epochs of `iters_per_epoch`
-    /// gossip rounds for a `param_count`-parameter model — the communication
-    /// cost side of the paper's accuracy/cost trade-off.
+    /// Neighbor count of the policy's *densest* phase — the Table 2
+    /// LR-scaling input (`s = batch·(k+1)/divisor`). Defaults to the
+    /// degree of the first graph.
+    fn k_hint(&self) -> usize {
+        self.graph_for(0, 0).map(|g| g.degree()).unwrap_or(2)
+    }
+
+    /// Total bytes each node sends over `epochs` epochs of
+    /// `iters_per_epoch` gossip rounds for a `param_count`-parameter
+    /// model — the communication cost side of the paper's accuracy/cost
+    /// trade-off. Iteration-scoped policies price every round.
     fn comm_bytes_per_node(
         &self,
         epochs: usize,
@@ -52,8 +182,14 @@ pub trait TopologySchedule: Send {
     ) -> Result<u64> {
         let mut total = 0u64;
         for e in 0..epochs {
-            let g = self.graph_for_epoch(e)?;
-            total += g.bytes_sent_per_node(param_count) * iters_per_epoch as u64;
+            if self.iteration_scoped() {
+                for i in 0..iters_per_epoch {
+                    total += self.graph_for(e, i)?.bytes_sent_per_node(param_count);
+                }
+            } else {
+                total += self.graph_for(e, 0)?.bytes_sent_per_node(param_count)
+                    * iters_per_epoch as u64;
+            }
         }
         Ok(total)
     }
@@ -69,7 +205,7 @@ pub struct StaticSchedule {
 }
 
 impl StaticSchedule {
-    /// Build the fixed graph once; `graph_for_epoch` clones the cache.
+    /// Build the fixed graph once; `graph_for` clones the cache.
     pub fn new(kind: GraphKind, n: usize) -> Result<Self> {
         let cached = CommGraph::build(kind, n)?;
         Ok(StaticSchedule { kind, n, cached })
@@ -81,8 +217,8 @@ impl StaticSchedule {
     }
 }
 
-impl TopologySchedule for StaticSchedule {
-    fn graph_for_epoch(&self, _epoch: usize) -> Result<CommGraph> {
+impl TopologyPolicy for StaticSchedule {
+    fn graph_for(&self, _epoch: usize, _iter: usize) -> Result<CommGraph> {
         Ok(self.cached.clone())
     }
 
@@ -91,11 +227,12 @@ impl TopologySchedule for StaticSchedule {
     }
 }
 
-/// A closure as a schedule — the one-liner adapter for custom registry
-/// strategies (`crate::coordinator::strategy`): wrap any
-/// `Fn(epoch) -> CommGraph` without declaring a new type. Feedback
-/// (`observe`) is ignored; implement the trait directly for schedules
-/// that react to training signals.
+/// A closure as a policy — the one-liner adapter for custom registry
+/// strategies (`crate::coordinator::strategy`) and runtime-registered
+/// topology entries: wrap any `Fn(epoch) -> CommGraph` without
+/// declaring a new type. Feedback (`observe`) is ignored; implement
+/// [`TopologyPolicy`] directly for policies that react to
+/// [`TrainSignals`].
 pub struct FnSchedule<F: Fn(usize) -> Result<CommGraph> + Send> {
     label: String,
     f: F,
@@ -108,8 +245,8 @@ impl<F: Fn(usize) -> Result<CommGraph> + Send> FnSchedule<F> {
     }
 }
 
-impl<F: Fn(usize) -> Result<CommGraph> + Send> TopologySchedule for FnSchedule<F> {
-    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+impl<F: Fn(usize) -> Result<CommGraph> + Send> TopologyPolicy for FnSchedule<F> {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
         (self.f)(epoch)
     }
 
@@ -126,9 +263,11 @@ mod tests {
     fn static_schedule_is_constant() {
         let s = StaticSchedule::new(GraphKind::Torus, 16).unwrap();
         let g0 = s.graph_for_epoch(0).unwrap();
-        let g9 = s.graph_for_epoch(9).unwrap();
+        let g9 = s.graph_for(9, 3).unwrap();
         assert_eq!(g0.dense_mixing(), g9.dense_mixing());
         assert_eq!(s.name(), "static(torus)");
+        assert!(!s.iteration_scoped());
+        assert_eq!(s.k_hint(), 4);
     }
 
     #[test]
@@ -142,6 +281,7 @@ mod tests {
         assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 2);
         assert_eq!(s.graph_for_epoch(1).unwrap().degree(), 7);
         assert_eq!(s.name(), "alternating");
+        assert_eq!(s.k_hint(), 2, "k_hint defaults to the first graph's degree");
     }
 
     #[test]
@@ -149,5 +289,16 @@ mod tests {
         let s = StaticSchedule::new(GraphKind::Ring, 8).unwrap();
         // degree 2 × 4 bytes × 100 params × 3 iters × 2 epochs
         assert_eq!(s.comm_bytes_per_node(2, 3, 100).unwrap(), 2 * 4 * 100 * 3 * 2);
+    }
+
+    #[test]
+    fn default_signals_are_empty() {
+        let s = TrainSignals::default();
+        assert_eq!(s.gini, None);
+        assert_eq!(s.consensus_distance, None);
+        assert_eq!(s.comm_bytes_per_node, 0);
+        let s = TrainSignals::for_epoch_gini(3, 0.5);
+        assert_eq!(s.epoch, 3);
+        assert_eq!(s.gini, Some(0.5));
     }
 }

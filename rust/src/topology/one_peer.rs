@@ -4,8 +4,18 @@
 //! Over a full cycle this achieves the mixing of the static exponential
 //! graph at degree-1 per-round communication — the communication-minimal
 //! corner of the design space that Ada is compared against.
+//!
+//! Two rotation cadences:
+//!
+//! * **per-epoch** ([`OnePeerExponential::new`], the default and the
+//!   pre-redesign behaviour, kept bit-identical): the offset advances
+//!   once per epoch — every iteration of an epoch reuses one offset.
+//! * **per-iteration** ([`OnePeerExponential::per_iteration`]): the
+//!   offset advances every gossip round, which is what Ying et al.
+//!   actually prescribe — the whole point of the iteration-level
+//!   decision point `graph_for(epoch, iter)`.
 
-use super::TopologySchedule;
+use super::{RunInfo, TopologyPolicy};
 use crate::error::Result;
 use crate::graph::{CommGraph, GraphKind};
 
@@ -15,28 +25,47 @@ pub struct OnePeerExponential {
     n: usize,
     /// Number of distinct offsets = ⌊log2(n−1)⌋ + 1.
     period: usize,
+    /// Advance the offset every iteration instead of every epoch.
+    per_iter: bool,
+    /// Gossip rounds per epoch (from [`TopologyPolicy::on_run_start`]);
+    /// only the per-iteration cadence consumes it.
+    iters_per_epoch: usize,
 }
 
 impl OnePeerExponential {
-    /// Create the schedule over `n ≥ 3` nodes.
+    /// The per-epoch-rotating schedule over `n ≥ 3` nodes.
     pub fn new(n: usize) -> Result<Self> {
         // Validate n by building the static exponential graph once.
         let g = CommGraph::build(GraphKind::Exponential, n)?;
         Ok(OnePeerExponential {
             n,
             period: g.degree(),
+            per_iter: false,
+            iters_per_epoch: 1,
         })
+    }
+
+    /// The per-iteration-rotating variant: the offset advances on every
+    /// gossip round, completing a full mixing cycle every `period`
+    /// *iterations* rather than every `period` epochs.
+    pub fn per_iteration(n: usize) -> Result<Self> {
+        let mut s = Self::new(n)?;
+        s.per_iter = true;
+        Ok(s)
     }
 
     /// Offsets cycle with this period.
     pub fn period(&self) -> usize {
         self.period
     }
-}
 
-impl TopologySchedule for OnePeerExponential {
-    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
-        let m = epoch % self.period;
+    /// Whether the offset advances per iteration.
+    pub fn rotates_per_iteration(&self) -> bool {
+        self.per_iter
+    }
+
+    fn graph_at(&self, round: usize) -> Result<CommGraph> {
+        let m = round % self.period;
         let offset = 1usize << m;
         let neighbors = (0..self.n)
             .map(|i| {
@@ -50,9 +79,35 @@ impl TopologySchedule for OnePeerExponential {
             .collect();
         CommGraph::from_neighbor_lists(GraphKind::Exponential, neighbors, true)
     }
+}
+
+impl TopologyPolicy for OnePeerExponential {
+    fn graph_for(&self, epoch: usize, iter: usize) -> Result<CommGraph> {
+        if self.per_iter {
+            self.graph_at(epoch * self.iters_per_epoch + iter)
+        } else {
+            self.graph_at(epoch)
+        }
+    }
+
+    fn iteration_scoped(&self) -> bool {
+        self.per_iter
+    }
+
+    fn on_run_start(&mut self, info: &RunInfo) {
+        self.iters_per_epoch = info.iters_per_epoch.max(1);
+    }
 
     fn name(&self) -> String {
-        format!("one_peer_exponential(n={})", self.n)
+        if self.per_iter {
+            format!("one_peer_exponential(n={},per_iter)", self.n)
+        } else {
+            format!("one_peer_exponential(n={})", self.n)
+        }
+    }
+
+    fn k_hint(&self) -> usize {
+        1
     }
 }
 
@@ -80,6 +135,35 @@ mod tests {
         assert_eq!(g2.neighbors_of(0), &[4]);
         let g4 = s.graph_for_epoch(4).unwrap();
         assert_eq!(g4.neighbors_of(0), &[1], "period wraps");
+    }
+
+    #[test]
+    fn epoch_cadence_ignores_the_iteration() {
+        let s = OnePeerExponential::new(16).unwrap();
+        assert!(!s.iteration_scoped());
+        assert_eq!(
+            s.graph_for(1, 0).unwrap().neighbors_of(0),
+            s.graph_for(1, 7).unwrap().neighbors_of(0),
+            "per-epoch rotation must reuse one offset all epoch"
+        );
+    }
+
+    #[test]
+    fn per_iteration_cadence_rotates_within_an_epoch() {
+        let mut s = OnePeerExponential::per_iteration(16).unwrap();
+        assert!(s.iteration_scoped());
+        s.on_run_start(&RunInfo {
+            n_workers: 16,
+            param_count: 100,
+            epochs: 2,
+            iters_per_epoch: 3,
+        });
+        assert_eq!(s.graph_for(0, 0).unwrap().neighbors_of(0), &[1]);
+        assert_eq!(s.graph_for(0, 1).unwrap().neighbors_of(0), &[2]);
+        assert_eq!(s.graph_for(0, 2).unwrap().neighbors_of(0), &[4]);
+        // Epoch 1 continues the global round counter: 1·3 + 0 = round 3.
+        assert_eq!(s.graph_for(1, 0).unwrap().neighbors_of(0), &[8]);
+        assert_eq!(s.graph_for(1, 1).unwrap().neighbors_of(0), &[1], "wraps");
     }
 
     #[test]
@@ -129,6 +213,10 @@ mod tests {
     fn cheapest_communication_of_all_schedules() {
         let one = OnePeerExponential::new(64).unwrap();
         let bytes = one.comm_bytes_per_node(10, 5, 1000).unwrap();
-        assert_eq!(bytes, 1 * 4 * 1000 * 5 * 10);
+        assert_eq!(bytes, 4 * 1000 * 5 * 10);
+        // The per-iteration variant spends exactly the same: degree 1
+        // every round, whichever round it is.
+        let per_iter = OnePeerExponential::per_iteration(64).unwrap();
+        assert_eq!(per_iter.comm_bytes_per_node(10, 5, 1000).unwrap(), bytes);
     }
 }

@@ -1,0 +1,279 @@
+//! The name → constructor table for topology policies — the open twin
+//! of the combine-strategy registry
+//! (`crate::coordinator::strategy::Registry`).
+//!
+//! Every constructor takes the training scale `n` plus a
+//! [`ParamTable`] (the shared parameter shape behind spec TOML
+//! `[topology.<name>]` sections and the CLI `--topology name:k=v,…`
+//! syntax) and returns a boxed [`TopologyPolicy`]. The builtin table
+//! registers the four pre-existing schedules and the two signal-driven
+//! policies; [`FnSchedule`](super::FnSchedule)-backed custom entries
+//! register at runtime with [`TopologyRegistry::register`] — see
+//! `examples/custom_strategy.rs` for one trained end-to-end.
+//!
+//! | name              | parameters (defaults)                                  |
+//! |-------------------|--------------------------------------------------------|
+//! | `ring` / `torus` / `exponential` / `complete` / `hypercube` | — |
+//! | `static`          | `graph` (= `ring`), or `k` for an Ada lattice          |
+//! | `ada`             | `k0` (= n−1), `gamma_k` (= 1.0)                        |
+//! | `one_peer`        | `per_iter` (= false)                                   |
+//! | `var_adaptive`    | `k0` (= n−1), `step` (= 2), `threshold` (= 0.002), `patience` (= 1) |
+//! | `consensus_decay` | `k0` (= n/2 — a complete lattice would zero the post-averaging signal), `step` (= 2), `threshold` (= 0.25), `patience` (= 1) |
+//! | `comm_budget`     | `budget_mb` (required), `k0` (= n−1)                   |
+
+use super::{
+    AdaSchedule, CommBudget, ConsensusDecay, OnePeerExponential, StaticSchedule, TopologyPolicy,
+    VarianceAdaptive,
+};
+use crate::error::{AdaError, Result};
+use crate::graph::GraphKind;
+use crate::util::params::ParamTable;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A registry constructor: build a policy for scale `n` from a
+/// parameter table.
+pub type PolicyCtor =
+    Arc<dyn Fn(usize, &ParamTable) -> Result<Box<dyn TopologyPolicy>> + Send + Sync>;
+
+/// Name → constructor table for topology policies. Starts from the
+/// builtin [`registry()`] and is extensible at runtime — registering a
+/// new policy requires no change to `topology/` source.
+pub struct TopologyRegistry {
+    entries: BTreeMap<String, PolicyCtor>,
+}
+
+impl TopologyRegistry {
+    /// An empty registry (no builtins).
+    pub fn empty() -> Self {
+        TopologyRegistry { entries: BTreeMap::new() }
+    }
+
+    /// Register `ctor` under `name`, replacing any previous entry.
+    pub fn register<F>(&mut self, name: impl Into<String>, ctor: F)
+    where
+        F: Fn(usize, &ParamTable) -> Result<Box<dyn TopologyPolicy>> + Send + Sync + 'static,
+    {
+        self.entries.insert(name.into(), Arc::new(ctor));
+    }
+
+    /// Register `alias` as another name for the existing `name`.
+    pub fn alias(&mut self, alias: impl Into<String>, name: &str) -> Result<()> {
+        let ctor = self.entries.get(name).cloned().ok_or_else(|| {
+            AdaError::Config(format!("cannot alias unknown topology {name:?}"))
+        })?;
+        self.entries.insert(alias.into(), ctor);
+        Ok(())
+    }
+
+    /// Whether `name` resolves.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// All registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Construct the policy registered under `name` for scale `n`.
+    pub fn resolve(
+        &self,
+        name: &str,
+        n: usize,
+        params: &ParamTable,
+    ) -> Result<Box<dyn TopologyPolicy>> {
+        let ctor = self.entries.get(name).ok_or_else(|| {
+            AdaError::Config(format!(
+                "unknown topology {name:?} (registered: {})",
+                self.names().join(", ")
+            ))
+        })?;
+        ctor(n, params)
+    }
+}
+
+/// Default `k0`: the densest lattice at scale `n`.
+fn default_k0(n: usize) -> usize {
+    n.saturating_sub(1).max(2)
+}
+
+fn static_kind(
+    name: &'static str,
+    kind: GraphKind,
+) -> impl Fn(usize, &ParamTable) -> Result<Box<dyn TopologyPolicy>> {
+    move |n, t| {
+        t.expect_only(&[])
+            .map_err(|e| AdaError::Config(format!("topology {name}: {e}")))?;
+        Ok(Box::new(StaticSchedule::new(kind, n)?) as Box<dyn TopologyPolicy>)
+    }
+}
+
+/// The builtin topology table (see the module docs for the parameter
+/// reference). Callers extend the returned registry with their own
+/// policies and hand it to [`crate::dbench::SessionPlan`].
+pub fn registry() -> TopologyRegistry {
+    let mut reg = TopologyRegistry::empty();
+    reg.register("ring", static_kind("ring", GraphKind::Ring));
+    reg.register("torus", static_kind("torus", GraphKind::Torus));
+    reg.register("exponential", static_kind("exponential", GraphKind::Exponential));
+    reg.register("complete", static_kind("complete", GraphKind::Complete));
+    reg.register("hypercube", static_kind("hypercube", GraphKind::Hypercube));
+    reg.register("static", |n, t| {
+        t.expect_only(&["graph", "k"])?;
+        if let Some(k) = t.get_usize("k")? {
+            return Ok(Box::new(StaticSchedule::new(GraphKind::AdaLattice { k }, n)?)
+                as Box<dyn TopologyPolicy>);
+        }
+        let kind = match t.get_str("graph")?.unwrap_or("ring") {
+            "ring" => GraphKind::Ring,
+            "torus" => GraphKind::Torus,
+            "exponential" => GraphKind::Exponential,
+            "complete" => GraphKind::Complete,
+            "hypercube" => GraphKind::Hypercube,
+            other => {
+                return Err(AdaError::Config(format!(
+                    "topology static: unknown graph {other:?} \
+                     (ring|torus|exponential|complete|hypercube, or k = <int>)"
+                )))
+            }
+        };
+        Ok(Box::new(StaticSchedule::new(kind, n)?))
+    });
+    reg.register("ada", |n, t| {
+        t.expect_only(&["k0", "gamma_k"])?;
+        let k0 = t.usize_or("k0", default_k0(n))?;
+        let gamma_k = t.f64_or("gamma_k", 1.0)?;
+        Ok(Box::new(AdaSchedule::new(n, k0, gamma_k)))
+    });
+    reg.register("one_peer", |n, t| {
+        t.expect_only(&["per_iter"])?;
+        Ok(Box::new(if t.bool_or("per_iter", false)? {
+            OnePeerExponential::per_iteration(n)?
+        } else {
+            OnePeerExponential::new(n)?
+        }))
+    });
+    reg.register("var_adaptive", |n, t| {
+        t.expect_only(&["k0", "step", "threshold", "patience"])?;
+        Ok(Box::new(VarianceAdaptive::new(
+            n,
+            t.usize_or("k0", default_k0(n))?,
+            t.usize_or("step", 2)?,
+            t.f64_or("threshold", 0.002)?,
+            t.usize_or("patience", 1)?,
+        )))
+    });
+    reg.register("consensus_decay", |n, t| {
+        t.expect_only(&["k0", "step", "threshold", "patience"])?;
+        // NOT default_k0: a complete (k = n−1) lattice equalizes the
+        // replicas every round, so the post-averaging consensus
+        // distance this policy keys on would be ~0 from epoch 0 and
+        // the d0 reference degenerate. Default to a half-dense lattice
+        // that leaves a measurable signal standing.
+        Ok(Box::new(ConsensusDecay::new(
+            n,
+            t.usize_or("k0", (n / 2).max(2))?,
+            t.usize_or("step", 2)?,
+            t.f64_or("threshold", 0.25)?,
+            t.usize_or("patience", 1)?,
+        )))
+    });
+    reg.register("comm_budget", |n, t| {
+        t.expect_only(&["budget_mb", "k0"])?;
+        let budget_mb = t.need_f64("budget_mb", "topology comm_budget")?;
+        Ok(Box::new(CommBudget::with_budget_mb(
+            n,
+            t.usize_or("k0", default_k0(n))?,
+            budget_mb,
+        )))
+    });
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_with_empty_params() {
+        let reg = registry();
+        for name in [
+            "ring",
+            "torus",
+            "exponential",
+            "complete",
+            "static",
+            "ada",
+            "one_peer",
+            "var_adaptive",
+            "consensus_decay",
+        ] {
+            let p = reg
+                .resolve(name, 16, &ParamTable::new())
+                .unwrap_or_else(|e| panic!("builtin {name} must resolve: {e}"));
+            p.graph_for(0, 0)
+                .unwrap_or_else(|e| panic!("{name} must build its first graph: {e}"));
+        }
+        // hypercube needs a power-of-two n.
+        assert!(reg.resolve("hypercube", 16, &ParamTable::new()).is_ok());
+    }
+
+    #[test]
+    fn comm_budget_requires_its_budget() {
+        let reg = registry();
+        let err = reg
+            .resolve("comm_budget", 16, &ParamTable::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("budget_mb"), "{err}");
+        let t = ParamTable::parse_kv("budget_mb=5.0,k0=6").unwrap();
+        let p = reg.resolve("comm_budget", 16, &t).unwrap();
+        assert_eq!(p.k_hint(), 2, "budget policies hint the sparse-safe LR");
+    }
+
+    #[test]
+    fn params_shape_the_policy() {
+        let reg = registry();
+        let t = ParamTable::parse_kv("k0=6,gamma_k=2.0").unwrap();
+        let ada = reg.resolve("ada", 16, &t).unwrap();
+        assert_eq!(ada.graph_for(0, 0).unwrap().degree(), 6);
+        assert_eq!(ada.graph_for(2, 0).unwrap().degree(), 2);
+        let t = ParamTable::parse_kv("graph=torus").unwrap();
+        let torus = reg.resolve("static", 16, &t).unwrap();
+        assert_eq!(torus.graph_for(0, 0).unwrap().degree(), 4);
+        let t = ParamTable::parse_kv("k=6").unwrap();
+        let lattice = reg.resolve("static", 16, &t).unwrap();
+        assert_eq!(lattice.graph_for(5, 0).unwrap().degree(), 6);
+        let t = ParamTable::parse_kv("per_iter=true").unwrap();
+        assert!(reg.resolve("one_peer", 16, &t).unwrap().iteration_scoped());
+    }
+
+    #[test]
+    fn unknown_names_and_params_are_loud() {
+        let reg = registry();
+        let err = reg
+            .resolve("mystery", 8, &ParamTable::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mystery") && err.contains("ada"), "{err}");
+        let t = ParamTable::parse_kv("k0=4,tpyo=1").unwrap();
+        assert!(reg.resolve("ada", 8, &t).is_err(), "typo'd params must error");
+    }
+
+    #[test]
+    fn runtime_registration_and_alias() {
+        let mut reg = registry();
+        reg.register("always_ring", |n, _| {
+            Ok(Box::new(super::super::FnSchedule::new("always_ring", move |_| {
+                crate::graph::CommGraph::build(GraphKind::Ring, n)
+            })))
+        });
+        assert!(reg.contains("always_ring"));
+        let custom = reg.resolve("always_ring", 8, &ParamTable::new()).unwrap();
+        assert_eq!(custom.graph_for(3, 0).unwrap().degree(), 2);
+        reg.alias("ring2", "always_ring").unwrap();
+        assert!(reg.contains("ring2"));
+        assert!(reg.alias("x", "nope").is_err());
+    }
+}

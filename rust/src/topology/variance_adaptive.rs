@@ -9,7 +9,7 @@
 //! consecutive epochs — a feedback controller on the same signal the
 //! white-box analysis identified.
 
-use super::TopologySchedule;
+use super::{TopologyPolicy, TrainSignals};
 use crate::error::Result;
 use crate::graph::{CommGraph, GraphKind};
 use std::collections::HashMap;
@@ -64,8 +64,8 @@ impl VarianceAdaptive {
     }
 }
 
-impl TopologySchedule for VarianceAdaptive {
-    fn graph_for_epoch(&self, epoch: usize) -> Result<CommGraph> {
+impl TopologyPolicy for VarianceAdaptive {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
         let mut st = self.state.lock().expect("state poisoned");
         let k = st.history.get(&epoch).copied().unwrap_or(st.k);
         if let Some(g) = st.cache.get(&k) {
@@ -76,10 +76,14 @@ impl TopologySchedule for VarianceAdaptive {
         Ok(g)
     }
 
-    fn observe(&mut self, epoch: usize, gini: f64) {
+    fn observe(&mut self, signals: &TrainSignals) {
         let mut st = self.state.lock().expect("state poisoned");
         let current_k = st.k;
-        st.history.insert(epoch, current_k);
+        st.history.insert(signals.epoch, current_k);
+        // Epochs without a variance capture pin their k but cannot
+        // trigger a decay — exactly the pre-redesign call pattern, where
+        // observe simply never fired without a gini sample.
+        let Some(gini) = signals.gini else { return };
         if gini < self.threshold {
             st.below_count += 1;
             if st.below_count >= self.patience {
@@ -97,17 +101,25 @@ impl TopologySchedule for VarianceAdaptive {
             self.k0, self.step, self.threshold
         )
     }
+
+    fn k_hint(&self) -> usize {
+        self.k0.max(2)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn gini(epoch: usize, g: f64) -> TrainSignals {
+        TrainSignals::for_epoch_gini(epoch, g)
+    }
+
     #[test]
     fn stays_dense_while_variance_high() {
         let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 2);
         for e in 0..5 {
-            s.observe(e, 0.5); // high variance
+            s.observe(&gini(e, 0.5)); // high variance
         }
         assert_eq!(s.current_k(), 8);
     }
@@ -115,31 +127,40 @@ mod tests {
     #[test]
     fn decays_after_patience_epochs_below_threshold() {
         let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 2);
-        s.observe(0, 0.001);
+        s.observe(&gini(0, 0.001));
         assert_eq!(s.current_k(), 8, "patience not yet met");
-        s.observe(1, 0.001);
+        s.observe(&gini(1, 0.001));
         assert_eq!(s.current_k(), 6, "decayed by step after patience");
     }
 
     #[test]
     fn spike_resets_patience() {
         let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 3);
-        s.observe(0, 0.001);
-        s.observe(1, 0.001);
-        s.observe(2, 0.9); // spike
-        s.observe(3, 0.001);
-        s.observe(4, 0.001);
+        s.observe(&gini(0, 0.001));
+        s.observe(&gini(1, 0.001));
+        s.observe(&gini(2, 0.9)); // spike
+        s.observe(&gini(3, 0.001));
+        s.observe(&gini(4, 0.001));
         assert_eq!(s.current_k(), 8, "spike must reset the counter");
-        s.observe(5, 0.001);
+        s.observe(&gini(5, 0.001));
         assert_eq!(s.current_k(), 6);
     }
 
     #[test]
     fn floors_at_k2() {
         let mut s = VarianceAdaptive::new(16, 4, 10, 0.5, 1);
-        s.observe(0, 0.0);
-        s.observe(1, 0.0);
+        s.observe(&gini(0, 0.0));
+        s.observe(&gini(1, 0.0));
         assert_eq!(s.current_k(), 2, "k never drops below 2 (Algorithm 1)");
+    }
+
+    #[test]
+    fn epochs_without_a_capture_cannot_trigger_decay() {
+        let mut s = VarianceAdaptive::new(16, 8, 2, 0.01, 1);
+        s.observe(&TrainSignals { epoch: 0, gini: None, ..TrainSignals::default() });
+        assert_eq!(s.current_k(), 8, "no gini sample, no decay");
+        s.observe(&gini(1, 0.001));
+        assert_eq!(s.current_k(), 6);
     }
 
     #[test]
@@ -147,7 +168,7 @@ mod tests {
         let mut s = VarianceAdaptive::new(16, 8, 4, 0.01, 1);
         let g0 = s.graph_for_epoch(0).unwrap();
         assert_eq!(g0.degree(), 8);
-        s.observe(0, 0.0); // k → 4
+        s.observe(&gini(0, 0.0)); // k → 4
         let g1 = s.graph_for_epoch(1).unwrap();
         assert_eq!(g1.degree(), 4);
         // Epoch 0 is pinned to the k it actually ran with.

@@ -10,6 +10,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod matrix;
+pub mod params;
 pub mod rng;
 pub mod tomlmini;
 

@@ -1,0 +1,235 @@
+//! [`ParamTable`] — the one parameter-table shape every name-keyed
+//! registry constructor consumes.
+//!
+//! Both registries (`crate::topology::registry`,
+//! `crate::coordinator::strategy::registry` via
+//! `StrategyParams::from_table`) resolve `name → ctor(params)`, and the
+//! params arrive from two surfaces that must agree: a TOML section
+//! (`[topology.<name>]` / `[strategy.<name>]` in an experiment spec) and
+//! a CLI argument (`--topology name:k0=10,gamma_k=0.5`). This module is
+//! that shared parser: one table type, typed getters with loud errors,
+//! and an unknown-key check so typos fail instead of silently falling
+//! back to defaults.
+
+use super::tomlmini::TomlValue;
+use crate::error::{AdaError, Result};
+use std::collections::BTreeMap;
+
+/// A named-parameter bag: `key → TomlValue`, ordered, cloneable, and
+/// printable (it participates in the experiment pipeline's cell
+/// fingerprints via `Debug`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParamTable {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl ParamTable {
+    /// An empty table (all constructor defaults apply).
+    pub fn new() -> Self {
+        ParamTable::default()
+    }
+
+    /// Adopt a parsed TOML section verbatim.
+    pub fn from_toml_section(section: &BTreeMap<String, TomlValue>) -> Self {
+        ParamTable { entries: section.clone() }
+    }
+
+    /// Parse the CLI form `k=v,k2=v2,…` (empty input = empty table).
+    /// Values follow TOML scalar rules without quoting: `true`/`false`,
+    /// then integer, then float, else a bare string — so `graph=ring`
+    /// and `gamma_k=0.5` both read naturally from a shell.
+    pub fn parse_kv(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                AdaError::Config(format!("parameter {part:?} is not of the form key=value"))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(AdaError::Config(format!("empty key in parameter {part:?}")));
+            }
+            entries.insert(key.to_string(), parse_scalar(value.trim()));
+        }
+        Ok(ParamTable { entries })
+    }
+
+    /// Insert/overwrite `key` (builder-style, used by tests and custom
+    /// plans).
+    pub fn set(mut self, key: impl Into<String>, value: TomlValue) -> Self {
+        self.entries.insert(key.into(), value);
+        self
+    }
+
+    /// Whether no parameters were given.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Error unless every key is in `known` — the typo guard every
+    /// registry constructor should call first.
+    pub fn expect_only(&self, known: &[&str]) -> Result<()> {
+        for key in self.entries.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(AdaError::Config(format!(
+                    "unknown parameter {key:?} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// `key` as usize, if present; error when present but not a
+    /// non-negative integer.
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_int()
+                .and_then(|i| usize::try_from(i).ok())
+                .map(Some)
+                .ok_or_else(|| bad(key, v, "a non-negative integer")),
+        }
+    }
+
+    /// `key` as f64 (ints widen), if present.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_float()
+                .map(Some)
+                .ok_or_else(|| bad(key, v, "a number")),
+        }
+    }
+
+    /// `key` as bool, if present.
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_bool().map(Some).ok_or_else(|| bad(key, v, "a boolean")),
+        }
+    }
+
+    /// `key` as str, if present.
+    pub fn get_str(&self, key: &str) -> Result<Option<&str>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_str().map(Some).ok_or_else(|| bad(key, v, "a string")),
+        }
+    }
+
+    /// `key` as usize with a default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_usize(key)?.unwrap_or(default))
+    }
+
+    /// `key` as f64 with a default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.get_f64(key)?.unwrap_or(default))
+    }
+
+    /// `key` as bool with a default.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        Ok(self.get_bool(key)?.unwrap_or(default))
+    }
+
+    /// `key` as usize, required.
+    pub fn need_usize(&self, key: &str, who: &str) -> Result<usize> {
+        self.get_usize(key)?
+            .ok_or_else(|| AdaError::Config(format!("{who} needs parameter {key} = <int>")))
+    }
+
+    /// `key` as f64, required.
+    pub fn need_f64(&self, key: &str, who: &str) -> Result<f64> {
+        self.get_f64(key)?
+            .ok_or_else(|| AdaError::Config(format!("{who} needs parameter {key} = <number>")))
+    }
+}
+
+fn bad(key: &str, value: &TomlValue, wanted: &str) -> AdaError {
+    AdaError::Config(format!("parameter {key} = {value:?} is not {wanted}"))
+}
+
+/// CLI scalar: bool, then int, then float, else bare string.
+fn parse_scalar(text: &str) -> TomlValue {
+    match text {
+        "true" => return TomlValue::Bool(true),
+        "false" => return TomlValue::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return TomlValue::Int(i);
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return TomlValue::Float(f);
+    }
+    TomlValue::Str(text.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_form_parses_typed_scalars() {
+        let t = ParamTable::parse_kv("k0=10,gamma_k=0.5,per_iter=true,graph=ring").unwrap();
+        assert_eq!(t.get_usize("k0").unwrap(), Some(10));
+        assert_eq!(t.get_f64("gamma_k").unwrap(), Some(0.5));
+        assert_eq!(t.get_bool("per_iter").unwrap(), Some(true));
+        assert_eq!(t.get_str("graph").unwrap(), Some("ring"));
+        assert_eq!(t.get_usize("absent").unwrap(), None);
+        assert_eq!(t.usize_or("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn ints_widen_to_floats_but_not_vice_versa() {
+        let t = ParamTable::parse_kv("x=3").unwrap();
+        assert_eq!(t.get_f64("x").unwrap(), Some(3.0));
+        let t = ParamTable::parse_kv("x=3.5").unwrap();
+        assert!(t.get_usize("x").is_err(), "float is not an int");
+    }
+
+    #[test]
+    fn empty_and_malformed_inputs() {
+        assert!(ParamTable::parse_kv("").unwrap().is_empty());
+        assert!(ParamTable::parse_kv("justakey").is_err());
+        assert!(ParamTable::parse_kv("=3").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_loud() {
+        let t = ParamTable::parse_kv("k0=4,tpyo=2").unwrap();
+        let err = t.expect_only(&["k0", "gamma_k"]).unwrap_err().to_string();
+        assert!(err.contains("tpyo"), "{err}");
+        assert!(t.expect_only(&["k0", "tpyo"]).is_ok());
+    }
+
+    #[test]
+    fn required_keys_error_with_owner_name() {
+        let t = ParamTable::new();
+        let err = t.need_usize("k0", "policy ada").unwrap_err().to_string();
+        assert!(err.contains("policy ada") && err.contains("k0"), "{err}");
+    }
+
+    #[test]
+    fn toml_section_roundtrip() {
+        let doc = crate::util::tomlmini::TomlDoc::parse(
+            "[topology.comm_budget]\nbudget_mb = 12.5\nk0 = 8\n",
+        )
+        .unwrap();
+        let section = doc.sections.get("topology.comm_budget").unwrap();
+        let t = ParamTable::from_toml_section(section);
+        assert_eq!(t.get_f64("budget_mb").unwrap(), Some(12.5));
+        assert_eq!(t.get_usize("k0").unwrap(), Some(8));
+    }
+}

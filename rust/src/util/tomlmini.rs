@@ -123,6 +123,13 @@ impl TomlDoc {
             None => self.root.get(path),
         }
     }
+
+    /// A whole `[section]` table by its literal header name — the
+    /// accessor for dotted headers like `[topology.comm_budget]`, whose
+    /// keys [`TomlDoc::get`]'s first-dot split cannot reach.
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.sections.get(name)
+    }
 }
 
 fn err(lineno: usize, msg: &str) -> AdaError {

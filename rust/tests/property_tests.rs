@@ -10,7 +10,7 @@ use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::metrics::{gini_coefficient, rank_ascending, VarianceReport};
 use ada_dist::optim::LrSchedule;
-use ada_dist::topology::{AdaSchedule, TopologySchedule};
+use ada_dist::topology::{AdaSchedule, TopologyPolicy};
 use ada_dist::util::rng::Rng;
 
 const CASES: usize = 40;

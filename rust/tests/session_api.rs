@@ -6,8 +6,8 @@
 use ada_dist::coordinator::strategy::{self, CombineStrategy, StepCtx, StrategyInstance};
 use ada_dist::coordinator::surrogate::SoftmaxRegression;
 use ada_dist::coordinator::{
-    Checkpoint, CheckpointObserver, EpochInfo, Observer, RunSummary, SgdFlavor, TrainConfig,
-    TrainSession, Trainer,
+    Checkpoint, CheckpointObserver, ControlFlow, EpochInfo, Observer, RunSummary, SgdFlavor,
+    TrainConfig, TrainSession, Trainer,
 };
 use ada_dist::data::{ShardStrategy, SyntheticClassification};
 use ada_dist::dbench::{ExperimentSpec, SessionPlan, StrategyRef};
@@ -113,21 +113,25 @@ struct TraceObserver {
 }
 
 impl Observer for TraceObserver {
-    fn on_iteration(&mut self, rec: &IterationRecord, replicas: &ReplicaMatrix) -> Result<()> {
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
         assert!(!replicas.is_empty(), "observers see live replica state");
         self.log
             .lock()
             .unwrap()
             .push(format!("{}:iter:{}", self.tag, rec.iteration));
-        Ok(())
+        Ok(ControlFlow::Continue)
     }
 
-    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<()> {
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<ControlFlow> {
         self.log
             .lock()
             .unwrap()
             .push(format!("{}:epoch:{}", self.tag, info.epoch));
-        Ok(())
+        Ok(ControlFlow::Continue)
     }
 
     fn on_complete(&mut self, summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
