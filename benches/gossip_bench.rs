@@ -14,9 +14,14 @@
 //!      fixed-8-lane scalar fallback (axpy, the fused mix_step, and the
 //!      sum-of-squares reduction) at P ∈ {2^16 … 2^22} — results are
 //!      bit-identical, so the sweep is pure wall-clock
-//!   6. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
+//!   6. **pipeline vs phased**: the overlapped bucketed gossip pipeline
+//!      (PR 6) against the phase-ordered local-step-then-mix iteration,
+//!      with a synthetic per-row local step standing in for compute —
+//!      sweeps bucket_kb × threads × graph; results are bit-identical
+//!      so the sweep is pure wall-clock
+//!   7. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
-//! Sections 2–5 are written to `BENCH_gossip.json` at the repo root.
+//! Sections 2–6 are written to `BENCH_gossip.json` at the repo root.
 //! Results are bit-identical across thread counts and across the
 //! SIMD/scalar paths (asserted in `rust/tests/exec_determinism.rs`), so
 //! every sweep is purely wall-clock.
@@ -57,7 +62,8 @@ fn main() {
     let pool = pool_vs_scoped(iters);
     let reduce = reduce_vs_serial_variance(iters);
     let simd_cells = simd_vs_scalar(iters);
-    write_bench_json(sweep, pool, reduce, simd_cells);
+    let pipeline = pipeline_vs_phased(iters);
+    write_bench_json(sweep, pool, reduce, simd_cells, pipeline);
     #[cfg(feature = "pjrt")]
     hlo_section(iters);
     #[cfg(not(feature = "pjrt"))]
@@ -399,7 +405,114 @@ fn simd_vs_scalar(iters: usize) -> Vec<Value> {
     cells
 }
 
-fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>, simd: Vec<Value>) {
+/// The overlapped bucketed pipeline against the phase-ordered
+/// iteration it replaces. Both run the SAME per-row synthetic local
+/// step (a fixed number of multiply-add passes, standing in for the
+/// forward/backward compute of a real local step) and the SAME mix —
+/// the phased variant runs them as two sequential phases on one engine,
+/// the pipelined variant threads the producer through
+/// `mix_overlapped`/`publish_overlapped` so bucket consumers start as
+/// soon as their row frontier retires. Outputs are bit-identical
+/// (asserted in `rust/tests/exec_determinism.rs`), so the ratio is pure
+/// overlap.
+fn pipeline_vs_phased(iters: usize) -> Vec<Value> {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("== overlapped pipeline vs phased iteration (host has {cores} cores) ==");
+
+    // A deterministic stand-in for the local step: four fused
+    // multiply-add passes over the row. Heavy enough that there is real
+    // compute to hide the mix behind, cheap enough to sweep.
+    fn local_work(w: usize, row: &mut [f32]) {
+        for pass in 0..4u32 {
+            let c = 1e-6 * (w as f32 + 1.0) * (pass as f32 + 1.0);
+            for v in row.iter_mut() {
+                *v = *v * 0.999_9 + c;
+            }
+        }
+    }
+
+    let graphs = [
+        GraphKind::Ring,
+        GraphKind::RingLattice { k: 3 },
+        GraphKind::Exponential,
+        GraphKind::Complete,
+    ];
+    let (n, p) = (16usize, 262_144usize);
+    let thread_counts = [2usize, 4, 8];
+    let bucket_kbs = [64usize, 256, 1024];
+
+    let mut t = Table::new(&[
+        "graph", "threads", "bucket_kb", "phased", "pipelined", "overlap gain",
+    ]);
+    let mut cells = Vec::new();
+    for kind in graphs {
+        let g = CommGraph::build(kind, n).unwrap();
+        let src = replicas(n, p, 9);
+        for threads in thread_counts {
+            // -- phased baseline: local phase, then mix phase ---------
+            let mut phased_engine = GossipEngine::with_threads(threads);
+            let mut phased_reps = src.clone();
+            let t_phased = bench(1, iters, || {
+                for w in 0..n {
+                    local_work(w, phased_reps.row_mut(w));
+                }
+                phased_engine.mix(&g, &mut phased_reps);
+            });
+            let phased_s = t_phased.median.as_secs_f64();
+
+            for bucket_kb in bucket_kbs {
+                // -- overlapped: producer steps rows while bucket
+                //    consumers mix behind the retired frontier --------
+                let mut engine = GossipEngine::with_threads(threads);
+                engine.set_bucket_kb(bucket_kb);
+                let mut reps = src.clone();
+                let t_piped = bench(1, iters, || {
+                    engine
+                        .mix_overlapped(&g, &mut reps, None, |w, row| {
+                            local_work(w, row);
+                            Ok(())
+                        })
+                        .unwrap();
+                    engine.publish_overlapped(&mut reps);
+                });
+                let piped_s = t_piped.median.as_secs_f64();
+                t.row(vec![
+                    kind.to_string(),
+                    threads.to_string(),
+                    bucket_kb.to_string(),
+                    fmt_duration(t_phased.median),
+                    fmt_duration(t_piped.median),
+                    format!("{:.2}x", phased_s / piped_s),
+                ]);
+                cells.push(Value::obj(vec![
+                    ("graph", Value::Str(kind.to_string())),
+                    ("n", Value::Num(n as f64)),
+                    ("p", Value::Num(p as f64)),
+                    ("threads", Value::Num(threads as f64)),
+                    ("bucket_kb", Value::Num(bucket_kb as f64)),
+                    ("phased_median_s", Value::Num(phased_s)),
+                    ("pipelined_median_s", Value::Num(piped_s)),
+                    ("overlap_speedup", Value::Num(phased_s / piped_s)),
+                    ("iters", Value::Num(iters as f64)),
+                ]));
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(same per-row local step + same mix on both sides; pipelined output\n\
+         is bit-identical to phased, so overlap gain is pure wall-clock)"
+    );
+    cells
+}
+
+fn write_bench_json(
+    sweep: Vec<Value>,
+    pool: Vec<Value>,
+    reduce: Vec<Value>,
+    simd: Vec<Value>,
+    pipeline: Vec<Value>,
+) {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let doc = Value::obj(vec![
         ("status", Value::Str("measured".into())),
@@ -409,6 +522,7 @@ fn write_bench_json(sweep: Vec<Value>, pool: Vec<Value>, reduce: Vec<Value>, sim
         ("pool_vs_scoped", Value::Arr(pool)),
         ("reduce_vs_serial_variance", Value::Arr(reduce)),
         ("simd_vs_scalar", Value::Arr(simd)),
+        ("pipeline_vs_phased", Value::Arr(pipeline)),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
     match std::fs::write(&out, doc.to_string()) {

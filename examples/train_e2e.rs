@@ -70,6 +70,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         threads: 0,
         fused: false,
         fused_momentum: 0.0,
+        pipeline: false,
+        bucket_kb: 0,
         record_path: Some("out/train_e2e.jsonl".into()),
     };
 

@@ -37,6 +37,8 @@ dbench <command> [options]
                         report mean ± stderr per cell (variance of the
                         estimate; the paper reports single seeds)
     --threads N (0 = all cores; bit-identical results)  --fused
+    --pipeline          overlap gossip with compute bucket-by-bucket
+                        (bit-identical to phased)  --bucket-kb N (0 = 256 KB)
     --cell-parallel N   run up to N grid cells concurrently (bounded by
                         cores; auto-threaded cells then run 1 thread
                         each — results identical either way)
@@ -60,7 +62,7 @@ fn builtin(app: &str) -> Result<ExperimentSpec, String> {
 fn main() -> CliResult {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["sqrt-scaling", "save-records", "fused", "help"],
+        &["sqrt-scaling", "save-records", "fused", "pipeline", "help"],
     )
     .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
@@ -125,6 +127,10 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     if args.has_flag("fused") {
         spec.fused = true;
     }
+    if args.has_flag("pipeline") {
+        spec.pipeline = true;
+    }
+    spec.bucket_kb = args.get_parse("bucket-kb", spec.bucket_kb)?;
     if let Some(t) = args.get("topology") {
         spec.topology = Some(TopologyRef::parse(t)?);
     }
@@ -193,6 +199,10 @@ fn cmd_ada(args: &Args, cfg: &LauncherConfig) -> CliResult {
     if args.has_flag("fused") {
         spec.fused = true;
     }
+    if args.has_flag("pipeline") {
+        spec.pipeline = true;
+    }
+    spec.bucket_kb = args.get_parse("bucket-kb", spec.bucket_kb)?;
     spec.flavors = vec![
         SgdFlavor::CentralizedComplete,
         SgdFlavor::DecentralizedRing,

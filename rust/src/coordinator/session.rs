@@ -277,6 +277,13 @@ impl<'m> TrainSession<'m> {
             }
         };
         let mut engine = GossipEngine::with_threads(cfg.threads);
+        engine.set_bucket_kb(cfg.bucket_kb);
+        // The overlapped route is taken only when asked for AND the
+        // strategy implements it; everything else stays phase-ordered.
+        // Both routes are bit-identical by the pipeline's determinism
+        // contract (`crate::exec::pipeline`), test-enforced in
+        // `rust/tests/exec_determinism.rs`.
+        let pipelined = cfg.pipeline && self.combine.supports_pipeline();
         self.combine.prepare(n, p)?;
         if let Some(s) = &mut self.schedule {
             s.on_run_start(&RunInfo {
@@ -320,6 +327,20 @@ impl<'m> TrainSession<'m> {
                 let graph = iter_graph.as_ref().or(epoch_graph.as_ref());
                 let frac_epoch = epoch as f64 + b as f64 / iters_per_epoch as f64;
                 let lr = lr_schedule.lr_at(frac_epoch) as f32;
+                // The failure-injection mask is drawn here — by the
+                // session, not the strategy — so the deterministic RNG
+                // stream is a property of the run, and only gossip
+                // rounds consume it (centralized runs draw nothing,
+                // exactly as the closed path did). Drawn before the
+                // local phase because the pipelined route starts the
+                // combine's communication *during* local compute; the
+                // dedicated RNG stream makes the draw order immaterial.
+                let active_mask: Option<Vec<bool>> =
+                    if graph.is_some() && cfg.drop_prob > 0.0 {
+                        Some((0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect())
+                    } else {
+                        None
+                    };
                 // --- local phase (strategy) --------------------------
                 let train_loss = {
                     let mut ctx = StepCtx {
@@ -328,14 +349,21 @@ impl<'m> TrainSession<'m> {
                         loaders: &loaders,
                         engine: &mut engine,
                         graph,
-                        active: None,
+                        // The phased local phase never sees the mask
+                        // (it belongs to the combine); the pipelined
+                        // one drives the combine too, so it must.
+                        active: if pipelined { active_mask.as_deref() } else { None },
                         epoch,
                         batch: b,
                         lr,
                         n,
                         param_count: p,
                     };
-                    self.combine.local_phase(&mut ctx, &mut replicas)?
+                    if pipelined {
+                        self.combine.local_phase_bucket(&mut ctx, &mut replicas)?
+                    } else {
+                        self.combine.local_phase(&mut ctx, &mut replicas)?
+                    }
                 };
                 if !train_loss.is_finite() {
                     diverged = true;
@@ -356,17 +384,6 @@ impl<'m> TrainSession<'m> {
                 };
 
                 // --- combine phase (strategy) ------------------------
-                // The failure-injection mask is drawn here — by the
-                // session, not the strategy — so the deterministic RNG
-                // stream is a property of the run, and only gossip
-                // rounds consume it (centralized runs draw nothing,
-                // exactly as the closed path did).
-                let active_mask: Option<Vec<bool>> =
-                    if graph.is_some() && cfg.drop_prob > 0.0 {
-                        Some((0..n).map(|_| !drop_rng.bool(cfg.drop_prob)).collect())
-                    } else {
-                        None
-                    };
                 let (degree, bytes) = {
                     let mut ctx = StepCtx {
                         model: &mut *self.model,
@@ -381,7 +398,11 @@ impl<'m> TrainSession<'m> {
                         n,
                         param_count: p,
                     };
-                    self.combine.combine_phase(&mut ctx, &mut replicas)?
+                    if pipelined {
+                        self.combine.combine_phase_bucket(&mut ctx, &mut replicas)?
+                    } else {
+                        self.combine.combine_phase(&mut ctx, &mut replicas)?
+                    }
                 };
                 total_bytes_per_node += bytes;
 

@@ -62,6 +62,39 @@ impl CombineStrategy for GossipCombine {
         }
         Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
     }
+
+    fn supports_pipeline(&self) -> bool {
+        true
+    }
+
+    fn local_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        let g = need_graph(ctx, "GossipCombine")?;
+        // Destructured so the producer closure can borrow the model and
+        // loaders while the engine drives the overlapped round.
+        let StepCtx { model, dataset, loaders, engine, active, epoch, batch, lr, n, .. } =
+            &mut *ctx;
+        let mut loss_sum = 0.0f64;
+        engine.mix_overlapped(g, replicas, *active, |w, row| {
+            let b = dataset.batch(&loaders[w].batch_indices(*epoch, *batch));
+            loss_sum += model.local_step(w, row, &b, *lr)? as f64;
+            Ok(())
+        })?;
+        Ok(loss_sum / *n as f64)
+    }
+
+    fn combine_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "GossipCombine")?;
+        ctx.engine.publish_overlapped(replicas);
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
 }
 
 /// Combine-then-adapt (D-PSGD, Lian et al. 2017), executed through the
@@ -142,6 +175,50 @@ impl CombineStrategy for FusedGossipCombine {
             ),
             None => ctx.engine.mix_step(g, replicas, &self.grads, &mut self.states, ctx.lr),
         }
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+
+    fn supports_pipeline(&self) -> bool {
+        true
+    }
+
+    fn local_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        let g = need_graph(ctx, "FusedGossipCombine")?;
+        let StepCtx { model, dataset, loaders, engine, active, epoch, batch, lr, n, .. } =
+            &mut *ctx;
+        let mut loss_sum = 0.0f64;
+        // θ_t is frozen for the round, so every bucket's gossip SpMM
+        // starts immediately; only the momentum application waits for
+        // each gradient row (see `mix_step_overlapped`).
+        engine.mix_step_overlapped(
+            g,
+            replicas,
+            &mut self.grads,
+            &mut self.states,
+            *lr,
+            *active,
+            |w, theta, grad_out| {
+                let b = dataset.batch(&loaders[w].batch_indices(*epoch, *batch));
+                let (loss, gvec) = model.loss_and_grad(theta, &b)?;
+                loss_sum += loss as f64;
+                grad_out.copy_from_slice(&gvec);
+                Ok(())
+            },
+        )?;
+        Ok(loss_sum / *n as f64)
+    }
+
+    fn combine_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "FusedGossipCombine")?;
+        ctx.engine.publish_overlapped(replicas);
         Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
     }
 }

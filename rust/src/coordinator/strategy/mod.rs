@@ -23,6 +23,14 @@
 //! (deg, bytes) = strategy.combine_phase(ctx, replicas)
 //! ```
 //!
+//! With `TrainConfig::pipeline` set (and a strategy whose
+//! `supports_pipeline()` says yes) the session calls the
+//! `*_phase_bucket` pair instead: the local phase overlaps compute with
+//! the combine's bucketed communication on the pool
+//! ([`crate::exec::pipeline`]), the mixed result waits in the engine's
+//! scratch across the capture point, and the combine phase publishes
+//! it. Both routes are bit-identical by contract.
+//!
 //! The built-in strategies are the three execution paths the old
 //! `Trainer` hard-wired:
 //!
@@ -135,6 +143,45 @@ pub trait CombineStrategy: Send {
         ctx: &mut StepCtx<'_>,
         replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)>;
+
+    /// Whether this strategy implements the bucketed overlapped
+    /// pipeline. The session takes the pipelined route only when
+    /// `TrainConfig::pipeline` is set *and* this returns `true`;
+    /// strategies that stay phase-ordered need not change.
+    fn supports_pipeline(&self) -> bool {
+        false
+    }
+
+    /// Pipelined local phase: run the per-replica compute on the
+    /// calling thread while the combine's bucket consumers mix finished
+    /// rows on the pool ([`crate::exec::pipeline::run_overlapped`]).
+    /// The mixed result must stay unpublished (in the engine's scratch)
+    /// so the capture point between the two phases still observes
+    /// pre-averaging replicas; [`CombineStrategy::combine_phase_bucket`]
+    /// publishes it. Must be **bit-identical** to
+    /// [`CombineStrategy::local_phase`] + [`CombineStrategy::combine_phase`]
+    /// at any thread count and bucket size. The default falls back to
+    /// the phase-ordered `local_phase`.
+    fn local_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        self.local_phase(ctx, replicas)
+    }
+
+    /// Pipelined combine phase: publish the round the overlapped local
+    /// phase already mixed (for the gossip strategies, one scratch
+    /// swap). The default falls back to the phase-ordered
+    /// [`CombineStrategy::combine_phase`], which is correct whenever
+    /// `local_phase_bucket` fell back too.
+    fn combine_phase_bucket(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        self.combine_phase(ctx, replicas)
+    }
 }
 
 /// The tunable knobs a registry constructor may consume — the union of

@@ -216,6 +216,20 @@ pub struct TrainConfig {
     /// Momentum coefficient of the per-worker buffers owned by the fused
     /// path (set equal to the model's momentum for like-for-like runs).
     pub fused_momentum: f32,
+    /// Run decentralized iterations through the **overlapped bucketed
+    /// pipeline** (`crate::exec::pipeline`): the combine's gossip runs
+    /// on pool workers bucket-by-bucket while the local phase is still
+    /// stepping later replicas, instead of the two phases running
+    /// fork-join back-to-back. Output is **bit-identical** to the
+    /// phase-ordered path at any thread count and bucket size
+    /// (test-enforced), so this — like `threads` — is purely a
+    /// wall-clock knob. Ignored by strategies that don't implement the
+    /// bucketed path (e.g. centralized runs).
+    pub pipeline: bool,
+    /// Bucket width of the overlapped pipeline in KB of f32 parameters
+    /// (`0` = default 256 KB). Smaller buckets overlap sooner but pay
+    /// more wake-ups; see `BENCH_gossip.json` § pipeline_vs_phased.
+    pub bucket_kb: usize,
     /// Optional JSONL output path.
     pub record_path: Option<PathBuf>,
 }
@@ -244,6 +258,8 @@ impl TrainConfig {
             threads: 0,
             fused: false,
             fused_momentum: 0.9,
+            pipeline: false,
+            bucket_kb: 0,
             record_path: None,
         }
     }

@@ -396,11 +396,13 @@ impl SessionPlan {
     /// produced floats — the workload (dataset shape + model family),
     /// the strategy reference with its parameters, the topology
     /// override (when present), and every result-affecting
-    /// [`TrainConfig`] field. Deliberately excluded: `threads`
-    /// (bit-identical by the engine's contract, so the cache is shared
-    /// across `parallel`/thread settings) and `record_path`. Cells
-    /// without a topology override keep their pre-redesign fingerprint,
-    /// so existing resume caches stay valid.
+    /// [`TrainConfig`] field. Deliberately excluded: `threads`,
+    /// `pipeline` and `bucket_kb` (all bit-identical by the engine's
+    /// contracts — `crate::exec` for threads, `crate::exec::pipeline`
+    /// for the overlapped path — so the cache is shared across every
+    /// scheduling setting) and `record_path`. Cells without a topology
+    /// override keep their pre-redesign fingerprint, so existing resume
+    /// caches stay valid.
     pub fn cell_fingerprint(&self, cell: &CellPlan) -> String {
         let c = &cell.config;
         let topology = match &cell.topology {

@@ -287,6 +287,12 @@ pub struct ExperimentSpec {
     /// Run decentralized flavors through the fused gossip+SGD kernel
     /// (combine-then-adapt order; see [`TrainConfig::fused`]).
     pub fused: bool,
+    /// Overlap communication with compute through the bucketed pipeline
+    /// (bit-identical to phased; see [`TrainConfig::pipeline`]).
+    pub pipeline: bool,
+    /// Pipeline bucket width in KB (`0` = default 256 KB; see
+    /// [`TrainConfig::bucket_kb`]).
+    pub bucket_kb: usize,
 }
 
 impl ExperimentSpec {
@@ -321,6 +327,8 @@ impl ExperimentSpec {
             track_layers: vec![0, 1],
             threads: 0,
             fused: false,
+            pipeline: false,
+            bucket_kb: 0,
         }
     }
 
@@ -433,6 +441,8 @@ impl ExperimentSpec {
             threads: self.threads,
             fused: self.fused,
             fused_momentum: 0.9,
+            pipeline: self.pipeline,
+            bucket_kb: self.bucket_kb,
             record_path: None,
         }
     }
@@ -515,6 +525,12 @@ impl ExperimentSpec {
         }
         if let Some(v) = doc.get("fused").and_then(TomlValue::as_bool) {
             spec.fused = v;
+        }
+        if let Some(v) = doc.get("pipeline").and_then(TomlValue::as_bool) {
+            spec.pipeline = v;
+        }
+        if let Some(v) = doc.get("bucket_kb").and_then(TomlValue::as_int) {
+            spec.bucket_kb = v.max(0) as usize;
         }
         if let Some(TomlValue::Arr(fs)) = doc.get("flavors") {
             let mut flavors = Vec::new();

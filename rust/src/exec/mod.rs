@@ -11,6 +11,12 @@
 //! of every output element is decided *before* any thread starts, purely
 //! from `(P, threads, min_chunk)`.
 //!
+//! Fork-join is one scheduling shape over this ownership map; the
+//! bucket-granular overlapped pipeline ([`pipeline::run_overlapped`])
+//! is the other — same pool, same determinism argument, with a
+//! produced-row frontier ([`pipeline::Progress`]) in place of the two
+//! global phase barriers.
+//!
 //! ## Why results are bit-identical for any thread count
 //!
 //! Every kernel routed through this engine computes each output element
@@ -77,10 +83,12 @@
 //! registers are — `threads` and AVX2 availability are both pure
 //! wall-clock knobs.
 
+pub mod pipeline;
 pub mod pool;
 mod reduce;
 pub mod simd;
 
+pub use pipeline::{run_overlapped, BucketTable, Progress, DEFAULT_BUCKET_ELEMS};
 pub use pool::WorkerPool;
 pub use reduce::{reduce_tiles, REDUCE_GRANULARITY};
 

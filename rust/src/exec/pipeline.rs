@@ -1,0 +1,450 @@
+//! `exec::pipeline` — the overlapped producer/consumer scheduler behind
+//! the bucketed gossip pipeline.
+//!
+//! [`run_overlapped`] generalizes [`ExecEngine::run_jobs`]'s fork-join
+//! round into a one-producer / many-consumer software pipeline: the
+//! *producer* runs on the calling thread (the per-replica local step of
+//! a training iteration), the *consumers* — one per parameter bucket —
+//! run on the engine's parked pool workers, and a shared [`Progress`]
+//! frontier replaces the two global phase barriers: each consumer
+//! blocks only until the replica rows *its* next output row needs have
+//! been produced, then mixes that row's bucket while the producer is
+//! still stepping later replicas.
+//!
+//! ## Determinism contract
+//!
+//! Bucket boundaries ([`BucketTable`]) are a fixed function of
+//! `(p, bucket_elems)` — never of the thread count — and every consumer
+//! computes its output elements with the same per-element float
+//! sequence as the phase-ordered kernels (ascending fold in graph-row
+//! order; see `crate::gossip`). Which worker executes a bucket, and how
+//! far the producer has advanced when it does, are therefore pure
+//! wall-clock facts: pipelined output is **bit-identical** to phased
+//! output at any thread count and any bucket size — the `run_reduce`
+//! discipline applied to the whole iteration. Enforced across thread
+//! counts, kernels and bucket sizes in `rust/tests/exec_determinism.rs`.
+//!
+//! ## Liveness
+//!
+//! The producer never dispatches onto the pool, so a blocked consumer
+//! can never starve the work it waits for. On *every* producer exit
+//! path — normal return, early `Err`, panic — a floodgate guard opens
+//! the frontier ([`Progress::open`]) *before* the fork-join barrier
+//! waits, so consumers always run to completion and the barrier always
+//! releases. A consumer panic is contained in its worker and re-raised
+//! on the calling thread after the barrier, exactly like
+//! [`ExecEngine::run_jobs`].
+//!
+//! ## Memory model
+//!
+//! Producer and consumers hand rows across threads through
+//! [`Progress`]'s mutex: every `retire` happens-before the `wait_for`
+//! it satisfies, so a consumer that waited for row `i` observes all of
+//! the producer's writes to rows `< i`. Callers (the gossip engine)
+//! keep the accesses disjoint-by-protocol: the producer writes only
+//! rows it has not yet retired, consumers read only rows below the
+//! frontier they waited for.
+
+use super::pool::{run_caught, Latch, PanicSlot, Task, TaskGuard};
+use super::{ExecEngine, WaitGuard};
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Default bucket width of the overlapped pipeline: 64 Ki f32 = 256 KB
+/// per source row per bucket — wide enough that one bucket amortizes a
+/// channel wake-up, narrow enough that several buckets are in flight on
+/// one epoch-scale model (the decent-dp `bucket_size_in_mb` knob, here
+/// in elements because the store is f32-only).
+pub const DEFAULT_BUCKET_ELEMS: usize = 64 * 1024;
+
+/// The fixed bucket descriptor table of one overlapped round: the
+/// parameter axis `[0, p)` cut into contiguous `bucket_elems`-wide
+/// column ranges (last one short). Depends on `(p, bucket_elems)`
+/// **only** — never on the thread count — which is half of the
+/// determinism contract (the other half is the per-element fold order
+/// inside each bucket kernel).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketTable {
+    p: usize,
+    bucket_elems: usize,
+    bounds: Vec<Range<usize>>,
+}
+
+impl BucketTable {
+    /// Table for `p` columns at `bucket_elems` per bucket
+    /// (`0` = [`DEFAULT_BUCKET_ELEMS`]).
+    pub fn new(p: usize, bucket_elems: usize) -> Self {
+        let bucket_elems = if bucket_elems == 0 {
+            DEFAULT_BUCKET_ELEMS
+        } else {
+            bucket_elems
+        };
+        let mut bounds = Vec::with_capacity(p.div_ceil(bucket_elems));
+        let mut start = 0;
+        while start < p {
+            let end = (start + bucket_elems).min(p);
+            bounds.push(start..end);
+            start = end;
+        }
+        BucketTable { p, bucket_elems, bounds }
+    }
+
+    /// Whether this table was built for exactly `(p, bucket_elems)` —
+    /// the cache key the gossip engine uses to reuse the table across
+    /// rounds instead of recomputing it per call.
+    pub fn matches(&self, p: usize, bucket_elems: usize) -> bool {
+        let bucket_elems = if bucket_elems == 0 {
+            DEFAULT_BUCKET_ELEMS
+        } else {
+            bucket_elems
+        };
+        self.p == p && self.bucket_elems == bucket_elems
+    }
+
+    /// Columns covered (`[0, p)`).
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Resolved bucket width in elements.
+    pub fn bucket_elems(&self) -> usize {
+        self.bucket_elems
+    }
+
+    /// Bucket count.
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// True when `p == 0` (no buckets).
+    pub fn is_empty(&self) -> bool {
+        self.bounds.is_empty()
+    }
+
+    /// The bucket ranges, ascending and tiling `[0, p)` exactly.
+    pub fn buckets(&self) -> &[Range<usize>] {
+        &self.bounds
+    }
+}
+
+/// The pipeline's produced-row frontier: "rows `[0, retired)` are
+/// final". The producer advances it monotonically; consumers block on
+/// it per output row. The mutex hand-off is also the happens-before
+/// edge that publishes the producer's row writes to the consumer that
+/// waited (see the module docs' memory-model note).
+#[derive(Debug, Default)]
+pub struct Progress {
+    retired: Mutex<usize>,
+    advanced: Condvar,
+}
+
+impl Progress {
+    /// A frontier at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark rows `[0, upto)` produced. Monotonic: a smaller `upto`
+    /// than already retired is a no-op, so the floodgate's
+    /// [`Progress::open`] cannot be walked back.
+    pub fn retire(&self, upto: usize) {
+        let mut r = self.retired.lock().expect("progress lock");
+        if upto > *r {
+            *r = upto;
+            self.advanced.notify_all();
+        }
+    }
+
+    /// Open the frontier entirely (every `wait_for` returns
+    /// immediately, now and forever). The producer-exit floodgate.
+    pub fn open(&self) {
+        self.retire(usize::MAX);
+    }
+
+    /// Block until at least `need` rows are retired.
+    pub fn wait_for(&self, need: usize) {
+        let mut r = self.retired.lock().expect("progress lock");
+        while *r < need {
+            r = self.advanced.wait(r).expect("progress wait");
+        }
+    }
+
+    /// Current frontier (diagnostics/tests; racy by nature).
+    pub fn retired(&self) -> usize {
+        *self.retired.lock().expect("progress lock")
+    }
+}
+
+/// Opens the frontier when dropped — the producer-exit floodgate that
+/// guarantees consumer liveness on every exit path.
+struct Floodgate<'a>(&'a Progress);
+
+impl Drop for Floodgate<'_> {
+    fn drop(&mut self) {
+        self.0.open();
+    }
+}
+
+/// Run one overlapped round: dispatch every `consumer` to the engine's
+/// pool, then run `producer` on the calling thread; return the
+/// producer's result once **all** consumers have finished (fork-join
+/// barrier).
+///
+/// Consumers receive the shared [`Progress`] frontier and are expected
+/// to `wait_for` the rows they read; the producer is expected to
+/// `retire` rows as it finishes them (ascending). The frontier is
+/// force-opened when the producer exits — normally, by `Err`, or by
+/// panic — so consumers never hang on an unfinished producer.
+///
+/// Engines without a pool (serial, or a single thread) run the producer
+/// to completion first and then every consumer inline in submission
+/// order: all waits are satisfied trivially and the per-element float
+/// sequences are unchanged, so `pipeline = true` is bit-identical (and
+/// safe) at `threads = 1`.
+pub fn run_overlapped<C, R>(
+    engine: &ExecEngine,
+    consumers: Vec<C>,
+    producer: impl FnOnce(&Progress) -> R,
+) -> R
+where
+    C: FnOnce(&Progress) + Send,
+{
+    let Some(pool) = engine.pool.as_deref().filter(|_| !consumers.is_empty()) else {
+        // Serial path: produce everything, open the gate, then drain
+        // the buckets in order on the calling thread.
+        let progress = Progress::new();
+        let result = producer(&progress);
+        progress.open();
+        for consumer in consumers {
+            consumer(&progress);
+        }
+        return result;
+    };
+
+    let progress = Arc::new(Progress::new());
+    let latch = Arc::new(Latch::new(consumers.len()));
+    let panic_slot: PanicSlot = Arc::new(Mutex::new(None));
+    let tasks: Vec<Task> = consumers
+        .into_iter()
+        .map(|job| {
+            let guard = TaskGuard { latch: latch.clone() };
+            let slot = panic_slot.clone();
+            let prog = Arc::clone(&progress);
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                // Guard declared first so it drops last: the latch
+                // counts down only after the job's borrows are dead.
+                let _g = guard;
+                run_caught(move || job(&prog), &slot);
+            });
+            // SAFETY: the WaitGuard below blocks until this task's
+            // latch fires, on both the normal and the unwind path, so
+            // every borrow captured in `job` outlives its use — the
+            // same structured-concurrency argument as `run_jobs`.
+            unsafe { super::erase_task(task) }
+        })
+        .collect();
+    let result;
+    {
+        // Declaration order is load-bearing: guards drop in reverse,
+        // so the floodgate opens the frontier BEFORE the barrier
+        // waits — consumers blocked on an unfinished producer are
+        // released instead of deadlocking the latch.
+        let _barrier = WaitGuard(&latch);
+        let _floodgate = Floodgate(&progress);
+        pool.dispatch(tasks);
+        result = producer(&progress);
+    }
+    if let Some(payload) = panic_slot.lock().expect("panic slot lock").take() {
+        std::panic::resume_unwind(payload);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn bucket_table_tiles_exactly() {
+        for (p, be) in [(10, 4), (4096, 4096), (4097, 4096), (1_000_000, 65_536), (5, 100)] {
+            let t = BucketTable::new(p, be);
+            assert_eq!(t.p(), p);
+            assert!(!t.is_empty());
+            assert_eq!(t.buckets().first().unwrap().start, 0);
+            assert_eq!(t.buckets().last().unwrap().end, p);
+            for w in t.buckets().windows(2) {
+                assert_eq!(w[0].end, w[1].start, "buckets must tile");
+            }
+            for b in t.buckets() {
+                assert!(b.end - b.start <= t.bucket_elems());
+            }
+            // Every bucket except the last is full-width.
+            for b in &t.buckets()[..t.len() - 1] {
+                assert_eq!(b.end - b.start, t.bucket_elems());
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_table_defaults_and_matches() {
+        let t = BucketTable::new(1_000_000, 0);
+        assert_eq!(t.bucket_elems(), DEFAULT_BUCKET_ELEMS);
+        assert!(t.matches(1_000_000, 0));
+        assert!(t.matches(1_000_000, DEFAULT_BUCKET_ELEMS));
+        assert!(!t.matches(1_000_000, 4096));
+        assert!(!t.matches(999_999, 0));
+        assert!(BucketTable::new(0, 64).is_empty());
+    }
+
+    #[test]
+    fn bucket_table_is_thread_count_independent() {
+        // The whole point: the table is a pure function of (p, width).
+        assert_eq!(BucketTable::new(12_345, 1000), BucketTable::new(12_345, 1000));
+    }
+
+    #[test]
+    fn progress_is_monotone_and_open_is_final() {
+        let p = Progress::new();
+        assert_eq!(p.retired(), 0);
+        p.retire(3);
+        p.retire(1); // no-op
+        assert_eq!(p.retired(), 3);
+        p.open();
+        p.retire(5); // cannot walk the floodgate back
+        assert_eq!(p.retired(), usize::MAX);
+        p.wait_for(usize::MAX); // returns immediately
+    }
+
+    fn sum_overlapped(engine: &ExecEngine, n: usize, buckets: usize) -> u64 {
+        // Producer fills slot i then retires i+1; each consumer owns a
+        // contiguous slice of slots and waits per slot — exercising the
+        // frontier, not just the barrier.
+        let data: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let total = AtomicU64::new(0);
+        {
+            let data = &data;
+            let total = &total;
+            let consumers: Vec<_> = super::super::partition(n, buckets, 1)
+                .into_iter()
+                .map(|r| {
+                    move |progress: &Progress| {
+                        let mut sum = 0u64;
+                        for i in r {
+                            progress.wait_for(i + 1);
+                            sum += data[i].load(Ordering::Acquire);
+                        }
+                        total.fetch_add(sum, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            run_overlapped(engine, consumers, |progress: &Progress| {
+                for (i, slot) in data.iter().enumerate() {
+                    slot.store(i as u64 + 1, Ordering::Release);
+                    progress.retire(i + 1);
+                }
+            });
+        }
+        total.load(Ordering::SeqCst)
+    }
+
+    #[test]
+    fn overlapped_round_sees_every_produced_row() {
+        let want = (1..=100u64).sum::<u64>();
+        assert_eq!(sum_overlapped(&ExecEngine::serial(), 100, 7), want);
+        assert_eq!(sum_overlapped(&ExecEngine::new(4), 100, 7), want);
+        // More consumers than pool workers: they queue and still drain.
+        assert_eq!(sum_overlapped(&ExecEngine::new(2), 100, 33), want);
+    }
+
+    #[test]
+    fn producer_result_is_returned_and_consumers_all_ran() {
+        let engine = ExecEngine::new(3);
+        let hits = AtomicUsize::new(0);
+        let out = {
+            let hits = &hits;
+            let consumers: Vec<_> = (0..5)
+                .map(|_| {
+                    move |_p: &Progress| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            run_overlapped(&engine, consumers, |p: &Progress| {
+                p.open();
+                42u32
+            })
+        };
+        assert_eq!(out, 42);
+        assert_eq!(hits.load(Ordering::SeqCst), 5, "barrier covers all consumers");
+    }
+
+    #[test]
+    fn early_producer_exit_releases_waiting_consumers() {
+        // The producer returns (an Err-shaped early exit) without
+        // retiring anything; the floodgate must still release every
+        // consumer and the barrier must still hold.
+        let engine = ExecEngine::new(2);
+        let released = AtomicUsize::new(0);
+        {
+            let released = &released;
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    move |p: &Progress| {
+                        p.wait_for(1_000_000);
+                        released.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            let r: Result<(), &str> =
+                run_overlapped(&engine, consumers, |_p: &Progress| Err("bail"));
+            assert!(r.is_err());
+        }
+        assert_eq!(released.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn producer_panic_still_releases_consumers_then_unwinds() {
+        let engine = ExecEngine::new(2);
+        let released = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let released = &released;
+            let consumers: Vec<_> = (0..2)
+                .map(|_| {
+                    move |p: &Progress| {
+                        p.wait_for(usize::MAX);
+                        released.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            run_overlapped(&engine, consumers, |_p: &Progress| -> () {
+                panic!("producer boom")
+            });
+        }));
+        assert!(result.is_err(), "producer panic must propagate");
+        assert_eq!(
+            released.load(Ordering::SeqCst),
+            2,
+            "floodgate must fire before the barrier on the unwind path"
+        );
+    }
+
+    #[test]
+    fn consumer_panic_is_reraised_on_caller() {
+        let engine = ExecEngine::new(2);
+        let consumers: Vec<_> = (0..2)
+            .map(|i| {
+                move |_p: &Progress| {
+                    if i == 1 {
+                        panic!("bucket boom");
+                    }
+                }
+            })
+            .collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_overlapped(&engine, consumers, |p: &Progress| p.open());
+        }));
+        let payload = result.expect_err("consumer panic must reach the caller");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"bucket boom"));
+    }
+}

@@ -49,6 +49,8 @@
 //! ([`GossipEngine::ensure_scratch`]) so page placement follows tile
 //! ownership — the groundwork for NUMA pinning (ROADMAP §Open items).
 
+use crate::error::Result;
+use crate::exec::pipeline::{run_overlapped, BucketTable, Progress};
 use crate::exec::{column_views, simd, ExecEngine};
 use crate::graph::CommGraph;
 use crate::optim::SgdState;
@@ -68,14 +70,39 @@ const TILE: usize = 4096;
 /// on the calling thread.
 const MIN_COLS_PER_WORKER: usize = TILE;
 
-/// Reusable mixing engine. Holds a scratch matrix so steady-state
-/// rounds allocate nothing, plus the execution engine that decides
-/// fan-out.
+/// Reusable mixing engine. Holds a scratch matrix plus cached
+/// partition/bucket descriptor tables and scalar work buffers, so
+/// steady-state rounds — phased or pipelined — allocate nothing on the
+/// hot path beyond the O(threads) borrow plumbing `run_jobs` needs.
 #[derive(Debug, Default)]
 pub struct GossipEngine {
     scratch: ReplicaMatrix,
     mean_scratch: Vec<f32>,
     exec: ExecEngine,
+    /// Cached `exec.partition(p, MIN_COLS_PER_WORKER)` keyed by
+    /// `part_p` — the phased kernels' column-ownership map, computed
+    /// once per parameter-count change instead of once per call.
+    part_ranges: Vec<Range<usize>>,
+    part_p: usize,
+    /// Pipeline bucket width in f32 elements (`0` = the pipeline
+    /// default, 256 KB); see [`GossipEngine::set_bucket_kb`].
+    bucket_elems: usize,
+    /// Cached bucket descriptor table for `(p, bucket_elems)` — the
+    /// overlapped path's fixed column cuts, reused across rounds.
+    bucket_table: Option<BucketTable>,
+    /// Reused per-round `(momentum, weight_decay)` row table (fused
+    /// kernels).
+    hyper: Vec<(f32, f32)>,
+    /// Reused per-round active weight-mass totals (partial
+    /// participation).
+    totals: Vec<f32>,
+    /// Reused per-round produced-row dependency frontiers (overlapped
+    /// split path): row `i`'s mix may start once `deps[i]` rows are
+    /// retired.
+    deps: Vec<usize>,
+    /// An overlapped round has filled `scratch` and awaits
+    /// [`GossipEngine::publish_overlapped`].
+    pending_publish: bool,
 }
 
 impl GossipEngine {
@@ -88,10 +115,26 @@ impl GossipEngine {
     /// Results are bit-identical to [`GossipEngine::new`] for any value.
     pub fn with_threads(threads: usize) -> Self {
         GossipEngine {
-            scratch: ReplicaMatrix::default(),
-            mean_scratch: Vec::new(),
             exec: ExecEngine::new(threads),
+            ..GossipEngine::default()
         }
+    }
+
+    /// Set the overlapped pipeline's bucket width in **KB** (`0` =
+    /// default 256 KB). Purely a wall-clock knob: bucket boundaries are
+    /// fixed before any thread starts, so results are bit-identical for
+    /// every value (see `crate::exec::pipeline`).
+    pub fn set_bucket_kb(&mut self, kb: usize) {
+        self.set_bucket_elems(kb * (1024 / std::mem::size_of::<f32>()));
+    }
+
+    /// Set the bucket width in f32 elements (`0` = default) — the
+    /// fine-grained form [`GossipEngine::set_bucket_kb`] wraps, used by
+    /// tests that need bucket boundaries inside small parameter counts.
+    pub fn set_bucket_elems(&mut self, elems: usize) {
+        self.bucket_elems = elems;
+        // The cached table is keyed on (p, bucket_elems); it rebuilds
+        // lazily on the next overlapped round.
     }
 
     /// Worker count this engine fans out over.
@@ -125,16 +168,17 @@ impl GossipEngine {
         }
 
         self.ensure_scratch(n, p);
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        self.ensure_part_ranges(p);
         {
+            let Self { scratch, exec, part_ranges, .. } = &mut *self;
             let reps: &ReplicaMatrix = replicas;
-            let views = column_views(self.scratch.rows_mut(), &ranges);
+            let views = column_views(scratch.rows_mut(), part_ranges);
             let jobs: Vec<_> = views
                 .into_iter()
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|(chunks, range)| move || mix_tile(graph, reps, chunks, range))
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
         self.swap_in_scratch(replicas);
     }
@@ -161,20 +205,21 @@ impl GossipEngine {
             return self.mix(graph, replicas);
         }
         self.ensure_scratch(n, p);
-        let totals = active_totals(graph, active);
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        self.ensure_part_ranges(p);
+        active_totals_into(graph, active, &mut self.totals);
         {
+            let Self { scratch, exec, part_ranges, totals, .. } = &mut *self;
             let reps: &ReplicaMatrix = replicas;
-            let totals: &[f32] = &totals;
-            let views = column_views(self.scratch.rows_mut(), &ranges);
+            let totals: &[f32] = totals;
+            let views = column_views(scratch.rows_mut(), part_ranges);
             let jobs: Vec<_> = views
                 .into_iter()
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|(chunks, range)| {
                     move || mix_active_tile(graph, reps, active, totals, chunks, range)
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
         self.swap_in_scratch(replicas);
     }
@@ -218,24 +263,27 @@ impl GossipEngine {
         );
 
         self.ensure_scratch(n, p);
-        let hyper: Vec<(f32, f32)> =
-            states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        self.ensure_part_ranges(p);
+        self.hyper.clear();
+        self.hyper.extend(states.iter().map(|s| (s.momentum, s.weight_decay)));
         {
+            let Self { scratch, exec, part_ranges, hyper, .. } = &mut *self;
             let reps: &ReplicaMatrix = replicas;
-            let hyper: &[(f32, f32)] = &hyper;
-            let out_views = column_views(self.scratch.rows_mut(), &ranges);
-            let vel_views =
-                column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
+            let hyper: &[(f32, f32)] = hyper;
+            let out_views = column_views(scratch.rows_mut(), part_ranges);
+            let vel_views = column_views(
+                states.iter_mut().map(SgdState::velocity_mut).collect(),
+                part_ranges,
+            );
             let jobs: Vec<_> = out_views
                 .into_iter()
                 .zip(vel_views)
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|((outs, vels), range)| {
                     move || mix_step_tile(graph, reps, grads, hyper, lr, outs, vels, range)
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
         self.swap_in_scratch(replicas);
     }
@@ -286,21 +334,24 @@ impl GossipEngine {
         );
 
         self.ensure_scratch(n, p);
-        let totals = active_totals(graph, active);
-        let hyper: Vec<(f32, f32)> =
-            states.iter().map(|s| (s.momentum, s.weight_decay)).collect();
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        self.ensure_part_ranges(p);
+        active_totals_into(graph, active, &mut self.totals);
+        self.hyper.clear();
+        self.hyper.extend(states.iter().map(|s| (s.momentum, s.weight_decay)));
         {
+            let Self { scratch, exec, part_ranges, hyper, totals, .. } = &mut *self;
             let reps: &ReplicaMatrix = replicas;
-            let totals: &[f32] = &totals;
-            let hyper: &[(f32, f32)] = &hyper;
-            let out_views = column_views(self.scratch.rows_mut(), &ranges);
-            let vel_views =
-                column_views(states.iter_mut().map(SgdState::velocity_mut).collect(), &ranges);
+            let totals: &[f32] = totals;
+            let hyper: &[(f32, f32)] = hyper;
+            let out_views = column_views(scratch.rows_mut(), part_ranges);
+            let vel_views = column_views(
+                states.iter_mut().map(SgdState::velocity_mut).collect(),
+                part_ranges,
+            );
             let jobs: Vec<_> = out_views
                 .into_iter()
                 .zip(vel_views)
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|((outs, vels), range)| {
                     move || {
                         mix_active_step_tile(
@@ -309,7 +360,7 @@ impl GossipEngine {
                     }
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
         self.swap_in_scratch(replicas);
     }
@@ -322,16 +373,20 @@ impl GossipEngine {
             // writes in phase 1 below are the first touch.
             self.mean_scratch = vec![0.0f32; p];
         }
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+        self.ensure_part_ranges(p);
+        let Self { mean_scratch, exec, part_ranges, pending_publish, .. } = &mut *self;
+        // A completed phased round supersedes any unpublished
+        // overlapped scratch.
+        *pending_publish = false;
         // Phase 1: column mean of the replica stack. Write-first into
         // the scratch tile (replica 0 seeds it) instead of zeroing and
         // accumulating — one fewer pass over every tile per round.
         {
             let reps: &ReplicaMatrix = replicas;
-            let mean_views = column_views(vec![self.mean_scratch.as_mut_slice()], &ranges);
+            let mean_views = column_views(vec![mean_scratch.as_mut_slice()], part_ranges);
             let jobs: Vec<_> = mean_views
                 .into_iter()
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|(mut chunks, range)| {
                     move || {
                         let m = chunks.pop().expect("one mean row");
@@ -339,15 +394,15 @@ impl GossipEngine {
                     }
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
         // Phase 2: broadcast the mean into every replica.
         {
-            let mean: &[f32] = &self.mean_scratch;
-            let rep_views = column_views(replicas.rows_mut(), &ranges);
+            let mean: &[f32] = mean_scratch;
+            let rep_views = column_views(replicas.rows_mut(), part_ranges);
             let jobs: Vec<_> = rep_views
                 .into_iter()
-                .zip(ranges.iter().cloned())
+                .zip(part_ranges.iter().cloned())
                 .map(|(chunks, range)| {
                     move || {
                         let src = &mean[range];
@@ -357,7 +412,29 @@ impl GossipEngine {
                     }
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
+        }
+    }
+
+    /// Refresh the cached column-partition table when the parameter
+    /// count changes (satellite of the pipeline PR: the phased and
+    /// overlapped hot paths recompute no descriptor tables per call).
+    fn ensure_part_ranges(&mut self, p: usize) {
+        if self.part_p != p || (p > 0 && self.part_ranges.is_empty()) {
+            self.part_ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
+            self.part_p = p;
+        }
+    }
+
+    /// Refresh the cached bucket descriptor table for
+    /// `(p, self.bucket_elems)`; reused across overlapped rounds.
+    fn ensure_bucket_table(&mut self, p: usize) {
+        let fresh = self
+            .bucket_table
+            .as_ref()
+            .is_some_and(|t| t.matches(p, self.bucket_elems));
+        if !fresh {
+            self.bucket_table = Some(BucketTable::new(p, self.bucket_elems));
         }
     }
 
@@ -372,9 +449,10 @@ impl GossipEngine {
         // hosts, which NUMA node) backs each tile, aligned with the
         // tile ownership every later kernel call uses (ROADMAP §NUMA).
         self.scratch = ReplicaMatrix::zeros(n, p);
-        let ranges = self.exec.partition(p, MIN_COLS_PER_WORKER);
-        if ranges.len() > 1 {
-            let views = column_views(self.scratch.rows_mut(), &ranges);
+        self.ensure_part_ranges(p);
+        let Self { scratch, exec, part_ranges, .. } = &mut *self;
+        if part_ranges.len() > 1 {
+            let views = column_views(scratch.rows_mut(), part_ranges);
             let jobs: Vec<_> = views
                 .into_iter()
                 .map(|chunks| {
@@ -387,7 +465,7 @@ impl GossipEngine {
                     }
                 })
                 .collect();
-            self.exec.run_jobs(jobs);
+            exec.run_jobs(jobs);
         }
     }
 
@@ -396,7 +474,306 @@ impl GossipEngine {
     /// old per-row `Vec` swap loop is gone entirely (§Perf iteration 1
     /// saved the copy; the flat store also saves the n swaps).
     fn swap_in_scratch(&mut self, replicas: &mut ReplicaMatrix) {
+        self.pending_publish = false;
         std::mem::swap(replicas, &mut self.scratch);
+    }
+
+    /// **Overlapped split-gossip round** (adapt-then-combine through the
+    /// bucket pipeline): `produce(w, row)` runs the local step of
+    /// replica `w` on the calling thread — ascending `w`, each row
+    /// retired as it finishes — while pool workers mix finished rows
+    /// into the scratch store one parameter bucket at a time
+    /// ([`crate::exec::pipeline::run_overlapped`]). The mix of output
+    /// row `i` starts as soon as every row its graph row reads is
+    /// produced, so communication hides behind the remaining compute.
+    ///
+    /// The mixed result stays in scratch until
+    /// [`GossipEngine::publish_overlapped`] swaps it in — the capture
+    /// point between a session's two phases therefore still observes
+    /// the post-local, pre-averaging replicas, exactly like the phased
+    /// path.
+    ///
+    /// `active` follows [`GossipEngine::mix_active`]'s contract
+    /// (all-present masks take the [`GossipEngine::mix`] route,
+    /// including its uniform-complete fast path). Bit-identity: per
+    /// element, the fold order is the graph row's neighbor order — the
+    /// same sequence as `mix`/`mix_active` — so pipelined equals phased
+    /// bitwise at any thread count and bucket size.
+    ///
+    /// On `Err` from `produce`, the round aborts (rows already stepped
+    /// keep their new values, like a phased local phase failing
+    /// mid-loop), scratch is not published, and the error is returned.
+    pub fn mix_overlapped<F>(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut ReplicaMatrix,
+        active: Option<&[bool]>,
+        mut produce: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &mut [f32]) -> Result<()>,
+    {
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        if let Some(a) = active {
+            assert_eq!(a.len(), n, "active mask must match graph size");
+        }
+        let p = replicas.p();
+        if n == 0 {
+            self.ensure_scratch(0, p);
+            self.pending_publish = true;
+            return Ok(());
+        }
+        // All-present masks route like `None`, mirroring `mix_active`'s
+        // delegation to `mix` so pipelined floats match phased floats.
+        let active = active.filter(|a| a.iter().any(|&x| !x));
+        let complete = active.is_none() && is_uniform_complete(graph);
+
+        self.ensure_scratch(n, p);
+        self.ensure_bucket_table(p);
+        if let Some(a) = active {
+            active_totals_into(graph, a, &mut self.totals);
+        }
+        if complete {
+            if self.mean_scratch.len() != p {
+                self.mean_scratch = vec![0.0f32; p];
+            }
+        } else {
+            deps_into(graph, &mut self.deps);
+        }
+
+        let Self {
+            scratch,
+            mean_scratch,
+            exec,
+            bucket_table,
+            totals,
+            deps,
+            ..
+        } = &mut *self;
+        let table = bucket_table.as_ref().expect("bucket table ensured");
+        let stride = replicas.stride();
+        let base = replicas.base_ptr_mut();
+        // `replicas` is untouched through references for the rest of
+        // the round: the producer writes rows through `writer`, the
+        // consumers read them through `src`, and the produced-row
+        // frontier keeps the two disjoint (see `SrcRows`).
+        let src = SrcRows::new(base as *const f32, stride, p);
+        let mut writer = RowWriter::new(base, stride, p);
+        let producer = move |progress: &Progress| -> Result<()> {
+            for w in 0..n {
+                // SAFETY: row w is not yet retired, so no consumer
+                // reads it; rows are disjoint by stride.
+                produce(w, unsafe { writer.row_mut(w) })?;
+                progress.retire(w + 1);
+            }
+            Ok(())
+        };
+
+        let result = if complete {
+            let mean_chunks: Vec<&mut [f32]> =
+                column_views(vec![mean_scratch.as_mut_slice()], table.buckets())
+                    .into_iter()
+                    .map(|mut v| v.pop().expect("one mean row"))
+                    .collect();
+            let out_views = column_views(scratch.rows_mut(), table.buckets());
+            let consumers: Vec<_> = out_views
+                .into_iter()
+                .zip(mean_chunks)
+                .zip(table.buckets().iter().cloned())
+                .map(|((outs, mean_chunk), range)| {
+                    move |progress: &Progress| {
+                        mean_bucket_overlapped(src, n, progress, mean_chunk, outs, range)
+                    }
+                })
+                .collect();
+            run_overlapped(exec, consumers, producer)
+        } else if let Some(a) = active {
+            let totals: &[f32] = totals;
+            let deps: &[usize] = deps;
+            let out_views = column_views(scratch.rows_mut(), table.buckets());
+            let consumers: Vec<_> = out_views
+                .into_iter()
+                .zip(table.buckets().iter().cloned())
+                .map(|(outs, range)| {
+                    move |progress: &Progress| {
+                        mix_active_bucket_overlapped(
+                            graph, src, a, totals, deps, progress, outs, range,
+                        )
+                    }
+                })
+                .collect();
+            run_overlapped(exec, consumers, producer)
+        } else {
+            let deps: &[usize] = deps;
+            let out_views = column_views(scratch.rows_mut(), table.buckets());
+            let consumers: Vec<_> = out_views
+                .into_iter()
+                .zip(table.buckets().iter().cloned())
+                .map(|(outs, range)| {
+                    move |progress: &Progress| {
+                        mix_bucket_overlapped(graph, src, deps, progress, outs, range)
+                    }
+                })
+                .collect();
+            run_overlapped(exec, consumers, producer)
+        };
+        result?;
+        self.pending_publish = true;
+        Ok(())
+    }
+
+    /// **Overlapped fused gossip + momentum-SGD round**
+    /// (combine-then-adapt through the bucket pipeline): the D-PSGD
+    /// analogue of [`GossipEngine::mix_overlapped`]. `produce(w,
+    /// theta_row, grad_out)` computes replica `w`'s gradient at the
+    /// *frozen* pre-round parameters on the calling thread; because
+    /// `θ_t` never changes during the round, every bucket's gossip SpMM
+    /// runs dependency-free on the pool from the first instant — the
+    /// full communication pass hides behind gradient compute — and only
+    /// the per-row momentum application waits for its own gradient row.
+    ///
+    /// Same complete-graph policy as the phased
+    /// [`GossipEngine::mix_step`] (the fused kernels always run the
+    /// general SpMM); same `active` contract as
+    /// [`GossipEngine::mix_active_step`] (all-present masks route like
+    /// `None`; inactive rows copy through but still apply their
+    /// gradient). The updated parameters stay in scratch until
+    /// [`GossipEngine::publish_overlapped`]. Bit-identical to the
+    /// phased fused kernels: splitting SpMM and SGD into two passes
+    /// leaves each element's float sequence unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mix_step_overlapped<F>(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &ReplicaMatrix,
+        grads: &mut ReplicaMatrix,
+        states: &mut [SgdState],
+        lr: f32,
+        active: Option<&[bool]>,
+        mut produce: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &[f32], &mut [f32]) -> Result<()>,
+    {
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        assert_eq!(grads.n(), n, "gradient count must match graph size");
+        assert_eq!(states.len(), n, "optimizer state count must match graph size");
+        if let Some(a) = active {
+            assert_eq!(a.len(), n, "active mask must match graph size");
+        }
+        let p = replicas.p();
+        if n == 0 {
+            self.ensure_scratch(0, p);
+            self.pending_publish = true;
+            return Ok(());
+        }
+        assert_eq!(grads.p(), p, "gradients must match parameter counts");
+        assert!(
+            states.iter().all(|s| s.len() == p),
+            "optimizer states must match parameter counts"
+        );
+        let active = active.filter(|a| a.iter().any(|&x| !x));
+
+        self.ensure_scratch(n, p);
+        self.ensure_bucket_table(p);
+        self.hyper.clear();
+        self.hyper.extend(states.iter().map(|s| (s.momentum, s.weight_decay)));
+        if let Some(a) = active {
+            active_totals_into(graph, a, &mut self.totals);
+        }
+
+        let Self {
+            scratch,
+            exec,
+            bucket_table,
+            hyper,
+            totals,
+            ..
+        } = &mut *self;
+        let table = bucket_table.as_ref().expect("bucket table ensured");
+        let hyper: &[(f32, f32)] = hyper;
+        let reps: &ReplicaMatrix = replicas;
+        let gstride = grads.stride();
+        let gbase = grads.base_ptr_mut();
+        let grad_src = SrcRows::new(gbase as *const f32, gstride, p);
+        let mut writer = RowWriter::new(gbase, gstride, p);
+        let producer = move |progress: &Progress| -> Result<()> {
+            for w in 0..n {
+                // SAFETY: gradient row w is not yet retired; consumers
+                // only read retired rows.
+                produce(w, reps.row(w), unsafe { writer.row_mut(w) })?;
+                progress.retire(w + 1);
+            }
+            Ok(())
+        };
+
+        let result = if let Some(a) = active {
+            let totals: &[f32] = totals;
+            let out_views = column_views(scratch.rows_mut(), table.buckets());
+            let vel_views = column_views(
+                states.iter_mut().map(SgdState::velocity_mut).collect(),
+                table.buckets(),
+            );
+            let consumers: Vec<_> = out_views
+                .into_iter()
+                .zip(vel_views)
+                .zip(table.buckets().iter().cloned())
+                .map(|((outs, vels), range)| {
+                    move |progress: &Progress| {
+                        mix_active_step_bucket_overlapped(
+                            graph, reps, a, totals, grad_src, hyper, lr, progress, outs, vels,
+                            range,
+                        )
+                    }
+                })
+                .collect();
+            run_overlapped(exec, consumers, producer)
+        } else {
+            let out_views = column_views(scratch.rows_mut(), table.buckets());
+            let vel_views = column_views(
+                states.iter_mut().map(SgdState::velocity_mut).collect(),
+                table.buckets(),
+            );
+            let consumers: Vec<_> = out_views
+                .into_iter()
+                .zip(vel_views)
+                .zip(table.buckets().iter().cloned())
+                .map(|((outs, vels), range)| {
+                    move |progress: &Progress| {
+                        mix_step_bucket_overlapped(
+                            graph, reps, grad_src, hyper, lr, progress, outs, vels, range,
+                        )
+                    }
+                })
+                .collect();
+            run_overlapped(exec, consumers, producer)
+        };
+        result?;
+        self.pending_publish = true;
+        Ok(())
+    }
+
+    /// Publish a completed overlapped round: swap the mixed scratch
+    /// store into `replicas` (one pointer-triple exchange, the same
+    /// hand-off the phased kernels make internally). Panics if no
+    /// overlapped round is pending — the pipelined combine phase must
+    /// follow a successful `*_overlapped` call.
+    pub fn publish_overlapped(&mut self, replicas: &mut ReplicaMatrix) {
+        assert!(
+            self.pending_publish,
+            "publish_overlapped requires a completed overlapped mix round"
+        );
+        assert_eq!(self.scratch.n(), replicas.n(), "publish shape mismatch (n)");
+        assert_eq!(self.scratch.p(), replicas.p(), "publish shape mismatch (p)");
+        self.pending_publish = false;
+        std::mem::swap(replicas, &mut self.scratch);
+    }
+
+    /// Whether an overlapped round awaits [`GossipEngine::publish_overlapped`].
+    pub fn has_pending_publish(&self) -> bool {
+        self.pending_publish
     }
 }
 
@@ -476,10 +853,27 @@ fn mix_active_tile(
 /// [`mix_active_step_tile`] then only divide. Shared by both the split
 /// and fused partial-participation paths so their renormalization can
 /// never diverge.
-fn active_totals(graph: &CommGraph, active: &[bool]) -> Vec<f32> {
-    (0..graph.n())
-        .map(|i| graph.row(i).filter(|&(j, _)| active[j]).map(|(_, w)| w).sum())
-        .collect()
+fn active_totals_into(graph: &CommGraph, active: &[bool], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..graph.n()).map(|i| {
+        graph
+            .row(i)
+            .filter(|&(j, _)| active[j])
+            .map(|(_, w)| w)
+            .sum::<f32>()
+    }));
+}
+
+/// Per-output-row pipeline dependency: mixing row `i` needs row `i`
+/// itself (self weight) and every in-neighbor `j` produced, i.e. the
+/// frontier must reach `1 + max(i, max_j)`. Computed once per round
+/// into a reused buffer — a pure function of the graph, independent of
+/// bucketing and thread count.
+fn deps_into(graph: &CommGraph, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend((0..graph.n()).map(|i| {
+        1 + graph.row(i).map(|(j, _)| j).fold(i, usize::max)
+    }));
 }
 
 /// One worker's tile of a column mean: seed with replica 0, accumulate
@@ -616,6 +1010,294 @@ fn mix_step_tile(
             simd::sgd_step(out, vel, g, mu, wd, lr);
         }
         start = end;
+    }
+}
+
+/// Shared read view over a [`ReplicaMatrix`]'s rows for the overlapped
+/// pipeline, by raw base pointer so the producer can keep a writer over
+/// the same buffer. Disjointness is the pipeline protocol, not the type
+/// system: a consumer may call [`SrcRows::row`] for row `w` only after
+/// the produced-row frontier has retired `w` (`Progress::wait_for`
+/// provides the happens-before edge), and the producer never rewrites a
+/// retired row within the round.
+#[derive(Clone, Copy)]
+struct SrcRows<'a> {
+    base: *const f32,
+    stride: usize,
+    p: usize,
+    _marker: std::marker::PhantomData<&'a f32>,
+}
+
+// SAFETY: the pointer derives from a live `ReplicaMatrix` borrow held
+// across the overlapped region; reads are confined to retired rows (see
+// struct docs), which no thread writes after retirement.
+unsafe impl Send for SrcRows<'_> {}
+unsafe impl Sync for SrcRows<'_> {}
+
+impl<'a> SrcRows<'a> {
+    fn new(base: *const f32, stride: usize, p: usize) -> Self {
+        SrcRows { base, stride, p, _marker: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// Row `i` must be retired on the frontier the caller waited on,
+    /// and `i` must be in bounds of the source matrix.
+    unsafe fn row(&self, i: usize) -> &'a [f32] {
+        std::slice::from_raw_parts(self.base.add(i * self.stride), self.p)
+    }
+}
+
+/// The producer's write view over the same buffer: row `w` is exclusively
+/// the producer's until it retires `w` on the frontier, after which the
+/// producer must not touch it again within the round.
+struct RowWriter<'a> {
+    base: *mut f32,
+    stride: usize,
+    p: usize,
+    _marker: std::marker::PhantomData<&'a mut f32>,
+}
+
+// SAFETY: moved into the producer closure which runs on one thread; row
+// access is serialized by the retire protocol described above.
+unsafe impl Send for RowWriter<'_> {}
+
+impl<'a> RowWriter<'a> {
+    fn new(base: *mut f32, stride: usize, p: usize) -> Self {
+        RowWriter { base, stride, p, _marker: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// Row `i` must not yet be retired (no concurrent reader) and must
+    /// be in bounds; rows never alias (stride ≥ p).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_mut(&mut self, i: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.base.add(i * self.stride), self.p)
+    }
+}
+
+/// One bucket's share of an overlapped mix round: for each output row,
+/// wait until every row its graph row reads has been produced, then run
+/// exactly [`mix_tile`]'s float sequence over this bucket's column
+/// range. Per-element operand order is the graph row order — identical
+/// to the phased kernel — so bucketing changes scheduling, never bits.
+fn mix_bucket_overlapped(
+    graph: &CommGraph,
+    src: SrcRows<'_>,
+    deps: &[usize],
+    progress: &Progress,
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    for (i, out_row) in out_rows.iter_mut().enumerate() {
+        progress.wait_for(deps[i]);
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + TILE).min(range.end);
+            let (lo, hi) = (start - range.start, end - range.start);
+            let out = &mut out_row[lo..hi];
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                // SAFETY: frontier has reached deps[i] ≥ j + 1.
+                let src_row = unsafe { src.row(j) };
+                let s = &src_row[start..end];
+                if first {
+                    simd::scale(out, s, w);
+                    first = false;
+                } else {
+                    simd::axpy(out, s, w);
+                }
+            }
+            start = end;
+        }
+    }
+}
+
+/// [`mix_bucket_overlapped`] under partial participation — the
+/// overlapped form of [`mix_active_tile`], same copy-through /
+/// renormalize policy and per-element float sequence.
+#[allow(clippy::too_many_arguments)]
+fn mix_active_bucket_overlapped(
+    graph: &CommGraph,
+    src: SrcRows<'_>,
+    active: &[bool],
+    totals: &[f32],
+    deps: &[usize],
+    progress: &Progress,
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    for (i, out_row) in out_rows.iter_mut().enumerate() {
+        // Inactive rows still wait on their own production (dep ≥ i+1).
+        progress.wait_for(deps[i]);
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + TILE).min(range.end);
+            let (lo, hi) = (start - range.start, end - range.start);
+            let out = &mut out_row[lo..hi];
+            if !active[i] {
+                // SAFETY: frontier has reached deps[i] ≥ i + 1.
+                out.copy_from_slice(&unsafe { src.row(i) }[start..end]);
+                start = end;
+                continue;
+            }
+            let total = totals[i];
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                if !active[j] {
+                    continue;
+                }
+                let w = w / total;
+                // SAFETY: frontier has reached deps[i] ≥ j + 1.
+                let s = &unsafe { src.row(j) }[start..end];
+                if first {
+                    simd::scale(out, s, w);
+                    first = false;
+                } else {
+                    simd::axpy(out, s, w);
+                }
+            }
+            start = end;
+        }
+    }
+}
+
+/// Overlapped complete-graph fast path for one bucket: wait for the
+/// full stack (the mean reads every row), run [`mean_tile`]'s exact
+/// sequence into this bucket's slice of the mean scratch, then
+/// broadcast it into every output row. Equals the phased
+/// `mix_complete` values; the overlapped round lands them in scratch
+/// for the later publish swap.
+fn mean_bucket_overlapped(
+    src: SrcRows<'_>,
+    n: usize,
+    progress: &Progress,
+    mean_chunk: &mut [f32],
+    out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    progress.wait_for(n);
+    // SAFETY: all n rows are retired.
+    mean_chunk.copy_from_slice(&unsafe { src.row(0) }[range.clone()]);
+    for i in 1..n {
+        simd::axpy(mean_chunk, &unsafe { src.row(i) }[range.clone()], 1.0);
+    }
+    simd::scale_in_place(mean_chunk, 1.0 / n as f32);
+    for out in out_rows {
+        out.copy_from_slice(mean_chunk);
+    }
+}
+
+/// One bucket of the overlapped fused round. Pass 1 — the gossip SpMM
+/// over the *frozen* pre-round parameters — has no dependency on the
+/// gradient frontier and runs immediately; pass 2 waits per row for its
+/// gradient and applies the momentum update. Splitting the two passes
+/// leaves every element's float sequence identical to
+/// [`mix_step_tile`] (SpMM writes `out`, then `sgd_step` reads it).
+#[allow(clippy::too_many_arguments)]
+fn mix_step_bucket_overlapped(
+    graph: &CommGraph,
+    replicas: &ReplicaMatrix,
+    grads: SrcRows<'_>,
+    hyper: &[(f32, f32)],
+    lr: f32,
+    progress: &Progress,
+    mut out_rows: Vec<&mut [f32]>,
+    mut vel_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    // Pass 1: dependency-free SpMM (θ_t is frozen for the round).
+    mix_tile(graph, replicas, out_rows.iter_mut().map(|r| &mut **r).collect(), range.clone());
+    // Pass 2: per-row momentum update as gradients arrive.
+    for (i, (out_row, vel_row)) in out_rows.iter_mut().zip(vel_rows.iter_mut()).enumerate() {
+        progress.wait_for(i + 1);
+        // SAFETY: gradient row i is retired.
+        let grad_row = unsafe { grads.row(i) };
+        let (mu, wd) = hyper[i];
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + TILE).min(range.end);
+            let (lo, hi) = (start - range.start, end - range.start);
+            simd::sgd_step(
+                &mut out_row[lo..hi],
+                &mut vel_row[lo..hi],
+                &grad_row[start..end],
+                mu,
+                wd,
+                lr,
+            );
+            start = end;
+        }
+    }
+}
+
+/// [`mix_step_bucket_overlapped`] under partial participation — the
+/// overlapped form of [`mix_active_step_tile`]: inactive rows copy
+/// through in pass 1, every row applies its gradient in pass 2.
+#[allow(clippy::too_many_arguments)]
+fn mix_active_step_bucket_overlapped(
+    graph: &CommGraph,
+    replicas: &ReplicaMatrix,
+    active: &[bool],
+    totals: &[f32],
+    grads: SrcRows<'_>,
+    hyper: &[(f32, f32)],
+    lr: f32,
+    progress: &Progress,
+    mut out_rows: Vec<&mut [f32]>,
+    mut vel_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    // Pass 1: dependency-free renormalized SpMM / copy-through.
+    {
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + TILE).min(range.end);
+            let (lo, hi) = (start - range.start, end - range.start);
+            for (i, out_row) in out_rows.iter_mut().enumerate() {
+                let out = &mut out_row[lo..hi];
+                if !active[i] {
+                    out.copy_from_slice(&replicas.row(i)[start..end]);
+                    continue;
+                }
+                let total = totals[i];
+                let mut first = true;
+                for (j, w) in graph.row(i) {
+                    if !active[j] {
+                        continue;
+                    }
+                    let w = w / total;
+                    let s = &replicas.row(j)[start..end];
+                    if first {
+                        simd::scale(out, s, w);
+                        first = false;
+                    } else {
+                        simd::axpy(out, s, w);
+                    }
+                }
+            }
+            start = end;
+        }
+    }
+    // Pass 2: per-row momentum update as gradients arrive.
+    for (i, (out_row, vel_row)) in out_rows.iter_mut().zip(vel_rows.iter_mut()).enumerate() {
+        progress.wait_for(i + 1);
+        // SAFETY: gradient row i is retired.
+        let grad_row = unsafe { grads.row(i) };
+        let (mu, wd) = hyper[i];
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + TILE).min(range.end);
+            let (lo, hi) = (start - range.start, end - range.start);
+            simd::sgd_step(
+                &mut out_row[lo..hi],
+                &mut vel_row[lo..hi],
+                &grad_row[start..end],
+                mu,
+                wd,
+                lr,
+            );
+            start = end;
+        }
     }
 }
 
@@ -959,6 +1641,235 @@ mod tests {
             reps
         };
         assert_eq!(run(true), run(false));
+    }
+
+    /// The producer used across the overlapped tests: a deterministic
+    /// stand-in for a local step that actually mutates the row, so the
+    /// tests cover genuine produce-while-mix interleaving.
+    fn fake_local_step(w: usize, row: &mut [f32]) {
+        for (k, v) in row.iter_mut().enumerate() {
+            *v += 0.01 * (w as f32 + 1.0) + 1e-4 * (k % 7) as f32;
+        }
+    }
+
+    #[test]
+    fn overlapped_mix_is_bit_identical_to_phased() {
+        for kind in [GraphKind::Ring, GraphKind::Exponential, GraphKind::Complete] {
+            let n = 8;
+            let p = MIN_COLS_PER_WORKER + 37;
+            let g = CommGraph::build(kind, n).unwrap();
+            let src = replicas(n, p, 81);
+
+            let mut phased = src.clone();
+            for w in 0..n {
+                fake_local_step(w, phased.row_mut(w));
+            }
+            GossipEngine::new().mix(&g, &mut phased);
+
+            for threads in [1, 4] {
+                for bucket_elems in [1024, 1000] {
+                    let mut piped = src.clone();
+                    let mut eng = GossipEngine::with_threads(threads);
+                    eng.set_bucket_elems(bucket_elems);
+                    eng.mix_overlapped(&g, &mut piped, None, |w, row| {
+                        fake_local_step(w, row);
+                        Ok(())
+                    })
+                    .unwrap();
+                    eng.publish_overlapped(&mut piped);
+                    assert_eq!(
+                        phased, piped,
+                        "{kind} differs at {threads} threads, {bucket_elems} elems"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_mix_active_is_bit_identical_to_phased() {
+        let n = 10;
+        let p = MIN_COLS_PER_WORKER + 11;
+        let g = CommGraph::build(GraphKind::Torus, n).unwrap();
+        let src = replicas(n, p, 91);
+        let active: Vec<bool> = (0..n).map(|i| i % 3 != 1).collect();
+
+        let mut phased = src.clone();
+        for w in 0..n {
+            fake_local_step(w, phased.row_mut(w));
+        }
+        GossipEngine::new().mix_active(&g, &mut phased, &active);
+
+        for threads in [1, 4] {
+            let mut piped = src.clone();
+            let mut eng = GossipEngine::with_threads(threads);
+            eng.set_bucket_elems(777);
+            eng.mix_overlapped(&g, &mut piped, Some(&active), |w, row| {
+                fake_local_step(w, row);
+                Ok(())
+            })
+            .unwrap();
+            eng.publish_overlapped(&mut piped);
+            assert_eq!(phased, piped, "active overlapped differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn overlapped_full_mask_routes_like_none() {
+        // All-present masks must follow the same delegation chain as
+        // the phased path (mix_active → mix, incl. the complete-graph
+        // fast path) so the floats cannot diverge on mask shape alone.
+        let n = 6;
+        let g = CommGraph::build(GraphKind::Complete, n).unwrap();
+        let src = replicas(n, 301, 95);
+        let run = |mask: Option<Vec<bool>>| {
+            let mut reps = src.clone();
+            let mut eng = GossipEngine::new();
+            eng.mix_overlapped(&g, &mut reps, mask.as_deref(), |w, row| {
+                fake_local_step(w, row);
+                Ok(())
+            })
+            .unwrap();
+            eng.publish_overlapped(&mut reps);
+            reps
+        };
+        assert_eq!(run(None), run(Some(vec![true; n])));
+    }
+
+    #[test]
+    fn overlapped_fused_is_bit_identical_to_phased() {
+        let n = 8;
+        let p = MIN_COLS_PER_WORKER + 29;
+        let g = CommGraph::build(GraphKind::RingLattice { k: 2 }, n).unwrap();
+        let src = replicas(n, p, 85);
+        let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+        // The fused producer derives the gradient from the frozen θ_t
+        // row, like loss_and_grad would.
+        let grad_of = |w: usize, theta: &[f32], out: &mut [f32]| {
+            for ((gk, &tk), k) in out.iter_mut().zip(theta).zip(0..) {
+                *gk = 0.1 * tk + 1e-3 * ((w + k) % 5) as f32;
+            }
+        };
+
+        let mut phased = src.clone();
+        let mut phased_states: Vec<SgdState> =
+            (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+        let mut grads = ReplicaMatrix::zeros(n, p);
+        for w in 0..n {
+            let theta = phased.row(w).to_vec();
+            grad_of(w, &theta, grads.row_mut(w));
+        }
+        GossipEngine::new().mix_step(&g, &mut phased, &grads, &mut phased_states, lr);
+
+        for threads in [1, 4] {
+            for bucket_elems in [2048, 999] {
+                let mut piped = src.clone();
+                let mut piped_states: Vec<SgdState> =
+                    (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+                let mut piped_grads = ReplicaMatrix::zeros(n, p);
+                let mut eng = GossipEngine::with_threads(threads);
+                eng.set_bucket_elems(bucket_elems);
+                eng.mix_step_overlapped(
+                    &g,
+                    &piped,
+                    &mut piped_grads,
+                    &mut piped_states,
+                    lr,
+                    None,
+                    |w, theta, gout| {
+                        grad_of(w, theta, gout);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+                eng.publish_overlapped(&mut piped);
+                assert_eq!(
+                    phased, piped,
+                    "fused overlapped differs at {threads} threads, {bucket_elems} elems"
+                );
+                for (a, b) in phased_states.iter().zip(&piped_states) {
+                    assert_eq!(a.velocity(), b.velocity(), "velocity drift");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_fused_active_is_bit_identical_to_phased() {
+        let n = 9;
+        let p = 513;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let src = replicas(n, p, 87);
+        let active: Vec<bool> = (0..n).map(|i| i != 4).collect();
+        let (mu, wd, lr) = (0.9f32, 0.0f32, 0.1f32);
+        let grad_of = |w: usize, theta: &[f32], out: &mut [f32]| {
+            for (gk, &tk) in out.iter_mut().zip(theta) {
+                *gk = 0.2 * tk - 0.01 * w as f32;
+            }
+        };
+
+        let mut phased = src.clone();
+        let mut phased_states: Vec<SgdState> =
+            (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+        let mut grads = ReplicaMatrix::zeros(n, p);
+        for w in 0..n {
+            let theta = phased.row(w).to_vec();
+            grad_of(w, &theta, grads.row_mut(w));
+        }
+        GossipEngine::new().mix_active_step(
+            &g, &mut phased, &grads, &mut phased_states, lr, &active,
+        );
+
+        for threads in [1, 4] {
+            let mut piped = src.clone();
+            let mut piped_states: Vec<SgdState> =
+                (0..n).map(|_| SgdState::new(p, mu, wd)).collect();
+            let mut piped_grads = ReplicaMatrix::zeros(n, p);
+            let mut eng = GossipEngine::with_threads(threads);
+            eng.set_bucket_kb(1); // 256-element buckets
+            eng.mix_step_overlapped(
+                &g,
+                &piped,
+                &mut piped_grads,
+                &mut piped_states,
+                lr,
+                Some(&active),
+                |w, theta, gout| {
+                    grad_of(w, theta, gout);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            eng.publish_overlapped(&mut piped);
+            assert_eq!(phased, piped, "fused active overlapped differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn overlapped_error_aborts_without_publish() {
+        let n = 6;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let src = replicas(n, 129, 89);
+        let mut reps = src.clone();
+        let mut eng = GossipEngine::new();
+        let err = eng.mix_overlapped(&g, &mut reps, None, |w, row| {
+            if w == 3 {
+                return Err(crate::error::AdaError::Runtime("boom".into()));
+            }
+            fake_local_step(w, row);
+            Ok(())
+        });
+        assert!(err.is_err());
+        assert!(!eng.has_pending_publish(), "failed round must not publish");
+        // The engine stays usable for a phased round afterwards.
+        eng.mix(&g, &mut reps);
+    }
+
+    #[test]
+    #[should_panic(expected = "publish_overlapped requires")]
+    fn publish_without_round_panics() {
+        let mut reps = replicas(4, 16, 99);
+        GossipEngine::new().publish_overlapped(&mut reps);
     }
 
     #[test]

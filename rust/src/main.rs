@@ -32,6 +32,9 @@ ada <command> [options]
                      kernels and metric capture (0 = all cores; default
                      from launcher config; bit-identical results)
     --fused          fused gossip+SGD execution (combine-then-adapt order)
+    --pipeline       overlap gossip communication with local compute
+                     bucket-by-bucket (bit-identical to the phased path)
+    --bucket-kb N    pipeline bucket width in KB (0 = default 256 KB)
   strategies       list the registered SGD strategy names (open registry)
   topologies       list the registered topology policy names
   graphs           print Table 1 for --n nodes (default 96)
@@ -87,7 +90,7 @@ fn parse_workload(name: &str, artifact_dir: &std::path::Path) -> Result<Workload
 }
 
 fn main() -> CliResult {
-    let args = Args::parse(std::env::args().skip(1), &["help", "fused"])
+    let args = Args::parse(std::env::args().skip(1), &["help", "fused", "pipeline"])
         .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
         Some(p) => LauncherConfig::from_file(std::path::Path::new(p))
@@ -136,6 +139,8 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     spec.flavors = vec![flavor];
     spec.threads = args.threads(cfg.threads)?;
     spec.fused = args.has_flag("fused");
+    spec.pipeline = args.has_flag("pipeline");
+    spec.bucket_kb = args.get_parse("bucket-kb", 0)?;
     if let Some(t) = args.get("topology") {
         // Resolved by name through the topology registry; `ada
         // topologies` lists the choices. C_complete stays centralized.

@@ -263,6 +263,22 @@ impl ReplicaMatrix {
     pub fn to_vecs(&self) -> Vec<Vec<f32>> {
         self.rows().map(<[f32]>::to_vec).collect()
     }
+
+    /// Raw base pointer of the flat store (crate-internal: the
+    /// overlapped gossip pipeline derives per-row views from it whose
+    /// disjointness is enforced by the pipeline's produced-row
+    /// protocol rather than the borrow checker; see
+    /// `crate::gossip`'s `SrcRows`). Dangling (but well-aligned) when
+    /// the matrix is empty — pair only with zero-length reads.
+    pub(crate) fn base_ptr(&self) -> *const f32 {
+        self.buf.ptr.as_ptr()
+    }
+
+    /// Mutable raw base pointer; same contract as
+    /// [`ReplicaMatrix::base_ptr`].
+    pub(crate) fn base_ptr_mut(&mut self) -> *mut f32 {
+        self.buf.ptr.as_ptr()
+    }
 }
 
 impl Default for ReplicaMatrix {

@@ -541,6 +541,283 @@ fn engine_drop_joins_all_workers() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Overlapped bucketed pipeline (PR 6): the pipelined route must be
+// **bit-identical** to the phase-ordered route — across thread counts,
+// all four mix kernels, every graph family, and bucket sizes that do
+// and do not divide P evenly. This is the determinism contract that
+// makes `pipeline = true` (like `--threads`) a pure wall-clock knob;
+// see `rust/src/exec/pipeline.rs` for the argument.
+// ---------------------------------------------------------------------
+
+const PIPELINE_THREADS: [usize; 3] = [1, 4, 8];
+// 4096 leaves a short trailing bucket at P = 2·4096 + 137; 1000 cuts
+// every tile off-alignment AND off the SIMD lane width.
+const BUCKET_SIZES: [usize; 2] = [4096, 1000];
+
+/// Deterministic stand-in for the local step: genuinely mutates the row
+/// so the produce-while-mix interleaving is exercised, cheap enough to
+/// run under every (graph × threads × bucket) combination.
+fn sim_local_step(w: usize, row: &mut [f32]) {
+    for (k, v) in row.iter_mut().enumerate() {
+        *v += 0.01 * (w as f32 + 1.0) + 1e-4 * (k % 11) as f32;
+    }
+}
+
+/// Deterministic stand-in for loss_and_grad at frozen θ_t.
+fn sim_grad(w: usize, theta: &[f32], out: &mut [f32]) {
+    for ((o, &t), k) in out.iter_mut().zip(theta).zip(0..) {
+        *o = 0.1 * t + 1e-3 * ((w + k) % 7) as f32;
+    }
+}
+
+#[test]
+fn pipelined_mix_is_bit_identical_to_phased() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 3000 + case as u64);
+
+        let mut phased = src.clone();
+        for w in 0..N {
+            sim_local_step(w, phased.row_mut(w));
+        }
+        GossipEngine::with_threads(1).mix(&g, &mut phased);
+
+        for threads in PIPELINE_THREADS {
+            for bucket in BUCKET_SIZES {
+                let mut piped = src.clone();
+                let mut engine = GossipEngine::with_threads(threads);
+                engine.set_bucket_elems(bucket);
+                engine
+                    .mix_overlapped(&g, &mut piped, None, |w, row| {
+                        sim_local_step(w, row);
+                        Ok(())
+                    })
+                    .unwrap();
+                engine.publish_overlapped(&mut piped);
+                assert_eq!(
+                    phased, piped,
+                    "{kind}: pipelined mix differs at {threads} threads, bucket {bucket}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_mix_active_is_bit_identical_to_phased() {
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 3100 + case as u64);
+        let active: Vec<bool> = (0..N).map(|i| i % 3 != 1).collect();
+
+        let mut phased = src.clone();
+        for w in 0..N {
+            sim_local_step(w, phased.row_mut(w));
+        }
+        GossipEngine::with_threads(1).mix_active(&g, &mut phased, &active);
+
+        for threads in PIPELINE_THREADS {
+            for bucket in BUCKET_SIZES {
+                let mut piped = src.clone();
+                let mut engine = GossipEngine::with_threads(threads);
+                engine.set_bucket_elems(bucket);
+                engine
+                    .mix_overlapped(&g, &mut piped, Some(&active), |w, row| {
+                        sim_local_step(w, row);
+                        Ok(())
+                    })
+                    .unwrap();
+                engine.publish_overlapped(&mut piped);
+                assert_eq!(
+                    phased, piped,
+                    "{kind}: pipelined mix_active differs at {threads} threads, bucket {bucket}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_fused_step_is_bit_identical_to_phased() {
+    let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 3200 + case as u64);
+
+        let mut phased = src.clone();
+        let mut phased_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut grads = ReplicaMatrix::zeros(N, P);
+        for w in 0..N {
+            let theta = phased.row(w).to_vec();
+            sim_grad(w, &theta, grads.row_mut(w));
+        }
+        GossipEngine::with_threads(1).mix_step(&g, &mut phased, &grads, &mut phased_states, lr);
+
+        for threads in PIPELINE_THREADS {
+            for bucket in BUCKET_SIZES {
+                let mut piped = src.clone();
+                let mut states: Vec<SgdState> =
+                    (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+                let mut piped_grads = ReplicaMatrix::zeros(N, P);
+                let mut engine = GossipEngine::with_threads(threads);
+                engine.set_bucket_elems(bucket);
+                engine
+                    .mix_step_overlapped(
+                        &g,
+                        &piped,
+                        &mut piped_grads,
+                        &mut states,
+                        lr,
+                        None,
+                        |w, theta, out| {
+                            sim_grad(w, theta, out);
+                            Ok(())
+                        },
+                    )
+                    .unwrap();
+                engine.publish_overlapped(&mut piped);
+                assert_eq!(
+                    phased, piped,
+                    "{kind}: pipelined fused differs at {threads} threads, bucket {bucket}"
+                );
+                for (i, (a, b)) in phased_states.iter().zip(&states).enumerate() {
+                    assert_eq!(
+                        a.velocity(),
+                        b.velocity(),
+                        "{kind}: velocity {i} differs at {threads} threads, bucket {bucket}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_fused_active_step_is_bit_identical_to_phased() {
+    let (mu, wd, lr) = (0.9f32, 1e-4f32, 0.05f32);
+    for (case, kind) in all_kinds().into_iter().enumerate() {
+        let g = CommGraph::build(kind, N).unwrap();
+        let src = replicas(N, P, 3300 + case as u64);
+        let active: Vec<bool> = (0..N).map(|i| i % 4 != 2).collect();
+
+        let mut phased = src.clone();
+        let mut phased_states: Vec<SgdState> =
+            (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+        let mut grads = ReplicaMatrix::zeros(N, P);
+        for w in 0..N {
+            let theta = phased.row(w).to_vec();
+            sim_grad(w, &theta, grads.row_mut(w));
+        }
+        GossipEngine::with_threads(1).mix_active_step(
+            &g,
+            &mut phased,
+            &grads,
+            &mut phased_states,
+            lr,
+            &active,
+        );
+
+        for threads in PIPELINE_THREADS {
+            for bucket in BUCKET_SIZES {
+                let mut piped = src.clone();
+                let mut states: Vec<SgdState> =
+                    (0..N).map(|_| SgdState::new(P, mu, wd)).collect();
+                let mut piped_grads = ReplicaMatrix::zeros(N, P);
+                let mut engine = GossipEngine::with_threads(threads);
+                engine.set_bucket_elems(bucket);
+                engine
+                    .mix_step_overlapped(
+                        &g,
+                        &piped,
+                        &mut piped_grads,
+                        &mut states,
+                        lr,
+                        Some(&active),
+                        |w, theta, out| {
+                            sim_grad(w, theta, out);
+                            Ok(())
+                        },
+                    )
+                    .unwrap();
+                engine.publish_overlapped(&mut piped);
+                assert_eq!(
+                    phased, piped,
+                    "{kind}: pipelined fused active differs at {threads} threads, bucket {bucket}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_rounds_interleave_with_phased_rounds_on_one_engine() {
+    // Mode switches reuse the same scratch and cached descriptor
+    // tables; neither direction may contaminate the other.
+    let g = CommGraph::build(GraphKind::RingLattice { k: 3 }, N).unwrap();
+    let src = replicas(N, P, 3400);
+
+    let mut want = src.clone();
+    let mut ref_engine = GossipEngine::with_threads(1);
+    for round in 0..4 {
+        for w in 0..N {
+            sim_local_step(w + round, want.row_mut(w));
+        }
+        ref_engine.mix(&g, &mut want);
+    }
+
+    let mut got = src.clone();
+    let mut engine = GossipEngine::with_threads(4);
+    engine.set_bucket_elems(1000);
+    for round in 0..4 {
+        if round % 2 == 0 {
+            engine
+                .mix_overlapped(&g, &mut got, None, |w, row| {
+                    sim_local_step(w + round, row);
+                    Ok(())
+                })
+                .unwrap();
+            engine.publish_overlapped(&mut got);
+        } else {
+            for w in 0..N {
+                sim_local_step(w + round, got.row_mut(w));
+            }
+            engine.mix(&g, &mut got);
+        }
+    }
+    assert_eq!(want, got, "phased and pipelined rounds must interleave cleanly");
+}
+
+#[test]
+fn pipelined_is_bit_identical_between_simd_and_forced_scalar() {
+    // The pipeline on both SIMD dispatch paths (the CI simd-paths job
+    // runs this whole file under ADA_SIMD=scalar too; this test forces
+    // the comparison within one process as well).
+    let _guard = SIMD_MODE_LOCK.lock().unwrap();
+    let g = CommGraph::build(GraphKind::AdaLattice { k: 4 }, N).unwrap();
+    let src = replicas(N, P, 3500);
+    let run = || {
+        let mut reps = src.clone();
+        let mut engine = GossipEngine::with_threads(4);
+        engine.set_bucket_elems(1000);
+        engine
+            .mix_overlapped(&g, &mut reps, None, |w, row| {
+                sim_local_step(w, row);
+                Ok(())
+            })
+            .unwrap();
+        engine.publish_overlapped(&mut reps);
+        reps
+    };
+    simd::force_scalar(false);
+    let auto = run();
+    simd::force_scalar(true);
+    let scalar = run();
+    simd::force_scalar(false);
+    assert_eq!(auto, scalar, "pipelined SIMD vs forced scalar");
+}
+
 #[test]
 fn gossip_engine_spawns_workers_exactly_once() {
     // The acceptance criterion end to end: a GossipEngine's pool
