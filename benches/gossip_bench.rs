@@ -19,9 +19,13 @@
 //!      with a synthetic per-row local step standing in for compute —
 //!      sweeps bucket_kb × threads × graph; results are bit-identical
 //!      so the sweep is pure wall-clock
-//!   7. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
+//!   7. **stale vs fresh mixing**: the bounded-staleness path
+//!      (`ingest_stale` + `mix_stale`, PR 7) against the live-row `mix`
+//!      under seeded message-drop weather — measures what the fault
+//!      plane's buffer bookkeeping costs per round
+//!   8. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
-//! Sections 2–6 are written to `BENCH_gossip.json` at the repo root.
+//! Sections 2–7 are written to `BENCH_gossip.json` at the repo root.
 //! Results are bit-identical across thread counts and across the
 //! SIMD/scalar paths (asserted in `rust/tests/exec_determinism.rs`), so
 //! every sweep is purely wall-clock.
@@ -37,6 +41,7 @@ use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::metrics::{l2_norm, per_replica_l2_norms_pooled, VarianceReport};
 use ada_dist::optim::SgdState;
+use ada_dist::simnet::FaultPlan;
 use ada_dist::util::bench::{bench, env_flag, env_usize, fmt_duration, Table};
 use ada_dist::util::json::Value;
 use ada_dist::util::rng::Rng;
@@ -63,7 +68,8 @@ fn main() {
     let reduce = reduce_vs_serial_variance(iters);
     let simd_cells = simd_vs_scalar(iters);
     let pipeline = pipeline_vs_phased(iters);
-    write_bench_json(sweep, pool, reduce, simd_cells, pipeline);
+    let stale = stale_vs_fresh(iters);
+    write_bench_json(sweep, pool, reduce, simd_cells, pipeline, stale);
     #[cfg(feature = "pjrt")]
     hlo_section(iters);
     #[cfg(not(feature = "pjrt"))]
@@ -506,12 +512,80 @@ fn pipeline_vs_phased(iters: usize) -> Vec<Value> {
     cells
 }
 
+/// The bounded-staleness mixing path against the live-row mix it
+/// shadows. Each stale round pays the full fault-plane bookkeeping —
+/// ingest every delivered row into the per-edge buffer (ages tick on
+/// the dropped ones), then renormalize over the fresh-enough peers —
+/// under seeded drop weather from a [`FaultPlan`]. At `drop_prob = 0`
+/// the stale path is bit-identical to `mix` (asserted in
+/// `rust/tests/fault_injection.rs`), so that column is pure overhead.
+fn stale_vs_fresh(iters: usize) -> Vec<Value> {
+    println!("== bounded-staleness mixing vs live-row mix (seeded drop weather) ==");
+    let (n, p) = (16usize, 262_144usize);
+    let bound = 2usize;
+    let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+    let src = replicas(n, p, 10);
+    let mut t = Table::new(&["drop_prob", "threads", "fresh mix", "stale mix", "overhead"]);
+    let mut cells = Vec::new();
+    for drop_prob in [0.0f64, 0.1, 0.3] {
+        let mut plan = FaultPlan::quiet();
+        plan.seed = 11;
+        plan.drop_prob = drop_prob;
+        for threads in [1usize, 4, 8] {
+            let mut fresh_engine = GossipEngine::with_threads(threads);
+            let mut fresh_reps = src.clone();
+            let t_fresh = bench(1, iters, || {
+                fresh_engine.mix(&g, &mut fresh_reps);
+            });
+
+            let mut engine = GossipEngine::with_threads(threads);
+            let mut reps = src.clone();
+            let mut round = 0usize;
+            let t_stale = bench(1, iters, || {
+                let r = round;
+                round += 1;
+                engine.ingest_stale(&g, &reps, |s, d| plan.delivered(0, r, s, d));
+                engine.mix_stale(&g, &mut reps, None, bound);
+            });
+
+            let (fresh_s, stale_s) =
+                (t_fresh.median.as_secs_f64(), t_stale.median.as_secs_f64());
+            t.row(vec![
+                format!("{drop_prob:.1}"),
+                threads.to_string(),
+                fmt_duration(t_fresh.median),
+                fmt_duration(t_stale.median),
+                format!("{:.2}x", stale_s / fresh_s),
+            ]);
+            cells.push(Value::obj(vec![
+                ("graph", Value::Str(GraphKind::Exponential.to_string())),
+                ("n", Value::Num(n as f64)),
+                ("p", Value::Num(p as f64)),
+                ("drop_prob", Value::Num(drop_prob)),
+                ("staleness_bound", Value::Num(bound as f64)),
+                ("threads", Value::Num(threads as f64)),
+                ("fresh_median_s", Value::Num(fresh_s)),
+                ("stale_median_s", Value::Num(stale_s)),
+                ("stale_over_fresh", Value::Num(stale_s / fresh_s)),
+                ("iters", Value::Num(iters as f64)),
+            ]));
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(overhead = ingest + buffered renormalizing mix vs the live-row mix;\n\
+         at drop_prob 0.0 the outputs are bit-identical)"
+    );
+    cells
+}
+
 fn write_bench_json(
     sweep: Vec<Value>,
     pool: Vec<Value>,
     reduce: Vec<Value>,
     simd: Vec<Value>,
     pipeline: Vec<Value>,
+    stale: Vec<Value>,
 ) {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let doc = Value::obj(vec![
@@ -523,6 +597,7 @@ fn write_bench_json(
         ("reduce_vs_serial_variance", Value::Arr(reduce)),
         ("simd_vs_scalar", Value::Arr(simd)),
         ("pipeline_vs_phased", Value::Arr(pipeline)),
+        ("stale_vs_fresh", Value::Arr(stale)),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
     match std::fs::write(&out, doc.to_string()) {

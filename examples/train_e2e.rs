@@ -73,6 +73,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         pipeline: false,
         bucket_kb: 0,
         record_path: Some("out/train_e2e.jsonl".into()),
+        faults: None,
+        staleness_bound: 0,
     };
 
     println!(

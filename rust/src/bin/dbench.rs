@@ -39,6 +39,12 @@ dbench <command> [options]
     --threads N (0 = all cores; bit-identical results)  --fused
     --pipeline          overlap gossip with compute bucket-by-bucket
                         (bit-identical to phased)  --bucket-kb N (0 = 256 KB)
+    --faults k=v,...    deterministic fault plan for decentralized cells
+                        (seed, drop_prob, straggler_prob, straggler_iters,
+                        straggler_slowdown, link_jitter, crash=n@from:to;..,
+                        recover_dir); same keys as the spec [faults] table
+    --staleness-bound N fault-injected gossip mixes peer rows up to N
+                        rounds old (0 = only this round's deliveries)
     --cell-parallel N   run up to N grid cells concurrently (bounded by
                         cores; auto-threaded cells then run 1 thread
                         each — results identical either way)
@@ -131,6 +137,7 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
         spec.pipeline = true;
     }
     spec.bucket_kb = args.get_parse("bucket-kb", spec.bucket_kb)?;
+    apply_fault_args(args, &mut spec)?;
     if let Some(t) = args.get("topology") {
         spec.topology = Some(TopologyRef::parse(t)?);
     }
@@ -186,6 +193,17 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     Ok(())
 }
 
+/// `--faults k=v,…` / `--staleness-bound N` → the spec's fault plane
+/// (layered over any `[faults]` the spec TOML already carries).
+fn apply_fault_args(args: &Args, spec: &mut ExperimentSpec) -> CliResult {
+    if let Some(kv) = args.get("faults") {
+        let table = ada_dist::util::params::ParamTable::parse_kv(kv)?;
+        spec.faults = Some(ada_dist::simnet::FaultPlan::from_table(&table)?);
+    }
+    spec.staleness_bound = args.get_parse("staleness-bound", spec.staleness_bound)?;
+    Ok(())
+}
+
 fn cmd_ada(args: &Args, cfg: &LauncherConfig) -> CliResult {
     let app = args.get_or("app", "resnet20");
     let workers: usize = args.get_parse("workers", 16)?;
@@ -203,6 +221,7 @@ fn cmd_ada(args: &Args, cfg: &LauncherConfig) -> CliResult {
         spec.pipeline = true;
     }
     spec.bucket_kb = args.get_parse("bucket-kb", spec.bucket_kb)?;
+    apply_fault_args(args, &mut spec)?;
     spec.flavors = vec![
         SgdFlavor::CentralizedComplete,
         SgdFlavor::DecentralizedRing,

@@ -25,6 +25,7 @@
 //! ([`crate::topology::TopologyPolicy::graph_for`]) and a structured
 //! [`TrainSignals`] feedback bundle after every epoch.
 
+use super::checkpoint::Checkpoint;
 use super::observer::{EpochInfo, Observer};
 use super::strategy::{
     self, CentralizedAverage, CombineStrategy, FusedGossipCombine, GossipCombine,
@@ -36,12 +37,15 @@ use crate::data::{shard_indices, train_test_split, Dataset, ShardLoader};
 use crate::error::{AdaError, Result};
 use crate::exec::ExecEngine;
 use crate::gossip::{mean_model, GossipEngine};
+use crate::graph::CommGraph;
 use crate::metrics::{
     consensus_distance, IterationRecord, RunRecorder, VarianceProbe, VarianceReport,
 };
 use crate::runtime::ModelKind;
+use crate::simnet::{ClusterSpec, FaultPlan, SimNet};
 use crate::topology::{RunInfo, TopologyPolicy, TrainSignals};
 use crate::util::matrix::ReplicaMatrix;
+use std::path::{Path, PathBuf};
 
 /// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`],
 /// pick a strategy (by [`SgdFlavor`] or custom [`StrategyInstance`]),
@@ -278,12 +282,26 @@ impl<'m> TrainSession<'m> {
         };
         let mut engine = GossipEngine::with_threads(cfg.threads);
         engine.set_bucket_kb(cfg.bucket_kb);
+        // The fault plane engages only on decentralized runs (the
+        // centralized allreduce has no bounded-staleness analogue
+        // here); the plan is validated once, up front.
+        let faults: Option<&FaultPlan> = match (&cfg.faults, &self.schedule) {
+            (Some(plan), Some(_)) => {
+                plan.validate(n)?;
+                Some(plan)
+            }
+            _ => None,
+        };
+        let simnet = faults.map(|_| SimNet::new(ClusterSpec::summit()));
         // The overlapped route is taken only when asked for AND the
         // strategy implements it; everything else stays phase-ordered.
         // Both routes are bit-identical by the pipeline's determinism
         // contract (`crate::exec::pipeline`), test-enforced in
-        // `rust/tests/exec_determinism.rs`.
-        let pipelined = cfg.pipeline && self.combine.supports_pipeline();
+        // `rust/tests/exec_determinism.rs`. Fault-injection rounds stay
+        // phase-ordered: the stale ingest must snapshot the round's
+        // post-local-phase rows before the combine consumes them.
+        let pipelined =
+            cfg.pipeline && self.combine.supports_pipeline() && faults.is_none();
         self.combine.prepare(n, p)?;
         if let Some(s) = &mut self.schedule {
             s.on_run_start(&RunInfo {
@@ -313,6 +331,33 @@ impl<'m> TrainSession<'m> {
                 Some(s) if !iteration_scoped => Some(s.graph_for(epoch, 0)?),
                 _ => None,
             };
+            // --- fault plane: crash/restart bookkeeping --------------
+            // A node that recovers this epoch re-enters from the newest
+            // usable checkpoint in the plan's `recover_dir`, or — when
+            // none is usable — cold-joins from its in-neighbor average.
+            // Down nodes keep stepping locally (their rows drift, also
+            // deterministically); they are only cut out of the gossip.
+            if let Some(plan) = faults {
+                for node in 0..n {
+                    if !plan.recovers_at(epoch, node) {
+                        continue;
+                    }
+                    let g = match (&epoch_graph, &self.schedule) {
+                        (Some(g), _) => Some(g.clone()),
+                        (None, Some(s)) => Some(s.graph_for(epoch, 0)?),
+                        (None, None) => None,
+                    };
+                    restore_replica(plan, &self.label, epoch, node, g.as_ref(), &mut replicas)?;
+                }
+            }
+            let down: Vec<bool> = match faults {
+                Some(plan) => (0..n).map(|i| plan.is_down(epoch, i)).collect(),
+                None => Vec::new(),
+            };
+            let mut epoch_max_stale: Option<usize> = None;
+            let mut epoch_stale_sum = 0.0f64;
+            let mut epoch_stale_count = 0usize;
+            let mut epoch_delay_s = 0.0f64;
             let mut epoch_gini_sum = 0.0f64;
             let mut epoch_var_sum = 0.0f64;
             let mut epoch_gini_count = 0usize;
@@ -341,6 +386,20 @@ impl<'m> TrainSession<'m> {
                     } else {
                         None
                     };
+                // Crashed nodes leave the round entirely: fold the
+                // epoch's outage schedule into the participation mask
+                // (the legacy drop stream above stays untouched, so
+                // fault-free runs keep their exact RNG sequence).
+                let active_mask: Option<Vec<bool>> =
+                    if faults.is_some() && down.iter().any(|&d| d) {
+                        let mut mask = active_mask.unwrap_or_else(|| vec![true; n]);
+                        for (m, &d) in mask.iter_mut().zip(&down) {
+                            *m &= !d;
+                        }
+                        Some(mask)
+                    } else {
+                        active_mask
+                    };
                 // --- local phase (strategy) --------------------------
                 let train_loss = {
                     let mut ctx = StepCtx {
@@ -353,6 +412,9 @@ impl<'m> TrainSession<'m> {
                         // (it belongs to the combine); the pipelined
                         // one drives the combine too, so it must.
                         active: if pipelined { active_mask.as_deref() } else { None },
+                        // The local phase never mixes; staleness is a
+                        // combine-phase property.
+                        staleness: None,
                         epoch,
                         batch: b,
                         lr,
@@ -383,6 +445,62 @@ impl<'m> TrainSession<'m> {
                     None => (VarianceReport::of(&[]), Vec::new()),
                 };
 
+                // --- fault plane: deliveries, staleness, sim time ----
+                // Every draw is a pure function of (plan seed, epoch,
+                // iter, edge), so this block is deterministic at any
+                // thread count. Straggling or crashed senders miss the
+                // round; their receivers fall back to the stale buffer
+                // the combine below mixes against.
+                if let (Some(plan), Some(g)) = (faults, graph) {
+                    let factors: Vec<f64> = (0..n)
+                        .map(|i| {
+                            if down[i] {
+                                1.0
+                            } else {
+                                plan.straggler_factor(epoch, b, i)
+                            }
+                        })
+                        .collect();
+                    engine.ingest_stale(g, &replicas, |src, dst| {
+                        !down[src]
+                            && !down[dst]
+                            && factors[src] <= 1.0
+                            && plan.delivered(epoch, b, src, dst)
+                    });
+                    let (iter_max_stale, iter_mean_stale) = engine.stale_stats(g);
+                    if let Some(mx) = iter_max_stale {
+                        epoch_max_stale =
+                            Some(epoch_max_stale.map_or(mx, |m| m.max(mx)));
+                    }
+                    if let Some(mean) = iter_mean_stale {
+                        epoch_stale_sum += mean;
+                        epoch_stale_count += 1;
+                    }
+                    // Simulated round time: the α–β communication cost
+                    // under this iteration's link jitter, stretched by
+                    // the slowest node's compute factor.
+                    let net = simnet.as_ref().expect("fault plane built its simnet");
+                    let worst = factors.iter().copied().fold(1.0f64, f64::max);
+                    let delay = net
+                        .gossip_round_with(g, p, |i, j| plan.link_scale(epoch, b, i, j))
+                        .time_s
+                        * worst;
+                    epoch_delay_s += delay;
+                    if let Some(s) = &mut self.schedule {
+                        if s.wants_iteration_signals() {
+                            s.observe(&TrainSignals {
+                                epoch,
+                                iteration: Some(b),
+                                straggler_factor: factors,
+                                max_staleness: iter_max_stale,
+                                mean_staleness: iter_mean_stale,
+                                sim_delay_s: Some(delay),
+                                ..TrainSignals::default()
+                            });
+                        }
+                    }
+                }
+
                 // --- combine phase (strategy) ------------------------
                 let (degree, bytes) = {
                     let mut ctx = StepCtx {
@@ -392,6 +510,7 @@ impl<'m> TrainSession<'m> {
                         engine: &mut engine,
                         graph,
                         active: active_mask.as_deref(),
+                        staleness: faults.map(|_| cfg.staleness_bound),
                         epoch,
                         batch: b,
                         lr,
@@ -487,6 +606,15 @@ impl<'m> TrainSession<'m> {
                     },
                     test_metric: epoch_test_metric,
                     comm_bytes_per_node: total_bytes_per_node,
+                    iteration: None,
+                    straggler_factor: Vec::new(),
+                    max_staleness: epoch_max_stale,
+                    mean_staleness: if epoch_stale_count > 0 {
+                        Some(epoch_stale_sum / epoch_stale_count as f64)
+                    } else {
+                        None
+                    },
+                    sim_delay_s: faults.map(|_| epoch_delay_s),
                 };
                 s.observe(&signals);
             }
@@ -578,4 +706,85 @@ pub(crate) fn evaluate_params(
             }
         }
     })
+}
+
+/// Restore a recovering node's replica row: prefer the newest usable
+/// checkpoint in the plan's `recover_dir` (same flavor label and shape,
+/// resume epoch not past the current one), fall back to the mean of the
+/// node's in-neighbors — the "ask the cluster" cold join. Serial and
+/// deterministic: directory entries are sorted, the neighbor fold order
+/// is the graph row's, and the mean accumulates in f64. Momentum
+/// buffers are *not* restored (the model's stay as they drifted) — a
+/// documented simplification; SGD re-converges within an epoch.
+fn restore_replica(
+    plan: &FaultPlan,
+    label: &str,
+    epoch: usize,
+    node: usize,
+    graph: Option<&CommGraph>,
+    replicas: &mut ReplicaMatrix,
+) -> Result<()> {
+    if let Some(dir) = &plan.recover_dir {
+        if let Some(ck) =
+            newest_checkpoint(dir, label, epoch, replicas.n(), replicas.p())
+        {
+            replicas.row_mut(node).copy_from_slice(ck.replicas.row(node));
+            return Ok(());
+        }
+    }
+    let Some(g) = graph else { return Ok(()) };
+    let p = replicas.p();
+    let mut acc = vec![0.0f64; p];
+    let mut count = 0usize;
+    for &j in g.neighbors_of(node) {
+        if j == node {
+            continue;
+        }
+        for (a, &v) in acc.iter_mut().zip(replicas.row(j)) {
+            *a += v as f64;
+        }
+        count += 1;
+    }
+    if count > 0 {
+        let inv = 1.0 / count as f64;
+        for (dst, a) in replicas.row_mut(node).iter_mut().zip(&acc) {
+            *dst = (*a * inv) as f32;
+        }
+    }
+    Ok(())
+}
+
+/// Newest checkpoint in `dir` usable for the current run: matching
+/// flavor `label`, matching replica shape, and a resume epoch ≤ the
+/// recovery epoch (a checkpoint "from the future" of this replay is
+/// skipped). Unreadable files are ignored; ties on epoch resolve to the
+/// lexicographically later filename.
+fn newest_checkpoint(
+    dir: &Path,
+    label: &str,
+    epoch: usize,
+    n: usize,
+    p: usize,
+) -> Option<Checkpoint> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .ok()?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|path| path.extension().is_some_and(|e| e == "ckpt"))
+        .collect();
+    paths.sort();
+    let mut best: Option<Checkpoint> = None;
+    for path in paths {
+        let Ok(ck) = Checkpoint::load(&path) else { continue };
+        if ck.flavor != label
+            || ck.epoch > epoch
+            || ck.replicas.n() != n
+            || ck.replicas.p() != p
+        {
+            continue;
+        }
+        if best.as_ref().is_none_or(|b| ck.epoch >= b.epoch) {
+            best = Some(ck);
+        }
+    }
+    best
 }

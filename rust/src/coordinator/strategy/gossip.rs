@@ -56,9 +56,13 @@ impl CombineStrategy for GossipCombine {
         replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         let g = need_graph(ctx, "GossipCombine")?;
-        match ctx.active {
-            Some(active) => ctx.engine.mix_active(g, replicas, active),
-            None => ctx.engine.mix(g, replicas),
+        match (ctx.staleness, ctx.active) {
+            // Bounded-staleness route: average against last-delivered
+            // peer rows (fault-injection mode; the session ingested
+            // this round's deliveries before the capture point).
+            (Some(bound), active) => ctx.engine.mix_stale(g, replicas, active, bound),
+            (None, Some(active)) => ctx.engine.mix_active(g, replicas, active),
+            (None, None) => ctx.engine.mix(g, replicas),
         }
         Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
     }
@@ -164,8 +168,19 @@ impl CombineStrategy for FusedGossipCombine {
         replicas: &mut ReplicaMatrix,
     ) -> Result<(usize, u64)> {
         let g = need_graph(ctx, "FusedGossipCombine")?;
-        match ctx.active {
-            Some(active) => ctx.engine.mix_active_step(
+        match (ctx.staleness, ctx.active) {
+            // Bounded-staleness route, split back into combine-then-
+            // adapt halves: the stale SpMM has no fused kernel, so mix
+            // against the last-delivered rows first, then apply every
+            // worker's stashed gradient (inactive rows included —
+            // matching `mix_active_step`'s straggler model).
+            (Some(bound), active) => {
+                ctx.engine.mix_stale(g, replicas, active, bound);
+                for (w, s) in self.states.iter_mut().enumerate() {
+                    s.step(replicas.row_mut(w), self.grads.row(w), ctx.lr);
+                }
+            }
+            (None, Some(active)) => ctx.engine.mix_active_step(
                 g,
                 replicas,
                 &self.grads,
@@ -173,7 +188,9 @@ impl CombineStrategy for FusedGossipCombine {
                 ctx.lr,
                 active,
             ),
-            None => ctx.engine.mix_step(g, replicas, &self.grads, &mut self.states, ctx.lr),
+            (None, None) => {
+                ctx.engine.mix_step(g, replicas, &self.grads, &mut self.states, ctx.lr)
+            }
         }
         Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
     }

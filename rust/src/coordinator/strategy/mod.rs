@@ -92,6 +92,12 @@ pub struct StepCtx<'a> {
     /// Failure-injection mask for this round (`None` = all present).
     /// Drawn by the session so the RNG stream stays with the run seed.
     pub active: Option<&'a [bool]>,
+    /// `Some(bound)` routes the combine through the bounded-staleness
+    /// path ([`crate::gossip::GossipEngine::mix_stale`] against the
+    /// stale buffer the session ingests each round); `None` (the
+    /// default outside fault-injection runs) keeps the live-row
+    /// kernels.
+    pub staleness: Option<usize>,
     /// 0-based epoch.
     pub epoch: usize,
     /// 0-based batch index within the epoch.

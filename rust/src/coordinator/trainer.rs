@@ -232,6 +232,19 @@ pub struct TrainConfig {
     pub bucket_kb: usize,
     /// Optional JSONL output path.
     pub record_path: Option<PathBuf>,
+    /// Deterministic fault plan (`None` = fault-free). When set on a
+    /// decentralized run the session routes gossip through the
+    /// bounded-staleness path, draws per-iteration stragglers / message
+    /// drops / crash windows as a pure function of the plan's seed, and
+    /// feeds the measured staleness and simulated delay into
+    /// [`crate::topology::TrainSignals`]. Centralized strategies ignore
+    /// it. See `crate::simnet::FaultPlan`.
+    pub faults: Option<crate::simnet::FaultPlan>,
+    /// Staleness bound `τ` of the fault plane's gossip: a peer row older
+    /// than `τ` rounds is renormalized away instead of averaged
+    /// ([`crate::gossip::GossipEngine::mix_stale`]). `0` = only rows
+    /// delivered this round count. Ignored when `faults` is `None`.
+    pub staleness_bound: usize,
 }
 
 impl TrainConfig {
@@ -261,6 +274,8 @@ impl TrainConfig {
             pipeline: false,
             bucket_kb: 0,
             record_path: None,
+            faults: None,
+            staleness_bound: 0,
         }
     }
 }

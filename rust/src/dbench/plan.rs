@@ -409,10 +409,16 @@ impl SessionPlan {
             Some(t) => format!(" topology={t:?}"),
             None => String::new(),
         };
+        // Fault-free cells keep their pre-fault-plane fingerprint (the
+        // same backward-compatibility discipline as `topology` above).
+        let faults = match &c.faults {
+            Some(f) => format!(" faults={f:?} staleness_bound={}", c.staleness_bound),
+            None => String::new(),
+        };
         format!(
             "workload={:?} strategy={:?} n={} epochs={} seed={} lr={:?} shard={:?} \
              test_frac={} eval_every={} metrics_every={} max_iters={:?} track={:?} \
-             central_momentum={} drop_prob={} fused={} fused_momentum={}{}",
+             central_momentum={} drop_prob={} fused={} fused_momentum={}{}{faults}",
             self.workload,
             cell.strategy,
             c.n_workers,

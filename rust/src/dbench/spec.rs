@@ -293,6 +293,13 @@ pub struct ExperimentSpec {
     /// Pipeline bucket width in KB (`0` = default 256 KB; see
     /// [`TrainConfig::bucket_kb`]).
     pub bucket_kb: usize,
+    /// Deterministic fault plan applied to every decentralized cell
+    /// (TOML `[faults]` section / CLI `--faults k=v,…`); `None` = the
+    /// fault-free paths, bit-for-bit. See [`crate::simnet::FaultPlan`].
+    pub faults: Option<crate::simnet::FaultPlan>,
+    /// Staleness bound of fault-injected gossip (TOML/CLI
+    /// `staleness_bound`; see [`TrainConfig::staleness_bound`]).
+    pub staleness_bound: usize,
 }
 
 impl ExperimentSpec {
@@ -329,6 +336,8 @@ impl ExperimentSpec {
             fused: false,
             pipeline: false,
             bucket_kb: 0,
+            faults: None,
+            staleness_bound: 0,
         }
     }
 
@@ -444,6 +453,8 @@ impl ExperimentSpec {
             pipeline: self.pipeline,
             bucket_kb: self.bucket_kb,
             record_path: None,
+            faults: self.faults.clone(),
+            staleness_bound: self.staleness_bound,
         }
     }
 
@@ -531,6 +542,17 @@ impl ExperimentSpec {
         }
         if let Some(v) = doc.get("bucket_kb").and_then(TomlValue::as_int) {
             spec.bucket_kb = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get("staleness_bound").and_then(TomlValue::as_int) {
+            spec.staleness_bound = v.max(0) as usize;
+        }
+        // The `[faults]` section as a FaultPlan (unknown keys error
+        // inside `from_table`, like every param table here).
+        if let Some(section) = doc.section("faults") {
+            let table = ParamTable::from_toml_section(section);
+            let plan = crate::simnet::FaultPlan::from_table(&table)
+                .map_err(|e| AdaError::Config(format!("[faults]: {e}")))?;
+            spec.faults = Some(plan);
         }
         if let Some(TomlValue::Arr(fs)) = doc.get("flavors") {
             let mut flavors = Vec::new();
@@ -756,6 +778,40 @@ mod tests {
             "base = \"densenet\"\n[topology.ada]\nk0 = 4\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn toml_faults_section_builds_a_plan() {
+        let spec = ExperimentSpec::from_toml_str(
+            r#"
+            base = "resnet20"
+            staleness_bound = 2
+
+            [faults]
+            seed = 9
+            drop_prob = 0.1
+            crash = "1@1:2"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.staleness_bound, 2);
+        let plan = spec.faults.as_ref().expect("plan parsed");
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.drop_prob, 0.1);
+        assert_eq!(plan.crashes.len(), 1);
+        // The plan reaches every per-cell TrainConfig.
+        let cfg = spec.train_config(8);
+        assert_eq!(cfg.staleness_bound, 2);
+        assert_eq!(cfg.faults, spec.faults);
+        // Typos inside [faults] are loud, and a spec without the
+        // section stays fault-free.
+        assert!(ExperimentSpec::from_toml_str(
+            "base = \"resnet20\"\n[faults]\ndropprob = 0.5\n"
+        )
+        .is_err());
+        let bare = ExperimentSpec::from_toml_str("base = \"resnet20\"").unwrap();
+        assert!(bare.faults.is_none());
+        assert_eq!(bare.staleness_bound, 0);
     }
 
     #[test]

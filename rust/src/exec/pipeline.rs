@@ -430,6 +430,53 @@ mod tests {
     }
 
     #[test]
+    fn consumer_panic_mid_bucket_does_not_deadlock_the_round() {
+        // Fault-plane satellite: one consumer dies partway through its
+        // bucket while its siblings are still blocked on rows the
+        // producer has yet to retire. The round must run to completion
+        // — producer finishes, every surviving consumer drains, the
+        // barrier releases — and only then re-raise the panic on the
+        // caller. A hang here is the failure mode this pins down.
+        let engine = ExecEngine::new(3);
+        let survivors = AtomicUsize::new(0);
+        let produced = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let survivors = &survivors;
+            let consumers: Vec<_> = (0..4)
+                .map(|i| {
+                    move |p: &Progress| {
+                        if i == 0 {
+                            // Dies after its first row, mid-bucket.
+                            p.wait_for(1);
+                            panic!("bucket boom");
+                        }
+                        // Siblings wait on rows produced *after* the
+                        // panic has already happened.
+                        for row in 1..=8 {
+                            p.wait_for(row);
+                        }
+                        survivors.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            run_overlapped(&engine, consumers, |p: &Progress| {
+                for row in 1..=8 {
+                    produced.fetch_add(1, Ordering::SeqCst);
+                    p.retire(row);
+                }
+            });
+        }));
+        let payload = result.expect_err("consumer panic must reach the caller");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"bucket boom"));
+        assert_eq!(produced.load(Ordering::SeqCst), 8, "producer must finish");
+        assert_eq!(
+            survivors.load(Ordering::SeqCst),
+            3,
+            "surviving consumers must all drain before the re-raise"
+        );
+    }
+
+    #[test]
     fn consumer_panic_is_reraised_on_caller() {
         let engine = ExecEngine::new(2);
         let consumers: Vec<_> = (0..2)

@@ -103,6 +103,37 @@ pub struct GossipEngine {
     /// An overlapped round has filled `scratch` and awaits
     /// [`GossipEngine::publish_overlapped`].
     pending_publish: bool,
+    /// Per-edge last-*delivered* peer rows with age counters — the
+    /// bounded-staleness path's mailbox ([`GossipEngine::mix_stale`]).
+    stale: StaleBuffer,
+}
+
+/// Mailbox of last-delivered peer rows for bounded-staleness gossip:
+/// one slot per directed edge `(dst, src)`, holding the copy of `src`'s
+/// row that last reached `dst` plus the number of rounds since that
+/// delivery. A missing slot means the edge has never delivered — the
+/// peer is simply renormalized away, exactly like an inactive neighbor
+/// in [`GossipEngine::mix_active`]. `BTreeMap` keeps iteration order
+/// deterministic regardless of insertion history.
+#[derive(Debug, Default)]
+struct StaleBuffer {
+    slots: std::collections::BTreeMap<(u32, u32), StaleSlot>,
+}
+
+#[derive(Debug)]
+struct StaleSlot {
+    row: Vec<f32>,
+    age: usize,
+}
+
+impl StaleBuffer {
+    fn slot(&self, dst: usize, src: usize) -> Option<&StaleSlot> {
+        self.slots.get(&(dst as u32, src as u32))
+    }
+
+    fn is_fresh(&self, dst: usize, src: usize) -> bool {
+        self.slot(dst, src).is_some_and(|s| s.age == 0)
+    }
 }
 
 impl GossipEngine {
@@ -775,6 +806,164 @@ impl GossipEngine {
     pub fn has_pending_publish(&self) -> bool {
         self.pending_publish
     }
+
+    /// Deliver this round's messages into the stale buffer. For every
+    /// directed graph edge `j → i` (neighbor `j` of destination `i`),
+    /// `delivered(j, i)` decides whether `j`'s current row reaches `i`:
+    /// delivered edges overwrite the slot and reset its age to 0,
+    /// undelivered edges age their existing slot by one round (a
+    /// never-delivered edge stays absent). The simulated fault plane
+    /// (`crate::simnet::FaultPlan`) is the intended `delivered` oracle;
+    /// the closure is called in a fixed `(dst asc, src asc)` order so
+    /// stateful oracles stay deterministic too.
+    ///
+    /// Call after the local step and before [`GossipEngine::mix_stale`]
+    /// — the buffered copies are what peers *sent*, frozen even if the
+    /// sender keeps training.
+    pub fn ingest_stale<F>(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &ReplicaMatrix,
+        delivered: F,
+    ) where
+        F: Fn(usize, usize) -> bool,
+    {
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        for i in 0..n {
+            for (j, _) in graph.row(i) {
+                if j == i {
+                    continue;
+                }
+                if delivered(j, i) {
+                    let slot = self
+                        .stale
+                        .slots
+                        .entry((i as u32, j as u32))
+                        .or_insert_with(|| StaleSlot { row: Vec::new(), age: 0 });
+                    slot.row.clear();
+                    slot.row.extend_from_slice(replicas.row(j));
+                    slot.age = 0;
+                } else if let Some(slot) =
+                    self.stale.slots.get_mut(&(i as u32, j as u32))
+                {
+                    slot.age = slot.age.saturating_add(1);
+                }
+            }
+        }
+    }
+
+    /// **Bounded-staleness gossip round**: like [`GossipEngine::mix`],
+    /// but each destination averages against the last-*delivered* copy
+    /// of every peer row (the stale buffer filled by
+    /// [`GossipEngine::ingest_stale`]) instead of the live stack. A
+    /// peer counts only if its slot exists, its age is ≤ `bound`
+    /// rounds, and `active` (if given) marks it up; excluded peers are
+    /// renormalized away exactly like [`GossipEngine::mix_active`]'s
+    /// dropped participants, so late or lost messages degrade the round
+    /// gracefully instead of stalling it. The self term always reads
+    /// the live local row. A row whose peers are all stale renormalizes
+    /// to its own value; a destination marked inactive copies through
+    /// untouched.
+    ///
+    /// When every graph edge is fresh (age 0 — the fault-free steady
+    /// state), the round delegates to [`GossipEngine::mix`] /
+    /// [`GossipEngine::mix_active`], buffered copies being bitwise
+    /// equal to the live rows — so a quiet `FaultPlan` with any bound
+    /// reproduces the phased path's floats exactly (test-enforced).
+    /// Like every kernel here, results are bit-identical for any
+    /// thread count: the fold order per output element is fixed by the
+    /// graph row alone.
+    pub fn mix_stale(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut ReplicaMatrix,
+        active: Option<&[bool]>,
+        bound: usize,
+    ) {
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        if let Some(a) = active {
+            assert_eq!(a.len(), n, "active mask must match graph size");
+        }
+        if n == 0 {
+            return;
+        }
+        let p = replicas.p();
+        // Slots from a run with a different parameter count are
+        // meaningless; drop them so every surviving row slices cleanly.
+        self.stale.slots.retain(|_, s| s.row.len() == p);
+
+        let all_fresh = (0..n)
+            .all(|i| graph.row(i).all(|(j, _)| j == i || self.stale.is_fresh(i, j)));
+        if all_fresh {
+            // Fresh buffered copies are bitwise equal to the live rows,
+            // so the phased kernels (incl. the uniform-complete fast
+            // path and mix_active's renormalization) give the exact
+            // same floats with one less indirection.
+            return match active.filter(|a| a.iter().any(|&x| !x)) {
+                Some(a) => self.mix_active(graph, replicas, a),
+                None => self.mix(graph, replicas),
+            };
+        }
+
+        self.ensure_scratch(n, p);
+        self.ensure_part_ranges(p);
+        stale_totals_into(graph, &self.stale, active, bound, &mut self.totals);
+        {
+            let Self { scratch, exec, part_ranges, totals, stale, .. } = &mut *self;
+            let reps: &ReplicaMatrix = replicas;
+            let totals: &[f32] = totals;
+            let stale: &StaleBuffer = stale;
+            let views = column_views(scratch.rows_mut(), part_ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .zip(part_ranges.iter().cloned())
+                .map(|(chunks, range)| {
+                    move || {
+                        mix_stale_tile(graph, reps, stale, active, totals, bound, chunks, range)
+                    }
+                })
+                .collect();
+            exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
+
+    /// Measured staleness over the graph's delivered edges: `(max age,
+    /// mean age)`, or `(None, None)` when nothing has ever been
+    /// delivered. Never-delivered edges are excluded (they have no age,
+    /// only absence) — the session feeds these into `TrainSignals` for
+    /// staleness-aware topology policies.
+    pub fn stale_stats(&self, graph: &CommGraph) -> (Option<usize>, Option<f64>) {
+        let mut max: Option<usize> = None;
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for i in 0..graph.n() {
+            for (j, _) in graph.row(i) {
+                if j == i {
+                    continue;
+                }
+                if let Some(s) = self.stale.slot(i, j) {
+                    max = Some(max.map_or(s.age, |m| m.max(s.age)));
+                    sum += s.age as f64;
+                    count += 1;
+                }
+            }
+        }
+        (max, (count > 0).then(|| sum / count as f64))
+    }
+
+    /// Number of edges currently holding a delivered copy.
+    pub fn stale_edges(&self) -> usize {
+        self.stale.slots.len()
+    }
+
+    /// Forget every buffered peer row — the start-of-run state, used
+    /// when a session reuses one engine across independent runs.
+    pub fn reset_stale(&mut self) {
+        self.stale.slots.clear();
+    }
 }
 
 /// One worker's share of a mix round: the blocked SpMM over its column
@@ -862,6 +1051,95 @@ fn active_totals_into(graph: &CommGraph, active: &[bool], out: &mut Vec<f32>) {
             .map(|(_, w)| w)
             .sum::<f32>()
     }));
+}
+
+/// Per-row considered weight mass for the bounded-staleness round:
+/// `T_i = W_ii + Σ_{j considered} W_ij`, where a neighbor `j` is
+/// considered iff its slot exists with age ≤ `bound` and `active` (if
+/// any) marks it up. Must match [`mix_stale_tile`]'s predicate exactly
+/// or renormalization diverges — both route through
+/// [`stale_considered`].
+fn stale_totals_into(
+    graph: &CommGraph,
+    stale: &StaleBuffer,
+    active: Option<&[bool]>,
+    bound: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.extend((0..graph.n()).map(|i| {
+        graph
+            .row(i)
+            .filter(|&(j, _)| j == i || stale_considered(stale, active, bound, i, j))
+            .map(|(_, w)| w)
+            .sum::<f32>()
+    }));
+}
+
+/// The single considered-peer predicate shared by [`stale_totals_into`]
+/// and [`mix_stale_tile`].
+fn stale_considered(
+    stale: &StaleBuffer,
+    active: Option<&[bool]>,
+    bound: usize,
+    dst: usize,
+    src: usize,
+) -> bool {
+    active.is_none_or(|a| a[src]) && stale.slot(dst, src).is_some_and(|s| s.age <= bound)
+}
+
+/// [`mix_active_tile`]'s shape for the bounded-staleness round: the
+/// self term reads the **live** local row, every neighbor term reads
+/// its buffered last-delivered copy, non-considered peers are skipped
+/// and renormalized away via `totals`. Inactive destinations copy
+/// through; a destination with zero considered mass (possible when the
+/// self weight is 0 and every peer is stale) keeps its local row.
+#[allow(clippy::too_many_arguments)]
+fn mix_stale_tile(
+    graph: &CommGraph,
+    replicas: &ReplicaMatrix,
+    stale: &StaleBuffer,
+    active: Option<&[bool]>,
+    totals: &[f32],
+    bound: usize,
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        for (i, out_row) in out_rows.iter_mut().enumerate() {
+            let out = &mut out_row[lo..hi];
+            let total = totals[i];
+            if active.is_some_and(|a| !a[i]) || total <= 0.0 {
+                out.copy_from_slice(&replicas.row(i)[start..end]);
+                continue;
+            }
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                let src: &[f32] = if j == i {
+                    replicas.row(i)
+                } else if stale_considered(stale, active, bound, i, j) {
+                    &stale.slot(i, j).expect("considered slot exists").row
+                } else {
+                    continue;
+                };
+                let w = w / total;
+                let s = &src[start..end];
+                if first {
+                    simd::scale(out, s, w);
+                    first = false;
+                } else {
+                    simd::axpy(out, s, w);
+                }
+            }
+            if first {
+                out.copy_from_slice(&replicas.row(i)[start..end]);
+            }
+        }
+        start = end;
+    }
 }
 
 /// Per-output-row pipeline dependency: mixing row `i` needs row `i`
@@ -1863,6 +2141,166 @@ mod tests {
         assert!(!eng.has_pending_publish(), "failed round must not publish");
         // The engine stays usable for a phased round afterwards.
         eng.mix(&g, &mut reps);
+    }
+
+    #[test]
+    fn overlapped_producer_panic_leaves_engine_reusable_without_publish() {
+        // Satellite of the fault PR: a panicking local step (not just an
+        // Err) must unwind out of the overlapped round with nothing
+        // published and the engine still good for the next round.
+        let n = 6;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let src = replicas(n, 129, 89);
+        let mut reps = src.clone();
+        let mut eng = GossipEngine::new();
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.mix_overlapped(&g, &mut reps, None, |w, row| {
+                if w == 2 {
+                    panic!("producer died mid-round");
+                }
+                fake_local_step(w, row);
+                Ok(())
+            })
+        }));
+        assert!(unwound.is_err(), "producer panic must propagate");
+        assert!(!eng.has_pending_publish(), "panicked round must not publish");
+        // The engine stays usable for a phased round afterwards.
+        eng.mix(&g, &mut reps);
+    }
+
+    #[test]
+    fn stale_mix_all_fresh_is_bit_identical_to_phased() {
+        // A fully-delivered buffer at any bound must reproduce the
+        // phased kernels exactly — acceptance criterion (b)'s kernel
+        // half — including the uniform-complete fast path and the
+        // partial-participation renormalization.
+        for kind in [GraphKind::Ring, GraphKind::Exponential, GraphKind::Complete] {
+            let n = 8;
+            let g = CommGraph::build(kind, n).unwrap();
+            let src = replicas(n, 37, 5);
+
+            let mut phased = src.clone();
+            GossipEngine::new().mix(&g, &mut phased);
+
+            let mut staled = src.clone();
+            let mut eng = GossipEngine::new();
+            eng.ingest_stale(&g, &staled, |_, _| true);
+            eng.mix_stale(&g, &mut staled, None, 0);
+            assert_eq!(phased, staled, "{kind}: fresh stale round must equal mix");
+
+            let active: Vec<bool> = (0..n).map(|i| i != 3).collect();
+            let mut phased_a = src.clone();
+            GossipEngine::new().mix_active(&g, &mut phased_a, &active);
+            let mut staled_a = src.clone();
+            let mut eng_a = GossipEngine::new();
+            eng_a.ingest_stale(&g, &staled_a, |_, _| true);
+            eng_a.mix_stale(&g, &mut staled_a, Some(&active), 0);
+            assert_eq!(phased_a, staled_a, "{kind}: fresh active stale round");
+        }
+    }
+
+    #[test]
+    fn stale_mix_renormalizes_over_delivered_peers() {
+        // Complete graph n=4, rows = node index. Destination 0 only
+        // ever hears from node 1: its round averages over {self, 1}
+        // with renormalized uniform weights → (0 + 1) / 2.
+        let n = 4;
+        let g = CommGraph::build(GraphKind::Complete, n).unwrap();
+        let rows: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32]).collect();
+        let mut reps = ReplicaMatrix::from_rows(&rows);
+        let mut eng = GossipEngine::new();
+        eng.ingest_stale(&g, &reps, |src, dst| dst != 0 || src == 1);
+        eng.mix_stale(&g, &mut reps, None, 0);
+        assert!((reps[0][0] - 0.5).abs() < 1e-6, "dst 0 got {}", reps[0][0]);
+        // Other destinations heard everyone: full mean 1.5.
+        for i in 1..n {
+            assert!((reps[i][0] - 1.5).abs() < 1e-6, "dst {i} got {}", reps[i][0]);
+        }
+    }
+
+    #[test]
+    fn stale_rows_age_out_beyond_bound() {
+        let n = 4;
+        let g = CommGraph::build(GraphKind::Complete, n).unwrap();
+        let rows: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32]).collect();
+        let snapshot = ReplicaMatrix::from_rows(&rows);
+
+        let run = |bound: usize| {
+            let mut eng = GossipEngine::new();
+            // Round 1: everything delivered (buffered copies = 0,1,2,3).
+            eng.ingest_stale(&g, &snapshot, |_, _| true);
+            // The senders keep training locally…
+            let drifted: Vec<Vec<f32>> =
+                (0..n).map(|i| vec![i as f32 + 100.0]).collect();
+            let mut live = ReplicaMatrix::from_rows(&drifted);
+            // …but round 2 delivers nothing, so every slot ages to 1.
+            eng.ingest_stale(&g, &live, |_, _| false);
+            eng.mix_stale(&g, &mut live, None, bound);
+            live
+        };
+
+        // Bound 1 admits the age-1 copies: each destination mixes its
+        // live self row with the *round-1 snapshots* of its peers.
+        // dst 0: (100 + 1 + 2 + 3) / 4 = 26.5.
+        let within = run(1);
+        assert!((within[0][0] - 26.5).abs() < 1e-5, "got {}", within[0][0]);
+
+        // Bound 0 rejects them: every row renormalizes to itself.
+        let beyond = run(0);
+        for i in 0..n {
+            assert_eq!(beyond[i][0], i as f32 + 100.0, "dst {i} must keep its row");
+        }
+    }
+
+    #[test]
+    fn stale_mix_is_bit_identical_across_threads() {
+        let n = 8;
+        let p = 2 * MIN_COLS_PER_WORKER + 7;
+        let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+        let early = replicas(n, p, 61);
+        let src = replicas(n, p, 62);
+        // Deterministic partial delivery pattern with genuinely stale
+        // survivors: deliver everything once from an earlier snapshot,
+        // then a second round where only some edges deliver.
+        let run = |threads: usize| {
+            let mut eng = GossipEngine::with_threads(threads);
+            eng.ingest_stale(&g, &early, |_, _| true);
+            let mut reps = src.clone();
+            eng.ingest_stale(&g, &reps, |s, d| (s + d) % 3 != 0);
+            eng.mix_stale(&g, &mut reps, None, 1);
+            reps
+        };
+        let one = run(1);
+        assert!(one != src, "stale round must actually mix");
+        for threads in [2, 4, 8] {
+            assert_eq!(one, run(threads), "stale mix differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn stale_mix_with_no_deliveries_keeps_rows_and_stats_track_ages() {
+        let n = 5;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let src = replicas(n, 17, 33);
+        let mut reps = src.clone();
+        let mut eng = GossipEngine::new();
+        assert_eq!(eng.stale_stats(&g), (None, None), "empty buffer has no ages");
+        // Nothing ever delivered: every row renormalizes to itself
+        // (self weight only) — bitwise, since w/total == 1.0 scales.
+        eng.ingest_stale(&g, &reps, |_, _| false);
+        eng.mix_stale(&g, &mut reps, None, 3);
+        assert_eq!(reps, src, "no-delivery round must keep all rows");
+        assert_eq!(eng.stale_edges(), 0);
+
+        // One full delivery, then two silent rounds: ages reach 2.
+        eng.ingest_stale(&g, &reps, |_, _| true);
+        eng.ingest_stale(&g, &reps, |_, _| false);
+        eng.ingest_stale(&g, &reps, |_, _| false);
+        let (max, mean) = eng.stale_stats(&g);
+        assert_eq!(max, Some(2));
+        assert_eq!(mean, Some(2.0));
+        eng.reset_stale();
+        assert_eq!(eng.stale_stats(&g), (None, None));
     }
 
     #[test]

@@ -35,6 +35,12 @@ ada <command> [options]
     --pipeline       overlap gossip communication with local compute
                      bucket-by-bucket (bit-identical to the phased path)
     --bucket-kb N    pipeline bucket width in KB (0 = default 256 KB)
+    --faults k=v,... deterministic fault plan (seed, drop_prob,
+                     straggler_prob, straggler_iters, straggler_slowdown,
+                     link_jitter, crash=n@from:to;.., recover_dir);
+                     decentralized flavors only
+    --staleness-bound N  fault-injected gossip mixes peer rows up to N
+                     rounds old (0 = only this round's deliveries)
   strategies       list the registered SGD strategy names (open registry)
   topologies       list the registered topology policy names
   graphs           print Table 1 for --n nodes (default 96)
@@ -141,6 +147,11 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     spec.fused = args.has_flag("fused");
     spec.pipeline = args.has_flag("pipeline");
     spec.bucket_kb = args.get_parse("bucket-kb", 0)?;
+    if let Some(kv) = args.get("faults") {
+        let table = ada_dist::util::params::ParamTable::parse_kv(kv)?;
+        spec.faults = Some(ada_dist::simnet::FaultPlan::from_table(&table)?);
+    }
+    spec.staleness_bound = args.get_parse("staleness-bound", 0)?;
     if let Some(t) = args.get("topology") {
         // Resolved by name through the topology registry; `ada
         // topologies` lists the choices. C_complete stays centralized.

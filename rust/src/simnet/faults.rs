@@ -1,0 +1,441 @@
+//! [`FaultPlan`] — a seeded, stateless schedule of injected faults.
+//!
+//! The plan is the pure-function core of the fault plane: every query
+//! (`delivered`, `straggler_factor`, `is_down`, `link_scale`) is a
+//! deterministic function of `(plan seed, coordinates)` computed by
+//! hashing the coordinates through a SplitMix64 finalizer chain. No
+//! state is consumed, so the training loop may evaluate faults in any
+//! order — per tile, per thread, per retry — and still produce
+//! bit-identical runs at any thread count (the same contract as the
+//! execution engine, test-enforced in `rust/tests/fault_injection.rs`).
+//!
+//! Fault kinds:
+//!
+//! * **message drops** — per-`(epoch, iter, src, dst)` Bernoulli draws;
+//!   a dropped edge leaves the receiver mixing against its stale buffer
+//!   ([`crate::gossip::GossipEngine::mix_stale`]);
+//! * **stragglers** — per-node slowdown windows of
+//!   [`straggler_iters`](FaultPlan::straggler_iters) iterations; a slow
+//!   node's outgoing messages miss the round and its factor feeds
+//!   [`crate::topology::TrainSignals::straggler_factor`];
+//! * **link jitter** — per-edge latency/bandwidth scale draws consumed
+//!   by [`crate::simnet::SimNet::gossip_round_with`];
+//! * **crash/restart and join/leave** — explicit [`CrashEvent`]s with
+//!   epoch granularity (`down_from = 0` models a late join); recovery
+//!   goes through the checkpoint / neighbor-average path in the
+//!   session.
+
+use crate::error::{AdaError, Result};
+use crate::util::params::ParamTable;
+use std::path::PathBuf;
+
+/// One node outage: the node is down for epochs
+/// `down_from <= e < restart_at`. `restart_at = usize::MAX` (spelled
+/// `-` in the compact syntax) never restarts; `down_from = 0` models a
+/// cold join at `restart_at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashEvent {
+    /// Node (graph vertex) index.
+    pub node: usize,
+    /// First epoch the node is down.
+    pub down_from: usize,
+    /// First epoch the node is back up (`usize::MAX` = never).
+    pub restart_at: usize,
+}
+
+impl CrashEvent {
+    fn parse(text: &str) -> Result<CrashEvent> {
+        let err = || {
+            AdaError::Config(format!(
+                "crash event {text:?} must be node@down_from:restart_at \
+                 (restart_at `-` = never), e.g. 3@2:4"
+            ))
+        };
+        let (node, span) = text.split_once('@').ok_or_else(err)?;
+        let (from, until) = span.split_once(':').ok_or_else(err)?;
+        let node: usize = node.trim().parse().map_err(|_| err())?;
+        let down_from: usize = from.trim().parse().map_err(|_| err())?;
+        let restart_at = match until.trim() {
+            "-" => usize::MAX,
+            s => s.parse().map_err(|_| err())?,
+        };
+        if restart_at <= down_from {
+            return Err(AdaError::Config(format!(
+                "crash event {text:?}: restart_at must be after down_from"
+            )));
+        }
+        Ok(CrashEvent { node, down_from, restart_at })
+    }
+}
+
+/// A seeded fault schedule — see the module docs. Construct with
+/// [`FaultPlan::quiet`] (no faults) or [`FaultPlan::from_table`] (the
+/// `[faults]` spec section / `--faults k=v,…` CLI form), then hand it
+/// to [`crate::coordinator::TrainConfig::faults`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of every stochastic draw (independent of the run seed, so
+    /// the same fault weather can be replayed over different runs).
+    pub seed: u64,
+    /// Per-(iteration, edge) probability that a message is dropped.
+    pub drop_prob: f64,
+    /// Per-(window, node) probability that the node straggles.
+    pub straggler_prob: f64,
+    /// Length of a straggler window in iterations (a slow node stays
+    /// slow for the whole window; `0` is treated as `1`).
+    pub straggler_iters: usize,
+    /// Compute-time multiplier of a straggling node (`> 1`). A
+    /// straggler's outgoing messages miss their round.
+    pub straggler_slowdown: f64,
+    /// Per-edge link-time jitter: each message's simulated transfer
+    /// time is scaled by `1 + link_jitter · U[0,1)`.
+    pub link_jitter: f64,
+    /// Scheduled node outages (crash/restart, join/leave).
+    pub crashes: Vec<CrashEvent>,
+    /// Directory scanned for the newest usable checkpoint when a
+    /// crashed node restarts; `None` (or no usable file) cold-joins
+    /// from the neighbor-average row instead.
+    pub recover_dir: Option<PathBuf>,
+}
+
+/// SplitMix64 finalizer — the avalanche permutation behind every draw.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Top 53 bits as a uniform draw in `[0, 1)`.
+fn unit(key: u64) -> f64 {
+    (key >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (every query returns the fault-free
+    /// answer) — the identity element the bit-identity tests compare
+    /// against.
+    pub fn quiet() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_iters: 1,
+            straggler_slowdown: 1.0,
+            link_jitter: 0.0,
+            crashes: Vec::new(),
+            recover_dir: None,
+        }
+    }
+
+    /// Whether every query is guaranteed fault-free.
+    pub fn is_quiet(&self) -> bool {
+        self.drop_prob == 0.0
+            && (self.straggler_prob == 0.0 || self.straggler_slowdown <= 1.0)
+            && self.link_jitter == 0.0
+            && self.crashes.is_empty()
+    }
+
+    /// Domain-separated key chain over up to four coordinates.
+    fn key(&self, domain: u64, a: u64, b: u64, c: u64, d: u64) -> u64 {
+        let mut h = mix64(self.seed ^ domain);
+        h = mix64(h ^ a);
+        h = mix64(h ^ b);
+        h = mix64(h ^ c);
+        mix64(h ^ d)
+    }
+
+    /// Whether the message `src → dst` of iteration `(epoch, iter)` is
+    /// delivered in its round (drops only — crash and straggler gating
+    /// is layered on top by the session).
+    pub fn delivered(&self, epoch: usize, iter: usize, src: usize, dst: usize) -> bool {
+        if self.drop_prob <= 0.0 {
+            return true;
+        }
+        let k = self.key(0xD809, epoch as u64, iter as u64, src as u64, dst as u64);
+        unit(k) >= self.drop_prob
+    }
+
+    /// Compute-time multiplier of `node` at `(epoch, iter)`: `1.0` when
+    /// healthy, [`straggler_slowdown`](FaultPlan::straggler_slowdown)
+    /// inside a straggler window. Windows are
+    /// [`straggler_iters`](FaultPlan::straggler_iters) long and drawn
+    /// per `(epoch, window, node)`.
+    pub fn straggler_factor(&self, epoch: usize, iter: usize, node: usize) -> f64 {
+        if self.straggler_prob <= 0.0 || self.straggler_slowdown <= 1.0 {
+            return 1.0;
+        }
+        let window = self.straggler_iters.max(1);
+        let w0 = iter - iter % window;
+        let k = self.key(0x51A6, epoch as u64, w0 as u64, node as u64, 0);
+        if unit(k) < self.straggler_prob {
+            self.straggler_slowdown
+        } else {
+            1.0
+        }
+    }
+
+    /// Whether `node` is down (crashed, or not yet joined) at `epoch`.
+    pub fn is_down(&self, epoch: usize, node: usize) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.node == node && c.down_from <= epoch && epoch < c.restart_at)
+    }
+
+    /// Whether `node` recovers at the start of `epoch` (it was down the
+    /// previous epoch and is up this one) — the session's trigger for
+    /// checkpoint / neighbor-average restoration.
+    pub fn recovers_at(&self, epoch: usize, node: usize) -> bool {
+        epoch > 0 && self.is_down(epoch - 1, node) && !self.is_down(epoch, node)
+    }
+
+    /// Simulated-time scale of the link `src → dst` at `(epoch, iter)`:
+    /// `1 + link_jitter · U[0,1)`.
+    pub fn link_scale(&self, epoch: usize, iter: usize, src: usize, dst: usize) -> f64 {
+        if self.link_jitter <= 0.0 {
+            return 1.0;
+        }
+        let k = self.key(0x7177, epoch as u64, iter as u64, src as u64, dst as u64);
+        1.0 + self.link_jitter * unit(k)
+    }
+
+    /// Validate against a run of `n` workers (crash events must name
+    /// real nodes).
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if !(0.0..1.0).contains(&self.drop_prob) {
+            return Err(AdaError::Config(format!(
+                "faults: drop_prob {} must be in [0, 1)",
+                self.drop_prob
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err(AdaError::Config(format!(
+                "faults: straggler_prob {} must be in [0, 1]",
+                self.straggler_prob
+            )));
+        }
+        if self.straggler_slowdown < 1.0 {
+            return Err(AdaError::Config(format!(
+                "faults: straggler_slowdown {} must be ≥ 1",
+                self.straggler_slowdown
+            )));
+        }
+        if self.link_jitter < 0.0 {
+            return Err(AdaError::Config(format!(
+                "faults: link_jitter {} must be ≥ 0",
+                self.link_jitter
+            )));
+        }
+        for c in &self.crashes {
+            if c.node >= n {
+                return Err(AdaError::Config(format!(
+                    "faults: crash event names node {} but the run has {n} workers",
+                    c.node
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build from a [`ParamTable`] — the `[faults]` TOML section and
+    /// the CLI `--faults k=v,…` form. Crash events use the compact
+    /// `node@down_from:restart_at` syntax, `;`-separated (`,` is the
+    /// CLI pair separator), `-` for never: `crash = "3@2:4;5@1:-"`.
+    /// Unknown keys error.
+    pub fn from_table(table: &ParamTable) -> Result<FaultPlan> {
+        table.expect_only(&[
+            "seed",
+            "drop_prob",
+            "straggler_prob",
+            "straggler_iters",
+            "straggler_slowdown",
+            "link_jitter",
+            "crash",
+            "recover_dir",
+        ])?;
+        let mut plan = FaultPlan::quiet();
+        plan.seed = table.usize_or("seed", 0)? as u64;
+        plan.drop_prob = table.f64_or("drop_prob", 0.0)?;
+        plan.straggler_prob = table.f64_or("straggler_prob", 0.0)?;
+        plan.straggler_iters = table.usize_or("straggler_iters", 1)?;
+        plan.straggler_slowdown = table.f64_or("straggler_slowdown", 1.0)?;
+        plan.link_jitter = table.f64_or("link_jitter", 0.0)?;
+        if let Some(spec) = table.get_str("crash")? {
+            for ev in spec.split(';').filter(|s| !s.trim().is_empty()) {
+                plan.crashes.push(CrashEvent::parse(ev.trim())?);
+            }
+        }
+        if let Some(dir) = table.get_str("recover_dir")? {
+            plan.recover_dir = Some(PathBuf::from(dir));
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_plan_injects_nothing() {
+        let p = FaultPlan::quiet();
+        assert!(p.is_quiet());
+        for (e, i) in [(0, 0), (3, 7), (100, 41)] {
+            assert!(p.delivered(e, i, 0, 1));
+            assert_eq!(p.straggler_factor(e, i, 2), 1.0);
+            assert_eq!(p.link_scale(e, i, 0, 1), 1.0);
+            assert!(!p.is_down(e, 0));
+        }
+    }
+
+    #[test]
+    fn queries_are_stateless_and_seeded() {
+        let mut p = FaultPlan::quiet();
+        p.seed = 7;
+        p.drop_prob = 0.5;
+        // Stateless: the same coordinates always answer the same.
+        let first = p.delivered(2, 3, 1, 4);
+        for _ in 0..10 {
+            assert_eq!(p.delivered(2, 3, 1, 4), first);
+        }
+        // Seeded: a different seed flips some answers, and both seeds
+        // land near the configured rate.
+        let mut q = p.clone();
+        q.seed = 8;
+        let count = |plan: &FaultPlan| {
+            let mut delivered = 0;
+            for e in 0..10 {
+                for i in 0..10 {
+                    for s in 0..4 {
+                        for d in 0..4 {
+                            if s != d && plan.delivered(e, i, s, d) {
+                                delivered += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            delivered
+        };
+        let (a, b) = (count(&p), count(&q));
+        let total = 10 * 10 * 4 * 3;
+        for c in [a, b] {
+            assert!(
+                (total / 3..=2 * total / 3).contains(&c),
+                "drop rate far from 0.5: {c}/{total}"
+            );
+        }
+        let mut differs = false;
+        'outer: for e in 0..10 {
+            for i in 0..10 {
+                if p.delivered(e, i, 0, 1) != q.delivered(e, i, 0, 1) {
+                    differs = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(differs, "different seeds must draw different weather");
+    }
+
+    #[test]
+    fn straggler_windows_hold_for_their_length() {
+        let mut p = FaultPlan::quiet();
+        p.seed = 3;
+        p.straggler_prob = 0.5;
+        p.straggler_iters = 4;
+        p.straggler_slowdown = 3.0;
+        let mut saw_slow = false;
+        for e in 0..8 {
+            for w0 in (0..32).step_by(4) {
+                let f = p.straggler_factor(e, w0, 1);
+                saw_slow |= f > 1.0;
+                for i in w0..w0 + 4 {
+                    assert_eq!(
+                        p.straggler_factor(e, i, 1),
+                        f,
+                        "factor must be constant inside a window"
+                    );
+                }
+            }
+        }
+        assert!(saw_slow, "p=0.5 over 64 windows must slow at least once");
+    }
+
+    #[test]
+    fn crash_schedule_and_recovery_edges() {
+        let mut p = FaultPlan::quiet();
+        p.crashes = vec![
+            CrashEvent { node: 2, down_from: 1, restart_at: 3 },
+            CrashEvent { node: 5, down_from: 2, restart_at: usize::MAX },
+            CrashEvent { node: 0, down_from: 0, restart_at: 2 }, // late join
+        ];
+        assert!(!p.is_quiet());
+        assert!(!p.is_down(0, 2) && p.is_down(1, 2) && p.is_down(2, 2) && !p.is_down(3, 2));
+        assert!(p.is_down(100, 5), "`-` never restarts");
+        assert!(p.is_down(0, 0) && !p.is_down(2, 0), "cold join");
+        assert!(p.recovers_at(3, 2));
+        assert!(!p.recovers_at(2, 2) && !p.recovers_at(4, 2));
+        assert!(p.recovers_at(2, 0));
+        assert!(!p.recovers_at(0, 0), "epoch 0 has no previous epoch");
+    }
+
+    #[test]
+    fn link_scale_is_bounded_by_jitter() {
+        let mut p = FaultPlan::quiet();
+        p.seed = 9;
+        p.link_jitter = 0.5;
+        for e in 0..5 {
+            for i in 0..5 {
+                let s = p.link_scale(e, i, 0, 1);
+                assert!((1.0..1.5).contains(&s), "scale {s} out of [1, 1.5)");
+            }
+        }
+    }
+
+    #[test]
+    fn from_table_parses_and_rejects_typos() {
+        let t = ParamTable::parse_kv(
+            "seed=7,drop_prob=0.1,straggler_prob=0.2,straggler_iters=3,\
+             straggler_slowdown=2.5,link_jitter=0.3,crash=3@2:4;1@0:-",
+        )
+        .unwrap();
+        let p = FaultPlan::from_table(&t).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop_prob, 0.1);
+        assert_eq!(p.straggler_prob, 0.2);
+        assert_eq!(p.straggler_iters, 3);
+        assert_eq!(p.straggler_slowdown, 2.5);
+        assert_eq!(p.link_jitter, 0.3);
+        assert_eq!(
+            p.crashes,
+            vec![
+                CrashEvent { node: 3, down_from: 2, restart_at: 4 },
+                CrashEvent { node: 1, down_from: 0, restart_at: usize::MAX },
+            ]
+        );
+        p.validate(8).unwrap();
+        assert!(p.validate(2).is_err(), "crash node out of range");
+
+        assert!(FaultPlan::from_table(&ParamTable::parse_kv("dropprob=0.1").unwrap()).is_err());
+        assert!(FaultPlan::from_table(&ParamTable::parse_kv("crash=3@4:2").unwrap()).is_err());
+        assert!(FaultPlan::from_table(&ParamTable::parse_kv("crash=oops").unwrap()).is_err());
+
+        let empty = FaultPlan::from_table(&ParamTable::new()).unwrap();
+        assert_eq!(empty, FaultPlan::quiet());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_probabilities() {
+        let mut p = FaultPlan::quiet();
+        p.drop_prob = 1.0;
+        assert!(p.validate(4).is_err());
+        p.drop_prob = 0.2;
+        p.straggler_slowdown = 0.5;
+        assert!(p.validate(4).is_err());
+        p.straggler_slowdown = 2.0;
+        p.link_jitter = -0.1;
+        assert!(p.validate(4).is_err());
+        p.link_jitter = 0.0;
+        p.validate(4).unwrap();
+    }
+}

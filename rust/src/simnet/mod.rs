@@ -8,6 +8,10 @@
 //! we compute it exactly (α–β model: `time = latency + bytes/bandwidth`
 //! per message, per-GPU serialized sends, cluster time = max over GPUs).
 
+mod faults;
+
+pub use faults::{CrashEvent, FaultPlan};
+
 use crate::graph::CommGraph;
 
 /// Link constants of the modeled cluster.
@@ -84,6 +88,20 @@ impl SimNet {
     /// f32 parameters: every GPU sends its parameter vector to each
     /// out-neighbor; sends from one GPU serialize, GPUs overlap.
     pub fn gossip_round(&self, graph: &CommGraph, param_count: usize) -> CommCost {
+        self.gossip_round_with(graph, param_count, |_, _| 1.0)
+    }
+
+    /// [`SimNet::gossip_round`] with a per-link time scale — the hook
+    /// the fault plane uses to inject link jitter
+    /// ([`FaultPlan::link_scale`]): each message's transfer time is
+    /// multiplied by `link_scale(src, dst)`; byte counts are unchanged
+    /// (jitter slows links, it doesn't grow messages).
+    pub fn gossip_round_with(
+        &self,
+        graph: &CommGraph,
+        param_count: usize,
+        link_scale: impl Fn(usize, usize) -> f64,
+    ) -> CommCost {
         let bytes_per_msg = 4 * param_count as u64;
         let mut worst = 0.0f64;
         let mut inter = 0u64;
@@ -91,7 +109,7 @@ impl SimNet {
         for i in 0..graph.n() {
             let mut t = 0.0;
             for &j in graph.neighbors_of(i) {
-                t += self.spec.p2p_time(i, j, bytes_per_msg);
+                t += self.spec.p2p_time(i, j, bytes_per_msg) * link_scale(i, j);
                 total += bytes_per_msg;
                 if self.spec.node_of(i) != self.spec.node_of(j) {
                     inter += bytes_per_msg;
@@ -107,8 +125,15 @@ impl SimNet {
     }
 
     /// Cost of one **ring allreduce** over all `n` GPUs (the centralized
-    /// `C_complete` baseline, NCCL-style): `2(n−1)` pipeline steps each
-    /// moving `bytes/n`, bound by the slowest link in the ring.
+    /// `C_complete` baseline, NCCL-style): the vector splits into `n`
+    /// chunks (the first `bytes mod n` chunks one byte larger), and each
+    /// GPU pipelines `n−1` reduce-scatter steps then `n−1` all-gather
+    /// steps along the ring. Byte counts are exact integer sums per
+    /// chunk and per hop: in the reduce-scatter phase GPU `h` sends
+    /// every chunk except `(h+1) mod n` across hop `h → h+1`, in the
+    /// all-gather phase every chunk except `(h+2) mod n` — so the two
+    /// directions contribute *different* chunk sets to an inter-node
+    /// hop when chunks are uneven.
     pub fn allreduce(&self, n: usize, param_count: usize) -> CommCost {
         if n <= 1 {
             return CommCost {
@@ -118,7 +143,9 @@ impl SimNet {
             };
         }
         let bytes = 4 * param_count as u64;
-        let chunk = bytes as f64 / n as f64;
+        let nn = n as u64;
+        let (q, r) = (bytes / nn, bytes % nn);
+        let chunk_size = |c: usize| q + u64::from((c as u64) < r);
         // Slowest hop in the block-placement ring: inter-node whenever the
         // cluster spans > 1 node.
         let spans_nodes = self.spec.node_of(n - 1) > 0;
@@ -128,23 +155,21 @@ impl SimNet {
             (self.spec.intra_bw, self.spec.intra_lat)
         };
         let steps = 2 * (n - 1);
-        let time = steps as f64 * (lat + chunk / bw);
-        // Every GPU sends `chunk` per step.
-        let total = (steps * n) as f64 * chunk;
-        let inter_links = if spans_nodes {
-            // Ring over block placement crosses nodes 2·(#nodes) times
-            // per step direction; approximate with per-hop accounting.
-            let hops_inter = (0..n)
-                .filter(|&i| self.spec.node_of(i) != self.spec.node_of((i + 1) % n))
-                .count();
-            (steps * hops_inter) as f64 * chunk
-        } else {
-            0.0
-        };
+        let max_chunk = q + u64::from(r > 0);
+        let time = steps as f64 * (lat + max_chunk as f64 / bw);
+        // Each phase moves every chunk across n−1 of the n hops, so each
+        // GPU sends bytes − (one chunk) per phase: 2·(n−1)·bytes total.
+        let total = 2 * (nn - 1) * bytes;
+        // Hop h → (h+1) mod n carries, over both phases, all chunks
+        // except (h+1) mod n and all except (h+2) mod n.
+        let inter = (0..n)
+            .filter(|&h| self.spec.node_of(h) != self.spec.node_of((h + 1) % n))
+            .map(|h| 2 * bytes - chunk_size((h + 1) % n) - chunk_size((h + 2) % n))
+            .sum();
         CommCost {
             time_s: time,
-            inter_node_bytes: inter_links as u64,
-            total_bytes: total as u64,
+            inter_node_bytes: inter,
+            total_bytes: total,
         }
     }
 
@@ -240,6 +265,42 @@ mod tests {
         let cd = net.epoch_cost(&dense, p, 100);
         let cs = net.epoch_cost(&sparse, p, 100);
         assert!(cs < cd / 3.0, "k=2 must be ≳5× cheaper: {cs} vs {cd}");
+    }
+
+    #[test]
+    fn allreduce_byte_accounting_is_exact() {
+        let net = SimNet::new(ClusterSpec::summit());
+        // n=4, p=10: bytes=40, all intra-node → total 2·3·40, inter 0.
+        let c = net.allreduce(4, 10);
+        assert_eq!(c.total_bytes, 240);
+        assert_eq!(c.inter_node_bytes, 0);
+        // n=12, p=12: bytes=48 splits evenly (4 per chunk). The ring
+        // crosses nodes at hops 5→6 and 11→0; each inter hop carries
+        // 2·48 − 4 − 4 = 88 bytes.
+        let c = net.allreduce(12, 12);
+        assert_eq!(c.total_bytes, 2 * 11 * 48);
+        assert_eq!(c.inter_node_bytes, 176);
+        // n=12, p=13: bytes=52 = 4·12 + 4, so chunks 0–3 hold 5 bytes.
+        // Hop 5 skips chunks 6 and 7 (4+4): 104−8 = 96; hop 11 skips
+        // chunks 0 and 1 (5+5): 104−10 = 94 — the reduce-scatter vs
+        // all-gather direction split the truncating f64 version lost.
+        let c = net.allreduce(12, 13);
+        assert_eq!(c.total_bytes, 2 * 11 * 52);
+        assert_eq!(c.inter_node_bytes, 96 + 94);
+    }
+
+    #[test]
+    fn jittered_gossip_round_only_stretches_time() {
+        let net = SimNet::new(ClusterSpec::summit());
+        let g = CommGraph::build(GraphKind::Ring, 12).unwrap();
+        let base = net.gossip_round(&g, 1000);
+        let jittered = net.gossip_round_with(&g, 1000, |i, j| 1.0 + 0.5 * ((i + j) % 3) as f64);
+        assert!(jittered.time_s > base.time_s);
+        assert_eq!(jittered.total_bytes, base.total_bytes);
+        assert_eq!(jittered.inter_node_bytes, base.inter_node_bytes);
+        // A unit scale is exactly the plain round.
+        let unit = net.gossip_round_with(&g, 1000, |_, _| 1.0);
+        assert_eq!(unit, base);
     }
 
     #[test]

@@ -30,7 +30,9 @@
 //! or per-iteration), [`VarianceAdaptive`] (gini-triggered decay,
 //! Observation 4), [`ConsensusDecay`] (consensus-distance-triggered
 //! decay in the spirit of Kong et al. 2021), [`CommBudget`] (densest
-//! lattice affordable under a bytes-per-node budget), and
+//! lattice affordable under a bytes-per-node budget), [`StragglerAware`]
+//! (thins the graph while the fault plane reports slow nodes, re-densifies
+//! when they recover — driven by the per-iteration feedback channel), and
 //! [`FnSchedule`] (a closure adapter — the quickest way to register a
 //! custom graph sequence at runtime).
 
@@ -39,6 +41,7 @@ mod comm_budget;
 mod consensus_decay;
 mod one_peer;
 mod registry;
+mod straggler_aware;
 mod variance_adaptive;
 
 pub use ada::AdaSchedule;
@@ -46,6 +49,7 @@ pub use comm_budget::CommBudget;
 pub use consensus_decay::ConsensusDecay;
 pub use one_peer::OnePeerExponential;
 pub use registry::{registry, PolicyCtor, TopologyRegistry};
+pub use straggler_aware::StragglerAware;
 pub use variance_adaptive::VarianceAdaptive;
 
 use crate::error::Result;
@@ -104,6 +108,27 @@ pub struct TrainSignals {
     /// the recorder's own per-leg accounting; budget-style policies
     /// therefore budget each session leg, not the concatenated run.
     pub comm_bytes_per_node: u64,
+    /// `Some(iter)` when this bundle is a **per-iteration** feedback
+    /// tick from the fault plane (delivered only to policies that opt
+    /// in via [`TopologyPolicy::wants_iteration_signals`]); `None` on
+    /// the ordinary end-of-epoch bundle.
+    pub iteration: Option<usize>,
+    /// Per-node straggler slowdown factors for this iteration (`1.0` =
+    /// full speed, `> 1.0` = slowed by that factor, from the
+    /// `FaultPlan` straggler schedule). Empty outside fault-injection
+    /// runs and on epoch bundles.
+    pub straggler_factor: Vec<f64>,
+    /// Maximum per-edge staleness age (rounds since last delivery) over
+    /// the graph's delivered edges — `None` outside the
+    /// bounded-staleness path or before any delivery.
+    pub max_staleness: Option<usize>,
+    /// Mean per-edge staleness age over the same edges.
+    pub mean_staleness: Option<f64>,
+    /// Simulated wall-clock cost of the gossip exchange(s) this bundle
+    /// covers, in seconds, under the fault plane's α–β + jitter +
+    /// straggler model: one round for iteration bundles, the epoch's
+    /// total for epoch bundles. `None` outside fault-injection runs.
+    pub sim_delay_s: Option<f64>,
 }
 
 impl TrainSignals {
@@ -157,7 +182,20 @@ pub trait TopologyPolicy: Send {
         false
     }
 
-    /// End-of-epoch feedback. Default: ignored.
+    /// Whether this policy wants the fault plane's **per-iteration**
+    /// feedback ticks (straggler factors, measured staleness, simulated
+    /// delay — [`TrainSignals::iteration`] is `Some`). Off by default:
+    /// an iteration-rate `observe` call on every round is pure overhead
+    /// for epoch-granular policies, and outside fault-injection runs no
+    /// iteration bundles exist at all.
+    fn wants_iteration_signals(&self) -> bool {
+        false
+    }
+
+    /// End-of-epoch feedback — and, for policies that opted in via
+    /// [`TopologyPolicy::wants_iteration_signals`], per-iteration fault
+    /// ticks (distinguished by [`TrainSignals::iteration`]). Default:
+    /// ignored.
     fn observe(&mut self, _signals: &TrainSignals) {}
 
     /// Human-readable name for reports.
@@ -297,6 +335,11 @@ mod tests {
         assert_eq!(s.gini, None);
         assert_eq!(s.consensus_distance, None);
         assert_eq!(s.comm_bytes_per_node, 0);
+        assert_eq!(s.iteration, None, "default bundle is an epoch bundle");
+        assert!(s.straggler_factor.is_empty());
+        assert_eq!(s.max_staleness, None);
+        assert_eq!(s.mean_staleness, None);
+        assert_eq!(s.sim_delay_s, None);
         let s = TrainSignals::for_epoch_gini(3, 0.5);
         assert_eq!(s.epoch, 3);
         assert_eq!(s.gini, Some(0.5));

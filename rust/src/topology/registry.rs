@@ -20,10 +20,11 @@
 //! | `var_adaptive`    | `k0` (= n−1), `step` (= 2), `threshold` (= 0.002), `patience` (= 1) |
 //! | `consensus_decay` | `k0` (= n/2 — a complete lattice would zero the post-averaging signal), `step` (= 2), `threshold` (= 0.25), `patience` (= 1) |
 //! | `comm_budget`     | `budget_mb` (required), `k0` (= n−1)                   |
+//! | `straggler_aware` | `k0` (= n−1), `step` (= 2), `ema` (= 0.25), `threshold` (= 0.5), `patience` (= 1) |
 
 use super::{
-    AdaSchedule, CommBudget, ConsensusDecay, OnePeerExponential, StaticSchedule, TopologyPolicy,
-    VarianceAdaptive,
+    AdaSchedule, CommBudget, ConsensusDecay, OnePeerExponential, StaticSchedule, StragglerAware,
+    TopologyPolicy, VarianceAdaptive,
 };
 use crate::error::{AdaError, Result};
 use crate::graph::GraphKind;
@@ -179,6 +180,17 @@ pub fn registry() -> TopologyRegistry {
             t.usize_or("patience", 1)?,
         )))
     });
+    reg.register("straggler_aware", |n, t| {
+        t.expect_only(&["k0", "step", "ema", "threshold", "patience"])?;
+        Ok(Box::new(StragglerAware::new(
+            n,
+            t.usize_or("k0", default_k0(n))?,
+            t.usize_or("step", 2)?,
+            t.f64_or("ema", 0.25)?,
+            t.f64_or("threshold", 0.5)?,
+            t.usize_or("patience", 1)?,
+        )))
+    });
     reg.register("comm_budget", |n, t| {
         t.expect_only(&["budget_mb", "k0"])?;
         let budget_mb = t.need_f64("budget_mb", "topology comm_budget")?;
@@ -208,6 +220,7 @@ mod tests {
             "one_peer",
             "var_adaptive",
             "consensus_decay",
+            "straggler_aware",
         ] {
             let p = reg
                 .resolve(name, 16, &ParamTable::new())

@@ -1,0 +1,252 @@
+//! Straggler-aware adaptive schedule — the fault plane's consumer of
+//! the per-iteration feedback channel.
+//!
+//! "From Promise to Practice" (Wang et al. 2024) locates decentralized
+//! SGD's practical edge exactly where links and nodes are unreliable;
+//! this policy is the routing half of that argument. It keeps a
+//! per-node EMA of the fault plane's straggler slowdown factors
+//! (delivered every iteration via [`TrainSignals::straggler_factor`])
+//! and, at epoch granularity, thins the lattice while any node's
+//! smoothed excess slowness exceeds a threshold — a sparse graph bounds
+//! how many peers each round must hear from, so slow nodes stall fewer
+//! edges — then re-densifies once the cluster has been calm for
+//! `patience` epochs, recovering Ada-style connectivity when it is
+//! affordable again.
+
+use super::{TopologyPolicy, TrainSignals};
+use crate::error::Result;
+use crate::graph::{CommGraph, GraphKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Feedback controller that routes around slow nodes: dense lattice
+/// while the cluster is healthy, thinned by `step` after `patience`
+/// slow epochs, re-grown by `step` after `patience` calm ones.
+#[derive(Debug)]
+pub struct StragglerAware {
+    n: usize,
+    k0: usize,
+    /// Change k by this much per trigger (both directions).
+    step: usize,
+    /// EMA smoothing factor for the per-node slowness estimate.
+    alpha: f64,
+    /// Excess-slowness threshold: a node is "slow" while its smoothed
+    /// `factor − 1` exceeds this (e.g. 0.5 ⇒ ≥ 1.5× its normal time).
+    threshold: f64,
+    /// Consecutive slow (resp. calm) epochs before thinning
+    /// (resp. re-densifying).
+    patience: usize,
+    state: Mutex<State>,
+}
+
+#[derive(Debug)]
+struct State {
+    k: usize,
+    /// Per-node EMA of excess slowness (`factor − 1`).
+    slow: Vec<f64>,
+    /// Consecutive epochs with at least one slow node.
+    hot: usize,
+    /// Consecutive epochs with none.
+    cool: usize,
+    /// k effective per epoch, pinned as epoch bundles arrive (same
+    /// history discipline as `VarianceAdaptive`).
+    history: HashMap<usize, usize>,
+    cache: HashMap<usize, CommGraph>,
+}
+
+impl StragglerAware {
+    /// `threshold` is on the smoothed excess slowdown `factor − 1`;
+    /// `alpha` is the EMA weight of each new iteration sample.
+    pub fn new(
+        n: usize,
+        k0: usize,
+        step: usize,
+        alpha: f64,
+        threshold: f64,
+        patience: usize,
+    ) -> Self {
+        StragglerAware {
+            n,
+            k0,
+            step: step.max(1),
+            alpha: alpha.clamp(0.0, 1.0),
+            threshold,
+            patience: patience.max(1),
+            state: Mutex::new(State {
+                k: k0,
+                slow: vec![0.0; n],
+                hot: 0,
+                cool: 0,
+                history: HashMap::new(),
+                cache: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Current coordination number.
+    pub fn current_k(&self) -> usize {
+        self.state.lock().expect("state poisoned").k
+    }
+
+    /// Current smoothed excess slowness per node (tests/diagnostics).
+    pub fn slowness(&self) -> Vec<f64> {
+        self.state.lock().expect("state poisoned").slow.clone()
+    }
+}
+
+impl TopologyPolicy for StragglerAware {
+    fn graph_for(&self, epoch: usize, _iter: usize) -> Result<CommGraph> {
+        let mut st = self.state.lock().expect("state poisoned");
+        let k = st.history.get(&epoch).copied().unwrap_or(st.k);
+        if let Some(g) = st.cache.get(&k) {
+            return Ok(g.clone());
+        }
+        let g = CommGraph::build(GraphKind::AdaLattice { k }, self.n)?;
+        st.cache.insert(k, g.clone());
+        Ok(g)
+    }
+
+    fn wants_iteration_signals(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, signals: &TrainSignals) {
+        let mut st = self.state.lock().expect("state poisoned");
+        if signals.iteration.is_some() {
+            // Iteration tick: fold this round's straggler factors into
+            // the per-node EMA and return — adaptation is epoch-paced.
+            for (s, &f) in st.slow.iter_mut().zip(&signals.straggler_factor) {
+                *s += self.alpha * ((f - 1.0).max(0.0) - *s);
+            }
+            return;
+        }
+        let current_k = st.k;
+        st.history.insert(signals.epoch, current_k);
+        let any_slow = st.slow.iter().any(|&s| s > self.threshold);
+        if any_slow {
+            st.hot += 1;
+            st.cool = 0;
+            if st.hot >= self.patience {
+                st.k = st.k.saturating_sub(self.step).max(2);
+                st.hot = 0;
+            }
+        } else {
+            st.cool += 1;
+            st.hot = 0;
+            if st.cool >= self.patience {
+                st.k = (st.k + self.step).min(self.k0);
+                st.cool = 0;
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "straggler_aware(k0={},step={},thr={})",
+            self.k0, self.step, self.threshold
+        )
+    }
+
+    fn k_hint(&self) -> usize {
+        self.k0.max(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iter_tick(epoch: usize, iteration: usize, factors: Vec<f64>) -> TrainSignals {
+        TrainSignals {
+            epoch,
+            iteration: Some(iteration),
+            straggler_factor: factors,
+            ..TrainSignals::default()
+        }
+    }
+
+    fn epoch_tick(epoch: usize) -> TrainSignals {
+        TrainSignals { epoch, ..TrainSignals::default() }
+    }
+
+    #[test]
+    fn opts_into_iteration_signals() {
+        let s = StragglerAware::new(8, 6, 2, 0.5, 0.5, 1);
+        assert!(s.wants_iteration_signals());
+        // The default for every other builtin stays off.
+        assert!(!super::super::StaticSchedule::new(GraphKind::Ring, 8)
+            .unwrap()
+            .wants_iteration_signals());
+    }
+
+    #[test]
+    fn stays_dense_while_cluster_is_calm() {
+        let mut s = StragglerAware::new(8, 6, 2, 0.5, 0.5, 2);
+        for e in 0..4 {
+            s.observe(&iter_tick(e, 0, vec![1.0; 8]));
+            s.observe(&epoch_tick(e));
+        }
+        assert_eq!(s.current_k(), 6, "no stragglers, no change");
+    }
+
+    #[test]
+    fn thins_after_patience_slow_epochs_and_regrows_after_calm() {
+        let mut s = StragglerAware::new(8, 6, 2, 1.0, 0.5, 2);
+        let mut slowed = vec![1.0; 8];
+        slowed[3] = 4.0; // node 3 runs at 4× its normal time
+        s.observe(&iter_tick(0, 0, slowed.clone()));
+        s.observe(&epoch_tick(0));
+        assert_eq!(s.current_k(), 6, "patience not yet met");
+        s.observe(&iter_tick(1, 0, slowed));
+        s.observe(&epoch_tick(1));
+        assert_eq!(s.current_k(), 4, "thinned by step after patience");
+        // Recovery: with alpha=1 the EMA forgets instantly.
+        for e in 2..4 {
+            s.observe(&iter_tick(e, 0, vec![1.0; 8]));
+            s.observe(&epoch_tick(e));
+        }
+        assert_eq!(s.current_k(), 6, "re-densified after calm patience");
+    }
+
+    #[test]
+    fn regrowth_is_capped_at_k0_and_thinning_floors_at_2() {
+        let mut s = StragglerAware::new(8, 4, 10, 1.0, 0.5, 1);
+        let mut slowed = vec![1.0; 8];
+        slowed[0] = 9.0;
+        s.observe(&iter_tick(0, 0, slowed));
+        s.observe(&epoch_tick(0));
+        assert_eq!(s.current_k(), 2, "k never drops below 2 (Algorithm 1)");
+        for e in 1..4 {
+            s.observe(&iter_tick(e, 0, vec![1.0; 8]));
+            s.observe(&epoch_tick(e));
+        }
+        assert_eq!(s.current_k(), 4, "k never grows past k0");
+    }
+
+    #[test]
+    fn ema_smooths_single_iteration_spikes() {
+        // One slow iteration out of many, with a small alpha, must not
+        // push the smoothed estimate over the threshold.
+        let mut s = StragglerAware::new(4, 6, 2, 0.1, 0.5, 1);
+        s.observe(&iter_tick(0, 0, vec![1.0, 5.0, 1.0, 1.0]));
+        for i in 1..20 {
+            s.observe(&iter_tick(0, i, vec![1.0; 4]));
+        }
+        s.observe(&epoch_tick(0));
+        assert_eq!(s.current_k(), 6, "one spike must not thin the graph");
+        assert!(s.slowness()[1] < 0.5);
+    }
+
+    #[test]
+    fn graph_for_observed_epoch_uses_recorded_k() {
+        let mut s = StragglerAware::new(16, 8, 4, 1.0, 0.5, 1);
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 8);
+        let mut slowed = vec![1.0; 16];
+        slowed[7] = 3.0;
+        s.observe(&iter_tick(0, 0, slowed));
+        s.observe(&epoch_tick(0)); // k → 4
+        assert_eq!(s.graph_for_epoch(1).unwrap().degree(), 4);
+        // Epoch 0 is pinned to the k it actually ran with.
+        assert_eq!(s.graph_for_epoch(0).unwrap().degree(), 8);
+    }
+}

@@ -1,0 +1,283 @@
+//! The fault plane's acceptance tests: deterministic fault injection
+//! end to end through the training loop.
+//!
+//! * the same [`FaultPlan`] seed produces bit-identical runs at any
+//!   thread count (the engine's determinism contract survives faults);
+//! * a quiet plan with staleness bound 0 reproduces the fault-free
+//!   phased gossip bit for bit (the stale path's identity case);
+//! * a mid-run crash/restart run completes with a finite metric within
+//!   tolerance of the failure-free run — via neighbor-average cold join
+//!   and via checkpoint recovery;
+//! * a `[faults]` dbench spec runs end to end from TOML;
+//! * checkpoint + resume replays the uninterrupted run bit for bit.
+
+use ada_dist::coordinator::surrogate::SoftmaxRegression;
+use ada_dist::coordinator::{
+    Checkpoint, CheckpointObserver, LrPolicy, SgdFlavor, TrainConfig, TrainSession,
+    Trainer,
+};
+use ada_dist::data::{ShardStrategy, SyntheticClassification};
+use ada_dist::dbench::{ExperimentSpec, SessionPlan};
+use ada_dist::optim::LrSchedule;
+use ada_dist::simnet::{CrashEvent, FaultPlan};
+
+const N: usize = 8;
+
+/// A fixed-LR, iid, momentum-free config — every stochastic stream is
+/// pinned so runs compare bitwise.
+fn base_cfg(n: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(n, epochs);
+    cfg.lr = LrPolicy::Fixed {
+        schedule: LrSchedule::Constant { lr: 0.05 },
+    };
+    cfg.shard = ShardStrategy::Iid;
+    cfg.max_iters_per_epoch = Some(5);
+    cfg.threads = 1;
+    cfg
+}
+
+/// Loss series + final metric of one run of `flavor` under `cfg`.
+fn run(cfg: &TrainConfig, flavor: &SgdFlavor, momentum: f32) -> (Vec<f64>, f64) {
+    let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+    let mut model = SoftmaxRegression::new(8, 4, 16, 32, cfg.n_workers, momentum);
+    let session = TrainSession::builder(&mut model, cfg.clone())
+        .flavor(flavor)
+        .unwrap()
+        .build()
+        .unwrap();
+    let (rec, summary) = session.run(&data).unwrap();
+    (
+        rec.records().iter().map(|r| r.train_loss).collect(),
+        summary.final_eval.metric,
+    )
+}
+
+fn stormy_plan() -> FaultPlan {
+    let mut plan = FaultPlan::quiet();
+    plan.seed = 11;
+    plan.drop_prob = 0.25;
+    plan.straggler_prob = 0.2;
+    plan.straggler_iters = 2;
+    plan.straggler_slowdown = 3.0;
+    plan.link_jitter = 0.4;
+    plan
+}
+
+#[test]
+fn faulty_runs_are_bit_identical_at_any_thread_count() {
+    // Acceptance (a): the fault plane is a pure function of (plan seed,
+    // config) — stragglers, drops and stale mixing included — so the
+    // per-iteration losses and the final metric must not move by one
+    // bit when the worker pool is resized.
+    for fused in [false, true] {
+        let mut cfg = base_cfg(N, 2);
+        cfg.faults = Some(stormy_plan());
+        cfg.staleness_bound = 2;
+        cfg.fused = fused;
+        let mut reference: Option<(Vec<f64>, f64)> = None;
+        for threads in [1usize, 4, 8] {
+            cfg.threads = threads;
+            let got = run(&cfg, &SgdFlavor::DecentralizedExponential, 0.9);
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(
+                    &got, want,
+                    "fused={fused} threads={threads}: faulty run must be bit-identical"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn quiet_plan_with_bound_zero_matches_the_fault_free_path_bitwise() {
+    // Acceptance (b): a FaultPlan that injects nothing routes gossip
+    // through the bounded-staleness kernels, whose all-fresh rounds
+    // must reproduce the live-row path's floats exactly.
+    for flavor in [SgdFlavor::DecentralizedRing, SgdFlavor::DecentralizedComplete] {
+        let cfg_plain = base_cfg(N, 2);
+        let mut cfg_quiet = cfg_plain.clone();
+        cfg_quiet.faults = Some(FaultPlan::quiet());
+        cfg_quiet.staleness_bound = 0;
+        let plain = run(&cfg_plain, &flavor, 0.9);
+        let quiet = run(&cfg_quiet, &flavor, 0.9);
+        assert_eq!(plain, quiet, "{flavor:?}: quiet plan must be an identity");
+    }
+    // The identity also holds under the legacy drop stream (the stale
+    // path must honor the participation mask exactly like mix_active).
+    let mut cfg_plain = base_cfg(N, 2);
+    cfg_plain.drop_prob = 0.3;
+    let mut cfg_quiet = cfg_plain.clone();
+    cfg_quiet.faults = Some(FaultPlan::quiet());
+    cfg_quiet.staleness_bound = 0;
+    let plain = run(&cfg_plain, &SgdFlavor::DecentralizedRing, 0.9);
+    let quiet = run(&cfg_quiet, &SgdFlavor::DecentralizedRing, 0.9);
+    assert_eq!(plain, quiet, "quiet plan must compose with drop_prob");
+}
+
+#[test]
+fn crash_and_restart_stays_close_to_the_failure_free_run() {
+    // Acceptance (c): node 2 crashes for epoch 1 and rejoins at epoch 2
+    // from its neighbor average (no recover_dir). The run must complete
+    // with a finite metric in the failure-free run's neighborhood.
+    let cfg_ok = base_cfg(4, 4);
+    let (_, metric_ok) = run(&cfg_ok, &SgdFlavor::DecentralizedRing, 0.0);
+    let mut cfg_crash = cfg_ok.clone();
+    let mut plan = FaultPlan::quiet();
+    plan.crashes = vec![CrashEvent { node: 2, down_from: 1, restart_at: 2 }];
+    cfg_crash.faults = Some(plan);
+    cfg_crash.staleness_bound = 1;
+    let (losses, metric_crash) = run(&cfg_crash, &SgdFlavor::DecentralizedRing, 0.0);
+    assert!(losses.iter().all(|l| l.is_finite()), "no loss may diverge");
+    assert!(metric_crash.is_finite());
+    assert!(
+        (metric_crash - metric_ok).abs() <= 0.15,
+        "crash/restart must stay within tolerance: {metric_crash} vs {metric_ok}"
+    );
+}
+
+#[test]
+fn crashed_node_recovers_from_a_checkpoint_when_one_is_usable() {
+    // Same outage, but a CheckpointObserver feeds `recover_dir`: the
+    // rejoining node restores its row from the newest matching
+    // checkpoint instead of the neighbor average.
+    let dir = std::env::temp_dir().join(format!("ada_fault_recover_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_cfg(4, 4);
+    let mut plan = FaultPlan::quiet();
+    plan.crashes = vec![CrashEvent { node: 1, down_from: 1, restart_at: 2 }];
+    plan.recover_dir = Some(dir.clone());
+    cfg.faults = Some(plan);
+    cfg.staleness_bound = 1;
+    let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+    let mut model = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.0);
+    let session = TrainSession::builder(&mut model, cfg)
+        .flavor(&SgdFlavor::DecentralizedRing)
+        .unwrap()
+        .observer(Box::new(CheckpointObserver::new(&dir, 1)))
+        .build()
+        .unwrap();
+    let (rec, summary) = session.run(&data).unwrap();
+    assert!(!summary.diverged);
+    assert!(summary.final_eval.metric.is_finite());
+    assert!(
+        rec.records().iter().all(|r| r.train_loss.is_finite()),
+        "checkpoint recovery must keep every loss finite"
+    );
+    assert!(
+        dir.join("D_ring_epoch0002.ckpt").exists(),
+        "the observer must have written the checkpoint the recovery read"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dbench_runs_a_faulted_cell_from_spec_toml() {
+    // Acceptance (d): a `[faults]` spec drives the whole SessionPlan
+    // pipeline — parse, plan, train — without any code.
+    let spec = ExperimentSpec::from_toml_str(
+        r#"
+        base = "resnet20"
+        scales = [4]
+        epochs = 2
+        max_iters_per_epoch = 4
+        threads = 1
+        staleness_bound = 1
+        flavors = ["d_ring"]
+
+        [faults]
+        seed = 5
+        drop_prob = 0.3
+        straggler_prob = 0.2
+        straggler_slowdown = 2.0
+        "#,
+    )
+    .unwrap();
+    let cells = SessionPlan::from_spec(&spec).run().unwrap();
+    assert_eq!(cells.len(), 1);
+    assert!(!cells[0].summary.diverged);
+    assert!(cells[0].summary.final_eval.metric.is_finite());
+    assert!(!cells[0].recorder.records().is_empty());
+}
+
+#[test]
+fn straggler_aware_topology_trains_through_a_storm() {
+    // The feedback consumer: straggler_aware reads the per-iteration
+    // straggler factors the fault plane publishes and keeps training.
+    let mut spec = ExperimentSpec::resnet20_analog();
+    spec.scales = vec![6];
+    spec.epochs = 3;
+    spec.max_iters_per_epoch = Some(4);
+    spec.threads = 1;
+    spec.flavors = vec![SgdFlavor::DecentralizedComplete];
+    spec.topology = Some(ada_dist::dbench::TopologyRef::parse(
+        "straggler_aware:k0=5,step=2,ema=1.0,threshold=0.5,patience=1",
+    ).unwrap());
+    let mut plan = FaultPlan::quiet();
+    plan.seed = 3;
+    plan.straggler_prob = 0.9;
+    plan.straggler_slowdown = 4.0;
+    spec.faults = Some(plan);
+    spec.staleness_bound = 1;
+    let cells = SessionPlan::from_spec(&spec).run().unwrap();
+    assert_eq!(cells.len(), 1);
+    assert!(!cells[0].summary.diverged);
+    assert!(cells[0].summary.final_eval.metric.is_finite());
+}
+
+#[test]
+fn checkpoint_resume_replays_the_uninterrupted_run_bit_for_bit() {
+    // Satellite: with every stateful stream pinned (momentum 0, fixed
+    // LR, iid shards, no drops), pausing at epoch 3 and resuming must
+    // reproduce the uninterrupted 6-epoch run exactly.
+    let dir = std::env::temp_dir().join(format!("ada_fault_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let flavor = SgdFlavor::DecentralizedTorus;
+    let data = SyntheticClassification::generate(1024, 8, 4, 3.0, 21);
+
+    let cfg6 = base_cfg(4, 6);
+    let mut model_full = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.0);
+    let (rec_full, s_full) = TrainSession::builder(&mut model_full, cfg6.clone())
+        .flavor(&flavor)
+        .unwrap()
+        .build()
+        .unwrap()
+        .run(&data)
+        .unwrap();
+    let losses_full: Vec<f64> =
+        rec_full.records().iter().map(|r| r.train_loss).collect();
+
+    // First half, checkpointed at its end (epoch 3 = resume point).
+    let cfg3 = base_cfg(4, 3);
+    let mut model_a = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.0);
+    let (rec_a, _) = TrainSession::builder(&mut model_a, cfg3)
+        .flavor(&flavor)
+        .unwrap()
+        .observer(Box::new(CheckpointObserver::new(&dir, 3)))
+        .build()
+        .unwrap()
+        .run(&data)
+        .unwrap();
+    let ckpt = Checkpoint::load(&dir.join("D_torus_epoch0003.ckpt"))
+        .expect("the observer must have checkpointed epoch 3");
+    assert_eq!(ckpt.epoch, 3);
+
+    // Second half: resume from the checkpoint up to epoch 6.
+    let mut model_b = SoftmaxRegression::new(8, 4, 16, 32, 4, 0.0);
+    let (rec_b, s_b) = Trainer::new(&mut model_b, cfg6)
+        .resume(&data, &flavor, ckpt)
+        .unwrap();
+
+    let mut losses_split: Vec<f64> =
+        rec_a.records().iter().map(|r| r.train_loss).collect();
+    losses_split.extend(rec_b.records().iter().map(|r| r.train_loss));
+    assert_eq!(
+        losses_full, losses_split,
+        "resumed loss series must concatenate bit-identically"
+    );
+    assert_eq!(
+        s_full.final_eval.metric, s_b.final_eval.metric,
+        "final metrics must agree bitwise"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
