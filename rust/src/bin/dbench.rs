@@ -18,6 +18,7 @@ use ada_dist::dbench::{
     ExperimentSpec, SessionPlan, TopologyRef,
 };
 use ada_dist::optim::ScalingRule;
+use ada_dist::serve::{http_request, http_stream_lines, start, ServeConfig};
 use ada_dist::util::cli::Args;
 use std::io::Write as _;
 
@@ -53,6 +54,17 @@ dbench <command> [options]
   ada         Fig 7-style comparison: Ada vs C_complete/D_ring/D_torus
     --app NAME --workers N --epochs N --k0 N --gamma-k F
     --topology name[:k=v,...]
+  serve       long-lived multi-tenant experiment service (HTTP/1.1)
+    --addr HOST:PORT (default 127.0.0.1:7070) --store DIR --workers N
+    --hold              start with the dispatch gate paused
+  submit      POST a spec file to a running server
+    --addr HOST:PORT --spec FILE.toml|FILE.json
+    --priority N --weight F --seeds K
+  status      job status (--job ID) or all jobs
+  results     fetch a job's results document   --job ID
+  stream      tail a job's JSONL metric stream --job ID
+  cancel      cancel a job                     --job ID
+  shutdown    stop a running server (--no-drain cancels in-flight cells)
   (global) --config PATH   launcher TOML";
 
 fn builtin(app: &str) -> Result<ExperimentSpec, String> {
@@ -68,7 +80,7 @@ fn builtin(app: &str) -> Result<ExperimentSpec, String> {
 fn main() -> CliResult {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["sqrt-scaling", "save-records", "fused", "pipeline", "help"],
+        &["sqrt-scaling", "save-records", "fused", "pipeline", "help", "hold", "no-drain"],
     )
     .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
@@ -104,6 +116,13 @@ fn main() -> CliResult {
         }
         Some("run") => cmd_run(&args, &cfg),
         Some("ada") => cmd_ada(&args, &cfg),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_client_get(&args, "status"),
+        Some("results") => cmd_client_get(&args, "results"),
+        Some("stream") => cmd_stream(&args),
+        Some("cancel") => cmd_cancel(&args),
+        Some("shutdown") => cmd_shutdown(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -201,6 +220,115 @@ fn apply_fault_args(args: &Args, spec: &mut ExperimentSpec) -> CliResult {
         spec.faults = Some(ada_dist::simnet::FaultPlan::from_table(&table)?);
     }
     spec.staleness_bound = args.get_parse("staleness-bound", spec.staleness_bound)?;
+    Ok(())
+}
+
+fn server_addr(args: &Args) -> String {
+    args.get_or("addr", "127.0.0.1:7070").to_string()
+}
+
+fn print_body(body: &[u8]) {
+    println!("{}", String::from_utf8_lossy(body).trim_end());
+}
+
+fn cmd_serve(args: &Args) -> CliResult {
+    let cfg = ServeConfig {
+        addr: server_addr(args),
+        store_dir: args.get_or("store", "dbench_store").to_string(),
+        workers: args.get_parse("workers", 1)?,
+        hold: args.has_flag("hold"),
+    };
+    let mut server = start(&cfg)?;
+    println!(
+        "dbench service listening on http://{} (store {}, {} worker{}{})",
+        server.addr,
+        cfg.store_dir,
+        cfg.workers.max(1),
+        if cfg.workers.max(1) == 1 { "" } else { "s" },
+        if cfg.hold { ", dispatch paused" } else { "" },
+    );
+    println!("stop with: dbench shutdown --addr {}", server.addr);
+    server.join();
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> CliResult {
+    let path = args
+        .get("spec")
+        .ok_or_else(|| format!("submit needs --spec FILE\n\n{USAGE}"))?;
+    let body = std::fs::read(path)?;
+    let mut query = Vec::new();
+    for key in ["priority", "weight", "seeds"] {
+        if let Some(v) = args.get(key) {
+            query.push(format!("{key}={v}"));
+        }
+    }
+    let target = if query.is_empty() {
+        "/jobs".to_string()
+    } else {
+        format!("/jobs?{}", query.join("&"))
+    };
+    let (code, resp) = http_request(&server_addr(args), "POST", &target, Some(&body))?;
+    print_body(&resp);
+    if code != 200 {
+        return Err(format!("submit failed (HTTP {code})").into());
+    }
+    Ok(())
+}
+
+fn cmd_client_get(args: &Args, what: &str) -> CliResult {
+    let path = match (what, args.get("job")) {
+        ("status", None) => "/jobs".to_string(),
+        ("status", Some(id)) => format!("/jobs/{id}"),
+        (_, Some(id)) => format!("/jobs/{id}/{what}"),
+        (_, None) => return Err(format!("{what} needs --job ID\n\n{USAGE}").into()),
+    };
+    let (code, resp) = http_request(&server_addr(args), "GET", &path, None)?;
+    print_body(&resp);
+    if code != 200 {
+        return Err(format!("{what} failed (HTTP {code})").into());
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> CliResult {
+    let id = args
+        .get("job")
+        .ok_or_else(|| format!("stream needs --job ID\n\n{USAGE}"))?;
+    let code = http_stream_lines(&server_addr(args), &format!("/jobs/{id}/stream"), |line| {
+        println!("{line}");
+    })?;
+    if code != 200 {
+        return Err(format!("stream failed (HTTP {code})").into());
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> CliResult {
+    let id = args
+        .get("job")
+        .ok_or_else(|| format!("cancel needs --job ID\n\n{USAGE}"))?;
+    let (code, resp) =
+        http_request(&server_addr(args), "POST", &format!("/jobs/{id}/cancel"), None)?;
+    print_body(&resp);
+    if code != 200 {
+        return Err(format!("cancel failed (HTTP {code})").into());
+    }
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> CliResult {
+    let drain = !args.has_flag("no-drain");
+    let (code, resp) = http_request(
+        &server_addr(args),
+        "POST",
+        &format!("/shutdown?drain={drain}"),
+        None,
+    )?;
+    print_body(&resp);
+    if code != 200 {
+        return Err(format!("shutdown failed (HTTP {code})").into());
+    }
     Ok(())
 }
 

@@ -40,8 +40,8 @@ pub use checkpoint::Checkpoint;
 pub use hlo_model::HloModel;
 pub use lars_model::LarsWrapped;
 pub use observer::{
-    CheckpointObserver, ControlFlow, DivergenceStreakStop, EpochInfo, Observer,
-    TargetAccuracyStop,
+    ChannelObserver, CheckpointObserver, ControlFlow, DivergenceStreakStop, EpochInfo, Observer,
+    TargetAccuracyStop, TrainEvent,
 };
 pub use session::{SessionBuilder, TrainSession};
 pub use strategy::{CombineStrategy, Registry, StepCtx, StrategyInstance, StrategyParams};

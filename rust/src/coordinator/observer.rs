@@ -22,8 +22,10 @@ use super::trainer::RunSummary;
 use super::Checkpoint;
 use crate::error::Result;
 use crate::metrics::{IterationRecord, RunRecorder};
+use crate::util::json::Value;
 use crate::util::matrix::ReplicaMatrix;
 use std::path::PathBuf;
+use std::sync::mpsc::Sender;
 
 /// What an observer asks the session to do next. Hooks combine across
 /// observers with [`ControlFlow::merge`]: any `Stop` wins.
@@ -114,6 +116,110 @@ impl Observer for RunRecorder {
 
     fn on_complete(&mut self, _summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
         self.flush()
+    }
+}
+
+/// An **owned** training event. The observer hooks borrow run state
+/// ([`EpochInfo`] holds the live replica matrix), so they cannot leave
+/// the training thread; `TrainEvent` copies the scalar context out into
+/// a value that can cross a channel — the shape behind
+/// [`ChannelObserver`] and the serve layer's JSONL metric streams.
+#[derive(Debug, Clone)]
+pub enum TrainEvent {
+    /// One iteration finished with this finalized record.
+    Iteration(IterationRecord),
+    /// One epoch finished.
+    Epoch {
+        /// The 0-based epoch that just finished.
+        epoch: usize,
+        /// Mean captured gini over the epoch (`None` = probe off).
+        mean_gini: Option<f64>,
+        /// Run label (`C_complete`, `D_ring`, …).
+        label: String,
+        /// Run seed.
+        seed: u64,
+    },
+    /// The run finished (normally or by an early stop) and was
+    /// evaluated.
+    Complete(RunSummary),
+}
+
+impl TrainEvent {
+    /// Capture an epoch hook's context by value.
+    pub fn from_epoch(info: &EpochInfo<'_>) -> Self {
+        TrainEvent::Epoch {
+            epoch: info.epoch,
+            mean_gini: info.mean_gini,
+            label: info.label.to_string(),
+            seed: info.seed,
+        }
+    }
+
+    /// JSON encoding with a `type` discriminant — one line of the serve
+    /// layer's JSONL stream. `Iteration` nests the full
+    /// [`IterationRecord::to_json`] under `record` so stream consumers
+    /// can parse it back with [`IterationRecord::from_json`].
+    pub fn to_json(&self) -> Value {
+        match self {
+            TrainEvent::Iteration(rec) => Value::obj(vec![
+                ("type", Value::Str("iteration".into())),
+                ("record", rec.to_json()),
+            ]),
+            TrainEvent::Epoch { epoch, mean_gini, label, seed } => Value::obj(vec![
+                ("type", Value::Str("epoch".into())),
+                ("epoch", Value::Num(*epoch as f64)),
+                (
+                    "mean_gini",
+                    match mean_gini {
+                        Some(g) => Value::Num(*g),
+                        None => Value::Null,
+                    },
+                ),
+                ("label", Value::Str(label.clone())),
+                ("seed", Value::Num(*seed as f64)),
+            ]),
+            TrainEvent::Complete(summary) => Value::obj(vec![
+                ("type", Value::Str("complete".into())),
+                ("summary", summary.to_json()),
+            ]),
+        }
+    }
+}
+
+/// Forward every hook as an owned [`TrainEvent`] through an mpsc
+/// channel: the training loop stays synchronous while any other thread
+/// (a JSONL streamer, a progress UI) consumes events at its own pace.
+/// A dropped receiver is **not** a training error — events are simply
+/// discarded, so an abandoned stream never kills the run it watched.
+pub struct ChannelObserver {
+    tx: Sender<TrainEvent>,
+}
+
+impl ChannelObserver {
+    /// Forward events into `tx`.
+    pub fn new(tx: Sender<TrainEvent>) -> Self {
+        ChannelObserver { tx }
+    }
+}
+
+impl Observer for ChannelObserver {
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        let _ = self.tx.send(TrainEvent::Iteration(rec.clone()));
+        Ok(ControlFlow::Continue)
+    }
+
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<ControlFlow> {
+        let _ = self.tx.send(TrainEvent::from_epoch(info));
+        Ok(ControlFlow::Continue)
+    }
+
+    fn on_complete(&mut self, summary: &RunSummary, _replicas: &ReplicaMatrix) -> Result<()> {
+        let _ = self.tx.send(TrainEvent::Complete(summary.clone()));
+        Ok(())
     }
 }
 
@@ -360,6 +466,67 @@ mod tests {
         // streak of two at index 5.
         assert_eq!(stopped, Some(5));
         assert_eq!(obs.stopped_at(), Some(5));
+    }
+
+    #[test]
+    fn channel_observer_ships_owned_events_across_threads() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut obs = ChannelObserver::new(tx);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        obs.on_iteration(&rec(3), &replicas).unwrap();
+        obs.on_epoch(&EpochInfo {
+            epoch: 1,
+            mean_gini: Some(0.25),
+            replicas: &replicas,
+            label: "D_ring",
+            seed: 7,
+        })
+        .unwrap();
+        // Receive on another thread: the events are fully owned.
+        let events: Vec<TrainEvent> =
+            std::thread::spawn(move || rx.iter().take(2).collect()).join().unwrap();
+        match &events[0] {
+            TrainEvent::Iteration(r) => assert_eq!(r.iteration, 3),
+            other => panic!("expected iteration, got {other:?}"),
+        }
+        match &events[1] {
+            TrainEvent::Epoch { epoch, mean_gini, label, seed } => {
+                assert_eq!(*epoch, 1);
+                assert_eq!(*mean_gini, Some(0.25));
+                assert_eq!(label, "D_ring");
+                assert_eq!(*seed, 7);
+            }
+            other => panic!("expected epoch, got {other:?}"),
+        }
+        // JSON lines carry the type discriminant, and iteration payloads
+        // parse back into records.
+        let line = events[0].to_json();
+        assert_eq!(line.str_field("type").unwrap(), "iteration");
+        let back = IterationRecord::from_json(line.get("record").unwrap()).unwrap();
+        assert_eq!(back.iteration, 3);
+        assert_eq!(events[1].to_json().str_field("type").unwrap(), "epoch");
+    }
+
+    #[test]
+    fn channel_observer_survives_a_dropped_receiver() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        drop(rx);
+        let mut obs = ChannelObserver::new(tx);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        // An abandoned consumer must not fail (or stop) the run.
+        assert!(!obs.on_iteration(&rec(0), &replicas).unwrap().is_stop());
+        obs.on_complete(
+            &RunSummary {
+                flavor: "D_ring".into(),
+                final_eval: crate::coordinator::EvalResult { loss: 1.0, metric: 0.5 },
+                diverged: false,
+                bytes_per_node: 8,
+                early_gini: 0.0,
+                late_gini: 0.0,
+            },
+            &replicas,
+        )
+        .unwrap();
     }
 
     #[test]

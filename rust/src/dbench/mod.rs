@@ -16,7 +16,7 @@
 mod plan;
 mod spec;
 
-pub use plan::{CellPlan, SessionPlan, StrategyRef, TopologyRef};
+pub use plan::{fingerprint, CellPlan, SessionPlan, StrategyRef, TopologyRef};
 pub use spec::{ExperimentSpec, Workload};
 
 use crate::coordinator::{SgdFlavor, TrainConfig, Trainer};

@@ -19,10 +19,13 @@
 //! * **execution** — sequential by default; `parallel > 1` opts into a
 //!   bounded cell executor (scoped threads over an atomic work queue,
 //!   capped by the machine's core count), and `resume_dir` makes cells
-//!   resumable: each finished cell is persisted as JSON (tagged with a
-//!   [fingerprint](SessionPlan::cell_fingerprint) of everything that
-//!   affects its floats) and reloaded instead of re-run on the next
-//!   invocation — but only while that fingerprint still matches.
+//!   resumable: each finished cell is persisted into a
+//!   [`crate::serve::ResultStore`] (content-addressed by the cell
+//!   [`fingerprint`] — the same store the experiment service shares)
+//!   and reloaded instead of re-run on the next invocation — but only
+//!   while that fingerprint still matches. Pre-store flat-layout
+//!   resume directories keep working: legacy files are validated, read
+//!   and migrated into the content-addressed layout on first touch.
 //!
 //! Results are **identical** for every `parallel` value: cells are
 //! independent runs (each builds its own dataset, model and engine from
@@ -36,10 +39,11 @@
 use super::spec::ExperimentSpec;
 use super::CellResult;
 use crate::coordinator::strategy::{self, Registry, StrategyInstance, StrategyParams};
-use crate::coordinator::{SgdFlavor, TrainConfig, TrainSession};
+use crate::coordinator::{Observer, SgdFlavor, TrainConfig, TrainSession};
 use crate::error::{AdaError, Result};
 use crate::exec::resolve_threads;
 use crate::metrics::{IterationRecord, RunRecorder};
+use crate::serve::store::ResultStore;
 use crate::topology::{self, TopologyRegistry};
 use crate::util::json::Value;
 use crate::util::params::ParamTable;
@@ -353,16 +357,39 @@ impl SessionPlan {
     /// configuration re-executes (and overwrites) instead of returning
     /// stale data.
     pub fn run_cell_plan(&self, cell: &CellPlan) -> Result<CellResult> {
-        let fingerprint = self.cell_fingerprint(cell);
         if let Some(dir) = &self.resume_dir {
-            if let Some(prev) = load_cached_cell(&fingerprint, &dir.join(cell.file_name())) {
+            let fp = self.cell_fingerprint(cell);
+            let store = ResultStore::open(dir)?;
+            // The legacy name keeps pre-store flat-layout resume trees
+            // readable; a validated legacy hit migrates into objects/.
+            if let Some(prev) = store.load(&fp, Some(&cell.file_name())) {
                 return Ok(prev);
             }
+            let result = self.run_cell_plan_with(cell, Vec::new())?;
+            store.save(&fp, &result)?;
+            return Ok(result);
         }
+        self.run_cell_plan_with(cell, Vec::new())
+    }
+
+    /// Execute one cell unconditionally (no cache consultation, no
+    /// persistence), attaching `observers` to the session — the hook the
+    /// experiment service uses to stream per-iteration metrics and to
+    /// stop a cancelled cell at an iteration boundary. Callers that want
+    /// caching go through [`SessionPlan::run_cell_plan`] (CLI resume) or
+    /// the service's [`crate::serve::ResultStore`]-backed scheduler.
+    pub fn run_cell_plan_with(
+        &self,
+        cell: &CellPlan,
+        observers: Vec<Box<dyn Observer>>,
+    ) -> Result<CellResult> {
         let dataset = self.workload.dataset(cell.seed)?;
         let mut model = self.workload.model(cell.scale)?;
         let mut instance = cell.strategy.resolve(&self.registry, cell.scale)?;
         let mut builder = TrainSession::builder(model.as_mut(), cell.config.clone());
+        for obs in observers {
+            builder = builder.observer(obs);
+        }
         // The override only applies to strategies that already exchange
         // over a graph — centralized instances (no schedule) keep their
         // path and label, however the cell was referenced.
@@ -376,20 +403,12 @@ impl SessionPlan {
         let label = instance.label.clone();
         let session = builder.strategy(instance).build()?;
         let (recorder, summary) = session.run(dataset.as_ref())?;
-        let result = CellResult {
+        Ok(CellResult {
             scale: cell.scale,
             flavor: label,
             recorder,
             summary,
-        };
-        if let Some(dir) = &self.resume_dir {
-            std::fs::create_dir_all(dir)?;
-            std::fs::write(
-                dir.join(cell.file_name()),
-                cell_json(&fingerprint, &result).to_string(),
-            )?;
-        }
-        Ok(result)
+        })
     }
 
     /// The cache key of a cell's result: everything that changes the
@@ -404,63 +423,52 @@ impl SessionPlan {
     /// override keep their pre-redesign fingerprint, so existing resume
     /// caches stay valid.
     pub fn cell_fingerprint(&self, cell: &CellPlan) -> String {
-        let c = &cell.config;
-        let topology = match &cell.topology {
-            Some(t) => format!(" topology={t:?}"),
-            None => String::new(),
-        };
-        // Fault-free cells keep their pre-fault-plane fingerprint (the
-        // same backward-compatibility discipline as `topology` above).
-        let faults = match &c.faults {
-            Some(f) => format!(" faults={f:?} staleness_bound={}", c.staleness_bound),
-            None => String::new(),
-        };
-        format!(
-            "workload={:?} strategy={:?} n={} epochs={} seed={} lr={:?} shard={:?} \
-             test_frac={} eval_every={} metrics_every={} max_iters={:?} track={:?} \
-             central_momentum={} drop_prob={} fused={} fused_momentum={}{}{faults}",
-            self.workload,
-            cell.strategy,
-            c.n_workers,
-            c.epochs,
-            c.seed,
-            c.lr,
-            c.shard,
-            c.test_frac,
-            c.eval_every_epochs,
-            c.metrics_every,
-            c.max_iters_per_epoch,
-            c.track_layers,
-            c.central_momentum,
-            c.drop_prob,
-            c.fused,
-            c.fused_momentum,
-            topology,
-        )
+        fingerprint(&self.workload, cell)
     }
 }
 
-/// The persisted form of a finished cell: the [`CellResult`] JSON plus
-/// the fingerprint that decides whether a later invocation may reuse
-/// it.
-fn cell_json(fingerprint: &str, result: &CellResult) -> Value {
-    let mut v = result.to_json();
-    if let Value::Obj(map) = &mut v {
-        map.insert("fingerprint".to_string(), Value::Str(fingerprint.to_string()));
-    }
-    v
-}
-
-/// Reload a persisted cell, returning it only when its recorded
-/// fingerprint matches; any mismatch (or a missing / unparseable file,
-/// including pre-fingerprint files) re-runs the cell.
-fn load_cached_cell(fingerprint: &str, path: &Path) -> Option<CellResult> {
-    let text = std::fs::read_to_string(path).ok()?;
-    let v = Value::parse(&text).ok()?;
-    if v.str_field("fingerprint").ok()? != fingerprint {
-        return None;
-    }
-    CellResult::from_json(&v).ok()
+/// The cache key of a cell's result — the single canonical
+/// implementation behind [`SessionPlan::cell_fingerprint`], the CLI
+/// resume cache and the experiment service's content-addressed store.
+/// Covers everything that changes the produced floats; deliberately
+/// excludes `threads`, `pipeline`, `bucket_kb` (bit-identical by the
+/// engine's contracts) and `record_path`, and appends the topology /
+/// fault suffixes only when present so pre-existing cache keys stay
+/// valid.
+pub fn fingerprint(workload: &super::Workload, cell: &CellPlan) -> String {
+    let c = &cell.config;
+    let topology = match &cell.topology {
+        Some(t) => format!(" topology={t:?}"),
+        None => String::new(),
+    };
+    // Fault-free cells keep their pre-fault-plane fingerprint (the
+    // same backward-compatibility discipline as `topology` above).
+    let faults = match &c.faults {
+        Some(f) => format!(" faults={f:?} staleness_bound={}", c.staleness_bound),
+        None => String::new(),
+    };
+    format!(
+        "workload={:?} strategy={:?} n={} epochs={} seed={} lr={:?} shard={:?} \
+         test_frac={} eval_every={} metrics_every={} max_iters={:?} track={:?} \
+         central_momentum={} drop_prob={} fused={} fused_momentum={}{}{faults}",
+        workload,
+        cell.strategy,
+        c.n_workers,
+        c.epochs,
+        c.seed,
+        c.lr,
+        c.shard,
+        c.test_frac,
+        c.eval_every_epochs,
+        c.metrics_every,
+        c.max_iters_per_epoch,
+        c.track_layers,
+        c.central_momentum,
+        c.drop_prob,
+        c.fused,
+        c.fused_momentum,
+        topology,
+    )
 }
 
 impl CellResult {
@@ -573,8 +581,15 @@ mod tests {
         let mut plan = SessionPlan::from_spec(&tiny_spec());
         plan.resume_dir = Some(dir.clone());
         let first = plan.run().unwrap();
+        // New writes land in the content-addressed layout only.
+        let store = ResultStore::open(&dir).unwrap();
         for cell in &plan.cells {
-            assert!(dir.join(cell.file_name()).exists(), "{}", cell.file_name());
+            let fp = plan.cell_fingerprint(cell);
+            assert!(store.object_path(&fp).exists(), "{}", cell.file_name());
+            assert!(
+                !dir.join(cell.file_name()).exists(),
+                "no legacy flat files for new runs"
+            );
         }
         // Second run must reload byte-identical results from disk.
         let second = plan.run().unwrap();
@@ -584,6 +599,71 @@ mod tests {
             assert_eq!(a.recorder.records().len(), b.recorder.records().len());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_layout_results_migrate_into_the_store() {
+        let dir = crate::util::scratch_dir("plan_legacy").unwrap();
+        let mut plan = SessionPlan::from_spec(&tiny_spec());
+        plan.cells.truncate(1);
+        plan.resume_dir = Some(dir.clone());
+        let cell = plan.cells[0].clone();
+        let fp = plan.cell_fingerprint(&cell);
+        // Plant a pre-store flat-layout file with a sentinel metric: if
+        // the plan *reads* it (instead of re-running), the sentinel
+        // comes back — proof the legacy path is honored.
+        let mut fake = plan.run_cell_plan_with(&cell, Vec::new()).unwrap();
+        fake.summary.final_eval.metric = 9999.0;
+        std::fs::write(
+            dir.join(cell.file_name()),
+            crate::serve::store::tagged_json(&fp, &fake).to_string(),
+        )
+        .unwrap();
+        let reloaded = plan.run().unwrap();
+        assert_eq!(
+            reloaded[0].summary.final_eval.metric, 9999.0,
+            "legacy flat-layout file must be served, not re-run"
+        );
+        // ...and the read migrated it into the content-addressed layout.
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.object_path(&fp).exists(), "migration shim ran");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_helper_is_stable() {
+        let plan = SessionPlan::from_spec(&tiny_spec());
+        let cell = &plan.cells[0];
+        let fp = fingerprint(&plan.workload, cell);
+        // The free helper IS the method.
+        assert_eq!(fp, plan.cell_fingerprint(cell));
+        assert!(fp.starts_with("workload=SoftmaxImage"), "{fp}");
+        assert!(fp.contains("strategy=Flavor(DecentralizedRing)"), "{fp}");
+        assert!(fp.contains("n=4"), "{fp}");
+        // Base cells carry no topology/fault suffix (cache keys from
+        // before those planes existed stay valid).
+        assert!(!fp.contains("topology="), "{fp}");
+        assert!(!fp.contains("faults="), "{fp}");
+        // Scheduling knobs are excluded: the cache is shared across
+        // thread counts and pipeline settings.
+        let mut sched = cell.clone();
+        sched.config.threads = 7;
+        sched.config.pipeline = !sched.config.pipeline;
+        sched.config.bucket_kb = 1234;
+        assert_eq!(fp, fingerprint(&plan.workload, &sched));
+        // Float-affecting knobs are included.
+        let mut other = cell.clone();
+        other.config.epochs += 1;
+        assert_ne!(fp, fingerprint(&plan.workload, &other));
+        let mut reseeded = cell.clone();
+        reseeded.config.seed += 1;
+        assert_ne!(fp, fingerprint(&plan.workload, &reseeded));
+        // Suffixed planes extend (not rewrite) the base key.
+        let mut topo = cell.clone();
+        topo.topology = Some(TopologyRef::named("one_peer"));
+        let tfp = fingerprint(&plan.workload, &topo);
+        assert!(tfp.starts_with(&fp), "{tfp}");
+        assert!(tfp.contains("topology="), "{tfp}");
     }
 
     #[test]

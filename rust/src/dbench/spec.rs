@@ -12,6 +12,7 @@ use crate::error::{AdaError, Result};
 use crate::optim::ScalingRule;
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjRtRuntime;
+use crate::util::json::Value;
 use crate::util::params::ParamTable;
 use crate::util::tomlmini::{TomlDoc, TomlValue};
 
@@ -472,7 +473,32 @@ impl ExperimentSpec {
 
     /// Parse from TOML text (see [`ExperimentSpec::from_toml_file`]).
     pub fn from_toml_str(text: &str) -> Result<Self> {
-        let doc = TomlDoc::parse(text)?;
+        Self::from_doc(&TomlDoc::parse(text)?)
+    }
+
+    /// Parse from a JSON document with the same shape as the TOML form:
+    /// scalar/array fields at the top level, parameter tables as nested
+    /// objects (`{"ada": {"k0": 10}}` ≡ `[ada]` / `k0 = 10`, and
+    /// `{"topology": "ada", "topology_params": …}` nesting one level
+    /// deeper as `{"strategy": {"mix": {…}}}` ≡ `[strategy.mix]`). The
+    /// experiment service accepts either encoding on `POST /jobs`.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_doc(&json_to_doc(&Value::parse(text)?)?)
+    }
+
+    /// Parse spec text, sniffing the encoding: a body whose first
+    /// non-whitespace byte is `{` is JSON, anything else TOML.
+    pub fn from_text(text: &str) -> Result<Self> {
+        if text.trim_start().starts_with('{') {
+            Self::from_json_str(text)
+        } else {
+            Self::from_toml_str(text)
+        }
+    }
+
+    /// Build a spec from an already-parsed key/section document — the
+    /// one implementation behind both the TOML and JSON front ends.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
         let base = doc
             .get("base")
             .and_then(TomlValue::as_str)
@@ -560,7 +586,7 @@ impl ExperimentSpec {
                 let name = f.as_str().ok_or_else(|| {
                     AdaError::Config("flavors must be strings".into())
                 })?;
-                flavors.push(Self::flavor_by_name(name, &doc)?);
+                flavors.push(Self::flavor_by_name(name, doc)?);
             }
             spec.flavors = flavors;
         }
@@ -571,7 +597,7 @@ impl ExperimentSpec {
                 let name = v.as_str().ok_or_else(|| {
                     AdaError::Config("strategies must be strings".into())
                 })?;
-                let table = section_params(&doc, "strategy", name);
+                let table = section_params(doc, "strategy", name);
                 let params = StrategyParams::from_table(0, &table)
                     .map_err(|e| AdaError::Config(format!("[strategy.{name}]: {e}")))?;
                 spec.strategies.push(StrategyRef::Named {
@@ -586,7 +612,7 @@ impl ExperimentSpec {
         if let Some(name) = doc.get("topology").and_then(TomlValue::as_str) {
             spec.topology = Some(TopologyRef {
                 name: name.to_string(),
-                params: section_params(&doc, "topology", name),
+                params: section_params(doc, "topology", name),
             });
         }
         // Orphaned param tables are loud, like unknown keys inside
@@ -664,6 +690,77 @@ fn section_params(doc: &TomlDoc, kind: &str, name: &str) -> ParamTable {
         .unwrap_or_default()
 }
 
+/// One JSON scalar/array as a [`TomlValue`]. Numbers become `Int` when
+/// integral (matching what the TOML parser would have produced for the
+/// same spec), `Float` otherwise.
+fn json_scalar(key: &str, v: &Value) -> Result<TomlValue> {
+    Ok(match v {
+        Value::Str(s) => TomlValue::Str(s.clone()),
+        Value::Bool(b) => TomlValue::Bool(*b),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                TomlValue::Int(*n as i64)
+            } else {
+                TomlValue::Float(*n)
+            }
+        }
+        Value::Arr(items) => TomlValue::Arr(
+            items
+                .iter()
+                .map(|item| json_scalar(key, item))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        Value::Null | Value::Obj(_) => {
+            return Err(AdaError::Config(format!(
+                "spec key {key:?}: expected a scalar or array"
+            )))
+        }
+    })
+}
+
+/// Reshape a JSON object into the [`TomlDoc`] key/section layout the
+/// spec parser consumes: top-level scalars/arrays → root keys, a nested
+/// object → a section (`{"ada": {…}}` ≡ `[ada]`), and an object inside
+/// that → a dotted section (`{"strategy": {"mix": {…}}}` ≡
+/// `[strategy.mix]`). Anything deeper is an error.
+fn json_to_doc(v: &Value) -> Result<TomlDoc> {
+    let top = match v {
+        Value::Obj(map) => map,
+        _ => return Err(AdaError::Config("JSON spec must be an object".into())),
+    };
+    let mut doc = TomlDoc::default();
+    for (key, val) in top {
+        match val {
+            Value::Obj(section) => {
+                for (k2, v2) in section {
+                    match v2 {
+                        Value::Obj(nested) => {
+                            let name = format!("{key}.{k2}");
+                            let entry = doc.sections.entry(name.clone()).or_default();
+                            for (k3, v3) in nested {
+                                entry.insert(
+                                    k3.clone(),
+                                    json_scalar(&format!("{name}.{k3}"), v3)?,
+                                );
+                            }
+                        }
+                        _ => {
+                            doc.sections.entry(key.clone()).or_default().insert(
+                                k2.clone(),
+                                json_scalar(&format!("{key}.{k2}"), v2)?,
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {
+                doc.root.insert(key.clone(), json_scalar(key, val)?);
+            }
+        }
+    }
+    Ok(doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -694,6 +791,103 @@ mod tests {
         assert_eq!(
             spec.flavors[1],
             SgdFlavor::Ada { k0: 10, gamma_k: 0.5 }
+        );
+    }
+
+    #[test]
+    fn json_specs_match_their_toml_twin() {
+        let toml = ExperimentSpec::from_toml_str(
+            r#"
+            base = "densenet"
+            name = "fig3_densenet"
+            scales = [8, 16]
+            epochs = 3
+            peak_lr = 0.02
+            scaling = "sqrt"
+            flavors = ["d_ring", "ada"]
+
+            [ada]
+            k0 = 10
+            gamma_k = 0.5
+            "#,
+        )
+        .unwrap();
+        let json = ExperimentSpec::from_json_str(
+            r#"{
+                "base": "densenet",
+                "name": "fig3_densenet",
+                "scales": [8, 16],
+                "epochs": 3,
+                "peak_lr": 0.02,
+                "scaling": "sqrt",
+                "flavors": ["d_ring", "ada"],
+                "ada": {"k0": 10, "gamma_k": 0.5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(json.name, toml.name);
+        assert_eq!(json.scales, toml.scales);
+        assert_eq!(json.epochs, toml.epochs);
+        assert_eq!(json.peak_lr, toml.peak_lr);
+        assert_eq!(json.scaling, toml.scaling);
+        assert_eq!(json.flavors, toml.flavors);
+    }
+
+    #[test]
+    fn json_specs_reach_dotted_sections() {
+        // {"strategy": {"mix": {...}}} ≡ [strategy.mix] — the nested
+        // parameter-table form.
+        let spec = ExperimentSpec::from_json_str(
+            r#"{
+                "base": "resnet20",
+                "strategies": ["mix"],
+                "strategy": {"mix": {"k0": 2, "gamma_k": 0.5}}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.strategies.len(), 1);
+        match &spec.strategies[0] {
+            StrategyRef::Named { name, params } => {
+                assert_eq!(name, "mix");
+                assert_eq!(params.k0, Some(2));
+                assert_eq!(params.gamma_k, 0.5);
+            }
+            other => panic!("expected named strategy, got {other:?}"),
+        }
+        // The orphaned-section guard fires through the JSON door too.
+        let err = ExperimentSpec::from_json_str(
+            r#"{"base": "resnet20", "strategy": {"typo": {"k0": 2}}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("strategy.typo"), "{err}");
+    }
+
+    #[test]
+    fn from_text_sniffs_the_encoding() {
+        let json = ExperimentSpec::from_text("  {\"base\": \"resnet20\"}").unwrap();
+        assert_eq!(json.name, "resnet20_cifar_analog");
+        let toml = ExperimentSpec::from_text("base = \"resnet20\"").unwrap();
+        assert_eq!(toml.name, "resnet20_cifar_analog");
+        assert!(ExperimentSpec::from_text("{not json").is_err());
+    }
+
+    #[test]
+    fn json_rejects_malformed_shapes() {
+        assert!(ExperimentSpec::from_json_str("[1, 2]").is_err(), "not an object");
+        assert!(
+            ExperimentSpec::from_json_str(
+                r#"{"base": "resnet20", "epochs": null}"#
+            )
+            .is_err(),
+            "null scalar"
+        );
+        assert!(
+            ExperimentSpec::from_json_str(
+                r#"{"base": "resnet20", "a": {"b": {"c": {"d": 1}}}}"#
+            )
+            .is_err(),
+            "over-nested"
         );
     }
 

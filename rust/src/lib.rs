@@ -17,8 +17,10 @@
 //!   open strategy registry (`coordinator::strategy`) and observer hooks
 //!   (`coordinator::observer`) —, variance metrics and ranking analysis
 //!   ([`metrics`]), the DBench experiment runner ([`dbench`]) with its
-//!   resumable/parallel `SessionPlan` pipeline, and a Summit-like
-//!   analytic network cost model ([`simnet`]).
+//!   resumable/parallel `SessionPlan` pipeline, the multi-tenant
+//!   experiment service ([`serve`]) that runs DBench behind an HTTP
+//!   API with fair-share scheduling and a content-addressed result
+//!   store, and a Summit-like analytic network cost model ([`simnet`]).
 //! * **L2 (build-time Python)** — JAX model definitions (`python/compile/`)
 //!   AOT-lowered to HLO text artifacts, loaded and executed from Rust via
 //!   the PJRT C API ([`runtime`]).
@@ -56,6 +58,7 @@ pub mod graph;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod topology;
 pub mod util;

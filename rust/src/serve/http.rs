@@ -1,0 +1,583 @@
+//! A minimal HTTP/1.1 front end over `std::net::TcpListener` — no
+//! framework, no dependencies, one thread per connection, one request
+//! per connection (`Connection: close`). That is deliberately the
+//! simplest protocol shape that supports the service's needs: small
+//! JSON request/response bodies plus one long-lived chunked response
+//! for metric streaming.
+//!
+//! Routes:
+//!
+//! | Method & path              | Effect                                                |
+//! |----------------------------|-------------------------------------------------------|
+//! | `GET /`                    | Service info (name, jobs, store stats)                |
+//! | `GET /healthz`             | Liveness probe                                        |
+//! | `POST /jobs`               | Submit a spec (TOML or JSON body, sniffed); query `priority`, `weight`, `seeds` |
+//! | `GET /jobs`                | All job statuses                                      |
+//! | `GET /jobs/{id}`           | One job status                                        |
+//! | `POST /jobs/{id}/cancel`   | Cancel (cell-boundary preemption)                     |
+//! | `GET /jobs/{id}/results`   | Results document (deterministic bytes)                |
+//! | `GET /jobs/{id}/stream`    | Chunked JSONL event stream (replay + live tail)       |
+//! | `GET /scheduler`           | Dispatch gate + dispatch log                          |
+//! | `POST /scheduler/pause`    | Close the dispatch gate                               |
+//! | `POST /scheduler/resume`   | Open the dispatch gate                                |
+//! | `GET /store`               | Result-store statistics                               |
+//! | `POST /shutdown`           | Stop the server; `?drain=false` cancels in-flight cells |
+//!
+//! The module also ships the tiny client half ([`http_request`],
+//! [`http_stream_lines`]) that `dbench submit/status/results/stream`
+//! and the integration tests use — the same parser exercising both
+//! directions keeps the protocol honest without external tooling.
+
+use super::scheduler::Scheduler;
+use super::store::ResultStore;
+use crate::dbench::{ExperimentSpec, SessionPlan};
+use crate::error::{AdaError, Result};
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Server configuration (the `dbench serve` flags).
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks a free port — tests rely on
+    /// this).
+    pub addr: String,
+    /// Result-store root directory.
+    pub store_dir: String,
+    /// Concurrent cell workers.
+    pub workers: usize,
+    /// Start with the dispatch gate closed ([`Scheduler::pause`]);
+    /// tests use this to submit multiple jobs before any cell runs.
+    pub hold: bool,
+}
+
+/// One parsed request.
+struct Request {
+    method: String,
+    path: String,
+    query: BTreeMap<String, String>,
+    body: Vec<u8>,
+}
+
+fn parse_query(raw: &str) -> BTreeMap<String, String> {
+    raw.split('&')
+        .filter_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (!k.is_empty()).then(|| (k.to_string(), v.to_string()))
+        })
+        .collect()
+}
+
+fn read_request(stream: &TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| AdaError::Runtime("empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| AdaError::Runtime("request line missing target".into()))?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target.to_string(), BTreeMap::new()),
+    };
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    AdaError::Runtime(format!("bad Content-Length {value:?}"))
+                })?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, query, body })
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, content_type: &str, body: &[u8]) {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(code),
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body);
+    let _ = stream.flush();
+}
+
+fn respond_json(stream: &mut TcpStream, code: u16, v: &Value) {
+    respond(stream, code, "application/json", v.to_string().as_bytes());
+}
+
+fn error_json(msg: impl Into<String>) -> Value {
+    Value::obj(vec![("error", Value::Str(msg.into()))])
+}
+
+/// Shared server state.
+struct Ctx {
+    scheduler: Arc<Scheduler>,
+    store: Arc<ResultStore>,
+    shutdown: AtomicBool,
+    drain: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// A running server handle: its bound address (query it when binding
+/// port 0), plus shutdown/join.
+pub struct Server {
+    /// The actually-bound address.
+    pub addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Stop the server from the owning process: `drain = true` lets
+    /// in-flight cells finish and persist, `false` cancels them at the
+    /// next iteration boundary. Idempotent with `POST /shutdown`.
+    pub fn shutdown(&self, drain: bool) {
+        self.ctx.drain.store(drain, Ordering::SeqCst);
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.ctx.addr);
+    }
+
+    /// Wait for the accept loop (and therefore the scheduler workers)
+    /// to finish.
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown(true);
+            self.join();
+        }
+    }
+}
+
+/// Bind, spawn the scheduler workers and the accept loop, and return
+/// immediately. The server runs until [`Server::shutdown`] or a
+/// `POST /shutdown` request.
+pub fn start(cfg: &ServeConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| AdaError::Runtime(format!("bind {}: {e}", cfg.addr)))?;
+    let addr = listener.local_addr()?;
+    let store = Arc::new(ResultStore::open(&cfg.store_dir)?);
+    let scheduler = Scheduler::start(Arc::clone(&store), cfg.workers, cfg.hold);
+    let ctx = Arc::new(Ctx {
+        scheduler,
+        store,
+        shutdown: AtomicBool::new(false),
+        drain: AtomicBool::new(true),
+        addr,
+    });
+    let accept_ctx = Arc::clone(&ctx);
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if accept_ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let handler_ctx = Arc::clone(&accept_ctx);
+            std::thread::spawn(move || handle(handler_ctx, stream));
+        }
+        accept_ctx
+            .scheduler
+            .shutdown(accept_ctx.drain.load(Ordering::SeqCst));
+    });
+    Ok(Server { addr, ctx, accept: Some(accept) })
+}
+
+fn handle(ctx: Arc<Ctx>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let req = match read_request(&stream) {
+        Ok(r) => r,
+        Err(e) => {
+            respond_json(&mut stream, 400, &error_json(e.to_string()));
+            return;
+        }
+    };
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", []) => {
+            let stats = ctx.store.stats();
+            respond_json(
+                &mut stream,
+                200,
+                &Value::obj(vec![
+                    ("service", Value::Str("dbench".into())),
+                    ("jobs", Value::Num(ctx.scheduler.list().len() as f64)),
+                    ("paused", Value::Bool(ctx.scheduler.paused())),
+                    ("store_objects", Value::Num(stats.objects as f64)),
+                ]),
+            );
+        }
+        ("GET", ["healthz"]) => {
+            respond_json(&mut stream, 200, &Value::obj(vec![("ok", Value::Bool(true))]));
+        }
+        ("POST", ["jobs"]) => handle_submit(&ctx, &mut stream, &req),
+        ("GET", ["jobs"]) => {
+            let list = ctx.scheduler.list().iter().map(|s| s.to_json()).collect();
+            respond_json(&mut stream, 200, &Value::obj(vec![("jobs", Value::Arr(list))]));
+        }
+        ("GET", ["jobs", id]) => match ctx.scheduler.status(id) {
+            Some(s) => respond_json(&mut stream, 200, &s.to_json()),
+            None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
+        },
+        ("POST", ["jobs", id, "cancel"]) => match ctx.scheduler.cancel(id) {
+            Some(s) => respond_json(&mut stream, 200, &s.to_json()),
+            None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
+        },
+        ("GET", ["jobs", id, "results"]) => match ctx.scheduler.job(id) {
+            Some(job) => respond_json(&mut stream, 200, &job.results_json()),
+            None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
+        },
+        ("GET", ["jobs", id, "stream"]) => match ctx.scheduler.job(id) {
+            Some(job) => stream_events(&ctx, &mut stream, &job.events),
+            None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
+        },
+        ("GET", ["scheduler"]) => {
+            let log = ctx
+                .scheduler
+                .dispatch_log()
+                .into_iter()
+                .map(|(id, cell)| {
+                    Value::obj(vec![
+                        ("job", Value::Str(id)),
+                        ("cell", Value::Num(cell as f64)),
+                    ])
+                })
+                .collect();
+            respond_json(
+                &mut stream,
+                200,
+                &Value::obj(vec![
+                    ("paused", Value::Bool(ctx.scheduler.paused())),
+                    ("dispatched", Value::Arr(log)),
+                ]),
+            );
+        }
+        ("POST", ["scheduler", "pause"]) => {
+            ctx.scheduler.pause();
+            respond_json(&mut stream, 200, &Value::obj(vec![("paused", Value::Bool(true))]));
+        }
+        ("POST", ["scheduler", "resume"]) => {
+            ctx.scheduler.resume();
+            respond_json(&mut stream, 200, &Value::obj(vec![("paused", Value::Bool(false))]));
+        }
+        ("GET", ["store"]) => {
+            let s = ctx.store.stats();
+            respond_json(
+                &mut stream,
+                200,
+                &Value::obj(vec![
+                    ("objects", Value::Num(s.objects as f64)),
+                    ("hits", Value::Num(s.hits as f64)),
+                    ("misses", Value::Num(s.misses as f64)),
+                ]),
+            );
+        }
+        ("POST", ["shutdown"]) => {
+            let drain = req.query.get("drain").map(|v| v != "false").unwrap_or(true);
+            respond_json(
+                &mut stream,
+                200,
+                &Value::obj(vec![("stopping", Value::Bool(true)), ("drain", Value::Bool(drain))]),
+            );
+            ctx.drain.store(drain, Ordering::SeqCst);
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            // Wake the accept loop so it observes the flag.
+            let _ = TcpStream::connect(ctx.addr);
+        }
+        (method, _) => {
+            let code = if matches!(method, "GET" | "POST") { 404 } else { 405 };
+            respond_json(
+                &mut stream,
+                code,
+                &error_json(format!("no route {} {}", method, req.path)),
+            );
+        }
+    }
+}
+
+fn handle_submit(ctx: &Arc<Ctx>, stream: &mut TcpStream, req: &Request) {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            respond_json(stream, 400, &error_json("spec body is not UTF-8"));
+            return;
+        }
+    };
+    let parse = |name: &str| -> std::result::Result<Option<f64>, String> {
+        match req.query.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("query {name}={raw:?} is not a number")),
+        }
+    };
+    let submitted = ExperimentSpec::from_text(text).and_then(|spec| {
+        let mut plan = SessionPlan::from_spec(&spec);
+        if let Some(seeds) = req
+            .query
+            .get("seeds")
+            .map(|raw| raw.parse::<usize>().map_err(|_| AdaError::Config(format!("query seeds={raw:?} is not an integer"))))
+            .transpose()?
+        {
+            plan.expand_seeds(seeds);
+        }
+        let priority = parse("priority").map_err(AdaError::Config)?.unwrap_or(0.0) as i64;
+        let weight = parse("weight").map_err(AdaError::Config)?.unwrap_or(1.0);
+        ctx.scheduler.submit(spec.name.clone(), priority, weight, plan)
+    });
+    match submitted {
+        Ok(job) => respond_json(
+            stream,
+            200,
+            &Value::obj(vec![
+                ("job", Value::Str(job.id.clone())),
+                ("cells", Value::Num(job.plan.cells.len() as f64)),
+                ("priority", Value::Num(job.priority as f64)),
+                ("weight", Value::Num(job.weight)),
+            ]),
+        ),
+        Err(e) => respond_json(stream, 400, &error_json(e.to_string())),
+    }
+}
+
+/// The chunked JSONL stream: replay everything logged so far, then tail
+/// until the job's event log closes (or the server shuts down / the
+/// client hangs up — a failed write ends the tail).
+fn stream_events(ctx: &Arc<Ctx>, stream: &mut TcpStream, events: &super::stream::EventLog) {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    let mut cursor = 0usize;
+    loop {
+        let (lines, closed) = events.wait_from(cursor, Duration::from_millis(250));
+        cursor += lines.len();
+        for line in &lines {
+            let payload = format!("{line}\n");
+            let chunk = format!("{:x}\r\n{payload}\r\n", payload.len());
+            if stream.write_all(chunk.as_bytes()).is_err() {
+                return;
+            }
+        }
+        let _ = stream.flush();
+        if (closed && lines.is_empty()) || ctx.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.flush();
+}
+
+// ---------------------------------------------------------------------
+// Client half — used by `dbench submit/status/results/stream` and the
+// integration tests.
+// ---------------------------------------------------------------------
+
+fn read_headers(reader: &mut BufReader<TcpStream>) -> Result<(u16, BTreeMap<String, String>)> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let code = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| AdaError::Runtime(format!("bad status line {line:?}")))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    Ok((code, headers))
+}
+
+fn read_chunked(reader: &mut BufReader<TcpStream>) -> Result<Vec<u8>> {
+    let mut body = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| AdaError::Runtime(format!("bad chunk size {size_line:?}")))?;
+        if size == 0 {
+            let mut trailer = String::new();
+            let _ = reader.read_line(&mut trailer);
+            return Ok(body);
+        }
+        let mut chunk = vec![0u8; size];
+        reader.read_exact(&mut chunk)?;
+        body.extend_from_slice(&chunk);
+        let mut crlf = [0u8; 2];
+        reader.read_exact(&mut crlf)?;
+    }
+}
+
+/// One HTTP exchange against `addr`: returns `(status, body)`. Handles
+/// `Content-Length`, chunked and read-to-EOF bodies.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> Result<(u16, Vec<u8>)> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| AdaError::Runtime(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let mut writer = stream.try_clone()?;
+    let payload = body.unwrap_or(&[]);
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    writer.write_all(head.as_bytes())?;
+    writer.write_all(payload)?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (code, headers) = read_headers(&mut reader)?;
+    let body = if headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false)
+    {
+        read_chunked(&mut reader)?
+    } else if let Some(len) = headers.get("content-length") {
+        let len: usize = len
+            .parse()
+            .map_err(|_| AdaError::Runtime(format!("bad Content-Length {len:?}")))?;
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        buf
+    } else {
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        buf
+    };
+    Ok((code, body))
+}
+
+/// GET `path` and feed each streamed line to `each` as it arrives
+/// (chunked framing stripped). Returns the response status.
+pub fn http_stream_lines(
+    addr: &str,
+    path: &str,
+    mut each: impl FnMut(&str),
+) -> Result<u16> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| AdaError::Runtime(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let mut writer = stream.try_clone()?;
+    let head =
+        format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    writer.write_all(head.as_bytes())?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (code, headers) = read_headers(&mut reader)?;
+    let chunked = headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false);
+    let mut partial = String::new();
+    let mut feed = |partial: &mut String, each: &mut dyn FnMut(&str)| {
+        while let Some(pos) = partial.find('\n') {
+            let line: String = partial.drain(..=pos).collect();
+            let line = line.trim_end();
+            if !line.is_empty() {
+                each(line);
+            }
+        }
+    };
+    if chunked {
+        // Decode chunk by chunk so lines reach the callback as they
+        // arrive — the live-tail path.
+        loop {
+            let mut size_line = String::new();
+            reader.read_line(&mut size_line)?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| AdaError::Runtime(format!("bad chunk size {size_line:?}")))?;
+            if size == 0 {
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            reader.read_exact(&mut chunk)?;
+            partial.push_str(&String::from_utf8_lossy(&chunk));
+            feed(&mut partial, &mut each);
+            let mut crlf = [0u8; 2];
+            reader.read_exact(&mut crlf)?;
+        }
+    } else {
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        partial.push_str(&String::from_utf8_lossy(&buf));
+        feed(&mut partial, &mut each);
+    }
+    let tail = partial.trim_end();
+    if !tail.is_empty() {
+        each(tail);
+    }
+    Ok(code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_strings_parse() {
+        let q = parse_query("priority=5&weight=2.5&drain=false");
+        assert_eq!(q.get("priority").map(String::as_str), Some("5"));
+        assert_eq!(q.get("weight").map(String::as_str), Some("2.5"));
+        assert_eq!(q.get("drain").map(String::as_str), Some("false"));
+        assert!(parse_query("").is_empty());
+        assert!(parse_query("novalue").is_empty());
+    }
+
+    #[test]
+    fn status_lines_cover_the_codes_in_use() {
+        for code in [200u16, 400, 404, 405] {
+            assert!(!status_text(code).is_empty());
+        }
+        assert_eq!(status_text(500), "Internal Server Error");
+    }
+}

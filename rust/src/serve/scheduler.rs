@@ -1,0 +1,756 @@
+//! The multi-tenant cell scheduler: every submitted job expands to
+//! [`CellPlan`]s up front (the existing enumeration machinery), and one
+//! shared bounded worker pool drains cells across **all** jobs under a
+//! two-level policy:
+//!
+//! 1. **Integer priority** — a runnable cell of a higher-priority job
+//!    always dispatches before any lower-priority cell. A high-priority
+//!    job submitted mid-sweep therefore preempts the *remaining* cells
+//!    of a low-priority sweep (in-flight cells are never aborted by
+//!    priority — cells are the preemption granularity).
+//! 2. **Deficit fair-share within a priority band** — each job carries
+//!    a weight (default 1); dispatching one cell costs that job
+//!    `1/weight` of virtual time, and the runnable job with the lowest
+//!    virtual time goes next (ties broken by submission order). A
+//!    1024-cell sweep at weight 1 and an interactive job at weight 1
+//!    therefore alternate cells instead of the sweep starving the
+//!    newcomer. The accounting is deterministic — with one worker the
+//!    interleaving is an exact function of the submission sequence,
+//!    which the integration tests pin.
+//!
+//! Every dispatch consults the shared [`ResultStore`] first: a
+//! fingerprint hit returns the stored result without running anything
+//! (and still emits a `cell_done {cached:true}` stream event). Completed
+//! cells are persisted back, so an interrupted job resumes at cell
+//! granularity — the store *is* the checkpoint.
+//!
+//! Cancellation is cooperative and bounded by one cell: the scheduler
+//! stops dispatching a cancelled job immediately, and the in-flight
+//! cell's [`CancelStop`] observer ends its run at the next iteration
+//! boundary; a cancelled cell's partial result is **discarded**, never
+//! stored (cache-poisoning guard).
+
+use super::store::{content_hash, ResultStore};
+use super::stream::{EventLog, StreamObserver};
+use crate::coordinator::observer::{ControlFlow, EpochInfo, Observer};
+use crate::dbench::{CellResult, SessionPlan};
+use crate::error::{AdaError, Result};
+use crate::metrics::IterationRecord;
+use crate::util::json::Value;
+use crate::util::matrix::ReplicaMatrix;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Stop an in-flight cell run at the next iteration/epoch boundary once
+/// the shared flag flips — the cancellation (and non-drain shutdown)
+/// path of the service. Relies on the session's early-stop contract:
+/// the run still evaluates and returns, and the scheduler then discards
+/// the truncated result.
+pub struct CancelStop {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelStop {
+    /// Stop when `flag` becomes true.
+    pub fn new(flag: Arc<AtomicBool>) -> Self {
+        CancelStop { flag }
+    }
+
+    fn verdict(&self) -> ControlFlow {
+        if self.flag.load(Ordering::Relaxed) {
+            ControlFlow::Stop
+        } else {
+            ControlFlow::Continue
+        }
+    }
+}
+
+impl Observer for CancelStop {
+    fn on_iteration(
+        &mut self,
+        _rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        Ok(self.verdict())
+    }
+
+    fn on_epoch(&mut self, _info: &EpochInfo<'_>) -> Result<ControlFlow> {
+        Ok(self.verdict())
+    }
+}
+
+/// One submitted experiment: an expanded [`SessionPlan`] plus
+/// scheduling identity and the job's event stream. Results accumulate
+/// per cell slot as cells finish (in any order).
+pub struct Job {
+    /// Deterministic job id (`j` + 12 hex of the content hash over the
+    /// cell fingerprints and scheduling parameters, `-N`-suffixed when
+    /// the same submission repeats).
+    pub id: String,
+    /// Spec name (display only).
+    pub name: String,
+    /// Scheduling priority (higher dispatches first).
+    pub priority: i64,
+    /// Fair-share weight within a priority band (> 0).
+    pub weight: f64,
+    /// Submission sequence number (final tiebreak).
+    pub seq: usize,
+    /// The expanded plan. `resume_dir` stays `None` here — the
+    /// scheduler owns all store traffic so cancelled runs can be
+    /// discarded before they ever touch disk.
+    pub plan: SessionPlan,
+    /// The job's JSONL event stream (closed when the job finishes).
+    pub events: Arc<EventLog>,
+    cancelled: Arc<AtomicBool>,
+    results: Mutex<Vec<Option<CellResult>>>,
+}
+
+impl Job {
+    /// Whether the job was cancelled.
+    pub fn cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// The job's results document: a `cells` array in enumeration order
+    /// (`null` for cells not finished) plus a `complete` flag.
+    /// Deliberately excludes the job id and any timing, so two jobs
+    /// over identical specs serialize to **bitwise-identical** bytes
+    /// once complete — the cache-hit contract the integration tests
+    /// compare byte-for-byte.
+    pub fn results_json(&self) -> Value {
+        let results = self.results.lock().expect("job results lock");
+        let complete = !results.is_empty() && results.iter().all(Option::is_some);
+        Value::obj(vec![
+            ("complete", Value::Bool(complete)),
+            (
+                "cells",
+                Value::Arr(
+                    results
+                        .iter()
+                        .map(|r| r.as_ref().map(CellResult::to_json).unwrap_or(Value::Null))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A point-in-time scheduling snapshot of one job.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Job id.
+    pub id: String,
+    /// Spec name.
+    pub name: String,
+    /// `queued` | `running` | `done` | `cancelled` | `failed`.
+    pub state: String,
+    /// Scheduling priority.
+    pub priority: i64,
+    /// Fair-share weight.
+    pub weight: f64,
+    /// Total cells in the plan.
+    pub total: usize,
+    /// Cells not yet dispatched.
+    pub pending: usize,
+    /// Cells currently executing.
+    pub running: usize,
+    /// Cells finished (including cache hits).
+    pub done: usize,
+    /// Finished cells that were served from the store.
+    pub cached: usize,
+    /// First cell error, if the job failed.
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    /// JSON encoding (the `/jobs` endpoints).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("name", Value::Str(self.name.clone())),
+            ("state", Value::Str(self.state.clone())),
+            ("priority", Value::Num(self.priority as f64)),
+            ("weight", Value::Num(self.weight)),
+            ("total", Value::Num(self.total as f64)),
+            ("pending", Value::Num(self.pending as f64)),
+            ("running", Value::Num(self.running as f64)),
+            ("done", Value::Num(self.done as f64)),
+            ("cached", Value::Num(self.cached as f64)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Value::Str(e.clone()),
+                    None => Value::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Per-job scheduling state. Lives entirely under the scheduler's one
+/// inner lock; the only other lock in the subsystem (`Job::results`) is
+/// never held at the same time, so lock ordering is trivial.
+struct Entry {
+    job: Arc<Job>,
+    pending: VecDeque<usize>,
+    dispatched: usize,
+    running: usize,
+    done: usize,
+    cached: usize,
+    error: Option<String>,
+    finished: bool,
+}
+
+impl Entry {
+    fn runnable(&self) -> bool {
+        !self.pending.is_empty() && self.error.is_none() && !self.job.cancelled()
+    }
+
+    /// Virtual time consumed: dispatches weighted by `1/weight`.
+    fn vtime(&self) -> f64 {
+        self.dispatched as f64 / self.job.weight
+    }
+
+    fn state(&self) -> &'static str {
+        if self.error.is_some() {
+            "failed"
+        } else if self.job.cancelled() {
+            "cancelled"
+        } else if self.pending.is_empty() && self.running == 0 {
+            "done"
+        } else if self.running > 0 || self.done > 0 {
+            "running"
+        } else {
+            "queued"
+        }
+    }
+
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.job.id.clone(),
+            name: self.job.name.clone(),
+            state: self.state().to_string(),
+            priority: self.job.priority,
+            weight: self.job.weight,
+            total: self.job.plan.cells.len(),
+            pending: self.pending.len(),
+            running: self.running,
+            done: self.done,
+            cached: self.cached,
+            error: self.error.clone(),
+        }
+    }
+}
+
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    order: Vec<String>,
+    next_seq: usize,
+    paused: bool,
+    stopping: bool,
+    dispatch_log: Vec<(String, usize)>,
+}
+
+impl Inner {
+    /// The scheduling rule: among runnable jobs pick max priority, then
+    /// min virtual time, then min submission sequence. Cells within a
+    /// job always dispatch in enumeration order.
+    fn pick(&self) -> Option<String> {
+        let mut best: Option<&Entry> = None;
+        for e in self.entries.values() {
+            if !e.runnable() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    if e.job.priority != b.job.priority {
+                        e.job.priority > b.job.priority
+                    } else if e.vtime() != b.vtime() {
+                        e.vtime() < b.vtime()
+                    } else {
+                        e.job.seq < b.job.seq
+                    }
+                }
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+        best.map(|e| e.job.id.clone())
+    }
+}
+
+enum Outcome {
+    Done(CellResult, bool),
+    Discarded,
+    Failed(String),
+}
+
+/// The shared bounded executor over all submitted jobs. Construct with
+/// [`Scheduler::start`]; workers live until [`Scheduler::shutdown`].
+pub struct Scheduler {
+    store: Arc<ResultStore>,
+    workers: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    done_cv: Condvar,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Spawn `workers` (min 1) cell workers draining into `store`.
+    /// `paused` starts the dispatch gate closed (tests use this to make
+    /// multi-job interleavings deterministic; [`Scheduler::resume`]
+    /// opens it).
+    pub fn start(store: Arc<ResultStore>, workers: usize, paused: bool) -> Arc<Scheduler> {
+        let sched = Arc::new(Scheduler {
+            store,
+            workers: workers.max(1),
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                order: Vec::new(),
+                next_seq: 0,
+                paused,
+                stopping: false,
+                dispatch_log: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            handles: Mutex::new(Vec::new()),
+        });
+        let mut handles = sched.handles.lock().expect("scheduler handles lock");
+        for _ in 0..sched.workers {
+            let s = Arc::clone(&sched);
+            handles.push(std::thread::spawn(move || s.worker_loop()));
+        }
+        drop(handles);
+        sched
+    }
+
+    /// Submit an expanded plan. Returns the job handle with its
+    /// deterministic id assigned.
+    pub fn submit(
+        &self,
+        name: String,
+        priority: i64,
+        weight: f64,
+        mut plan: SessionPlan,
+    ) -> Result<Arc<Job>> {
+        if plan.cells.is_empty() {
+            return Err(AdaError::Config("spec expands to zero cells".into()));
+        }
+        if !(weight > 0.0 && weight.is_finite()) {
+            return Err(AdaError::Config(format!("job weight must be finite and > 0, got {weight}")));
+        }
+        // The scheduler owns all store traffic (see `Job::plan`).
+        plan.resume_dir = None;
+        let total = plan.cells.len();
+        let mut material = format!("priority={priority} weight={weight}");
+        for cell in &plan.cells {
+            material.push(' ');
+            material.push_str(&plan.cell_fingerprint(cell));
+        }
+        let base = format!("j{}", &content_hash(&material)[..12]);
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        if inner.stopping {
+            return Err(AdaError::Runtime("scheduler is shutting down".into()));
+        }
+        let mut id = base.clone();
+        let mut n = 1usize;
+        while inner.entries.contains_key(&id) {
+            n += 1;
+            id = format!("{base}-{n}");
+        }
+        let job = Arc::new(Job {
+            id: id.clone(),
+            name,
+            priority,
+            weight,
+            seq: inner.next_seq,
+            plan,
+            events: Arc::new(EventLog::new()),
+            cancelled: Arc::new(AtomicBool::new(false)),
+            results: Mutex::new((0..total).map(|_| None).collect()),
+        });
+        inner.next_seq += 1;
+        inner.entries.insert(
+            id.clone(),
+            Entry {
+                job: Arc::clone(&job),
+                pending: (0..total).collect(),
+                dispatched: 0,
+                running: 0,
+                done: 0,
+                cached: 0,
+                error: None,
+                finished: false,
+            },
+        );
+        inner.order.push(id);
+        drop(inner);
+        self.cv.notify_all();
+        Ok(job)
+    }
+
+    /// Close the dispatch gate: in-flight cells finish, nothing new
+    /// dispatches until [`Scheduler::resume`].
+    pub fn pause(&self) {
+        self.inner.lock().expect("scheduler lock").paused = true;
+        self.cv.notify_all();
+    }
+
+    /// Reopen the dispatch gate.
+    pub fn resume(&self) {
+        self.inner.lock().expect("scheduler lock").paused = false;
+        self.cv.notify_all();
+    }
+
+    /// Whether the dispatch gate is closed.
+    pub fn paused(&self) -> bool {
+        self.inner.lock().expect("scheduler lock").paused
+    }
+
+    /// Cancel a job: no further cells dispatch, and the in-flight cell
+    /// (if any) stops at its next iteration boundary and is discarded.
+    /// Returns the post-cancel status, or `None` for an unknown id.
+    pub fn cancel(&self, id: &str) -> Option<JobStatus> {
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        let entry = inner.entries.get_mut(id)?;
+        entry.job.cancelled.store(true, Ordering::SeqCst);
+        let finalize = entry.running == 0 && !entry.finished;
+        if finalize {
+            entry.finished = true;
+        }
+        let events = Arc::clone(&entry.job.events);
+        let status = entry.status();
+        drop(inner);
+        if finalize {
+            events.push_value(&job_done_event(id, "cancelled"));
+            events.close();
+        }
+        self.cv.notify_all();
+        self.done_cv.notify_all();
+        Some(status)
+    }
+
+    /// Status of one job.
+    pub fn status(&self, id: &str) -> Option<JobStatus> {
+        let inner = self.inner.lock().expect("scheduler lock");
+        inner.entries.get(id).map(Entry::status)
+    }
+
+    /// All jobs in submission order.
+    pub fn list(&self) -> Vec<JobStatus> {
+        let inner = self.inner.lock().expect("scheduler lock");
+        inner
+            .order
+            .iter()
+            .filter_map(|id| inner.entries.get(id))
+            .map(Entry::status)
+            .collect()
+    }
+
+    /// The job handle for `id`.
+    pub fn job(&self, id: &str) -> Option<Arc<Job>> {
+        let inner = self.inner.lock().expect("scheduler lock");
+        inner.entries.get(id).map(|e| Arc::clone(&e.job))
+    }
+
+    /// The full dispatch history as `(job id, cell index)` pairs, in
+    /// dispatch order — the observable the fair-share tests assert on.
+    pub fn dispatch_log(&self) -> Vec<(String, usize)> {
+        self.inner.lock().expect("scheduler lock").dispatch_log.clone()
+    }
+
+    /// Block until `id` reaches a terminal state (or `timeout`
+    /// elapses). Returns the final status, `None` on unknown id or
+    /// timeout.
+    pub fn wait(&self, id: &str, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        loop {
+            let status = inner.entries.get(id).map(Entry::status)?;
+            if matches!(status.state.as_str(), "done" | "failed" | "cancelled")
+                && status.running == 0
+            {
+                return Some(status);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .done_cv
+                .wait_timeout(inner, deadline - now)
+                .expect("scheduler lock");
+            inner = guard;
+        }
+    }
+
+    /// Stop the executor. `drain = true` (graceful) lets in-flight
+    /// cells run to completion and persist to the store — cell
+    /// granularity *is* the checkpoint, so a restarted server replays
+    /// nothing; `drain = false` flips every job's cancel flag so
+    /// in-flight cells stop at their next iteration boundary and are
+    /// discarded. Either way no new cells dispatch, workers are joined,
+    /// and every event log is closed so attached streams terminate.
+    pub fn shutdown(&self, drain: bool) {
+        {
+            let mut inner = self.inner.lock().expect("scheduler lock");
+            inner.stopping = true;
+            inner.paused = false;
+            if !drain {
+                for e in inner.entries.values() {
+                    e.job.cancelled.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        self.cv.notify_all();
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().expect("scheduler handles lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+        let inner = self.inner.lock().expect("scheduler lock");
+        for e in inner.entries.values() {
+            e.job.events.close();
+        }
+        drop(inner);
+        self.done_cv.notify_all();
+    }
+
+    fn worker_loop(&self) {
+        while let Some((job, idx)) = self.next_cell() {
+            self.run_cell(&job, idx);
+        }
+    }
+
+    /// Block for the next dispatch (respecting pause/priority/fair
+    /// share); `None` once the scheduler is stopping.
+    fn next_cell(&self) -> Option<(Arc<Job>, usize)> {
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        loop {
+            if inner.stopping {
+                return None;
+            }
+            if !inner.paused {
+                if let Some(id) = inner.pick() {
+                    let entry = inner.entries.get_mut(&id).expect("picked entry");
+                    let idx = entry.pending.pop_front().expect("runnable entry");
+                    entry.dispatched += 1;
+                    entry.running += 1;
+                    let job = Arc::clone(&entry.job);
+                    inner.dispatch_log.push((id, idx));
+                    return Some((job, idx));
+                }
+            }
+            inner = self.cv.wait(inner).expect("scheduler lock");
+        }
+    }
+
+    fn run_cell(&self, job: &Arc<Job>, idx: usize) {
+        let mut cell = job.plan.cells[idx].clone();
+        // Same discipline as `SessionPlan::run`: concurrent cells force
+        // auto-threaded configs to one thread so cell-level parallelism
+        // and the intra-cell pool don't oversubscribe the cores
+        // (bit-identical either way, so the cache key ignores it).
+        if self.workers > 1 && cell.config.threads == 0 {
+            cell.config.threads = 1;
+        }
+        let fingerprint = job.plan.cell_fingerprint(&cell);
+        job.events.push_value(&Value::obj(vec![
+            ("type", Value::Str("cell_start".into())),
+            ("cell", Value::Num(idx as f64)),
+            ("scale", Value::Num(cell.scale as f64)),
+            ("strategy", Value::Str(cell.strategy.key())),
+        ]));
+        let outcome = if let Some(prev) = self.store.load(&fingerprint, None) {
+            Outcome::Done(prev, true)
+        } else if job.cancelled() {
+            Outcome::Discarded
+        } else {
+            let observers: Vec<Box<dyn Observer>> = vec![
+                Box::new(StreamObserver::new(Arc::clone(&job.events), idx, cell.scale)),
+                Box::new(CancelStop::new(Arc::clone(&job.cancelled))),
+            ];
+            match job.plan.run_cell_plan_with(&cell, observers) {
+                Ok(_) if job.cancelled() => Outcome::Discarded,
+                Ok(result) => {
+                    let _ = self.store.save(&fingerprint, &result);
+                    Outcome::Done(result, false)
+                }
+                Err(e) => Outcome::Failed(e.to_string()),
+            }
+        };
+        let verdict = match outcome {
+            Outcome::Done(result, cached) => {
+                job.events.push_value(&Value::obj(vec![
+                    ("type", Value::Str("cell_done".into())),
+                    ("cell", Value::Num(idx as f64)),
+                    ("cached", Value::Bool(cached)),
+                    ("summary", result.summary.to_json()),
+                ]));
+                job.results.lock().expect("job results lock")[idx] = Some(result);
+                Ok(cached)
+            }
+            Outcome::Discarded => Err(None),
+            Outcome::Failed(msg) => Err(Some(msg)),
+        };
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        let entry = inner.entries.get_mut(&job.id).expect("running entry");
+        entry.running -= 1;
+        match verdict {
+            Ok(cached) => {
+                entry.done += 1;
+                if cached {
+                    entry.cached += 1;
+                }
+            }
+            Err(None) => {}
+            Err(Some(msg)) => {
+                if entry.error.is_none() {
+                    entry.error = Some(msg);
+                }
+                entry.pending.clear();
+            }
+        }
+        let terminal =
+            entry.pending.is_empty() || entry.job.cancelled() || entry.error.is_some();
+        let finalize = entry.running == 0 && terminal && !entry.finished;
+        if finalize {
+            entry.finished = true;
+        }
+        let state = entry.state().to_string();
+        let events = Arc::clone(&job.events);
+        drop(inner);
+        if finalize {
+            events.push_value(&job_done_event(&job.id, &state));
+            events.close();
+        }
+        self.cv.notify_all();
+        self.done_cv.notify_all();
+    }
+}
+
+fn job_done_event(id: &str, state: &str) -> Value {
+    Value::obj(vec![
+        ("type", Value::Str("job_done".into())),
+        ("job", Value::Str(id.to_string())),
+        ("state", Value::Str(state.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SgdFlavor;
+    use crate::dbench::ExperimentSpec;
+
+    fn tiny_plan(seed: u64, cells: usize) -> SessionPlan {
+        let mut s = ExperimentSpec::resnet20_analog();
+        s.scales = vec![4];
+        s.epochs = 1;
+        s.seed = seed;
+        s.max_iters_per_epoch = Some(1);
+        s.threads = 1;
+        s.flavors = vec![SgdFlavor::DecentralizedRing];
+        let mut plan = SessionPlan::from_spec(&s);
+        for _ in 1..cells {
+            let cfg = s.train_config(4);
+            plan.push_cell(4, seed, crate::dbench::StrategyRef::Flavor(SgdFlavor::DecentralizedRing), cfg);
+        }
+        plan
+    }
+
+    fn paused_scheduler(tag: &str) -> (Arc<Scheduler>, std::path::PathBuf) {
+        let dir = crate::util::scratch_dir(tag).unwrap();
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        (Scheduler::start(store, 1, true), dir)
+    }
+
+    #[test]
+    fn job_ids_are_deterministic_with_dedup_suffixes() {
+        let (sched, dir) = paused_scheduler("sched_ids");
+        let a = sched.submit("a".into(), 0, 1.0, tiny_plan(1, 1)).unwrap();
+        let b = sched.submit("b".into(), 0, 1.0, tiny_plan(1, 1)).unwrap();
+        let c = sched.submit("c".into(), 0, 1.0, tiny_plan(2, 1)).unwrap();
+        assert!(a.id.starts_with('j') && a.id.len() == 13, "{}", a.id);
+        assert_eq!(b.id, format!("{}-2", a.id), "identical submission dedups");
+        assert_ne!(c.id, a.id, "different seed, different id");
+        assert!(!c.id.starts_with(&a.id), "{} vs {}", c.id, a.id);
+        sched.shutdown(true);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pick_follows_priority_then_deficit_then_seq() {
+        let (sched, dir) = paused_scheduler("sched_pick");
+        let a = sched.submit("a".into(), 0, 1.0, tiny_plan(10, 4)).unwrap();
+        let b = sched.submit("b".into(), 0, 2.0, tiny_plan(20, 4)).unwrap();
+        // Simulate dispatching under the paused gate: pick + manual
+        // accounting, never running anything.
+        let mut sequence = Vec::new();
+        {
+            let mut inner = sched.inner.lock().unwrap();
+            for _ in 0..8 {
+                let id = inner.pick().expect("runnable job");
+                let e = inner.entries.get_mut(&id).unwrap();
+                e.pending.pop_front();
+                e.dispatched += 1;
+                sequence.push(if id == a.id { 'a' } else { 'b' });
+            }
+            assert!(inner.pick().is_none(), "both drained");
+        }
+        // Weight 2 gets two cells per weight-1 cell; first tie breaks
+        // by submission order.
+        assert_eq!(sequence.iter().collect::<String>(), "abbabbaa");
+        // A higher-priority late arrival preempts everything runnable.
+        let hi = sched.submit("hi".into(), 9, 1.0, tiny_plan(30, 2)).unwrap();
+        let lo = sched.submit("lo".into(), -1, 1.0, tiny_plan(40, 2)).unwrap();
+        {
+            let mut inner = sched.inner.lock().unwrap();
+            assert_eq!(inner.pick(), Some(hi.id.clone()));
+            let e = inner.entries.get_mut(&hi.id).unwrap();
+            e.pending.clear();
+            assert_eq!(inner.pick(), Some(lo.id.clone()));
+        }
+        sched.shutdown(true);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_finalizes_it_immediately() {
+        let (sched, dir) = paused_scheduler("sched_cancel");
+        let job = sched.submit("x".into(), 0, 1.0, tiny_plan(3, 2)).unwrap();
+        let status = sched.cancel(&job.id).expect("known job");
+        assert_eq!(status.state, "cancelled");
+        assert_eq!(status.done, 0);
+        assert!(job.events.is_closed(), "stream terminates");
+        let (lines, _) = job.events.read_from(0);
+        assert!(lines.last().unwrap().contains("job_done"), "{lines:?}");
+        assert!(sched.cancel("nope").is_none());
+        // The results document reflects the truncation.
+        let v = job.results_json();
+        assert_eq!(v.get("complete"), Some(&Value::Bool(false)));
+        sched.shutdown(true);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_validates_inputs() {
+        let (sched, dir) = paused_scheduler("sched_validate");
+        let mut empty = tiny_plan(1, 1);
+        empty.cells.clear();
+        assert!(sched.submit("e".into(), 0, 1.0, empty).is_err());
+        assert!(sched.submit("w".into(), 0, 0.0, tiny_plan(1, 1)).is_err());
+        assert!(sched.submit("w".into(), 0, -2.0, tiny_plan(1, 1)).is_err());
+        sched.shutdown(true);
+        assert!(
+            sched.submit("late".into(), 0, 1.0, tiny_plan(1, 1)).is_err(),
+            "no submissions after shutdown"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,281 @@
+//! The content-addressed result store: one canonical read/write module
+//! for finished [`CellResult`]s, keyed by the cell
+//! [fingerprint](crate::dbench::fingerprint) that already guards the
+//! CLI's `--resume-dir` caches.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! <root>/objects/<hh>/<hash>.json     # hh = first two hex digits
+//! ```
+//!
+//! where `<hash>` is [`content_hash`] of the fingerprint string. Each
+//! object is the [`CellResult::to_json`] document plus a `fingerprint`
+//! field, and a read validates that embedded fingerprint against the
+//! requested one — a (vanishingly unlikely) hash collision, a truncated
+//! write or a hand-edited file all degrade to a cache miss, never to
+//! wrong results.
+//!
+//! The store also **reads the legacy flat layout** the resume pipeline
+//! used before this module existed (`<root>/cell_NNNN_<scale>_<key>.json`):
+//! a legacy hit is validated the same way, migrated into the
+//! content-addressed layout, and served — so pre-existing `--resume-dir`
+//! trees keep working with zero re-runs. New writes only ever go to the
+//! content-addressed layout.
+//!
+//! Both the CLI (`SessionPlan::run_cell_plan`) and the experiment
+//! service (`serve::Scheduler`) go through this type, which is what
+//! makes a server-side cache hit and a CLI resume hit the same bytes.
+
+use crate::dbench::CellResult;
+use crate::error::Result;
+use crate::util::json::Value;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 128-bit content hash of a fingerprint string, as 32 lowercase hex
+/// digits: two independent FNV-1a lanes (different offset bases), each
+/// passed through the SplitMix64 finalizer to mix the sparse FNV state.
+/// Pure std, stable across platforms and releases — object paths are
+/// part of the on-disk format.
+pub fn content_hash(fingerprint: &str) -> String {
+    fn lane(seed: u64, bytes: &[u8]) -> u64 {
+        let mut h = seed;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // SplitMix64 finalizer.
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+        h ^= h >> 31;
+        h
+    }
+    let bytes = fingerprint.as_bytes();
+    format!(
+        "{:016x}{:016x}",
+        lane(0xcbf2_9ce4_8422_2325, bytes),
+        lane(0x9e37_79b9_7f4a_7c15, bytes)
+    )
+}
+
+/// Hit/miss counters of one store handle (served from memory — cheap
+/// enough for a per-request stats endpoint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Objects currently on disk (counted at call time).
+    pub objects: usize,
+    /// Loads served from the store since this handle opened.
+    pub hits: u64,
+    /// Loads that found nothing (and triggered a cell run).
+    pub misses: u64,
+}
+
+/// A content-addressed store of finished cells rooted at one directory.
+/// All methods take `&self`; the handle is shared freely across the
+/// scheduler's workers (counters are atomic, and concurrent writers of
+/// the *same* fingerprint write identical bytes by construction).
+pub struct ResultStore {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) the store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(ResultStore {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// The store root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where the object for `fingerprint` lives (whether or not it
+    /// exists yet).
+    pub fn object_path(&self, fingerprint: &str) -> PathBuf {
+        let hash = content_hash(fingerprint);
+        self.root.join("objects").join(&hash[..2]).join(format!("{hash}.json"))
+    }
+
+    /// Load the result for `fingerprint`, if stored. `legacy_name`
+    /// optionally names a flat-layout file (the pre-store
+    /// `cell_NNNN_<scale>_<key>.json` convention) to fall back to; a
+    /// validated legacy hit is migrated into the content-addressed
+    /// layout on the way out. Returns `None` — and counts a miss — on
+    /// absence, fingerprint mismatch or any parse failure.
+    pub fn load(&self, fingerprint: &str, legacy_name: Option<&str>) -> Option<CellResult> {
+        if let Some(result) = read_tagged(&self.object_path(fingerprint), fingerprint) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(result);
+        }
+        if let Some(name) = legacy_name {
+            if let Some(result) = read_tagged(&self.root.join(name), fingerprint) {
+                // Migration shim: serve the legacy bytes and promote
+                // them so the next read is content-addressed.
+                let _ = self.save(fingerprint, &result);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(result);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Whether a (validated) result for `fingerprint` is present,
+    /// without touching the hit/miss counters.
+    pub fn contains(&self, fingerprint: &str, legacy_name: Option<&str>) -> bool {
+        read_tagged(&self.object_path(fingerprint), fingerprint).is_some()
+            || legacy_name
+                .map(|name| read_tagged(&self.root.join(name), fingerprint).is_some())
+                .unwrap_or(false)
+    }
+
+    /// Persist `result` under `fingerprint`, returning the object path.
+    pub fn save(&self, fingerprint: &str, result: &CellResult) -> Result<PathBuf> {
+        let path = self.object_path(fingerprint);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, tagged_json(fingerprint, result).to_string())?;
+        Ok(path)
+    }
+
+    /// Current statistics (object count walks the `objects/` tree).
+    pub fn stats(&self) -> StoreStats {
+        let mut objects = 0;
+        if let Ok(shards) = std::fs::read_dir(self.root.join("objects")) {
+            for shard in shards.flatten() {
+                if let Ok(entries) = std::fs::read_dir(shard.path()) {
+                    objects += entries.flatten().count();
+                }
+            }
+        }
+        StoreStats {
+            objects,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The persisted document: [`CellResult::to_json`] plus the
+/// `fingerprint` that decides whether a later read may reuse it. (The
+/// same shape the legacy flat layout used, so old files parse here
+/// unchanged.)
+pub fn tagged_json(fingerprint: &str, result: &CellResult) -> Value {
+    let mut v = result.to_json();
+    if let Value::Obj(map) = &mut v {
+        map.insert("fingerprint".to_string(), Value::Str(fingerprint.to_string()));
+    }
+    v
+}
+
+/// Read + validate one persisted cell document; `None` on a missing /
+/// unparseable file or a fingerprint mismatch.
+fn read_tagged(path: &Path, fingerprint: &str) -> Option<CellResult> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Value::parse(&text).ok()?;
+    if v.str_field("fingerprint").ok()? != fingerprint {
+        return None;
+    }
+    CellResult::from_json(&v).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EvalResult, RunSummary};
+    use crate::metrics::RunRecorder;
+
+    fn result(metric: f64) -> CellResult {
+        CellResult {
+            scale: 4,
+            flavor: "D_ring".into(),
+            recorder: RunRecorder::in_memory("D_ring"),
+            summary: RunSummary {
+                flavor: "D_ring".into(),
+                final_eval: EvalResult { loss: 0.5, metric },
+                diverged: false,
+                bytes_per_node: 64,
+                early_gini: 0.1,
+                late_gini: 0.05,
+            },
+        }
+    }
+
+    #[test]
+    fn content_hash_is_stable_wide_and_hex() {
+        let h = content_hash("workload=X n=4 seed=42");
+        assert_eq!(h.len(), 32);
+        assert!(h.bytes().all(|b| b.is_ascii_hexdigit()));
+        assert_eq!(h, content_hash("workload=X n=4 seed=42"), "deterministic");
+        assert_ne!(h, content_hash("workload=X n=4 seed=43"), "keys separate");
+        // The two lanes are independent: halves must not mirror.
+        assert_ne!(&h[..16], &h[16..]);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_counters() {
+        let dir = crate::util::scratch_dir("store_rt").unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.load("fp-a", None).is_none(), "empty store misses");
+        let path = store.save("fp-a", &result(0.8)).unwrap();
+        assert!(path.starts_with(dir.join("objects")));
+        let back = store.load("fp-a", None).expect("stored object loads");
+        assert_eq!(back.summary.final_eval.metric, 0.8);
+        assert_eq!(back.flavor, "D_ring");
+        let stats = store.stats();
+        assert_eq!(stats.objects, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        // A different fingerprint never aliases onto the stored object.
+        assert!(store.load("fp-b", None).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_flat_layout_reads_and_migrates() {
+        let dir = crate::util::scratch_dir("store_legacy").unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        let legacy = "cell_0000_4_D_ring.json";
+        std::fs::write(
+            dir.join(legacy),
+            tagged_json("fp-old", &result(0.7)).to_string(),
+        )
+        .unwrap();
+        assert!(
+            !store.object_path("fp-old").exists(),
+            "not yet content-addressed"
+        );
+        // Without the legacy name the store cannot see the flat file.
+        assert!(store.load("fp-old", None).is_none());
+        // With it, the result is served AND promoted into objects/.
+        let back = store.load("fp-old", Some(legacy)).expect("legacy hit");
+        assert_eq!(back.summary.final_eval.metric, 0.7);
+        assert!(store.object_path("fp-old").exists(), "migrated");
+        // Migrated object now serves without the legacy name.
+        assert!(store.load("fp-old", None).is_some());
+        // A stale legacy file (fingerprint drift) is a miss, not a hit.
+        assert!(store.load("fp-new", Some(legacy)).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identical_results_serialize_bitwise_identically() {
+        // The BTreeMap-backed JSON writer is deterministic, which is
+        // what lets the service promise bitwise-equal cached responses.
+        let a = tagged_json("fp", &result(0.9)).to_string();
+        let b = tagged_json("fp", &result(0.9)).to_string();
+        assert_eq!(a, b);
+    }
+}

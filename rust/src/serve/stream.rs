@@ -1,0 +1,261 @@
+//! Per-job metric streaming: an append-only broadcast log of JSONL
+//! event lines, fed by a streaming [`Observer`] attached to every cell
+//! run.
+//!
+//! [`EventLog`] is a replay buffer, not a queue: every line is kept for
+//! the job's lifetime, and any number of readers can attach at any time
+//! — a stream request that arrives after the job finished replays the
+//! full history and terminates, a reader attached mid-run blocks on
+//! [`EventLog::wait_from`] until more lines (or the close marker)
+//! arrive. That makes the HTTP chunked responses stateless: each
+//! connection just carries a cursor.
+//!
+//! Line schema (`type` discriminates):
+//!
+//! ```text
+//! {"type":"cell_start","cell":i,"scale":n,"strategy":"D_ring"}
+//! {"type":"iteration","cell":i,"scale":n,"record":{…IterationRecord…}}
+//! {"type":"epoch","cell":i,"scale":n,"epoch":e,"mean_gini":g|null,"label":"D_ring","seed":s}
+//! {"type":"cell_done","cell":i,"cached":bool,"summary":{…RunSummary…}}
+//! {"type":"job_done","job":"j…","state":"done|failed|cancelled"}
+//! ```
+//!
+//! `iteration`/`epoch` payloads reuse [`TrainEvent::to_json`] with the
+//! cell coordinates spliced in, so stream lines parse back through
+//! [`crate::metrics::IterationRecord::from_json`].
+
+use crate::coordinator::observer::{ControlFlow, EpochInfo, Observer, TrainEvent};
+use crate::error::Result;
+use crate::metrics::IterationRecord;
+use crate::util::json::Value;
+use crate::util::matrix::ReplicaMatrix;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct LogState {
+    lines: Vec<String>,
+    closed: bool,
+}
+
+/// An append-only, close-once broadcast log of event lines.
+pub struct EventLog {
+    state: Mutex<LogState>,
+    cv: Condvar,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventLog {
+    /// An empty, open log.
+    pub fn new() -> Self {
+        EventLog {
+            state: Mutex::new(LogState { lines: Vec::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Append one line (ignored after [`EventLog::close`]) and wake
+    /// blocked readers.
+    pub fn push(&self, line: String) {
+        let mut st = self.state.lock().expect("event log lock");
+        if !st.closed {
+            st.lines.push(line);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Append a JSON value as one line.
+    pub fn push_value(&self, v: &Value) {
+        self.push(v.to_string());
+    }
+
+    /// Mark the log complete: readers drain the remaining lines and
+    /// terminate. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("event log lock");
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether the log is closed.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().expect("event log lock").closed
+    }
+
+    /// Lines appended so far.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("event log lock").lines.len()
+    }
+
+    /// Whether no lines were appended yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of `lines[from..]` plus the closed flag, non-blocking.
+    pub fn read_from(&self, from: usize) -> (Vec<String>, bool) {
+        let st = self.state.lock().expect("event log lock");
+        (st.lines.get(from..).unwrap_or_default().to_vec(), st.closed)
+    }
+
+    /// Like [`EventLog::read_from`], but blocks up to `timeout` until
+    /// there is at least one new line past `from` or the log closes.
+    /// Returns the (possibly empty) new lines and the closed flag.
+    pub fn wait_from(&self, from: usize, timeout: Duration) -> (Vec<String>, bool) {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("event log lock");
+        loop {
+            if st.lines.len() > from || st.closed {
+                return (st.lines.get(from..).unwrap_or_default().to_vec(), st.closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (Vec::new(), st.closed);
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .expect("event log lock");
+            st = guard;
+            if res.timed_out() && st.lines.len() <= from && !st.closed {
+                return (Vec::new(), st.closed);
+            }
+        }
+    }
+}
+
+/// The streaming observer of one cell run: forwards every
+/// iteration/epoch hook into the job's [`EventLog`] as a JSONL line
+/// tagged with the cell coordinates. Completion is deliberately *not*
+/// emitted here — the scheduler emits `cell_done` itself so cached
+/// cells (which never run an observer) produce the same line.
+pub struct StreamObserver {
+    log: Arc<EventLog>,
+    cell: usize,
+    scale: usize,
+}
+
+impl StreamObserver {
+    /// Stream cell `cell` (at `scale` workers) into `log`.
+    pub fn new(log: Arc<EventLog>, cell: usize, scale: usize) -> Self {
+        StreamObserver { log, cell, scale }
+    }
+
+    fn push_tagged(&self, event: &TrainEvent) {
+        let mut v = event.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.insert("cell".to_string(), Value::Num(self.cell as f64));
+            map.insert("scale".to_string(), Value::Num(self.scale as f64));
+        }
+        self.log.push_value(&v);
+    }
+}
+
+impl Observer for StreamObserver {
+    fn on_iteration(
+        &mut self,
+        rec: &IterationRecord,
+        _replicas: &ReplicaMatrix,
+    ) -> Result<ControlFlow> {
+        self.push_tagged(&TrainEvent::Iteration(rec.clone()));
+        Ok(ControlFlow::Continue)
+    }
+
+    fn on_epoch(&mut self, info: &EpochInfo<'_>) -> Result<ControlFlow> {
+        self.push_tagged(&TrainEvent::from_epoch(info));
+        Ok(ControlFlow::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_replays_and_tails() {
+        let log = EventLog::new();
+        log.push("a".into());
+        log.push("b".into());
+        let (lines, closed) = log.read_from(0);
+        assert_eq!(lines, vec!["a", "b"]);
+        assert!(!closed);
+        // Cursor past the end: nothing, still open.
+        let (lines, closed) = log.read_from(2);
+        assert!(lines.is_empty() && !closed);
+        log.close();
+        let (lines, closed) = log.read_from(1);
+        assert_eq!(lines, vec!["b"]);
+        assert!(closed);
+        // Pushes after close are dropped.
+        log.push("c".into());
+        assert_eq!(log.len(), 2);
+    }
+
+    #[test]
+    fn wait_from_blocks_until_data_or_close() {
+        let log = Arc::new(EventLog::new());
+        // Timeout path: nothing arrives.
+        let (lines, closed) = log.wait_from(0, Duration::from_millis(20));
+        assert!(lines.is_empty() && !closed);
+        // Data path: a writer thread wakes the reader.
+        let writer = {
+            let log = Arc::clone(&log);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                log.push("x".into());
+                log.close();
+            })
+        };
+        let (lines, _) = log.wait_from(0, Duration::from_secs(10));
+        assert_eq!(lines, vec!["x"]);
+        writer.join().unwrap();
+        // Close path: drained reader sees closed immediately.
+        let (lines, closed) = log.wait_from(1, Duration::from_secs(10));
+        assert!(lines.is_empty() && closed);
+    }
+
+    #[test]
+    fn stream_observer_tags_lines_with_cell_coordinates() {
+        use crate::metrics::VarianceReport;
+        let log = Arc::new(EventLog::new());
+        let mut obs = StreamObserver::new(Arc::clone(&log), 3, 8);
+        let replicas = ReplicaMatrix::zeros(2, 4);
+        let rec = IterationRecord {
+            iteration: 5,
+            epoch: 1,
+            train_loss: 0.25,
+            test_metric: None,
+            variance: VarianceReport::of(&[]),
+            per_tensor_gini: Vec::new(),
+            graph_degree: 2,
+            bytes_per_node: 16,
+            lr: 0.1,
+        };
+        obs.on_iteration(&rec, &replicas).unwrap();
+        obs.on_epoch(&EpochInfo {
+            epoch: 1,
+            mean_gini: None,
+            replicas: &replicas,
+            label: "D_ring",
+            seed: 42,
+        })
+        .unwrap();
+        let (lines, _) = log.read_from(0);
+        assert_eq!(lines.len(), 2);
+        let it = Value::parse(&lines[0]).unwrap();
+        assert_eq!(it.str_field("type").unwrap(), "iteration");
+        assert_eq!(it.usize_field("cell").unwrap(), 3);
+        assert_eq!(it.usize_field("scale").unwrap(), 8);
+        let back = IterationRecord::from_json(it.get("record").unwrap()).unwrap();
+        assert_eq!(back.iteration, 5);
+        assert_eq!(back.train_loss, 0.25);
+        let ep = Value::parse(&lines[1]).unwrap();
+        assert_eq!(ep.str_field("type").unwrap(), "epoch");
+        assert_eq!(ep.get("mean_gini"), Some(&Value::Null));
+        assert_eq!(ep.str_field("label").unwrap(), "D_ring");
+    }
+}

@@ -1,0 +1,341 @@
+//! End-to-end tests of the experiment service over real loopback
+//! sockets: submission (JSON and TOML), JSONL metric streaming,
+//! content-addressed caching with bitwise-identical results,
+//! deterministic fair-share interleaving, priority preemption at cell
+//! granularity, and cancellation within one cell boundary.
+//!
+//! All servers run one cell worker so dispatch order is an exact
+//! function of the submission sequence — the interleaving assertions
+//! are deterministic, not statistical.
+
+use ada_dist::metrics::IterationRecord;
+use ada_dist::serve::{http_request, http_stream_lines, start, ServeConfig, Server};
+use ada_dist::util::json::Value;
+use std::time::{Duration, Instant};
+
+fn server(tag: &str, hold: bool) -> (Server, String, std::path::PathBuf) {
+    let dir = ada_dist::util::scratch_dir(tag).unwrap();
+    let srv = start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        store_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        hold,
+    })
+    .unwrap();
+    let addr = srv.addr.to_string();
+    (srv, addr, dir)
+}
+
+/// A tiny JSON spec: `scales × flavors` cells on the softmax workload.
+fn spec_json(seed: u64, scales: &[usize], flavors: &[&str], epochs: usize, max_iters: usize) -> String {
+    format!(
+        r#"{{"base": "resnet20", "name": "t{seed}", "seed": {seed},
+            "scales": [{}], "flavors": [{}],
+            "epochs": {epochs}, "max_iters_per_epoch": {max_iters},
+            "threads": 1, "metrics_every": 1, "eval_every_epochs": 100}}"#,
+        scales.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", "),
+        flavors.iter().map(|f| format!("{f:?}")).collect::<Vec<_>>().join(", "),
+    )
+}
+
+fn get_json(addr: &str, path: &str) -> (u16, Value) {
+    let (code, body) = http_request(addr, "GET", path, None).unwrap();
+    let text = String::from_utf8_lossy(&body).into_owned();
+    (code, Value::parse(&text).unwrap_or(Value::Null))
+}
+
+fn post(addr: &str, path: &str, body: Option<&[u8]>) -> (u16, Value) {
+    let (code, body) = http_request(addr, "POST", path, body).unwrap();
+    let text = String::from_utf8_lossy(&body).into_owned();
+    (code, Value::parse(&text).unwrap_or(Value::Null))
+}
+
+fn submit(addr: &str, spec: &str, query: &str) -> String {
+    let path = if query.is_empty() {
+        "/jobs".to_string()
+    } else {
+        format!("/jobs?{query}")
+    };
+    let (code, v) = post(addr, &path, Some(spec.as_bytes()));
+    assert_eq!(code, 200, "submit failed: {v:?}");
+    v.str_field("job").unwrap().to_string()
+}
+
+fn status(addr: &str, id: &str) -> Value {
+    let (code, v) = get_json(addr, &format!("/jobs/{id}"));
+    assert_eq!(code, 200, "status {id}: {v:?}");
+    v
+}
+
+fn wait_done(addr: &str, id: &str) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let v = status(addr, id);
+        let state = v.str_field("state").unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "cancelled")
+            && v.usize_field("running").unwrap() == 0
+        {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timeout waiting on {id}: {v:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// `(job id, cell index)` dispatch history via `GET /scheduler`.
+fn dispatch_log(addr: &str) -> Vec<(String, usize)> {
+    let (code, v) = get_json(addr, "/scheduler");
+    assert_eq!(code, 200);
+    v.arr_field("dispatched")
+        .unwrap()
+        .iter()
+        .map(|e| {
+            (
+                e.str_field("job").unwrap().to_string(),
+                e.usize_field("cell").unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn submit_streams_and_caches_bitwise_identically() {
+    let (mut srv, addr, dir) = server("serve_cache", false);
+    let spec = spec_json(42, &[4], &["d_ring", "d_complete"], 1, 2);
+    let first = submit(&addr, &spec, "");
+    let done = wait_done(&addr, &first);
+    assert_eq!(done.str_field("state").unwrap(), "done");
+    assert_eq!(done.usize_field("done").unwrap(), 2);
+    assert_eq!(done.usize_field("cached").unwrap(), 0, "cold store");
+
+    // Results document: complete, one non-null entry per cell, records
+    // parse back into iteration records.
+    let (code, results) = get_json(&addr, &format!("/jobs/{first}/results"));
+    assert_eq!(code, 200);
+    assert_eq!(results.get("complete"), Some(&Value::Bool(true)));
+    let cells = results.arr_field("cells").unwrap();
+    assert_eq!(cells.len(), 2);
+    for cell in cells {
+        let records = cell.arr_field("records").unwrap();
+        assert!(!records.is_empty());
+        IterationRecord::from_json(&records[0]).unwrap();
+    }
+
+    // The JSONL stream replays the full history: cell_start /
+    // iteration / epoch / cell_done per cell, then job_done last.
+    let mut lines = Vec::new();
+    let code = http_stream_lines(&addr, &format!("/jobs/{first}/stream"), |l| {
+        lines.push(l.to_string());
+    })
+    .unwrap();
+    assert_eq!(code, 200);
+    let typed: Vec<(String, Value)> = lines
+        .iter()
+        .map(|l| {
+            let v = Value::parse(l).unwrap();
+            (v.str_field("type").unwrap().to_string(), v)
+        })
+        .collect();
+    let count = |t: &str| typed.iter().filter(|(ty, _)| ty == t).count();
+    assert_eq!(count("cell_start"), 2, "{lines:?}");
+    assert_eq!(count("cell_done"), 2);
+    assert_eq!(count("epoch"), 2, "one epoch per cell");
+    assert!(count("iteration") >= 2);
+    assert_eq!(typed.last().unwrap().0, "job_done");
+    for (ty, v) in &typed {
+        if ty == "iteration" {
+            let rec = IterationRecord::from_json(v.get("record").unwrap()).unwrap();
+            assert!(rec.train_loss.is_finite());
+            assert!(v.usize_field("cell").unwrap() < 2);
+        }
+    }
+
+    // Identical resubmission: fresh job id, zero re-execution, and a
+    // results document that is byte-for-byte the first one.
+    let second = submit(&addr, &spec, "");
+    assert_ne!(second, first, "dedup suffix separates the ids");
+    let done2 = wait_done(&addr, &second);
+    assert_eq!(done2.usize_field("cached").unwrap(), 2, "100% cache hit");
+    let (_, body1) = http_request(&addr, "GET", &format!("/jobs/{first}/results"), None).unwrap();
+    let (_, body2) = http_request(&addr, "GET", &format!("/jobs/{second}/results"), None).unwrap();
+    assert_eq!(body1, body2, "cached results must be bitwise identical");
+
+    // The cached job's stream still carries cell_done (cached: true)
+    // markers and a job_done terminator — no iteration lines.
+    let mut cached_lines = Vec::new();
+    http_stream_lines(&addr, &format!("/jobs/{second}/stream"), |l| {
+        cached_lines.push(Value::parse(l).unwrap());
+    })
+    .unwrap();
+    let cached_done: Vec<_> = cached_lines
+        .iter()
+        .filter(|v| v.str_field("type").unwrap() == "cell_done")
+        .collect();
+    assert_eq!(cached_done.len(), 2);
+    for v in cached_done {
+        assert_eq!(v.get("cached"), Some(&Value::Bool(true)));
+    }
+
+    let (_, store) = get_json(&addr, "/store");
+    assert_eq!(store.usize_field("objects").unwrap(), 2);
+    assert!(store.usize_field("hits").unwrap() >= 2);
+
+    let (code, _) = post(&addr, "/shutdown", None);
+    assert_eq!(code, 200);
+    srv.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fair_share_interleaves_jobs_by_weight() {
+    let (srv, addr, dir) = server("serve_fair", true);
+    // Both 4-cell jobs land while the dispatch gate is closed, so the
+    // interleaving is a pure function of the scheduling rule.
+    let a = submit(&addr, &spec_json(100, &[4, 8], &["d_ring", "d_complete"], 1, 2), "weight=1");
+    let b = submit(&addr, &spec_json(200, &[4, 8], &["d_ring", "d_complete"], 1, 2), "weight=2");
+    let (code, _) = post(&addr, "/scheduler/resume", None);
+    assert_eq!(code, 200);
+    wait_done(&addr, &a);
+    wait_done(&addr, &b);
+    let log = dispatch_log(&addr);
+    let pattern: String = log
+        .iter()
+        .map(|(id, _)| if *id == a { 'a' } else { 'b' })
+        .collect();
+    // Weight 2 earns two cells per weight-1 cell; ties break by
+    // submission order: a b b a b b a a.
+    assert_eq!(pattern, "abbabbaa", "{log:?}");
+    // Within each job, cells dispatch in enumeration order.
+    for id in [&a, &b] {
+        let cells: Vec<usize> =
+            log.iter().filter(|(j, _)| j == id).map(|(_, c)| *c).collect();
+        assert_eq!(cells, vec![0, 1, 2, 3]);
+    }
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn high_priority_job_preempts_a_running_sweep() {
+    let (srv, addr, dir) = server("serve_prio", true);
+    // A low-priority 6-cell sweep with slow-ish cells (so the pause
+    // lands before the sweep drains).
+    let a = submit(
+        &addr,
+        &spec_json(300, &[4, 8, 12], &["d_ring", "d_complete"], 4, 150),
+        "",
+    );
+    post(&addr, "/scheduler/resume", None);
+    // Let at least one cell dispatch, then close the gate mid-sweep.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while dispatch_log(&addr).is_empty() {
+        assert!(Instant::now() < deadline, "first dispatch never happened");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    post(&addr, "/scheduler/pause", None);
+    // Drain the in-flight cell so the log is stable at the gate.
+    while status(&addr, &a).usize_field("running").unwrap() > 0 {
+        assert!(Instant::now() < deadline, "in-flight cell never finished");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let k = dispatch_log(&addr).len();
+    assert!(k < 6, "sweep drained before the pause landed (k = {k})");
+    // A higher-priority job arrives mid-sweep...
+    let b = submit(&addr, &spec_json(400, &[4], &["d_ring", "d_complete"], 1, 2), "priority=5");
+    post(&addr, "/scheduler/resume", None);
+    wait_done(&addr, &b);
+    wait_done(&addr, &a);
+    // ...and its cells dispatch before every remaining low-priority cell.
+    let log = dispatch_log(&addr);
+    assert_eq!(log.len(), 8);
+    assert_eq!(log[k].0, b, "{log:?}");
+    assert_eq!(log[k + 1].0, b, "{log:?}");
+    for (i, (id, _)) in log.iter().enumerate() {
+        if i != k && i != k + 1 {
+            assert_eq!(id, &a, "{log:?}");
+        }
+    }
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancellation_stops_within_one_cell_and_never_poisons_the_store() {
+    let (srv, addr, dir) = server("serve_cancel", true);
+    // Slow cells at larger scales: cancellation reliably lands while
+    // cell 0 is still running.
+    let spec = spec_json(500, &[24], &["d_ring", "d_complete", "d_exponential", "one_peer"], 5, 120);
+    let a = submit(&addr, &spec, "");
+    post(&addr, "/scheduler/resume", None);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while dispatch_log(&addr).is_empty() {
+        assert!(Instant::now() < deadline, "first dispatch never happened");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let (code, v) = post(&addr, &format!("/jobs/{a}/cancel"), None);
+    assert_eq!(code, 200, "{v:?}");
+    let done = wait_done(&addr, &a);
+    assert_eq!(done.str_field("state").unwrap(), "cancelled");
+    let after_cancel = dispatch_log(&addr);
+    assert!(
+        after_cancel.len() < 4,
+        "cancel must stop dispatch within one cell: {after_cancel:?}"
+    );
+    // No further dispatches ever happen for the cancelled job.
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(dispatch_log(&addr), after_cancel);
+    let a_done = done.usize_field("done").unwrap();
+    // Resubmitting the identical spec proves the store holds exactly
+    // the cells that *finished* — the interrupted cell's partial result
+    // was discarded, so it re-runs rather than serving truncated data.
+    let c = submit(&addr, &spec, "");
+    let c_done = wait_done(&addr, &c);
+    assert_eq!(c_done.str_field("state").unwrap(), "done");
+    assert_eq!(c_done.usize_field("done").unwrap(), 4);
+    assert_eq!(
+        c_done.usize_field("cached").unwrap(),
+        a_done,
+        "cache hits must equal the cancelled job's finished cells"
+    );
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn toml_specs_bad_bodies_and_unknown_jobs() {
+    let (mut srv, addr, dir) = server("serve_errors", false);
+    // Malformed body → 400 with an error message.
+    let (code, v) = post(&addr, "/jobs", Some(b"{not a spec"));
+    assert_eq!(code, 400);
+    assert!(v.str_field("error").is_ok(), "{v:?}");
+    // A TOML body works through the same endpoint (sniffed encoding).
+    let toml = "base = \"resnet20\"\nseed = 7\nscales = [4]\nepochs = 1\n\
+                max_iters_per_epoch = 2\nthreads = 1\nflavors = [\"d_ring\"]\n";
+    let id = submit(&addr, toml, "");
+    let done = wait_done(&addr, &id);
+    assert_eq!(done.str_field("state").unwrap(), "done");
+    assert_eq!(done.usize_field("total").unwrap(), 1);
+    // Unknown ids → 404 on every job route.
+    for path in ["/jobs/nope", "/jobs/nope/results", "/jobs/nope/stream"] {
+        let (code, _) = get_json(&addr, path);
+        assert_eq!(code, 404, "{path}");
+    }
+    let (code, _) = post(&addr, "/jobs/nope/cancel", None);
+    assert_eq!(code, 404);
+    // Unknown routes → 404, unknown methods → 405.
+    let (code, _) = get_json(&addr, "/definitely/not/a/route");
+    assert_eq!(code, 404);
+    let (code, _) = http_request(&addr, "PUT", "/jobs", None).unwrap();
+    assert_eq!(code, 405);
+    // Server info endpoints respond.
+    let (code, v) = get_json(&addr, "/healthz");
+    assert_eq!(code, 200);
+    assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+    let (code, _) = post(&addr, "/shutdown", None);
+    assert_eq!(code, 200);
+    srv.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
