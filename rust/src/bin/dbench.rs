@@ -57,9 +57,17 @@ dbench <command> [options]
   serve       long-lived multi-tenant experiment service (HTTP/1.1)
     --addr HOST:PORT (default 127.0.0.1:7070) --store DIR --workers N
     --hold              start with the dispatch gate paused
+    --no-journal        disable the job journal (on by default under
+                        --store; a restarted server replays it)
+    --retries N         default per-cell transient-failure retries
+    --deadline-s F      default per-cell wall-clock deadline (0 = none)
+    --max-conns N       concurrent-connection cap (503 beyond it)
   submit      POST a spec file to a running server
     --addr HOST:PORT --spec FILE.toml|FILE.json
     --priority N --weight F --seeds K
+    --retries N --deadline-s F   per-job overrides
+    --idempotent        resubmitting the same spec returns the
+                        existing job instead of a -N duplicate
   status      job status (--job ID) or all jobs
   results     fetch a job's results document   --job ID
   stream      tail a job's JSONL metric stream --job ID
@@ -80,7 +88,17 @@ fn builtin(app: &str) -> Result<ExperimentSpec, String> {
 fn main() -> CliResult {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["sqrt-scaling", "save-records", "fused", "pipeline", "help", "hold", "no-drain"],
+        &[
+            "sqrt-scaling",
+            "save-records",
+            "fused",
+            "pipeline",
+            "help",
+            "hold",
+            "no-drain",
+            "no-journal",
+            "idempotent",
+        ],
     )
     .map_err(|e| format!("{e}\n\n{USAGE}"))?;
     let cfg = match args.get("config") {
@@ -232,19 +250,26 @@ fn print_body(body: &[u8]) {
 }
 
 fn cmd_serve(args: &Args) -> CliResult {
+    let defaults = ServeConfig::default();
     let cfg = ServeConfig {
         addr: server_addr(args),
         store_dir: args.get_or("store", "dbench_store").to_string(),
         workers: args.get_parse("workers", 1)?,
         hold: args.has_flag("hold"),
+        journal: !args.has_flag("no-journal"),
+        retries: args.get_parse("retries", defaults.retries)?,
+        deadline_s: args.get_parse("deadline-s", defaults.deadline_s)?,
+        max_conns: args.get_parse("max-conns", defaults.max_conns)?,
+        ..defaults
     };
     let mut server = start(&cfg)?;
     println!(
-        "dbench service listening on http://{} (store {}, {} worker{}{})",
+        "dbench service listening on http://{} (store {}, {} worker{}{}{})",
         server.addr,
         cfg.store_dir,
         cfg.workers.max(1),
         if cfg.workers.max(1) == 1 { "" } else { "s" },
+        if cfg.journal { ", journaled" } else { "" },
         if cfg.hold { ", dispatch paused" } else { "" },
     );
     println!("stop with: dbench shutdown --addr {}", server.addr);
@@ -258,10 +283,16 @@ fn cmd_submit(args: &Args) -> CliResult {
         .ok_or_else(|| format!("submit needs --spec FILE\n\n{USAGE}"))?;
     let body = std::fs::read(path)?;
     let mut query = Vec::new();
-    for key in ["priority", "weight", "seeds"] {
+    for key in ["priority", "weight", "seeds", "retries"] {
         if let Some(v) = args.get(key) {
             query.push(format!("{key}={v}"));
         }
+    }
+    if let Some(v) = args.get("deadline-s") {
+        query.push(format!("deadline_s={v}"));
+    }
+    if args.has_flag("idempotent") {
+        query.push("idempotent=true".to_string());
     }
     let target = if query.is_empty() {
         "/jobs".to_string()

@@ -11,36 +11,50 @@
 //! |----------------------------|-------------------------------------------------------|
 //! | `GET /`                    | Service info (name, jobs, store stats)                |
 //! | `GET /healthz`             | Liveness probe                                        |
-//! | `POST /jobs`               | Submit a spec (TOML or JSON body, sniffed); query `priority`, `weight`, `seeds` |
+//! | `POST /jobs`               | Submit a spec (TOML or JSON body, sniffed); query `priority`, `weight`, `seeds`, `retries`, `deadline_s`, `idempotent` |
 //! | `GET /jobs`                | All job statuses                                      |
 //! | `GET /jobs/{id}`           | One job status                                        |
 //! | `POST /jobs/{id}/cancel`   | Cancel (cell-boundary preemption)                     |
 //! | `GET /jobs/{id}/results`   | Results document (deterministic bytes)                |
-//! | `GET /jobs/{id}/stream`    | Chunked JSONL event stream (replay + live tail)       |
+//! | `GET /jobs/{id}/stream`    | Chunked JSONL event stream (replay + live tail); `?from=N` skips the first N events |
 //! | `GET /scheduler`           | Dispatch gate + dispatch log                          |
 //! | `POST /scheduler/pause`    | Close the dispatch gate                               |
 //! | `POST /scheduler/resume`   | Open the dispatch gate                                |
-//! | `GET /store`               | Result-store statistics                               |
+//! | `GET /store`               | Result-store statistics (incl. quarantined objects)   |
 //! | `POST /shutdown`           | Stop the server; `?drain=false` cancels in-flight cells |
 //!
 //! The module also ships the tiny client half ([`http_request`],
 //! [`http_stream_lines`]) that `dbench submit/status/results/stream`
 //! and the integration tests use — the same parser exercising both
 //! directions keeps the protocol honest without external tooling.
+//!
+//! ## Robustness
+//!
+//! The server bounds itself: at most [`ServeConfig::max_conns`]
+//! concurrent connection threads (excess connections are shed with
+//! `503` + `Retry-After: 1` before any request parsing), and a client
+//! that stalls mid-upload past the read timeout gets a JSON `408`
+//! instead of a silently closed socket. The client half retries: the
+//! `_with` variants take a [`ClientConfig`] with connect/read timeouts
+//! and capped deterministic-backoff retries — only for requests that
+//! are safe to repeat (GETs, never-transmitted writes, and any `503`) —
+//! and a dropped event stream re-attaches with `?from=` set past the
+//! events already delivered, so the caller's closure sees each event
+//! exactly once.
 
-use super::scheduler::Scheduler;
+use super::scheduler::{Scheduler, SchedulerConfig, SubmitOptions};
 use super::store::ResultStore;
-use crate::dbench::{ExperimentSpec, SessionPlan};
 use crate::error::{AdaError, Result};
 use crate::util::json::Value;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 /// Server configuration (the `dbench serve` flags).
+#[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Bind address (`127.0.0.1:0` picks a free port — tests rely on
     /// this).
@@ -52,6 +66,35 @@ pub struct ServeConfig {
     /// Start with the dispatch gate closed ([`Scheduler::pause`]);
     /// tests use this to submit multiple jobs before any cell runs.
     pub hold: bool,
+    /// Journal submissions under `<store>/journal/` and replay them on
+    /// start (on by default — the durability contract).
+    pub journal: bool,
+    /// Default transient-failure retries per cell.
+    pub retries: usize,
+    /// Default per-cell wall-clock deadline in seconds (0 = none).
+    pub deadline_s: f64,
+    /// Maximum concurrent connection threads; excess connections are
+    /// shed with `503` + `Retry-After`.
+    pub max_conns: usize,
+    /// Per-connection read timeout in seconds (a stalled upload gets a
+    /// JSON `408`).
+    pub read_timeout_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7070".into(),
+            store_dir: "dbench_store".into(),
+            workers: 1,
+            hold: false,
+            journal: true,
+            retries: 0,
+            deadline_s: 0.0,
+            max_conns: 64,
+            read_timeout_s: 30.0,
+        }
+    }
 }
 
 /// One parsed request.
@@ -114,6 +157,8 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
 }
@@ -144,6 +189,19 @@ struct Ctx {
     shutdown: AtomicBool,
     drain: AtomicBool,
     addr: SocketAddr,
+    active: AtomicUsize,
+    max_conns: usize,
+    read_timeout: Duration,
+}
+
+/// RAII connection-slot guard: decrements the active count however the
+/// handler thread exits (including panics).
+struct ConnSlot(Arc<Ctx>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// A running server handle: its bound address (query it when binding
@@ -192,13 +250,25 @@ pub fn start(cfg: &ServeConfig) -> Result<Server> {
         .map_err(|e| AdaError::Runtime(format!("bind {}: {e}", cfg.addr)))?;
     let addr = listener.local_addr()?;
     let store = Arc::new(ResultStore::open(&cfg.store_dir)?);
-    let scheduler = Scheduler::start(Arc::clone(&store), cfg.workers, cfg.hold);
+    let scheduler = Scheduler::start_cfg(
+        Arc::clone(&store),
+        SchedulerConfig {
+            workers: cfg.workers,
+            paused: cfg.hold,
+            journal: cfg.journal,
+            retries: cfg.retries,
+            deadline_s: cfg.deadline_s,
+        },
+    )?;
     let ctx = Arc::new(Ctx {
         scheduler,
         store,
         shutdown: AtomicBool::new(false),
         drain: AtomicBool::new(true),
         addr,
+        active: AtomicUsize::new(0),
+        max_conns: cfg.max_conns.max(1),
+        read_timeout: Duration::from_secs_f64(cfg.read_timeout_s.max(0.01)),
     });
     let accept_ctx = Arc::clone(&ctx);
     let accept = std::thread::spawn(move || {
@@ -206,12 +276,29 @@ pub fn start(cfg: &ServeConfig) -> Result<Server> {
             if accept_ctx.shutdown.load(Ordering::SeqCst) {
                 break;
             }
-            let stream = match conn {
+            let mut stream = match conn {
                 Ok(s) => s,
                 Err(_) => continue,
             };
+            // Load shedding: beyond the cap, answer 503 inline (cheap,
+            // no thread, no request parsing) and move on.
+            if accept_ctx.active.fetch_add(1, Ordering::SeqCst) >= accept_ctx.max_conns {
+                accept_ctx.active.fetch_sub(1, Ordering::SeqCst);
+                let body = error_json("server is at its connection limit").to_string();
+                let head = format!(
+                    "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: {}\r\nRetry-After: 1\r\nConnection: close\r\n\r\n",
+                    body.len()
+                );
+                let _ = stream.write_all(head.as_bytes());
+                let _ = stream.write_all(body.as_bytes());
+                let _ = stream.flush();
+                continue;
+            }
             let handler_ctx = Arc::clone(&accept_ctx);
-            std::thread::spawn(move || handle(handler_ctx, stream));
+            std::thread::spawn(move || {
+                let _slot = ConnSlot(Arc::clone(&handler_ctx));
+                handle(handler_ctx, stream);
+            });
         }
         accept_ctx
             .scheduler
@@ -221,11 +308,29 @@ pub fn start(cfg: &ServeConfig) -> Result<Server> {
 }
 
 fn handle(ctx: Arc<Ctx>, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_read_timeout(Some(ctx.read_timeout));
     let req = match read_request(&stream) {
         Ok(r) => r,
         Err(e) => {
-            respond_json(&mut stream, 400, &error_json(e.to_string()));
+            // A stalled read (client wedged mid-upload) is the client's
+            // timeout, not a malformed request: say so with 408 instead
+            // of silently dropping the socket.
+            let timed_out = matches!(
+                &e,
+                AdaError::Io(io) if matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                )
+            );
+            if timed_out {
+                respond_json(
+                    &mut stream,
+                    408,
+                    &error_json("timed out reading the request"),
+                );
+            } else {
+                respond_json(&mut stream, 400, &error_json(e.to_string()));
+            }
             return;
         }
     };
@@ -265,7 +370,14 @@ fn handle(ctx: Arc<Ctx>, mut stream: TcpStream) {
             None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
         },
         ("GET", ["jobs", id, "stream"]) => match ctx.scheduler.job(id) {
-            Some(job) => stream_events(&ctx, &mut stream, &job.events),
+            Some(job) => {
+                let from = req
+                    .query
+                    .get("from")
+                    .and_then(|raw| raw.parse::<usize>().ok())
+                    .unwrap_or(0);
+                stream_events(&ctx, &mut stream, &job.events, from);
+            }
             None => respond_json(&mut stream, 404, &error_json(format!("unknown job {id}"))),
         },
         ("GET", ["scheduler"]) => {
@@ -306,6 +418,7 @@ fn handle(ctx: Arc<Ctx>, mut stream: TcpStream) {
                     ("objects", Value::Num(s.objects as f64)),
                     ("hits", Value::Num(s.hits as f64)),
                     ("misses", Value::Num(s.misses as f64)),
+                    ("quarantined", Value::Num(s.quarantined as f64)),
                 ]),
             );
         }
@@ -340,29 +453,39 @@ fn handle_submit(ctx: &Arc<Ctx>, stream: &mut TcpStream, req: &Request) {
             return;
         }
     };
-    let parse = |name: &str| -> std::result::Result<Option<f64>, String> {
+    let parse = |name: &str| -> std::result::Result<Option<f64>, AdaError> {
         match req.query.get(name) {
             None => Ok(None),
             Some(raw) => raw
                 .parse::<f64>()
                 .map(Some)
-                .map_err(|_| format!("query {name}={raw:?} is not a number")),
+                .map_err(|_| AdaError::Config(format!("query {name}={raw:?} is not a number"))),
         }
     };
-    let submitted = ExperimentSpec::from_text(text).and_then(|spec| {
-        let mut plan = SessionPlan::from_spec(&spec);
-        if let Some(seeds) = req
-            .query
-            .get("seeds")
-            .map(|raw| raw.parse::<usize>().map_err(|_| AdaError::Config(format!("query seeds={raw:?} is not an integer"))))
-            .transpose()?
-        {
-            plan.expand_seeds(seeds);
-        }
-        let priority = parse("priority").map_err(AdaError::Config)?.unwrap_or(0.0) as i64;
-        let weight = parse("weight").map_err(AdaError::Config)?.unwrap_or(1.0);
-        ctx.scheduler.submit(spec.name.clone(), priority, weight, plan)
-    });
+    let submitted = (|| {
+        let opts = SubmitOptions {
+            priority: parse("priority")?.unwrap_or(0.0) as i64,
+            weight: parse("weight")?.unwrap_or(1.0),
+            seeds: req
+                .query
+                .get("seeds")
+                .map(|raw| {
+                    raw.parse::<usize>().map_err(|_| {
+                        AdaError::Config(format!("query seeds={raw:?} is not an integer"))
+                    })
+                })
+                .transpose()?
+                .unwrap_or(0),
+            idempotent: req
+                .query
+                .get("idempotent")
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false),
+            retries: parse("retries")?.map(|r| r.max(0.0) as usize),
+            deadline_s: parse("deadline_s")?,
+        };
+        ctx.scheduler.submit_spec(text, &opts)
+    })();
     match submitted {
         Ok(job) => respond_json(
             stream,
@@ -378,15 +501,22 @@ fn handle_submit(ctx: &Arc<Ctx>, stream: &mut TcpStream, req: &Request) {
     }
 }
 
-/// The chunked JSONL stream: replay everything logged so far, then tail
-/// until the job's event log closes (or the server shuts down / the
-/// client hangs up — a failed write ends the tail).
-fn stream_events(ctx: &Arc<Ctx>, stream: &mut TcpStream, events: &super::stream::EventLog) {
+/// The chunked JSONL stream: replay everything logged from event
+/// `from` onward, then tail until the job's event log closes (or the
+/// server shuts down / the client hangs up — a failed write ends the
+/// tail). The `from` cursor is what lets a dropped client re-attach
+/// without duplicate events.
+fn stream_events(
+    ctx: &Arc<Ctx>,
+    stream: &mut TcpStream,
+    events: &super::stream::EventLog,
+    from: usize,
+) {
     let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
     if stream.write_all(head.as_bytes()).is_err() {
         return;
     }
-    let mut cursor = 0usize;
+    let mut cursor = from;
     loop {
         let (lines, closed) = events.wait_from(cursor, Duration::from_millis(250));
         cursor += lines.len();
@@ -454,23 +584,78 @@ fn read_chunked(reader: &mut BufReader<TcpStream>) -> Result<Vec<u8>> {
     }
 }
 
-/// One HTTP exchange against `addr`: returns `(status, body)`. Handles
-/// `Content-Length`, chunked and read-to-EOF bodies.
-pub fn http_request(
+/// Client-side timeouts and retry policy for [`http_request_with`] /
+/// [`http_stream_lines_with`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Socket read timeout.
+    pub read_timeout: Duration,
+    /// Retry attempts beyond the first (0 = one try).
+    pub retries: usize,
+    /// Base backoff delay; grows exponentially per attempt with
+    /// deterministic jitter, capped at 2 s.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(120),
+            retries: 3,
+            backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Deterministic jittered client backoff — same construction as the
+/// scheduler's retry delay: a pure hash of `(key, attempt)` scales the
+/// exponential base into [0.5, 1.5), capped at 2 s.
+fn client_backoff(key: &str, attempt: usize, base: Duration) -> Duration {
+    let h = u64::from_str_radix(
+        &super::store::content_hash(&format!("{key}#{attempt}"))[..16],
+        16,
+    )
+    .unwrap_or(0);
+    let jitter = 0.5 + (h % 1024) as f64 / 1024.0;
+    let scaled =
+        base.as_secs_f64() * (1u64 << attempt.min(6)) as f64 * jitter;
+    Duration::from_secs_f64(scaled.min(2.0))
+}
+
+fn connect_with(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| AdaError::Runtime(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| AdaError::Runtime(format!("resolve {addr}: no addresses")))?;
+    let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout)
+        .map_err(|e| AdaError::Runtime(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    Ok(stream)
+}
+
+/// One HTTP exchange, no retries. `sent` flips to true the moment any
+/// request bytes hit the wire — the fact the retry policy needs to
+/// decide whether a failed non-GET is safe to repeat.
+fn request_once(
     addr: &str,
     method: &str,
     path: &str,
-    body: Option<&[u8]>,
+    payload: &[u8],
+    cfg: &ClientConfig,
+    sent: &mut bool,
 ) -> Result<(u16, Vec<u8>)> {
-    let stream = TcpStream::connect(addr)
-        .map_err(|e| AdaError::Runtime(format!("connect {addr}: {e}")))?;
-    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let stream = connect_with(addr, cfg)?;
     let mut writer = stream.try_clone()?;
-    let payload = body.unwrap_or(&[]);
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         payload.len()
     );
+    *sent = true;
     writer.write_all(head.as_bytes())?;
     writer.write_all(payload)?;
     writer.flush()?;
@@ -497,16 +682,71 @@ pub fn http_request(
     Ok((code, body))
 }
 
-/// GET `path` and feed each streamed line to `each` as it arrives
-/// (chunked framing stripped). Returns the response status.
+/// One HTTP exchange against `addr` with the default [`ClientConfig`]:
+/// returns `(status, body)`. Handles `Content-Length`, chunked and
+/// read-to-EOF bodies.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> Result<(u16, Vec<u8>)> {
+    http_request_with(addr, method, path, body, &ClientConfig::default())
+}
+
+/// [`http_request`] with explicit timeouts and retries. Retries are
+/// applied only when repeating is safe: any transport error on a GET,
+/// a transport error on a write whose bytes never reached the wire, or
+/// a `503` shed response (the server refused before reading the
+/// request). A write that failed mid-flight is returned as the error —
+/// the caller decides (idempotent submits can simply resubmit).
+pub fn http_request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    cfg: &ClientConfig,
+) -> Result<(u16, Vec<u8>)> {
+    let payload = body.unwrap_or(&[]);
+    let mut attempt = 0usize;
+    loop {
+        let mut sent = false;
+        let outcome = request_once(addr, method, path, payload, cfg, &mut sent);
+        let retryable = match &outcome {
+            Ok((503, _)) => true,
+            Ok(_) => false,
+            Err(_) => method.eq_ignore_ascii_case("GET") || !sent,
+        };
+        if !retryable || attempt >= cfg.retries {
+            return outcome;
+        }
+        attempt += 1;
+        std::thread::sleep(client_backoff(path, attempt, cfg.backoff));
+    }
+}
+
+/// GET `path` and feed each streamed line to `each` with the default
+/// [`ClientConfig`]. Returns the response status.
 pub fn http_stream_lines(
     addr: &str,
     path: &str,
-    mut each: impl FnMut(&str),
+    each: impl FnMut(&str),
 ) -> Result<u16> {
-    let stream = TcpStream::connect(addr)
-        .map_err(|e| AdaError::Runtime(format!("connect {addr}: {e}")))?;
-    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    http_stream_lines_with(addr, path, each, &ClientConfig::default())
+}
+
+/// One streaming attempt. Lines are fed to the callback only on a 200
+/// (an error body is drained, not delivered); `delivered` counts the
+/// lines handed over across the whole call so a re-attach can resume
+/// past them.
+fn stream_once(
+    addr: &str,
+    path: &str,
+    cfg: &ClientConfig,
+    each: &mut dyn FnMut(&str),
+    delivered: &mut usize,
+) -> Result<u16> {
+    let stream = connect_with(addr, cfg)?;
     let mut writer = stream.try_clone()?;
     let head =
         format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
@@ -514,17 +754,21 @@ pub fn http_stream_lines(
     writer.flush()?;
     let mut reader = BufReader::new(stream);
     let (code, headers) = read_headers(&mut reader)?;
+    let deliver = code == 200;
     let chunked = headers
         .get("transfer-encoding")
         .map(|v| v.eq_ignore_ascii_case("chunked"))
         .unwrap_or(false);
     let mut partial = String::new();
-    let mut feed = |partial: &mut String, each: &mut dyn FnMut(&str)| {
+    let mut feed = |partial: &mut String,
+                    each: &mut dyn FnMut(&str),
+                    delivered: &mut usize| {
         while let Some(pos) = partial.find('\n') {
             let line: String = partial.drain(..=pos).collect();
             let line = line.trim_end();
-            if !line.is_empty() {
+            if !line.is_empty() && deliver {
                 each(line);
+                *delivered += 1;
             }
         }
     };
@@ -542,7 +786,7 @@ pub fn http_stream_lines(
             let mut chunk = vec![0u8; size];
             reader.read_exact(&mut chunk)?;
             partial.push_str(&String::from_utf8_lossy(&chunk));
-            feed(&mut partial, &mut each);
+            feed(&mut partial, each, delivered);
             let mut crlf = [0u8; 2];
             reader.read_exact(&mut crlf)?;
         }
@@ -550,13 +794,66 @@ pub fn http_stream_lines(
         let mut buf = Vec::new();
         reader.read_to_end(&mut buf)?;
         partial.push_str(&String::from_utf8_lossy(&buf));
-        feed(&mut partial, &mut each);
+        feed(&mut partial, each, delivered);
     }
     let tail = partial.trim_end();
-    if !tail.is_empty() {
+    if !tail.is_empty() && deliver {
         each(tail);
+        *delivered += 1;
     }
     Ok(code)
+}
+
+/// [`http_stream_lines`] with explicit timeouts and retries. A dropped
+/// stream (connect failure, mid-stream transport error, or a `503`
+/// shed) re-attaches with `?from=` advanced past the lines already
+/// delivered — the server's event-cursor replay makes the combined
+/// stream exactly-once from the callback's point of view.
+pub fn http_stream_lines_with(
+    addr: &str,
+    path: &str,
+    mut each: impl FnMut(&str),
+    cfg: &ClientConfig,
+) -> Result<u16> {
+    // Honour any cursor already present in the caller's path.
+    let (bare, base_from) = match path.split_once('?') {
+        Some((p, q)) => {
+            let query = parse_query(q);
+            let from = query
+                .get("from")
+                .and_then(|raw| raw.parse::<usize>().ok())
+                .unwrap_or(0);
+            let rest: Vec<String> = q
+                .split('&')
+                .filter(|pair| !pair.starts_with("from="))
+                .map(str::to_string)
+                .collect();
+            let rest = rest.join("&");
+            if rest.is_empty() {
+                (p.to_string(), from)
+            } else {
+                (format!("{p}?{rest}"), from)
+            }
+        }
+        None => (path.to_string(), 0),
+    };
+    let mut delivered = 0usize;
+    let mut attempt = 0usize;
+    loop {
+        let from = base_from + delivered;
+        let attempt_path = if bare.contains('?') {
+            format!("{bare}&from={from}")
+        } else {
+            format!("{bare}?from={from}")
+        };
+        let outcome = stream_once(addr, &attempt_path, cfg, &mut each, &mut delivered);
+        let retryable = matches!(&outcome, Err(_) | Ok(503));
+        if !retryable || attempt >= cfg.retries {
+            return outcome;
+        }
+        attempt += 1;
+        std::thread::sleep(client_backoff(&bare, attempt, cfg.backoff));
+    }
 }
 
 #[cfg(test)]
@@ -575,9 +872,20 @@ mod tests {
 
     #[test]
     fn status_lines_cover_the_codes_in_use() {
-        for code in [200u16, 400, 404, 405] {
+        for code in [200u16, 400, 404, 405, 408, 503] {
             assert!(!status_text(code).is_empty());
         }
+        assert_eq!(status_text(408), "Request Timeout");
+        assert_eq!(status_text(503), "Service Unavailable");
         assert_eq!(status_text(500), "Internal Server Error");
+    }
+
+    #[test]
+    fn client_backoff_is_deterministic_and_capped() {
+        let base = Duration::from_millis(100);
+        let a = client_backoff("/jobs/j1/stream", 1, base);
+        assert_eq!(a, client_backoff("/jobs/j1/stream", 1, base));
+        assert_ne!(a, client_backoff("/jobs/j1/stream", 2, base));
+        assert!(client_backoff("/x", 40, base) <= Duration::from_secs(2));
     }
 }

@@ -1,34 +1,52 @@
 //! The experiment service: dbench as a long-lived, multi-tenant server
 //! (ROADMAP direction 5) — pure std, like everything else in the crate.
 //!
-//! Four layers, composed left to right:
+//! Five layers, composed left to right:
 //!
 //! * [`http`] — a minimal HTTP/1.1 front end over
 //!   `std::net::TcpListener`: submit a spec (TOML or JSON), query and
 //!   cancel jobs, fetch results, and stream per-epoch/per-iteration
-//!   metrics as chunked JSONL. Also ships the matching client half
-//!   behind `dbench submit/status/results/stream`.
+//!   metrics as chunked JSONL. Bounded (connection cap with 503
+//!   shedding, 408 on stalled uploads) and shipped with a retrying
+//!   client half behind `dbench submit/status/results/stream`.
 //! * [`scheduler`] — one shared bounded worker pool over the existing
 //!   cell machinery, scheduling cells across jobs by integer priority
-//!   and deficit-based fair share, with cell-boundary cancellation.
+//!   and deficit-based fair share, with cell-boundary cancellation,
+//!   panic containment, deterministic-backoff retries and a watchdog
+//!   that turns per-cell deadlines into cooperative stops.
+//! * [`journal`] — the fsynced write-ahead log of submissions and
+//!   terminal transitions that makes the queue durable: a restarted
+//!   scheduler replays it and re-enqueues every non-terminal job under
+//!   its original id.
 //! * [`store`] — the content-addressed [`ResultStore`] of finished
 //!   [`crate::dbench::CellResult`]s, keyed by the cell
-//!   [`crate::dbench::fingerprint`]; shared byte-for-byte with the CLI
-//!   `--resume-dir` cache (legacy flat-layout files are read and
+//!   [`crate::dbench::fingerprint`]; crash-atomic writes, corrupt
+//!   objects quarantined (`*.corrupt`), shared byte-for-byte with the
+//!   CLI `--resume-dir` cache (legacy flat-layout files are read and
 //!   migrated in place).
 //! * [`stream`] — the per-job [`EventLog`] replay buffer and the
 //!   [`StreamObserver`] that forwards training events into it.
 //!
 //! Graceful shutdown drains in-flight cells into the store — cell
 //! granularity is the checkpoint, so a restarted server re-runs
-//! nothing that finished.
+//! nothing that finished. An abrupt stop (crash, `kill -9`,
+//! `shutdown(drain=false)`) loses at most the in-flight cells: the
+//! journal re-enqueues the jobs, the store serves the finished cells,
+//! and recovery converges to byte-identical results.
 
 pub mod http;
+pub mod journal;
 pub mod scheduler;
 pub mod store;
 pub mod stream;
 
-pub use http::{http_request, http_stream_lines, start, ServeConfig, Server};
-pub use scheduler::{CancelStop, Job, JobStatus, Scheduler};
+pub use http::{
+    http_request, http_request_with, http_stream_lines, http_stream_lines_with, start,
+    ClientConfig, ServeConfig, Server,
+};
+pub use journal::Journal;
+pub use scheduler::{
+    CancelStop, Job, JobStatus, Scheduler, SchedulerConfig, SubmitOptions,
+};
 pub use store::{content_hash, ResultStore, StoreStats};
 pub use stream::{EventLog, StreamObserver};

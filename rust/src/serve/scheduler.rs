@@ -29,25 +29,42 @@
 //! cell's [`CancelStop`] observer ends its run at the next iteration
 //! boundary; a cancelled cell's partial result is **discarded**, never
 //! stored (cache-poisoning guard).
+//!
+//! ## Durability and self-healing
+//!
+//! With [`SchedulerConfig::journal`] on, spec-backed submissions are
+//! appended to the [`Journal`] under the store root before the submit
+//! returns, terminal transitions are journaled too, and
+//! [`Scheduler::start_cfg`] replays the log: a restarted server
+//! re-enqueues every non-terminal job under its **original id**,
+//! serves the cells that finished from the store, and re-runs the
+//! rest — recovery converges to byte-identical results. The workers
+//! self-heal: a panicking cell fails *its* job with the panic message
+//! (the worker thread survives via `catch_unwind`, so pool capacity
+//! never shrinks), transient cell errors retry up to `retries` times
+//! with deterministic seeded jittered backoff, and a per-cell
+//! `deadline_s` turns a wedged cell into a cooperative stop via the
+//! watchdog thread.
 
+use super::journal::Journal;
 use super::store::{content_hash, ResultStore};
 use super::stream::{EventLog, StreamObserver};
 use crate::coordinator::observer::{ControlFlow, EpochInfo, Observer};
-use crate::dbench::{CellResult, SessionPlan};
+use crate::dbench::{CellPlan, CellResult, ExperimentSpec, SessionPlan};
 use crate::error::{AdaError, Result};
 use crate::metrics::IterationRecord;
 use crate::util::json::Value;
 use crate::util::matrix::ReplicaMatrix;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Stop an in-flight cell run at the next iteration/epoch boundary once
-/// the shared flag flips — the cancellation (and non-drain shutdown)
-/// path of the service. Relies on the session's early-stop contract:
-/// the run still evaluates and returns, and the scheduler then discards
-/// the truncated result.
+/// the shared flag flips — the cancellation, non-drain shutdown and
+/// deadline paths of the service. Relies on the session's early-stop
+/// contract: the run still evaluates and returns, and the scheduler
+/// then discards (or deadline-fails) the truncated result.
 pub struct CancelStop {
     flag: Arc<AtomicBool>,
 }
@@ -81,6 +98,73 @@ impl Observer for CancelStop {
     }
 }
 
+/// Executor-level knobs of one [`Scheduler`] (the `dbench serve`
+/// flags). `retries` and `deadline_s` are per-job defaults that
+/// [`SubmitOptions`] can override per submission.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Concurrent cell workers (min 1).
+    pub workers: usize,
+    /// Start with the dispatch gate closed ([`Scheduler::resume`]
+    /// opens it).
+    pub paused: bool,
+    /// Journal spec-backed submissions under `<store>/journal/` and
+    /// replay them on start.
+    pub journal: bool,
+    /// Default transient-failure retries per cell.
+    pub retries: usize,
+    /// Default per-cell wall-clock deadline in seconds (0 = none).
+    pub deadline_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: 1,
+            paused: false,
+            journal: false,
+            retries: 0,
+            deadline_s: 0.0,
+        }
+    }
+}
+
+/// Per-submission options ([`Scheduler::submit_spec`] /
+/// [`Scheduler::submit_plan`]).
+#[derive(Debug, Clone)]
+pub struct SubmitOptions {
+    /// Scheduling priority (higher dispatches first).
+    pub priority: i64,
+    /// Fair-share weight within a priority band (> 0).
+    pub weight: f64,
+    /// Replicate every cell this many times with derived seeds
+    /// (≤ 1 = no replication).
+    pub seeds: usize,
+    /// Return the existing job instead of a `-N`-suffixed duplicate
+    /// when an identical submission is already known — the retry-safe
+    /// `POST /jobs?idempotent=true` mode.
+    pub idempotent: bool,
+    /// Per-job transient-failure retries per cell (overrides the
+    /// scheduler default).
+    pub retries: Option<usize>,
+    /// Per-job cell deadline in seconds (overrides the scheduler
+    /// default; 0 disables).
+    pub deadline_s: Option<f64>,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions {
+            priority: 0,
+            weight: 1.0,
+            seeds: 0,
+            idempotent: false,
+            retries: None,
+            deadline_s: None,
+        }
+    }
+}
+
 /// One submitted experiment: an expanded [`SessionPlan`] plus
 /// scheduling identity and the job's event stream. Results accumulate
 /// per cell slot as cells finish (in any order).
@@ -97,6 +181,10 @@ pub struct Job {
     pub weight: f64,
     /// Submission sequence number (final tiebreak).
     pub seq: usize,
+    /// Transient-failure retries per cell.
+    pub retries: usize,
+    /// Per-cell wall-clock deadline in seconds (0 = none).
+    pub deadline_s: f64,
     /// The expanded plan. `resume_dir` stays `None` here — the
     /// scheduler owns all store traffic so cancelled runs can be
     /// discarded before they ever touch disk.
@@ -289,74 +377,182 @@ enum Outcome {
     Failed(String),
 }
 
+/// The watchdog's registry of in-flight deadlines.
+struct WatchState {
+    entries: Vec<(u64, Instant, Arc<AtomicBool>)>,
+    next_token: u64,
+    stop: bool,
+}
+
 /// The shared bounded executor over all submitted jobs. Construct with
-/// [`Scheduler::start`]; workers live until [`Scheduler::shutdown`].
+/// [`Scheduler::start`] / [`Scheduler::start_cfg`]; workers live until
+/// [`Scheduler::shutdown`].
 pub struct Scheduler {
     store: Arc<ResultStore>,
     workers: usize,
+    defaults: SchedulerConfig,
+    journal: Option<Journal>,
+    /// Non-drain shutdown: in-flight cells stop at the next iteration
+    /// boundary and are discarded, but jobs keep their non-terminal
+    /// journal state so a restart replays them.
+    abort: Arc<AtomicBool>,
     inner: Mutex<Inner>,
     cv: Condvar,
     done_cv: Condvar,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    watch: Mutex<WatchState>,
+    watch_cv: Condvar,
+    watch_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Scheduler {
-    /// Spawn `workers` (min 1) cell workers draining into `store`.
-    /// `paused` starts the dispatch gate closed (tests use this to make
-    /// multi-job interleavings deterministic; [`Scheduler::resume`]
-    /// opens it).
+    /// Spawn `workers` (min 1) cell workers draining into `store`, with
+    /// journaling off — the programmatic/test entry point. `paused`
+    /// starts the dispatch gate closed.
     pub fn start(store: Arc<ResultStore>, workers: usize, paused: bool) -> Arc<Scheduler> {
+        Self::start_cfg(
+            store,
+            SchedulerConfig { workers, paused, ..SchedulerConfig::default() },
+        )
+        .expect("scheduler start without a journal cannot fail")
+    }
+
+    /// Spawn the executor per `cfg`. With `cfg.journal` on, the journal
+    /// under `<store>/journal/` is opened (created if absent), replayed
+    /// — every non-terminal spec submission re-enters the queue under
+    /// its original id, in original submission order — and compacted
+    /// down to the live set before any worker starts.
+    pub fn start_cfg(store: Arc<ResultStore>, cfg: SchedulerConfig) -> Result<Arc<Scheduler>> {
+        let journal = if cfg.journal {
+            Some(Journal::open(&store.root().join("journal"))?)
+        } else {
+            None
+        };
         let sched = Arc::new(Scheduler {
             store,
-            workers: workers.max(1),
+            workers: cfg.workers.max(1),
+            defaults: cfg.clone(),
+            journal,
+            abort: Arc::new(AtomicBool::new(false)),
             inner: Mutex::new(Inner {
                 entries: BTreeMap::new(),
                 order: Vec::new(),
                 next_seq: 0,
-                paused,
+                paused: cfg.paused,
                 stopping: false,
                 dispatch_log: Vec::new(),
             }),
             cv: Condvar::new(),
             done_cv: Condvar::new(),
             handles: Mutex::new(Vec::new()),
+            watch: Mutex::new(WatchState {
+                entries: Vec::new(),
+                next_token: 0,
+                stop: false,
+            }),
+            watch_cv: Condvar::new(),
+            watch_handle: Mutex::new(None),
         });
+        // Recovery happens before any worker exists, so replayed jobs
+        // queue atomically with respect to new submissions.
+        if sched.journal.is_some() {
+            sched.replay_journal();
+        }
+        {
+            let s = Arc::clone(&sched);
+            *sched.watch_handle.lock().expect("watchdog handle lock") =
+                Some(std::thread::spawn(move || s.watchdog_loop()));
+        }
         let mut handles = sched.handles.lock().expect("scheduler handles lock");
         for _ in 0..sched.workers {
             let s = Arc::clone(&sched);
             handles.push(std::thread::spawn(move || s.worker_loop()));
         }
         drop(handles);
-        sched
+        Ok(sched)
     }
 
-    /// Submit an expanded plan. Returns the job handle with its
-    /// deterministic id assigned.
+    /// Submit an expanded plan with default options. Returns the job
+    /// handle with its deterministic id assigned.
     pub fn submit(
         &self,
         name: String,
         priority: i64,
         weight: f64,
+        plan: SessionPlan,
+    ) -> Result<Arc<Job>> {
+        self.submit_plan(
+            name,
+            plan,
+            &SubmitOptions { priority, weight, ..SubmitOptions::default() },
+        )
+    }
+
+    /// Submit a programmatic plan. Not journaled — only spec-backed
+    /// submissions ([`Scheduler::submit_spec`]) can be replayed, since
+    /// replay re-parses the spec text.
+    pub fn submit_plan(
+        &self,
+        name: String,
+        plan: SessionPlan,
+        opts: &SubmitOptions,
+    ) -> Result<Arc<Job>> {
+        self.submit_inner(name, plan, opts, None, None)
+    }
+
+    /// Parse, expand and submit a spec (TOML or JSON — the `POST /jobs`
+    /// body). The verbatim text is journaled (when journaling is on) so
+    /// a restarted scheduler replays the submission exactly.
+    pub fn submit_spec(&self, text: &str, opts: &SubmitOptions) -> Result<Arc<Job>> {
+        let spec = ExperimentSpec::from_text(text)?;
+        let mut plan = SessionPlan::from_spec(&spec);
+        plan.expand_seeds(opts.seeds);
+        self.submit_inner(spec.name.clone(), plan, opts, Some(text), None)
+    }
+
+    fn submit_inner(
+        &self,
+        name: String,
         mut plan: SessionPlan,
+        opts: &SubmitOptions,
+        spec_text: Option<&str>,
+        pinned_id: Option<&str>,
     ) -> Result<Arc<Job>> {
         if plan.cells.is_empty() {
             return Err(AdaError::Config("spec expands to zero cells".into()));
         }
-        if !(weight > 0.0 && weight.is_finite()) {
-            return Err(AdaError::Config(format!("job weight must be finite and > 0, got {weight}")));
+        if !(opts.weight > 0.0 && opts.weight.is_finite()) {
+            return Err(AdaError::Config(format!(
+                "job weight must be finite and > 0, got {}",
+                opts.weight
+            )));
         }
         // The scheduler owns all store traffic (see `Job::plan`).
         plan.resume_dir = None;
         let total = plan.cells.len();
-        let mut material = format!("priority={priority} weight={weight}");
-        for cell in &plan.cells {
-            material.push(' ');
-            material.push_str(&plan.cell_fingerprint(cell));
-        }
-        let base = format!("j{}", &content_hash(&material)[..12]);
+        let base = match pinned_id {
+            Some(id) => id.to_string(),
+            None => {
+                let mut material =
+                    format!("priority={} weight={}", opts.priority, opts.weight);
+                for cell in &plan.cells {
+                    material.push(' ');
+                    material.push_str(&plan.cell_fingerprint(cell));
+                }
+                format!("j{}", &content_hash(&material)[..12])
+            }
+        };
         let mut inner = self.inner.lock().expect("scheduler lock");
         if inner.stopping {
             return Err(AdaError::Runtime("scheduler is shutting down".into()));
+        }
+        if pinned_id.is_some() && inner.entries.contains_key(&base) {
+            return Err(AdaError::Runtime(format!("job {base} already exists")));
+        }
+        if opts.idempotent {
+            if let Some(e) = inner.entries.get(&base) {
+                return Ok(Arc::clone(&e.job));
+            }
         }
         let mut id = base.clone();
         let mut n = 1usize;
@@ -367,14 +563,27 @@ impl Scheduler {
         let job = Arc::new(Job {
             id: id.clone(),
             name,
-            priority,
-            weight,
+            priority: opts.priority,
+            weight: opts.weight,
             seq: inner.next_seq,
+            retries: opts.retries.unwrap_or(self.defaults.retries),
+            deadline_s: opts.deadline_s.unwrap_or(self.defaults.deadline_s),
             plan,
             events: Arc::new(EventLog::new()),
             cancelled: Arc::new(AtomicBool::new(false)),
             results: Mutex::new((0..total).map(|_| None).collect()),
         });
+        // Durability before visibility: the submit record is fsynced
+        // while the inner lock is held (journal order = seq order, so
+        // replay preserves the fair-share tiebreak), and a failed
+        // append fails the submission instead of admitting a job that
+        // would vanish on restart. Replayed jobs (pinned id) skip the
+        // append — compaction already rewrote their records.
+        if pinned_id.is_none() {
+            if let (Some(journal), Some(text)) = (&self.journal, spec_text) {
+                journal.append(&submit_record(&job, opts, text))?;
+            }
+        }
         inner.next_seq += 1;
         inner.entries.insert(
             id.clone(),
@@ -393,6 +602,57 @@ impl Scheduler {
         drop(inner);
         self.cv.notify_all();
         Ok(job)
+    }
+
+    /// Re-enqueue every journaled non-terminal submission, then compact
+    /// the journal down to exactly those records. Unparseable records
+    /// are dropped (and compacted away) rather than wedging recovery.
+    fn replay_journal(&self) {
+        let journal = self.journal.as_ref().expect("journal enabled");
+        let records = journal.replay();
+        let mut terminal: BTreeSet<String> = BTreeSet::new();
+        for r in &records {
+            if matches!(r.str_field("type"), Ok("cancel") | Ok("done")) {
+                if let Ok(id) = r.str_field("id") {
+                    terminal.insert(id.to_string());
+                }
+            }
+        }
+        let mut live = Vec::new();
+        for r in &records {
+            if !matches!(r.str_field("type"), Ok("submit")) {
+                continue;
+            }
+            let (Ok(id), Ok(text)) = (r.str_field("id"), r.str_field("spec")) else {
+                continue;
+            };
+            if terminal.contains(id) {
+                continue;
+            }
+            let Ok(spec) = ExperimentSpec::from_text(text) else {
+                continue;
+            };
+            let mut plan = SessionPlan::from_spec(&spec);
+            let seeds = r.usize_field("seeds").unwrap_or(0);
+            plan.expand_seeds(seeds);
+            let opts = SubmitOptions {
+                priority: r.num_field("priority").unwrap_or(0.0) as i64,
+                weight: r.num_field("weight").unwrap_or(1.0),
+                seeds,
+                idempotent: false,
+                retries: r.num_field("retries").ok().map(|n| n.max(0.0) as usize),
+                deadline_s: r.num_field("deadline_s").ok(),
+            };
+            live.push((id.to_string(), spec.name.clone(), plan, opts, r.clone()));
+        }
+        // Compact first: a crash between the rewrite and the (lockstep,
+        // in-memory) re-submissions below still leaves every live
+        // record on disk for the next restart.
+        let compacted: Vec<Value> = live.iter().map(|(_, _, _, _, r)| r.clone()).collect();
+        let _ = journal.rewrite(&compacted);
+        for (id, name, plan, opts, _) in live {
+            let _ = self.submit_inner(name, plan, &opts, None, Some(&id));
+        }
     }
 
     /// Close the dispatch gate: in-flight cells finish, nothing new
@@ -427,6 +687,14 @@ impl Scheduler {
         let events = Arc::clone(&entry.job.events);
         let status = entry.status();
         drop(inner);
+        // Terminal for replay purposes: a restart must not revive a
+        // cancelled job.
+        if let Some(journal) = &self.journal {
+            let _ = journal.append(&Value::obj(vec![
+                ("type", Value::Str("cancel".into())),
+                ("id", Value::Str(id.to_string())),
+            ]));
+        }
         if finalize {
             events.push_value(&job_done_event(id, "cancelled"));
             events.close();
@@ -478,13 +746,13 @@ impl Scheduler {
             {
                 return Some(status);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            // Saturating wait: the deadline may already have passed.
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
                 return None;
-            }
+            };
             let (guard, _) = self
                 .done_cv
-                .wait_timeout(inner, deadline - now)
+                .wait_timeout(inner, remaining)
                 .expect("scheduler lock");
             inner = guard;
         }
@@ -492,25 +760,34 @@ impl Scheduler {
 
     /// Stop the executor. `drain = true` (graceful) lets in-flight
     /// cells run to completion and persist to the store — cell
-    /// granularity *is* the checkpoint, so a restarted server replays
-    /// nothing; `drain = false` flips every job's cancel flag so
-    /// in-flight cells stop at their next iteration boundary and are
-    /// discarded. Either way no new cells dispatch, workers are joined,
-    /// and every event log is closed so attached streams terminate.
+    /// granularity *is* the checkpoint; `drain = false` sets the
+    /// scheduler-wide abort flag so in-flight cells stop at their next
+    /// iteration boundary and are discarded, while the jobs stay
+    /// non-terminal in the journal — the abrupt-stop path a restarted
+    /// server replays. Either way no new cells dispatch, workers and
+    /// the watchdog are joined, and every event log is closed so
+    /// attached streams terminate.
     pub fn shutdown(&self, drain: bool) {
         {
             let mut inner = self.inner.lock().expect("scheduler lock");
             inner.stopping = true;
             inner.paused = false;
             if !drain {
-                for e in inner.entries.values() {
-                    e.job.cancelled.store(true, Ordering::SeqCst);
-                }
+                self.abort.store(true, Ordering::SeqCst);
             }
         }
         self.cv.notify_all();
-        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().expect("scheduler handles lock"));
+        let handles: Vec<_> =
+            std::mem::take(&mut *self.handles.lock().expect("scheduler handles lock"));
         for h in handles {
+            let _ = h.join();
+        }
+        {
+            let mut watch = self.watch.lock().expect("watchdog lock");
+            watch.stop = true;
+        }
+        self.watch_cv.notify_all();
+        if let Some(h) = self.watch_handle.lock().expect("watchdog handle lock").take() {
             let _ = h.join();
         }
         let inner = self.inner.lock().expect("scheduler lock");
@@ -519,6 +796,10 @@ impl Scheduler {
         }
         drop(inner);
         self.done_cv.notify_all();
+    }
+
+    fn aborting(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
     }
 
     fn worker_loop(&self) {
@@ -550,6 +831,136 @@ impl Scheduler {
         }
     }
 
+    // ---- the watchdog -------------------------------------------------
+
+    /// Register a cell deadline; the watchdog flips `flag` when it
+    /// expires. Returns the token for [`Scheduler::watch_deregister`].
+    fn watch_register(&self, deadline: Instant, flag: Arc<AtomicBool>) -> u64 {
+        let mut watch = self.watch.lock().expect("watchdog lock");
+        let token = watch.next_token;
+        watch.next_token += 1;
+        watch.entries.push((token, deadline, flag));
+        drop(watch);
+        self.watch_cv.notify_all();
+        token
+    }
+
+    fn watch_deregister(&self, token: u64) {
+        let mut watch = self.watch.lock().expect("watchdog lock");
+        watch.entries.retain(|(t, _, _)| *t != token);
+    }
+
+    /// One parked thread that turns wall-clock deadlines into
+    /// cooperative stops: it sleeps until the earliest registered
+    /// deadline (or a registry change), flips expired flags, and lets
+    /// the cell's `CancelStop`-style observer end the run at the next
+    /// iteration boundary.
+    fn watchdog_loop(&self) {
+        let mut watch = self.watch.lock().expect("watchdog lock");
+        loop {
+            if watch.stop {
+                return;
+            }
+            let now = Instant::now();
+            for (_, deadline, flag) in &watch.entries {
+                if now >= *deadline {
+                    flag.store(true, Ordering::SeqCst);
+                }
+            }
+            watch.entries.retain(|(_, _, flag)| !flag.load(Ordering::SeqCst));
+            let next = watch
+                .entries
+                .iter()
+                .map(|(_, deadline, _)| {
+                    deadline.checked_duration_since(now).unwrap_or(Duration::ZERO)
+                })
+                .min();
+            watch = match next {
+                Some(wait) => {
+                    let (guard, _) = self
+                        .watch_cv
+                        .wait_timeout(watch, wait.max(Duration::from_millis(5)))
+                        .expect("watchdog lock");
+                    guard
+                }
+                None => self.watch_cv.wait(watch).expect("watchdog lock"),
+            };
+        }
+    }
+
+    // ---- cell execution -----------------------------------------------
+
+    /// Run one attempt loop for a cell: panic containment, deadline
+    /// enforcement, and deterministic-backoff retries for transient
+    /// errors.
+    fn execute_cell(
+        &self,
+        job: &Arc<Job>,
+        idx: usize,
+        cell: &CellPlan,
+        fingerprint: &str,
+    ) -> Outcome {
+        let mut attempt = 0usize;
+        loop {
+            let deadline_flag = Arc::new(AtomicBool::new(false));
+            let token = (job.deadline_s > 0.0).then(|| {
+                self.watch_register(
+                    Instant::now() + Duration::from_secs_f64(job.deadline_s),
+                    Arc::clone(&deadline_flag),
+                )
+            });
+            let observers: Vec<Box<dyn Observer>> = vec![
+                Box::new(StreamObserver::new(Arc::clone(&job.events), idx, cell.scale)),
+                Box::new(CancelStop::new(Arc::clone(&job.cancelled))),
+                Box::new(CancelStop::new(Arc::clone(&self.abort))),
+                Box::new(CancelStop::new(Arc::clone(&deadline_flag))),
+            ];
+            // A panic anywhere inside the cell fails *this job* and
+            // leaves the worker thread alive — pool capacity never
+            // shrinks to a poisoned model or strategy.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job.plan.run_cell_plan_with(cell, observers)
+            }));
+            if let Some(token) = token {
+                self.watch_deregister(token);
+            }
+            let timed_out = deadline_flag.load(Ordering::SeqCst);
+            return match run {
+                Err(payload) => Outcome::Failed(format!(
+                    "cell {idx} panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+                // Deadline beats everything but cancellation-by-panic:
+                // even an `Ok` result of a timed-out run is a truncated
+                // run, never a storable result.
+                Ok(_) if timed_out => Outcome::Failed(format!(
+                    "cell {idx} exceeded its deadline of {}s",
+                    job.deadline_s
+                )),
+                Ok(Ok(_)) if job.cancelled() || self.aborting() => Outcome::Discarded,
+                Ok(Ok(result)) => {
+                    let _ = self.store.save(fingerprint, &result);
+                    Outcome::Done(result, false)
+                }
+                Ok(Err(e)) => {
+                    if attempt >= job.retries || job.cancelled() || self.aborting() {
+                        Outcome::Failed(e.to_string())
+                    } else {
+                        attempt += 1;
+                        job.events.push_value(&Value::obj(vec![
+                            ("type", Value::Str("cell_retry".into())),
+                            ("cell", Value::Num(idx as f64)),
+                            ("attempt", Value::Num(attempt as f64)),
+                            ("error", Value::Str(e.to_string())),
+                        ]));
+                        std::thread::sleep(backoff_delay(&job.id, idx, attempt));
+                        continue;
+                    }
+                }
+            };
+        }
+    }
+
     fn run_cell(&self, job: &Arc<Job>, idx: usize) {
         let mut cell = job.plan.cells[idx].clone();
         // Same discipline as `SessionPlan::run`: concurrent cells force
@@ -568,21 +979,10 @@ impl Scheduler {
         ]));
         let outcome = if let Some(prev) = self.store.load(&fingerprint, None) {
             Outcome::Done(prev, true)
-        } else if job.cancelled() {
+        } else if job.cancelled() || self.aborting() {
             Outcome::Discarded
         } else {
-            let observers: Vec<Box<dyn Observer>> = vec![
-                Box::new(StreamObserver::new(Arc::clone(&job.events), idx, cell.scale)),
-                Box::new(CancelStop::new(Arc::clone(&job.cancelled))),
-            ];
-            match job.plan.run_cell_plan_with(&cell, observers) {
-                Ok(_) if job.cancelled() => Outcome::Discarded,
-                Ok(result) => {
-                    let _ = self.store.save(&fingerprint, &result);
-                    Outcome::Done(result, false)
-                }
-                Err(e) => Outcome::Failed(e.to_string()),
-            }
+            self.execute_cell(job, idx, &cell, &fingerprint)
         };
         let verdict = match outcome {
             Outcome::Done(result, cached) => {
@@ -626,6 +1026,15 @@ impl Scheduler {
         let events = Arc::clone(&job.events);
         drop(inner);
         if finalize {
+            // Journal the terminal transition so a restart does not
+            // replay a finished job.
+            if let Some(journal) = &self.journal {
+                let _ = journal.append(&Value::obj(vec![
+                    ("type", Value::Str("done".into())),
+                    ("id", Value::Str(job.id.clone())),
+                    ("state", Value::Str(state.clone())),
+                ]));
+            }
             events.push_value(&job_done_event(&job.id, &state));
             events.close();
         }
@@ -640,6 +1049,56 @@ fn job_done_event(id: &str, state: &str) -> Value {
         ("job", Value::Str(id.to_string())),
         ("state", Value::Str(state.to_string())),
     ])
+}
+
+fn submit_record(job: &Job, opts: &SubmitOptions, spec_text: &str) -> Value {
+    Value::obj(vec![
+        ("type", Value::Str("submit".into())),
+        ("id", Value::Str(job.id.clone())),
+        ("priority", Value::Num(job.priority as f64)),
+        ("weight", Value::Num(job.weight)),
+        ("seeds", Value::Num(opts.seeds as f64)),
+        ("spec", Value::Str(spec_text.to_string())),
+        (
+            "retries",
+            match opts.retries {
+                Some(r) => Value::Num(r as f64),
+                None => Value::Null,
+            },
+        ),
+        (
+            "deadline_s",
+            match opts.deadline_s {
+                Some(d) => Value::Num(d),
+                None => Value::Null,
+            },
+        ),
+    ])
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Deterministic jittered exponential backoff: 25 ms · 2^(attempt−1),
+/// scaled by a jitter in [0.5, 1.5) that is a pure hash of
+/// `(job, cell, attempt)` — no wall-clock randomness, so retry traces
+/// reproduce — capped at 2 s.
+fn backoff_delay(job_id: &str, cell: usize, attempt: usize) -> Duration {
+    let h = u64::from_str_radix(
+        &content_hash(&format!("{job_id}/{cell}/{attempt}"))[..16],
+        16,
+    )
+    .unwrap_or(0);
+    let jitter = 0.5 + (h % 1024) as f64 / 1024.0;
+    let base = 25.0 * (1u64 << (attempt.saturating_sub(1)).min(6)) as f64;
+    Duration::from_millis((base * jitter).min(2_000.0) as u64)
 }
 
 #[cfg(test)]
@@ -664,6 +1123,14 @@ mod tests {
         plan
     }
 
+    fn tiny_spec_text(seed: u64) -> String {
+        format!(
+            "base = \"resnet20\"\nname = \"tiny\"\nseed = {seed}\nscales = [4]\n\
+             epochs = 1\nmax_iters_per_epoch = 1\nthreads = 1\nflavors = [\"d_ring\"]\n\
+             metrics_every = 1\neval_every_epochs = 100\n"
+        )
+    }
+
     fn paused_scheduler(tag: &str) -> (Arc<Scheduler>, std::path::PathBuf) {
         let dir = crate::util::scratch_dir(tag).unwrap();
         let store = Arc::new(ResultStore::open(&dir).unwrap());
@@ -680,6 +1147,62 @@ mod tests {
         assert_eq!(b.id, format!("{}-2", a.id), "identical submission dedups");
         assert_ne!(c.id, a.id, "different seed, different id");
         assert!(!c.id.starts_with(&a.id), "{} vs {}", c.id, a.id);
+        sched.shutdown(true);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn idempotent_submission_returns_the_existing_job() {
+        let (sched, dir) = paused_scheduler("sched_idem");
+        let opts = SubmitOptions { idempotent: true, ..SubmitOptions::default() };
+        let a = sched.submit_spec(&tiny_spec_text(9), &opts).unwrap();
+        let b = sched.submit_spec(&tiny_spec_text(9), &opts).unwrap();
+        assert_eq!(a.id, b.id, "idempotent resubmission maps to the same job");
+        // Without the flag the dedup suffix separates the submissions.
+        let c = sched
+            .submit_spec(&tiny_spec_text(9), &SubmitOptions::default())
+            .unwrap();
+        assert_eq!(c.id, format!("{}-2", a.id));
+        sched.shutdown(true);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_replays_pending_jobs_and_skips_finished_ones() {
+        let dir = crate::util::scratch_dir("sched_journal").unwrap();
+        let cfg = SchedulerConfig { journal: true, paused: true, ..SchedulerConfig::default() };
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        let sched = Scheduler::start_cfg(Arc::clone(&store), cfg.clone()).unwrap();
+        let finished = sched
+            .submit_spec(&tiny_spec_text(32), &SubmitOptions::default())
+            .unwrap();
+        sched.resume();
+        let status = sched
+            .wait(&finished.id, Duration::from_secs(300))
+            .expect("first job finishes");
+        assert_eq!(status.state, "done");
+        // The second job lands under a closed gate, so it is still
+        // queued (journal-live) when the scheduler stops abruptly.
+        sched.pause();
+        let pending = sched
+            .submit_spec(&tiny_spec_text(31), &SubmitOptions::default())
+            .unwrap();
+        sched.shutdown(false);
+        drop(sched);
+
+        // Restart on the same store: the pending job is replayed under
+        // its original id, the finished one is not revived.
+        let sched = Scheduler::start_cfg(Arc::clone(&store), cfg).unwrap();
+        let listed = sched.list();
+        assert_eq!(listed.len(), 1, "{listed:?}");
+        assert_eq!(listed[0].id, pending.id, "original id survives the restart");
+        assert_eq!(listed[0].state, "queued");
+        assert!(sched.status(&finished.id).is_none());
+        sched.resume();
+        let status = sched
+            .wait(&pending.id, Duration::from_secs(300))
+            .expect("replayed job finishes");
+        assert_eq!(status.state, "done");
         sched.shutdown(true);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -752,5 +1275,14 @@ mod tests {
             "no submissions after shutdown"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_capped() {
+        let a = backoff_delay("j1", 0, 1);
+        assert_eq!(a, backoff_delay("j1", 0, 1), "pure function of its inputs");
+        assert_ne!(a, backoff_delay("j1", 0, 2), "jitter varies per attempt");
+        assert!(a >= Duration::from_millis(12) && a <= Duration::from_millis(38), "{a:?}");
+        assert!(backoff_delay("j1", 3, 50) <= Duration::from_secs(2), "capped");
     }
 }

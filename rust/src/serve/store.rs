@@ -26,6 +26,19 @@
 //! Both the CLI (`SessionPlan::run_cell_plan`) and the experiment
 //! service (`serve::Scheduler`) go through this type, which is what
 //! makes a server-side cache hit and a CLI resume hit the same bytes.
+//!
+//! ## Crash safety and quarantine
+//!
+//! Writes are atomic: the document goes to a unique temp file in the
+//! destination shard, is fsynced, and is renamed into place — a crash
+//! (even `kill -9`) mid-save leaves either the old object or the new
+//! one, never a torn file at the object path. A content-addressed
+//! object that *does* fail validation on read (truncated by an older
+//! writer, bit rot, a hand edit) is **quarantined**: renamed to
+//! `<hash>.corrupt` so it can never be served, counted in
+//! [`StoreStats::quarantined`], and the cell recomputes as a plain
+//! miss. Legacy flat-layout files are exempt — a fingerprint mismatch
+//! there is ordinary staleness, not corruption.
 
 use crate::dbench::CellResult;
 use crate::error::Result;
@@ -71,6 +84,9 @@ pub struct StoreStats {
     pub hits: u64,
     /// Loads that found nothing (and triggered a cell run).
     pub misses: u64,
+    /// `*.corrupt` files currently on disk — objects that failed
+    /// validation and were quarantined instead of served.
+    pub quarantined: usize,
 }
 
 /// A content-addressed store of finished cells rooted at one directory.
@@ -81,6 +97,7 @@ pub struct ResultStore {
     root: PathBuf,
     hits: AtomicU64,
     misses: AtomicU64,
+    tmp_seq: AtomicU64,
 }
 
 impl ResultStore {
@@ -92,6 +109,7 @@ impl ResultStore {
             root,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
         })
     }
 
@@ -112,11 +130,19 @@ impl ResultStore {
     /// `cell_NNNN_<scale>_<key>.json` convention) to fall back to; a
     /// validated legacy hit is migrated into the content-addressed
     /// layout on the way out. Returns `None` — and counts a miss — on
-    /// absence, fingerprint mismatch or any parse failure.
+    /// absence, fingerprint mismatch or any parse failure. A present
+    /// but invalid content-addressed object is quarantined (renamed
+    /// `*.corrupt`) so the recomputed result can be stored cleanly.
     pub fn load(&self, fingerprint: &str, legacy_name: Option<&str>) -> Option<CellResult> {
-        if let Some(result) = read_tagged(&self.object_path(fingerprint), fingerprint) {
+        let path = self.object_path(fingerprint);
+        if let Some(result) = read_tagged(&path, fingerprint) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Some(result);
+        }
+        if path.exists() {
+            // The object exists but failed validation — corruption,
+            // never a legitimate state for a content-addressed path.
+            let _ = std::fs::rename(&path, path.with_extension("corrupt"));
         }
         if let Some(name) = legacy_name {
             if let Some(result) = read_tagged(&self.root.join(name), fingerprint) {
@@ -141,22 +167,45 @@ impl ResultStore {
     }
 
     /// Persist `result` under `fingerprint`, returning the object path.
+    /// The write is crash-atomic: unique temp file in the destination
+    /// shard, fsync, rename into place (plus a best-effort directory
+    /// fsync so the rename itself survives power loss).
     pub fn save(&self, fingerprint: &str, result: &CellResult) -> Result<PathBuf> {
+        use std::io::Write;
         let path = self.object_path(fingerprint);
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+        let parent = path.parent().expect("object path has a shard dir");
+        std::fs::create_dir_all(parent)?;
+        let tmp = parent.join(format!(
+            "{}.tmp.{}.{}",
+            path.file_name().expect("object file name").to_string_lossy(),
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed),
+        ));
+        {
+            let mut out = std::fs::File::create(&tmp)?;
+            out.write_all(tagged_json(fingerprint, result).to_string().as_bytes())?;
+            out.sync_all()?;
         }
-        std::fs::write(&path, tagged_json(fingerprint, result).to_string())?;
+        std::fs::rename(&tmp, &path)?;
+        let _ = std::fs::File::open(parent).and_then(|d| d.sync_all());
         Ok(path)
     }
 
-    /// Current statistics (object count walks the `objects/` tree).
+    /// Current statistics (object and quarantine counts walk the
+    /// `objects/` tree; temp files in flight are not counted).
     pub fn stats(&self) -> StoreStats {
         let mut objects = 0;
+        let mut quarantined = 0;
         if let Ok(shards) = std::fs::read_dir(self.root.join("objects")) {
             for shard in shards.flatten() {
                 if let Ok(entries) = std::fs::read_dir(shard.path()) {
-                    objects += entries.flatten().count();
+                    for entry in entries.flatten() {
+                        match entry.path().extension().and_then(|e| e.to_str()) {
+                            Some("json") => objects += 1,
+                            Some("corrupt") => quarantined += 1,
+                            _ => {}
+                        }
+                    }
                 }
             }
         }
@@ -164,6 +213,7 @@ impl ResultStore {
             objects,
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            quarantined,
         }
     }
 }
@@ -238,8 +288,32 @@ mod tests {
         assert_eq!(stats.objects, 1);
         assert_eq!(stats.hits, 1);
         assert_eq!(stats.misses, 1);
+        assert_eq!(stats.quarantined, 0);
         // A different fingerprint never aliases onto the stored object.
         assert!(store.load("fp-b", None).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_objects_are_quarantined_not_served() {
+        let dir = crate::util::scratch_dir("store_corrupt").unwrap();
+        let store = ResultStore::open(&dir).unwrap();
+        let path = store.save("fp-q", &result(0.6)).unwrap();
+        // Truncate the object mid-document: an un-fsynced legacy write
+        // or bit rot would look exactly like this.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load("fp-q", None).is_none(), "never served");
+        assert!(!path.exists(), "removed from the serving path");
+        assert!(path.with_extension("corrupt").exists(), "kept for forensics");
+        let stats = store.stats();
+        assert_eq!(stats.objects, 0);
+        assert_eq!(stats.quarantined, 1);
+        // The recomputed result stores cleanly over the quarantined slot.
+        store.save("fp-q", &result(0.6)).unwrap();
+        assert!(store.load("fp-q", None).is_some());
+        assert_eq!(store.stats().objects, 1);
+        assert_eq!(store.stats().quarantined, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -16,6 +16,7 @@
 //! {"type":"cell_start","cell":i,"scale":n,"strategy":"D_ring"}
 //! {"type":"iteration","cell":i,"scale":n,"record":{…IterationRecord…}}
 //! {"type":"epoch","cell":i,"scale":n,"epoch":e,"mean_gini":g|null,"label":"D_ring","seed":s}
+//! {"type":"cell_retry","cell":i,"attempt":a,"error":"…"}
 //! {"type":"cell_done","cell":i,"cached":bool,"summary":{…RunSummary…}}
 //! {"type":"job_done","job":"j…","state":"done|failed|cancelled"}
 //! ```
@@ -112,13 +113,14 @@ impl EventLog {
             if st.lines.len() > from || st.closed {
                 return (st.lines.get(from..).unwrap_or_default().to_vec(), st.closed);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            // Saturating: the deadline may already have passed (slow
+            // wakeup, clock granularity) — never subtract Instants raw.
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
                 return (Vec::new(), st.closed);
-            }
+            };
             let (guard, res) = self
                 .cv
-                .wait_timeout(st, deadline - now)
+                .wait_timeout(st, remaining)
                 .expect("event log lock");
             st = guard;
             if res.timed_out() && st.lines.len() <= from && !st.closed {

@@ -9,7 +9,10 @@
 //!   tolerance of the failure-free run — via neighbor-average cold join
 //!   and via checkpoint recovery;
 //! * a `[faults]` dbench spec runs end to end from TOML;
-//! * checkpoint + resume replays the uninterrupted run bit for bit.
+//! * checkpoint + resume replays the uninterrupted run bit for bit;
+//! * a 1024-node ring survives a heavy churn table (crash/restart,
+//!   permanent failures, late joins) bit-identically at any thread
+//!   count and within tolerance of the failure-free run.
 
 use ada_dist::coordinator::surrogate::SoftmaxRegression;
 use ada_dist::coordinator::{
@@ -280,4 +283,64 @@ fn checkpoint_resume_replays_the_uninterrupted_run_bit_for_bit() {
         "final metrics must agree bitwise"
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn thousand_node_churn_stays_bit_identical_and_bounded() {
+    // Scale smoke at n = 1024 (ROADMAP: churn at *thousands* of nodes):
+    // a small model (P = 36) on a 1024-node ring under a heavy churn
+    // table — 16 crash/restart outages, 8 permanent failures and 4 late
+    // joins, all in the first epochs — must (i) stay bit-identical
+    // across thread counts, (ii) keep every loss finite, and (iii) land
+    // within tolerance of the failure-free run: 28 disturbed nodes out
+    // of 1024 cannot move the consensus metric far.
+    const SCALE: usize = 1024;
+    let data = SyntheticClassification::generate(4096, 8, 4, 3.0, 21);
+    let mut crashes = Vec::new();
+    // Strided node picks keep the three groups disjoint (< 1024 each).
+    for i in 0..16 {
+        crashes.push(CrashEvent { node: 13 + 61 * i, down_from: 1, restart_at: 2 });
+    }
+    for i in 0..8 {
+        crashes.push(CrashEvent { node: 17 + 119 * i, down_from: 1, restart_at: usize::MAX });
+    }
+    for i in 0..4 {
+        crashes.push(CrashEvent { node: 29 + 251 * i, down_from: 0, restart_at: 2 });
+    }
+    let run_churn = |threads: usize, faulted: bool| -> (Vec<f64>, f64) {
+        let mut cfg = base_cfg(SCALE, 3);
+        cfg.threads = threads;
+        if faulted {
+            let mut plan = FaultPlan::quiet();
+            plan.seed = 17;
+            plan.crashes = crashes.clone();
+            cfg.faults = Some(plan);
+            cfg.staleness_bound = 2;
+        }
+        let mut model = SoftmaxRegression::new(8, 4, 16, 32, SCALE, 0.0);
+        let session = TrainSession::builder(&mut model, cfg)
+            .flavor(&SgdFlavor::DecentralizedRing)
+            .unwrap()
+            .build()
+            .unwrap();
+        let (rec, summary) = session.run(&data).unwrap();
+        (
+            rec.records().iter().map(|r| r.train_loss).collect(),
+            summary.final_eval.metric,
+        )
+    };
+    let (_, metric_ok) = run_churn(1, false);
+    let (losses, metric_churn) = run_churn(1, true);
+    assert!(losses.iter().all(|l| l.is_finite()), "no loss may diverge under churn");
+    assert!(metric_churn.is_finite());
+    assert!(
+        (metric_churn - metric_ok).abs() <= 0.15,
+        "churn must stay within tolerance: {metric_churn} vs {metric_ok}"
+    );
+    let rerun = run_churn(8, true);
+    assert_eq!(
+        (losses, metric_churn),
+        rerun,
+        "1024-node churn must be bit-identical across thread counts"
+    );
 }

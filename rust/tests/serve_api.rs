@@ -20,6 +20,7 @@ fn server(tag: &str, hold: bool) -> (Server, String, std::path::PathBuf) {
         store_dir: dir.to_string_lossy().into_owned(),
         workers: 1,
         hold,
+        ..ServeConfig::default()
     })
     .unwrap();
     let addr = srv.addr.to_string();

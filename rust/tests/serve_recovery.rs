@@ -1,0 +1,563 @@
+//! Durability and self-healing tests of the experiment service, over
+//! real loopback sockets and real process-visible state (journal files,
+//! store objects):
+//!
+//! * a server stopped abruptly mid-sweep and restarted on the same
+//!   store replays its journal, finishes the job under its original id,
+//!   and serves results **byte-identical** to an uninterrupted run;
+//! * a panicking cell fails only its own job — the worker pool survives
+//!   and subsequent jobs complete;
+//! * corrupted store objects are quarantined (`*.corrupt`) and
+//!   recomputed, never served;
+//! * transient cell failures retry with `cell_retry` events and a
+//!   per-job budget; wedged cells die to the deadline watchdog;
+//! * the HTTP edge sheds load with `503` + `Retry-After`, answers
+//!   stalled uploads with `408`, and the client's `?from=` cursor
+//!   resumes streams without duplicates.
+
+use ada_dist::coordinator::strategy::{CombineStrategy, StepCtx, StrategyInstance};
+use ada_dist::coordinator::SgdFlavor;
+use ada_dist::dbench::{ExperimentSpec, SessionPlan, StrategyRef};
+use ada_dist::error::AdaError;
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::serve::{
+    http_request, http_request_with, http_stream_lines, start, ClientConfig, ResultStore,
+    Scheduler, ServeConfig, SubmitOptions,
+};
+use ada_dist::topology::FnSchedule;
+use ada_dist::util::json::Value;
+use ada_dist::ReplicaMatrix;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn server_cfg(dir: &Path, hold: bool) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        store_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        hold,
+        ..ServeConfig::default()
+    }
+}
+
+/// A tiny JSON spec: `scales × flavors` cells on the softmax workload.
+fn spec_json(
+    seed: u64,
+    scales: &[usize],
+    flavors: &[&str],
+    epochs: usize,
+    max_iters: usize,
+) -> String {
+    format!(
+        r#"{{"base": "resnet20", "name": "r{seed}", "seed": {seed},
+            "scales": [{}], "flavors": [{}],
+            "epochs": {epochs}, "max_iters_per_epoch": {max_iters},
+            "threads": 1, "metrics_every": 1, "eval_every_epochs": 100}}"#,
+        scales.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", "),
+        flavors.iter().map(|f| format!("{f:?}")).collect::<Vec<_>>().join(", "),
+    )
+}
+
+fn get_json(addr: &str, path: &str) -> (u16, Value) {
+    let (code, body) = http_request(addr, "GET", path, None).unwrap();
+    let text = String::from_utf8_lossy(&body).into_owned();
+    (code, Value::parse(&text).unwrap_or(Value::Null))
+}
+
+fn post(addr: &str, path: &str, body: Option<&[u8]>) -> (u16, Value) {
+    let (code, body) = http_request(addr, "POST", path, body).unwrap();
+    let text = String::from_utf8_lossy(&body).into_owned();
+    (code, Value::parse(&text).unwrap_or(Value::Null))
+}
+
+fn submit(addr: &str, spec: &str, query: &str) -> String {
+    let path = if query.is_empty() {
+        "/jobs".to_string()
+    } else {
+        format!("/jobs?{query}")
+    };
+    let (code, v) = post(addr, &path, Some(spec.as_bytes()));
+    assert_eq!(code, 200, "submit failed: {v:?}");
+    v.str_field("job").unwrap().to_string()
+}
+
+fn status(addr: &str, id: &str) -> Value {
+    let (code, v) = get_json(addr, &format!("/jobs/{id}"));
+    assert_eq!(code, 200, "status {id}: {v:?}");
+    v
+}
+
+fn wait_done(addr: &str, id: &str) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let v = status(addr, id);
+        let state = v.str_field("state").unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "cancelled")
+            && v.usize_field("running").unwrap() == 0
+        {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timeout waiting on {id}: {v:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn results_body(addr: &str, id: &str) -> Vec<u8> {
+    let (code, body) =
+        http_request(addr, "GET", &format!("/jobs/{id}/results"), None).unwrap();
+    assert_eq!(code, 200);
+    body
+}
+
+// ---------------------------------------------------------------------
+// (a) crash/restart recovery to byte-identical results
+// ---------------------------------------------------------------------
+
+#[test]
+fn killed_server_replays_journal_and_converges_to_identical_results() {
+    let spec = spec_json(600, &[4, 8, 12], &["d_ring", "d_complete"], 4, 150);
+
+    // Reference: the same sweep, uninterrupted, on its own store.
+    let ref_dir = ada_dist::util::scratch_dir("recover_ref").unwrap();
+    let mut ref_srv = start(&server_cfg(&ref_dir, false)).unwrap();
+    let ref_addr = ref_srv.addr.to_string();
+    let job = submit(&ref_addr, &spec, "");
+    let done = wait_done(&ref_addr, &job);
+    assert_eq!(done.str_field("state").unwrap(), "done");
+    let body_ref = results_body(&ref_addr, &job);
+    ref_srv.shutdown(true);
+    ref_srv.join();
+    drop(ref_srv);
+
+    // Victim: identical submission, stopped abruptly (non-drain — the
+    // in-flight cell is discarded exactly as a crash would lose it)
+    // after some but not all cells finished.
+    let dir = ada_dist::util::scratch_dir("recover_victim").unwrap();
+    let mut srv = start(&server_cfg(&dir, true)).unwrap();
+    let addr = srv.addr.to_string();
+    let vjob = submit(&addr, &spec, "");
+    assert_eq!(vjob, job, "deterministic ids across servers");
+    post(&addr, "/scheduler/resume", None);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while status(&addr, &vjob).usize_field("done").unwrap() == 0 {
+        assert!(Instant::now() < deadline, "first cell never finished");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    post(&addr, "/scheduler/pause", None);
+    while status(&addr, &vjob).usize_field("running").unwrap() > 0 {
+        assert!(Instant::now() < deadline, "in-flight cell never drained");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mid = status(&addr, &vjob);
+    let finished_cells = mid.usize_field("done").unwrap();
+    assert!(
+        finished_cells < 6,
+        "sweep drained before the stop landed ({finished_cells}/6)"
+    );
+    srv.shutdown(false);
+    srv.join();
+    drop(srv);
+
+    // Restart on the same store (fresh port): the journal re-enqueues
+    // the job under its original id, finished cells come back as cache
+    // hits, the rest re-run, and the results document is byte-for-byte
+    // the uninterrupted one.
+    let mut srv2 = start(&server_cfg(&dir, false)).unwrap();
+    let addr2 = srv2.addr.to_string();
+    let recovered = wait_done(&addr2, &vjob);
+    assert_eq!(recovered.str_field("state").unwrap(), "done", "{recovered:?}");
+    assert_eq!(recovered.usize_field("done").unwrap(), 6);
+    assert!(
+        recovered.usize_field("cached").unwrap() >= finished_cells,
+        "finished cells must be served from the store: {recovered:?}"
+    );
+    let body_rec = results_body(&addr2, &vjob);
+    assert_eq!(
+        body_ref, body_rec,
+        "recovery must converge to byte-identical results"
+    );
+    srv2.shutdown(true);
+    srv2.join();
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn idempotent_resubmission_maps_to_the_same_job() {
+    let dir = ada_dist::util::scratch_dir("recover_idem").unwrap();
+    let srv = start(&server_cfg(&dir, true)).unwrap();
+    let addr = srv.addr.to_string();
+    let spec = spec_json(610, &[4], &["d_ring"], 1, 2);
+    let first = submit(&addr, &spec, "idempotent=true");
+    let second = submit(&addr, &spec, "idempotent=true");
+    assert_eq!(first, second, "retry-safe resubmission");
+    let third = submit(&addr, &spec, "");
+    assert_ne!(third, first, "non-idempotent resubmission still dedups by suffix");
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// (b) panic containment and (d) retries — direct scheduler tests with
+// misbehaving strategies registered on the plan
+// ---------------------------------------------------------------------
+
+/// The example local-SGD step, minus the failure injection — one honest
+/// local step per worker, then a gossip round over the scheduled graph.
+fn honest_local_phase(ctx: &mut StepCtx<'_>, replicas: &mut ReplicaMatrix) -> ada_dist::error::Result<f64> {
+    let mut loss_sum = 0.0f64;
+    for (w, loader) in ctx.loaders.iter().enumerate() {
+        let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+        loss_sum += ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)? as f64;
+    }
+    Ok(loss_sum / ctx.n as f64)
+}
+
+struct Panicking;
+
+impl CombineStrategy for Panicking {
+    fn name(&self) -> &str {
+        "panicking"
+    }
+
+    fn local_phase(
+        &mut self,
+        _ctx: &mut StepCtx<'_>,
+        _replicas: &mut ReplicaMatrix,
+    ) -> ada_dist::error::Result<f64> {
+        panic!("injected fault: model blew up");
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> ada_dist::error::Result<(usize, u64)> {
+        let g = ctx.graph.expect("schedule provides a graph");
+        ctx.engine.mix(g, replicas);
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}
+
+/// Fails `local_phase` with a transient error until the shared counter
+/// reaches `fail_first` calls, then behaves honestly — the counter
+/// survives across retry attempts because it lives in the registry
+/// closure, while each attempt gets a fresh strategy instance.
+struct Flaky {
+    calls: Arc<AtomicUsize>,
+    fail_first: usize,
+}
+
+impl CombineStrategy for Flaky {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> ada_dist::error::Result<f64> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) < self.fail_first {
+            return Err(AdaError::Runtime("transient storage hiccup".into()));
+        }
+        honest_local_phase(ctx, replicas)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> ada_dist::error::Result<(usize, u64)> {
+        let g = ctx.graph.expect("schedule provides a graph");
+        ctx.engine.mix(g, replicas);
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}
+
+/// A one-cell plan running the named strategy `key`, registered via
+/// `make` (the out-of-crate registration path the example documents).
+fn strategy_plan(
+    seed: u64,
+    key: &'static str,
+    make: impl Fn() -> Box<dyn CombineStrategy> + Send + Sync + 'static,
+) -> SessionPlan {
+    let mut s = ExperimentSpec::resnet20_analog();
+    s.scales = vec![4];
+    s.epochs = 1;
+    s.seed = seed;
+    s.max_iters_per_epoch = Some(2);
+    s.threads = 1;
+    s.flavors = vec![SgdFlavor::DecentralizedRing];
+    let mut plan = SessionPlan::from_spec(&s);
+    plan.cells.clear();
+    plan.registry.register(key, move |p| {
+        let n = p.n_workers;
+        Ok(StrategyInstance {
+            label: key.into(),
+            schedule: Some(Box::new(FnSchedule::new("complete", move |_| {
+                CommGraph::build(GraphKind::Complete, n)
+            }))),
+            k_neighbors: n.saturating_sub(1),
+            combine: Some(make()),
+        })
+    });
+    plan.push_cell(4, seed, StrategyRef::named(key), s.train_config(4));
+    plan
+}
+
+#[test]
+fn a_panicking_cell_fails_its_job_and_the_pool_survives() {
+    let dir = ada_dist::util::scratch_dir("recover_panic").unwrap();
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let sched = Scheduler::start(store, 1, false);
+
+    let bad = sched
+        .submit_plan(
+            "bad".into(),
+            strategy_plan(620, "panicking", || Box::new(Panicking)),
+            &SubmitOptions::default(),
+        )
+        .unwrap();
+    let st = sched
+        .wait(&bad.id, Duration::from_secs(300))
+        .expect("panicking job reaches a terminal state");
+    assert_eq!(st.state, "failed");
+    let err = st.error.expect("failed jobs carry the panic message");
+    assert!(err.contains("panicked"), "{err}");
+    assert!(err.contains("model blew up"), "{err}");
+
+    // The worker thread survived the panic: a normal job completes on
+    // the same (single-thread!) pool.
+    let mut s = ExperimentSpec::resnet20_analog();
+    s.scales = vec![4];
+    s.epochs = 1;
+    s.seed = 621;
+    s.max_iters_per_epoch = Some(1);
+    s.threads = 1;
+    s.flavors = vec![SgdFlavor::DecentralizedRing];
+    let good = sched
+        .submit_plan("good".into(), SessionPlan::from_spec(&s), &SubmitOptions::default())
+        .unwrap();
+    let st = sched
+        .wait(&good.id, Duration::from_secs(300))
+        .expect("job after the panic completes");
+    assert_eq!(st.state, "done", "{st:?}");
+    sched.shutdown(true);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn transient_failures_retry_with_events_then_fail_past_the_budget() {
+    let dir = ada_dist::util::scratch_dir("recover_retry").unwrap();
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let sched = Scheduler::start(store, 1, false);
+
+    // Fails the first two attempts, succeeds on the third: exactly
+    // within a retry budget of 2.
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&calls);
+    let job = sched
+        .submit_plan(
+            "flaky".into(),
+            strategy_plan(630, "flaky", move || {
+                Box::new(Flaky { calls: Arc::clone(&c), fail_first: 2 })
+            }),
+            &SubmitOptions { retries: Some(2), ..SubmitOptions::default() },
+        )
+        .unwrap();
+    let st = sched
+        .wait(&job.id, Duration::from_secs(300))
+        .expect("flaky job terminates");
+    assert_eq!(st.state, "done", "{st:?}");
+    let (lines, _) = job.events.read_from(0);
+    let retries: Vec<_> = lines
+        .iter()
+        .filter(|l| l.contains("\"cell_retry\""))
+        .collect();
+    assert_eq!(retries.len(), 2, "{lines:?}");
+    assert!(retries[0].contains("transient storage hiccup"), "{retries:?}");
+
+    // A budget smaller than the failure streak fails the job with the
+    // underlying error.
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&calls);
+    let job = sched
+        .submit_plan(
+            "hopeless".into(),
+            strategy_plan(631, "hopeless", move || {
+                Box::new(Flaky { calls: Arc::clone(&c), fail_first: usize::MAX })
+            }),
+            &SubmitOptions { retries: Some(1), ..SubmitOptions::default() },
+        )
+        .unwrap();
+    let st = sched
+        .wait(&job.id, Duration::from_secs(300))
+        .expect("hopeless job terminates");
+    assert_eq!(st.state, "failed");
+    assert!(st.error.unwrap().contains("transient storage hiccup"));
+    let (lines, _) = job.events.read_from(0);
+    assert_eq!(
+        lines.iter().filter(|l| l.contains("\"cell_retry\"")).count(),
+        1,
+        "one retry, then the budget is spent: {lines:?}"
+    );
+    sched.shutdown(true);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// (c) store corruption quarantine
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupted_store_objects_are_quarantined_and_recomputed() {
+    let dir = ada_dist::util::scratch_dir("recover_corrupt").unwrap();
+    let mut srv = start(&server_cfg(&dir, false)).unwrap();
+    let addr = srv.addr.to_string();
+    let spec = spec_json(640, &[4], &["d_ring"], 1, 2);
+    let a = submit(&addr, &spec, "");
+    let done = wait_done(&addr, &a);
+    assert_eq!(done.usize_field("cached").unwrap(), 0);
+    let body_a = results_body(&addr, &a);
+
+    // Smash the stored object.
+    let mut objects = Vec::new();
+    for shard in std::fs::read_dir(dir.join("objects")).unwrap().flatten() {
+        for entry in std::fs::read_dir(shard.path()).unwrap().flatten() {
+            objects.push(entry.path());
+        }
+    }
+    assert_eq!(objects.len(), 1, "{objects:?}");
+    std::fs::write(&objects[0], b"{ definitely not a result").unwrap();
+
+    // The resubmitted job recomputes (no cache hit, never serves the
+    // corrupt bytes) and converges to the same results document.
+    let b = submit(&addr, &spec, "");
+    assert_ne!(b, a);
+    let done = wait_done(&addr, &b);
+    assert_eq!(done.str_field("state").unwrap(), "done");
+    assert_eq!(
+        done.usize_field("cached").unwrap(),
+        0,
+        "a corrupt object must never count as a hit"
+    );
+    assert_eq!(results_body(&addr, &b), body_a, "recomputed bytes match");
+    assert!(
+        objects[0].with_extension("corrupt").exists(),
+        "corrupt object is quarantined, not deleted"
+    );
+    let (_, store) = get_json(&addr, "/store");
+    assert_eq!(store.usize_field("quarantined").unwrap(), 1, "{store:?}");
+    assert_eq!(store.usize_field("objects").unwrap(), 1, "recomputed object stored");
+    srv.shutdown(true);
+    srv.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// (e) deadline watchdog
+// ---------------------------------------------------------------------
+
+#[test]
+fn the_watchdog_fails_cells_that_exceed_their_deadline() {
+    let dir = ada_dist::util::scratch_dir("recover_deadline").unwrap();
+    let mut srv = start(&server_cfg(&dir, false)).unwrap();
+    let addr = srv.addr.to_string();
+    // A cell that would run for many seconds, against a 50 ms deadline.
+    let spec = spec_json(650, &[24], &["d_ring"], 9, 400);
+    let id = submit(&addr, &spec, "deadline_s=0.05");
+    let done = wait_done(&addr, &id);
+    assert_eq!(done.str_field("state").unwrap(), "failed", "{done:?}");
+    let err = done.str_field("error").unwrap();
+    assert!(err.contains("deadline"), "{err}");
+
+    // The stream cursor (`?from=`) replays exactly the suffix — the
+    // re-attach contract the retrying client builds on.
+    let mut all = Vec::new();
+    http_stream_lines(&addr, &format!("/jobs/{id}/stream"), |l| {
+        all.push(l.to_string());
+    })
+    .unwrap();
+    assert!(all.len() >= 2, "{all:?}");
+    assert!(all.last().unwrap().contains("job_done"));
+    let mut tail = Vec::new();
+    http_stream_lines(&addr, &format!("/jobs/{id}/stream?from={}", all.len() - 1), |l| {
+        tail.push(l.to_string());
+    })
+    .unwrap();
+    assert_eq!(tail, vec![all.last().unwrap().clone()]);
+    srv.shutdown(true);
+    srv.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// (f)/(g) bounded HTTP edge: 408 on stalled uploads, 503 shedding
+// ---------------------------------------------------------------------
+
+#[test]
+fn stalled_uploads_get_a_json_408() {
+    let dir = ada_dist::util::scratch_dir("recover_408").unwrap();
+    let cfg = ServeConfig { read_timeout_s: 0.2, ..server_cfg(&dir, true) };
+    let srv = start(&cfg).unwrap();
+    let addr = srv.addr.to_string();
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // Promise a body, deliver half, stall.
+    conn.write_all(b"POST /jobs HTTP/1.1\r\nContent-Length: 1000\r\n\r\npartial")
+        .unwrap();
+    conn.flush().unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 408"), "{resp}");
+    assert!(resp.contains("timed out"), "{resp}");
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn connections_beyond_the_cap_are_shed_with_503_and_recover() {
+    let dir = ada_dist::util::scratch_dir("recover_503").unwrap();
+    let cfg = ServeConfig { max_conns: 1, read_timeout_s: 2.0, ..server_cfg(&dir, true) };
+    let srv = start(&cfg).unwrap();
+    let addr = srv.addr.to_string();
+
+    // One idle connection occupies the only slot...
+    let hog = TcpStream::connect(&addr).unwrap();
+    // ...so the next one is shed before parsing, with a Retry-After.
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    conn.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+    assert!(resp.contains("Retry-After: 1"), "{resp}");
+
+    // The non-retrying client surfaces the 503 verbatim.
+    let no_retry = ClientConfig { retries: 0, ..ClientConfig::default() };
+    let (code, _) = http_request_with(&addr, "GET", "/healthz", None, &no_retry).unwrap();
+    assert_eq!(code, 503);
+
+    // Once the hog goes away the slot frees and the retrying default
+    // client rides its backoff through to a 200.
+    drop(hog);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (code, _) = http_request(&addr, "GET", "/healthz", None).unwrap();
+        if code == 200 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slot never freed");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    srv.shutdown(true);
+    drop(srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
