@@ -23,9 +23,13 @@
 //!      (`ingest_stale` + `mix_stale`, PR 7) against the live-row `mix`
 //!      under seeded message-drop weather — measures what the fault
 //!      plane's buffer bookkeeping costs per round
-//!   8. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
+//!   8. **compressed vs dense exchange**: the bf16/f16 codec rounds
+//!      (`mix_codec`) and the top-k error-feedback path (`sparsify` +
+//!      `mix_from`) against the dense f32 mix, with modeled Summit
+//!      wire time/bytes per round from the SimNet α–β model
+//!   9. the L1 Pallas kernel via PJRT (pjrt builds with artifacts)
 //!
-//! Sections 2–7 are written to `BENCH_gossip.json` at the repo root.
+//! Sections 2–8 are written to `BENCH_gossip.json` at the repo root.
 //! Results are bit-identical across thread counts and across the
 //! SIMD/scalar paths (asserted in `rust/tests/exec_determinism.rs`), so
 //! every sweep is purely wall-clock.
@@ -36,12 +40,14 @@
 //! default too — the flag raises their iteration count), `ADA_SIMD=
 //! scalar` (force the fallback everywhere).
 
+use ada_dist::compress::topk::sparsify_row;
+use ada_dist::compress::Codec;
 use ada_dist::exec::{simd, ExecEngine};
 use ada_dist::gossip::{mix_dense_reference, GossipEngine};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::metrics::{l2_norm, per_replica_l2_norms_pooled, VarianceReport};
 use ada_dist::optim::SgdState;
-use ada_dist::simnet::FaultPlan;
+use ada_dist::simnet::{ClusterSpec, FaultPlan, SimNet};
 use ada_dist::util::bench::{bench, env_flag, env_usize, fmt_duration, Table};
 use ada_dist::util::json::Value;
 use ada_dist::util::rng::Rng;
@@ -69,7 +75,8 @@ fn main() {
     let simd_cells = simd_vs_scalar(iters);
     let pipeline = pipeline_vs_phased(iters);
     let stale = stale_vs_fresh(iters);
-    write_bench_json(sweep, pool, reduce, simd_cells, pipeline, stale);
+    let compressed = compressed_vs_dense(iters);
+    write_bench_json(sweep, pool, reduce, simd_cells, pipeline, stale, compressed);
     #[cfg(feature = "pjrt")]
     hlo_section(iters);
     #[cfg(not(feature = "pjrt"))]
@@ -579,6 +586,108 @@ fn stale_vs_fresh(iters: usize) -> Vec<Value> {
     cells
 }
 
+/// The compressed exchange paths against the dense f32 mix on one
+/// paper-shaped cell. Local kernel wall-clock (the codec round-trips
+/// per tile — *more* CPU work than dense) next to the modeled Summit
+/// wire cost per round (the bytes the codec removes from the network) —
+/// the trade the compression subsystem exists to make. Outputs of the
+/// f32 row are bit-identical to `mix`; the lossy rows are quantized by
+/// construction, so only wall-clock and modeled cost are compared.
+fn compressed_vs_dense(iters: usize) -> Vec<Value> {
+    println!("== compressed vs dense exchange (local kernel + modeled Summit wire) ==");
+    let (n, p) = (16usize, 262_144usize);
+    let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+    let net = SimNet::new(ClusterSpec::summit());
+    let src = replicas(n, p, 12);
+    let k = p / 16; // top-k keeps 1/16 of the coordinates per round
+    let mut t = Table::new(&[
+        "path", "threads", "median/round", "wire bytes/node", "wire time (ms)",
+    ]);
+    let mut cells = Vec::new();
+    for threads in [1usize, 4, 8] {
+        // Dense f32 baseline.
+        let mut dense_engine = GossipEngine::with_threads(threads);
+        let mut dense_reps = src.clone();
+        let t_dense = bench(1, iters, || {
+            dense_engine.mix(&g, &mut dense_reps);
+        });
+        let dense_s = t_dense.median.as_secs_f64();
+
+        // Codec rounds + the sparse error-feedback path. Message sizes
+        // follow the strategy layer's accounting: dense codec rounds
+        // ship bytes_per_value·p per edge, top-k ships k·(4 + payload).
+        let topk_msg = k as u64 * (4 + Codec::Bf16.bytes_per_value());
+        let paths: [(&str, u64); 4] = [
+            ("dense f32", 4 * p as u64),
+            ("bf16", Codec::Bf16.bytes_per_value() * p as u64),
+            ("f16", Codec::F16.bytes_per_value() * p as u64),
+            ("topk bf16 (k=p/16)", topk_msg),
+        ];
+        for (name, bytes_per_msg) in paths {
+            let tm = match name {
+                "dense f32" => t_dense,
+                "bf16" | "f16" => {
+                    let codec = if name == "bf16" { Codec::Bf16 } else { Codec::F16 };
+                    let mut engine = GossipEngine::with_threads(threads);
+                    let mut reps = src.clone();
+                    bench(1, iters, || {
+                        engine.mix_codec(&g, &mut reps, codec);
+                    })
+                }
+                _ => {
+                    let mut engine = GossipEngine::with_threads(threads);
+                    let mut reps = src.clone();
+                    let mut residuals = ReplicaMatrix::zeros(n, p);
+                    let mut messages = ReplicaMatrix::zeros(n, p);
+                    bench(1, iters, || {
+                        for w in 0..n {
+                            sparsify_row(
+                                reps.row(w),
+                                residuals.row_mut(w),
+                                messages.row_mut(w),
+                                k,
+                            );
+                        }
+                        engine.mix_from(&g, &mut reps, &messages, Codec::Bf16);
+                    })
+                }
+            };
+            let wire = net.gossip_round_bytes(&g, bytes_per_msg);
+            let local_s = tm.median.as_secs_f64();
+            t.row(vec![
+                name.into(),
+                threads.to_string(),
+                fmt_duration(tm.median),
+                (bytes_per_msg * g.degree() as u64).to_string(),
+                format!("{:.3}", wire.time_s * 1e3),
+            ]);
+            cells.push(Value::obj(vec![
+                ("path", Value::Str(name.into())),
+                ("graph", Value::Str(GraphKind::Exponential.to_string())),
+                ("n", Value::Num(n as f64)),
+                ("p", Value::Num(p as f64)),
+                ("threads", Value::Num(threads as f64)),
+                ("local_median_s", Value::Num(local_s)),
+                ("local_vs_dense", Value::Num(local_s / dense_s)),
+                ("bytes_per_msg", Value::Num(bytes_per_msg as f64)),
+                (
+                    "wire_bytes_per_node",
+                    Value::Num((bytes_per_msg * g.degree() as u64) as f64),
+                ),
+                ("wire_time_s", Value::Num(wire.time_s)),
+                ("wire_total_bytes", Value::Num(wire.total_bytes as f64)),
+                ("iters", Value::Num(iters as f64)),
+            ]));
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(the codec rounds spend extra CPU on per-tile round-trips to cut wire\n\
+         bytes 2x, top-k ~10x — wire time from the SimNet Summit α–β model)"
+    );
+    cells
+}
+
 fn write_bench_json(
     sweep: Vec<Value>,
     pool: Vec<Value>,
@@ -586,6 +695,7 @@ fn write_bench_json(
     simd: Vec<Value>,
     pipeline: Vec<Value>,
     stale: Vec<Value>,
+    compressed: Vec<Value>,
 ) {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let doc = Value::obj(vec![
@@ -598,6 +708,7 @@ fn write_bench_json(
         ("simd_vs_scalar", Value::Arr(simd)),
         ("pipeline_vs_phased", Value::Arr(pipeline)),
         ("stale_vs_fresh", Value::Arr(stale)),
+        ("compressed_vs_dense", Value::Arr(compressed)),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gossip.json");
     match std::fs::write(&out, doc.to_string()) {

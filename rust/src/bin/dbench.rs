@@ -15,7 +15,7 @@ use ada_dist::config::LauncherConfig;
 use ada_dist::coordinator::{strategy, SgdFlavor};
 use ada_dist::dbench::{
     format_stats_table, format_table, rank_analysis, run_experiment, seed_stats,
-    ExperimentSpec, SessionPlan, TopologyRef,
+    ExperimentSpec, SessionPlan, StrategyRef, TopologyRef,
 };
 use ada_dist::optim::ScalingRule;
 use ada_dist::serve::{http_request, http_stream_lines, start, ServeConfig};
@@ -34,6 +34,9 @@ dbench <command> [options]
     --scales 8,16,32 --epochs N --max-iters N --sqrt-scaling --save-records
     --topology name[:k=v,...]   override every decentralized cell's graph
                         policy with one from the topology registry
+    --strategy name[:k=v,...]   add a registry strategy to the grid, e.g.
+                        compressed_gossip:codec=bf16,k=65536 (repeatable
+                        via spec TOML `strategies = [...]`)
     --seeds K           run every cell K times with derived seeds and
                         report mean ± stderr per cell (variance of the
                         estimate; the paper reports single seeds)
@@ -177,6 +180,11 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
     apply_fault_args(args, &mut spec)?;
     if let Some(t) = args.get("topology") {
         spec.topology = Some(TopologyRef::parse(t)?);
+    }
+    if let Some(s) = args.get("strategy") {
+        // Joins the grid alongside the spec's flavors, same as a TOML
+        // `strategies = [...]` entry.
+        spec.strategies.push(StrategyRef::parse(s)?);
     }
     let seeds: usize = args.get_parse("seeds", 1)?;
     let mut plan = SessionPlan::from_spec(&spec);

@@ -1,0 +1,289 @@
+//! Lossy exchange codecs for the compressed gossip path.
+//!
+//! A [`Codec`] names the wire format a replica's parameters travel in
+//! during a gossip exchange. The engine never stores compressed
+//! matrices: inside the codec-aware mix kernels every peer row is
+//! encoded+decoded **per tile** right before it enters the weighted
+//! fold ([`crate::gossip::GossipEngine::mix_codec`]), so the lossy
+//! quantization models exactly what a real half-precision wire would
+//! deliver while the local row (never on the wire) stays f32.
+//!
+//! Both conversions are **elementwise and scalar**: value `i`'s
+//! round-trip depends only on value `i`, so tile boundaries, thread
+//! counts and the SIMD dispatch mode cannot change the produced bits —
+//! the same determinism contract as the rest of `exec::simd`.
+//!
+//! * [`Codec::Bf16`] — bfloat16, round-to-nearest-even truncation of
+//!   the high 16 f32 bits (full f32 exponent range, 8-bit mantissa).
+//! * [`Codec::F16`] — IEEE 754 binary16 with gradual underflow
+//!   (denormals) and overflow saturating to ±inf.
+//! * [`Codec::F32`] — the identity codec; the compressed strategy with
+//!   `codec = "f32"` is bit-identical to dense gossip.
+
+use crate::error::{AdaError, Result};
+
+/// Wire format for gossip exchange (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Identity — 4 bytes/value, lossless.
+    F32,
+    /// bfloat16 — 2 bytes/value, 8-bit mantissa, f32 exponent range.
+    Bf16,
+    /// IEEE binary16 — 2 bytes/value, 10-bit mantissa, ±65504 range.
+    F16,
+}
+
+impl Codec {
+    /// Parse the spec-TOML / CLI name (`f32` | `bf16` | `f16`).
+    pub fn parse(name: &str) -> Result<Codec> {
+        match name {
+            "f32" => Ok(Codec::F32),
+            "bf16" => Ok(Codec::Bf16),
+            "f16" => Ok(Codec::F16),
+            other => Err(AdaError::Config(format!(
+                "unknown codec {other:?} (f32 | bf16 | f16)"
+            ))),
+        }
+    }
+
+    /// The registry/spec name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::Bf16 => "bf16",
+            Codec::F16 => "f16",
+        }
+    }
+
+    /// Bytes one value occupies on the wire.
+    pub fn bytes_per_value(self) -> u64 {
+        match self {
+            Codec::F32 => 4,
+            Codec::Bf16 | Codec::F16 => 2,
+        }
+    }
+
+    /// Encode+decode one value — what the receiving peer reconstructs.
+    pub fn roundtrip(self, x: f32) -> f32 {
+        match self {
+            Codec::F32 => x,
+            Codec::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            Codec::F16 => f16_to_f32(f32_to_f16(x)),
+        }
+    }
+
+    /// Round-trip `src` into `dst` (same length), elementwise.
+    pub fn roundtrip_into(self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        match self {
+            Codec::F32 => dst.copy_from_slice(src),
+            Codec::Bf16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = bf16_to_f32(f32_to_bf16(s));
+                }
+            }
+            Codec::F16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = f16_to_f32(f32_to_f16(s));
+                }
+            }
+        }
+    }
+}
+
+/// f32 → bfloat16 with round-to-nearest-even; NaN stays NaN (quieted).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Truncation alone could zero the payload and turn a NaN into
+        // ±inf; force a quiet bit instead.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round to nearest, ties to even mantissa LSB. Max finite input is
+    // 0xFF7F_FFFF so the add cannot overflow u32; finite values beyond
+    // the largest bf16 round up to ±inf, matching hardware converters.
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bfloat16 → f32 (exact: bf16 values are a subset of f32).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 → IEEE binary16 with round-to-nearest-even, gradual underflow
+/// and overflow saturating to ±inf.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf keeps inf; NaN becomes a quiet NaN.
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal half: keep the top 10 mantissa bits, RNE on the rest.
+        let mut m = man >> 13;
+        let rest = man & 0x1FFF;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // Mantissa carry: bump the exponent (may overflow to inf).
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    // Subnormal half: shift the implicit-1 significand into place, RNE.
+    let full = man | 0x0080_0000;
+    let shift = (13 + (-14 - e)) as u32;
+    let mut m = full >> shift;
+    let rest = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rest > half || (rest == half && (m & 1) == 1) {
+        // A carry out of the subnormal range lands exactly on the
+        // smallest normal encoding, so no special case is needed.
+        m += 1;
+    }
+    sign | (m as u16)
+}
+
+/// IEEE binary16 → f32 (exact: every half value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into the f32 format.
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 127) as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp as u32 + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for c in [Codec::F32, Codec::Bf16, Codec::F16] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::parse("int8").is_err());
+        assert_eq!(Codec::F32.bytes_per_value(), 4);
+        assert_eq!(Codec::Bf16.bytes_per_value(), 2);
+        assert_eq!(Codec::F16.bytes_per_value(), 2);
+    }
+
+    #[test]
+    fn exactly_representable_values_pass_through() {
+        // Small integers, powers of two and simple fractions fit both
+        // half formats exactly.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, -4.0, 0.25, 96.0, -1024.0] {
+            assert_eq!(Codec::Bf16.roundtrip(v).to_bits(), v.to_bits(), "bf16 {v}");
+            assert_eq!(Codec::F16.roundtrip(v).to_bits(), v.to_bits(), "f16 {v}");
+            assert_eq!(Codec::F32.roundtrip(v).to_bits(), v.to_bits(), "f32 {v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // One ulp at 8 mantissa bits (bf16) is 2^-8; at 10 bits (f16,
+        // normal range) 2^-10. Half-ulp rounding → bounds below.
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let v = rng.range_f32(-100.0, 100.0);
+            if v == 0.0 {
+                continue;
+            }
+            let rb = Codec::Bf16.roundtrip(v);
+            let rh = Codec::F16.roundtrip(v);
+            assert!(((rb - v) / v).abs() <= 1.0 / 256.0, "bf16 {v} -> {rb}");
+            assert!(((rh - v) / v).abs() <= 1.0 / 1024.0, "f16 {v} -> {rh}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_monotone() {
+        // Quantization must preserve ordering: x <= y ⇒ q(x) <= q(y).
+        // Sample an ordered grid crossing zero, the f16 subnormal range
+        // and both formats' rounding boundaries.
+        let mut grid = Vec::new();
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..4_000 {
+            grid.push(rng.range_f32(-2.0, 2.0));
+        }
+        for m in 0..200 {
+            grid.push((m as f32) * 1e-8); // deep inside f16 subnormals
+            grid.push(65_000.0 + m as f32 * 10.0); // f16 overflow edge
+        }
+        grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for codec in [Codec::Bf16, Codec::F16] {
+            let q: Vec<f32> = grid.iter().map(|&v| codec.roundtrip(v)).collect();
+            for w in q.windows(2) {
+                assert!(w[0] <= w[1], "{codec:?}: {} > {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn specials_and_saturation() {
+        for codec in [Codec::Bf16, Codec::F16] {
+            assert_eq!(codec.roundtrip(f32::INFINITY), f32::INFINITY);
+            assert_eq!(codec.roundtrip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+            assert!(codec.roundtrip(f32::NAN).is_nan());
+            assert_eq!(codec.roundtrip(0.0).to_bits(), 0.0f32.to_bits());
+            assert_eq!(codec.roundtrip(-0.0).to_bits(), (-0.0f32).to_bits());
+        }
+        // f16 overflows to inf past ~65504; bf16 keeps the exponent.
+        assert_eq!(Codec::F16.roundtrip(1.0e6), f32::INFINITY);
+        assert_eq!(Codec::F16.roundtrip(-1.0e6), f32::NEG_INFINITY);
+        assert_eq!(Codec::F16.roundtrip(65504.0), 65504.0);
+        assert!(Codec::Bf16.roundtrip(1.0e6).is_finite());
+        // f16 gradual underflow: the smallest subnormal survives.
+        let tiny = f16_to_f32(1); // 2^-24
+        assert_eq!(Codec::F16.roundtrip(tiny), tiny);
+        assert_eq!(Codec::F16.roundtrip(tiny * 0.25), 0.0);
+    }
+
+    #[test]
+    fn roundtrip_into_matches_scalar() {
+        let mut rng = Rng::seed_from_u64(3);
+        let src: Vec<f32> = (0..777).map(|_| rng.range_f32(-5.0, 5.0)).collect();
+        for codec in [Codec::F32, Codec::Bf16, Codec::F16] {
+            let mut dst = vec![0.0f32; src.len()];
+            codec.roundtrip_into(&src, &mut dst);
+            for (i, (&d, &s)) in dst.iter().zip(&src).enumerate() {
+                assert_eq!(d.to_bits(), codec.roundtrip(s).to_bits(), "{codec:?} [{i}]");
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Compressed & variance-corrected gossip: the combine-side answer to
+//! the paper's obs. 3 (decentralized accuracy tracks the cross-replica
+//! parameter variance).
+//!
+//! Three pieces, composed by the strategies in [`strategies`]:
+//!
+//! * [`Codec`] — bf16/f16 lossy exchange formats, round-tripped per
+//!   tile inside the codec-aware mix kernels
+//!   ([`crate::gossip::GossipEngine::mix_codec`] /
+//!   [`crate::gossip::GossipEngine::mix_from`]) so the memory-bound
+//!   SpMM models a half-width wire without a second matrix copy.
+//! * [`topk`] — deterministic top-k magnitude sparsification with
+//!   per-replica error-feedback residuals (fixed `(|v| desc, index
+//!   asc)` tie-break → bit-identical across thread counts and
+//!   SIMD/scalar).
+//! * [`CompressedGossip`] / [`D2Combine`] / [`ConsensusGossip`] —
+//!   [`crate::coordinator::strategy::CombineStrategy`] implementations
+//!   registered as `compressed_gossip`, `d2` and `consensus_gossip`.
+
+mod codec;
+mod strategies;
+pub mod topk;
+
+pub use codec::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Codec};
+pub use strategies::{d2_transform, CompressedGossip, ConsensusGossip, D2Combine};

@@ -1,0 +1,332 @@
+//! The compressed / variance-corrected combine strategies:
+//! [`CompressedGossip`] (codec + optional top-k exchange),
+//! [`D2Combine`] (D², Tang et al. 2018) and [`ConsensusGossip`]
+//! (consensus-controlled repeated mixing, Kong et al. 2021).
+//!
+//! All three are registered in
+//! [`crate::coordinator::strategy::registry`] — `compressed_gossip`,
+//! `d2`, `consensus_gossip` — and run end-to-end from spec TOML
+//! (`[strategy.compressed_gossip]` parameter tables) or the CLIs'
+//! `--strategy name:k=v,…` flag through
+//! [`crate::dbench::SessionPlan`], so each is benchmarkable against
+//! the §3.1.2 five from one grid cell.
+//!
+//! None of the three supports the fault plane (partial participation /
+//! bounded staleness) yet: compressed messages and correction terms
+//! interact with renormalized averaging in ways the deterministic
+//! replay contract doesn't cover, so those routes fail loudly instead
+//! of silently changing semantics.
+
+use super::codec::Codec;
+use super::topk::sparsify_row;
+use crate::coordinator::strategy::{CombineStrategy, StepCtx};
+use crate::error::{AdaError, Result};
+use crate::gossip::mean_model;
+use crate::graph::CommGraph;
+use crate::metrics::consensus_distance;
+use crate::util::matrix::ReplicaMatrix;
+
+fn need_graph<'a>(ctx: &StepCtx<'a>, name: &str) -> Result<&'a CommGraph> {
+    ctx.graph.ok_or_else(|| {
+        AdaError::Coordinator(format!(
+            "{name} needs a communication graph (decentralized strategies \
+             require a topology schedule)"
+        ))
+    })
+}
+
+fn reject_fault_routes(ctx: &StepCtx<'_>, name: &str) -> Result<()> {
+    if ctx.staleness.is_some() || ctx.active.is_some() {
+        return Err(AdaError::Coordinator(format!(
+            "{name} does not support fault injection (partial participation \
+             or bounded staleness) — run it without a fault plan"
+        )));
+    }
+    Ok(())
+}
+
+/// Adapt-then-combine gossip whose exchange travels through a lossy
+/// [`Codec`], optionally sparsified to the top-k largest-magnitude
+/// entries with per-replica error-feedback residuals.
+///
+/// * Dense (`k = None`): one [`crate::gossip::GossipEngine::mix_codec`]
+///   round — every peer row is quantized per tile inside the kernel;
+///   the local row never leaves the node and stays f32.
+/// * Sparse (`k = Some(_)`): each replica ships the top-k of its
+///   error-compensated accumulator ([`sparsify_row`]); peers fold the
+///   sparse message through
+///   [`crate::gossip::GossipEngine::mix_from`].
+///
+/// Degenerate configs are bitwise equivalences: `codec = f32, k = None`
+/// reproduces dense gossip exactly, and `k = p` with zeroed residuals
+/// ships the full row.
+pub struct CompressedGossip {
+    codec: Codec,
+    k: Option<usize>,
+    residuals: ReplicaMatrix,
+    messages: ReplicaMatrix,
+}
+
+impl CompressedGossip {
+    /// New strategy; `k = None` is the dense codec path.
+    pub fn new(codec: Codec, k: Option<usize>) -> Self {
+        CompressedGossip {
+            codec,
+            k,
+            residuals: ReplicaMatrix::default(),
+            messages: ReplicaMatrix::default(),
+        }
+    }
+
+    /// Modeled wire bytes one node sends per round (indices cost 4
+    /// bytes each on the sparse path).
+    fn bytes_per_node(&self, degree: usize, p: usize) -> u64 {
+        let per_msg = match self.k {
+            Some(k) => k.min(p) as u64 * (4 + self.codec.bytes_per_value()),
+            None => self.codec.bytes_per_value() * p as u64,
+        };
+        degree as u64 * per_msg
+    }
+}
+
+impl CombineStrategy for CompressedGossip {
+    fn name(&self) -> &str {
+        "compressed_gossip"
+    }
+
+    fn prepare(&mut self, n: usize, p: usize) -> Result<()> {
+        // Residuals restart at zero on every fresh run, like the fused
+        // strategy's momentum buffers; the message stash only exists on
+        // the sparse path.
+        if self.k.is_some() {
+            self.residuals = ReplicaMatrix::zeros(n, p);
+            self.messages = ReplicaMatrix::zeros(n, p);
+        }
+        Ok(())
+    }
+
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let loss = ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)?;
+            loss_sum += loss as f64;
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "CompressedGossip")?;
+        reject_fault_routes(ctx, "CompressedGossip")?;
+        match self.k {
+            Some(k) => {
+                for w in 0..ctx.n {
+                    sparsify_row(
+                        replicas.row(w),
+                        self.residuals.row_mut(w),
+                        self.messages.row_mut(w),
+                        k,
+                    );
+                }
+                ctx.engine.mix_from(g, replicas, &self.messages, self.codec);
+            }
+            None => ctx.engine.mix_codec(g, replicas, self.codec),
+        }
+        Ok((g.degree(), self.bytes_per_node(g.degree(), ctx.param_count)))
+    }
+}
+
+/// The D² per-row pre-mix transform (Tang et al. 2018, eq. 6):
+/// `z_t = 2·x_t − x_{t−1} − γ·g_t + γ·g_{t−1}` (first iteration:
+/// `z_0 = x_0 − γ·g_0`), after which the caller mixes `z`. `prev_params`
+/// and `prev_grads` are updated in place to `x_t` / `g_t`. Pure scalar
+/// elementwise, evaluated left-to-right — bit-identical everywhere.
+pub fn d2_transform(
+    replicas: &mut ReplicaMatrix,
+    prev_params: &mut ReplicaMatrix,
+    prev_grads: &mut ReplicaMatrix,
+    grads: &ReplicaMatrix,
+    lr: f32,
+    first: bool,
+) {
+    for w in 0..replicas.n() {
+        let x = replicas.row_mut(w);
+        let px = prev_params.row_mut(w);
+        let pg = prev_grads.row_mut(w);
+        let gw = grads.row(w);
+        for i in 0..x.len() {
+            let xt = x[i];
+            let z = if first {
+                xt - lr * gw[i]
+            } else {
+                2.0 * xt - px[i] - lr * gw[i] + lr * pg[i]
+            };
+            px[i] = xt;
+            x[i] = z;
+        }
+        pg.copy_from_slice(gw);
+    }
+}
+
+/// D² / decentralized variance reduction: the previous-iterate
+/// correction term `x_t − x_{t−1} + γ·g_{t−1}` cancels the data
+/// heterogeneity between replicas that plain D-PSGD averaging leaves
+/// behind — exactly the cross-replica parameter variance the paper's
+/// obs. 3 identifies as the accuracy bottleneck at scale.
+///
+/// Requires [`crate::coordinator::LocalModel::loss_and_grad`] (gradient
+/// access, like the fused strategy).
+pub struct D2Combine {
+    prev_params: ReplicaMatrix,
+    prev_grads: ReplicaMatrix,
+    grads: ReplicaMatrix,
+    started: bool,
+}
+
+impl D2Combine {
+    /// New strategy (state allocated in [`CombineStrategy::prepare`]).
+    pub fn new() -> Self {
+        D2Combine {
+            prev_params: ReplicaMatrix::default(),
+            prev_grads: ReplicaMatrix::default(),
+            grads: ReplicaMatrix::default(),
+            started: false,
+        }
+    }
+}
+
+impl Default for D2Combine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CombineStrategy for D2Combine {
+    fn name(&self) -> &str {
+        "d2"
+    }
+
+    fn prepare(&mut self, n: usize, p: usize) -> Result<()> {
+        self.prev_params = ReplicaMatrix::zeros(n, p);
+        self.prev_grads = ReplicaMatrix::zeros(n, p);
+        self.grads = ReplicaMatrix::zeros(n, p);
+        self.started = false;
+        Ok(())
+    }
+
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        if !ctx.model.supports_loss_and_grad() {
+            return Err(AdaError::Coordinator(
+                "d2 requires a model with gradient access (loss_and_grad); \
+                 this model only exposes a fused local step"
+                    .into(),
+            ));
+        }
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let (loss, g) = ctx.model.loss_and_grad(replicas.row(w), &batch)?;
+            loss_sum += loss as f64;
+            self.grads.row_mut(w).copy_from_slice(&g);
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "D2Combine")?;
+        reject_fault_routes(ctx, "D2Combine")?;
+        d2_transform(
+            replicas,
+            &mut self.prev_params,
+            &mut self.prev_grads,
+            &self.grads,
+            ctx.lr,
+            !self.started,
+        );
+        self.started = true;
+        ctx.engine.mix(g, replicas);
+        Ok((g.degree(), g.bytes_sent_per_node(ctx.param_count)))
+    }
+}
+
+/// Consensus-controlled mixing (Kong et al. 2021): gossip once, then
+/// keep mixing — up to `max_rounds` total — until the consensus
+/// distance undershoots `target`. The combine-side twin of the
+/// topology-side `consensus_decay` policy: that one re-wires the graph
+/// on the signal, this one spends extra rounds on a fixed graph.
+///
+/// `max_rounds = 1` is bitwise-identical to plain gossip (exactly one
+/// mix, no distance probe).
+pub struct ConsensusGossip {
+    target: f64,
+    max_rounds: usize,
+}
+
+impl ConsensusGossip {
+    /// New strategy; `max_rounds` is clamped to at least 1.
+    pub fn new(target: f64, max_rounds: usize) -> Self {
+        ConsensusGossip {
+            target,
+            max_rounds: max_rounds.max(1),
+        }
+    }
+}
+
+impl CombineStrategy for ConsensusGossip {
+    fn name(&self) -> &str {
+        "consensus_gossip"
+    }
+
+    fn local_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<f64> {
+        let mut loss_sum = 0.0f64;
+        for (w, loader) in ctx.loaders.iter().enumerate() {
+            let batch = ctx.dataset.batch(&loader.batch_indices(ctx.epoch, ctx.batch));
+            let loss = ctx.model.local_step(w, replicas.row_mut(w), &batch, ctx.lr)?;
+            loss_sum += loss as f64;
+        }
+        Ok(loss_sum / ctx.n as f64)
+    }
+
+    fn combine_phase(
+        &mut self,
+        ctx: &mut StepCtx<'_>,
+        replicas: &mut ReplicaMatrix,
+    ) -> Result<(usize, u64)> {
+        let g = need_graph(ctx, "ConsensusGossip")?;
+        reject_fault_routes(ctx, "ConsensusGossip")?;
+        ctx.engine.mix(g, replicas);
+        let mut rounds = 1u64;
+        while (rounds as usize) < self.max_rounds {
+            let mean = mean_model(ctx.engine.exec(), replicas);
+            if consensus_distance(ctx.engine.exec(), replicas, &mean) <= self.target {
+                break;
+            }
+            ctx.engine.mix(g, replicas);
+            rounds += 1;
+        }
+        Ok((
+            g.degree(),
+            rounds * g.bytes_sent_per_node(ctx.param_count),
+        ))
+    }
+}

@@ -1,0 +1,148 @@
+//! Deterministic top-k magnitude sparsification with error feedback.
+//!
+//! The sparsifier sends only the `k` largest-magnitude entries of the
+//! error-compensated accumulator `acc = row + residual` and banks the
+//! rest back into the residual (Stich et al. 2018 style memory), so
+//! dropped mass re-enters later rounds instead of being lost.
+//!
+//! **Determinism contract.** Selection orders candidates by the strict
+//! total order `(|value| descending, index ascending)`. Magnitudes are
+//! compared as the integer bits of `|v|` (monotone with magnitude for
+//! non-NaN f32), and the index tie-break makes every key unique — so
+//! the *selected set* is the same for any selection algorithm, thread
+//! count or SIMD mode, and the update below is pure scalar elementwise
+//! bookkeeping. Conservation is bitwise:
+//! `message[i] + residual'[i] == row[i] + residual[i]` holds exactly
+//! because each entry lands whole in exactly one of the two outputs.
+
+/// Indices of the `k` largest-magnitude entries of `values`, tie-broken
+/// by lowest index, returned in ascending index order. `k >= len`
+/// selects everything.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    if k < values.len() {
+        // Strict total order: larger |v| first, then lower index. NaN
+        // magnitudes compare above inf (their bit patterns are larger),
+        // which is fine — the order stays total and deterministic.
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            let ma = values[a].abs().to_bits();
+            let mb = values[b].abs().to_bits();
+            mb.cmp(&ma).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// One error-feedback sparsification step for a single replica row.
+///
+/// Computes `acc = row + residual` elementwise, then splits `acc`
+/// whole-entry-wise into `message` (the `k` selected entries, zeros
+/// elsewhere) and the updated `residual` (everything unselected).
+/// Returns the selected indices (ascending).
+pub fn sparsify_row(
+    row: &[f32],
+    residual: &mut [f32],
+    message: &mut [f32],
+    k: usize,
+) -> Vec<usize> {
+    assert_eq!(row.len(), residual.len());
+    assert_eq!(row.len(), message.len());
+    // Stage the accumulator in `residual` (the default outcome for an
+    // entry is "kept back"), then promote the selected entries.
+    for ((r, m), &x) in residual.iter_mut().zip(message.iter_mut()).zip(row) {
+        *r += x;
+        *m = 0.0;
+    }
+    let selected = top_k_indices(residual, k);
+    for &j in &selected {
+        message[j] = residual[j];
+        residual[j] = 0.0;
+    }
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_largest_magnitudes_with_index_tiebreak() {
+        let v = [1.0f32, -3.0, 2.0, -2.0, 0.5];
+        assert_eq!(top_k_indices(&v, 1), vec![1]);
+        // |2.0| ties with |-2.0|: the lower index (2) wins.
+        assert_eq!(top_k_indices(&v, 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&v, 3), vec![1, 2, 3]);
+        // All-equal magnitudes: the first k indices, in order.
+        let flat = [1.0f32; 6];
+        assert_eq!(top_k_indices(&flat, 3), vec![0, 1, 2]);
+        // k >= len selects everything; k = 0 nothing.
+        assert_eq!(top_k_indices(&v, 9), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_k_indices(&v, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&[], 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn residual_conservation_is_bitwise() {
+        let mut rng = Rng::seed_from_u64(42);
+        let p = 513;
+        let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        let mut residual: Vec<f32> = (0..p).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let before = residual.clone();
+        let mut message = vec![0.0f32; p];
+        let selected = sparsify_row(&row, &mut residual, &mut message, 32);
+        assert_eq!(selected.len(), 32);
+        for i in 0..p {
+            let acc = row[i] + before[i];
+            // Each entry lands whole in exactly one output.
+            assert_eq!(
+                (message[i] + residual[i]).to_bits(),
+                acc.to_bits(),
+                "conservation at {i}"
+            );
+            if selected.binary_search(&i).is_ok() {
+                assert_eq!(message[i].to_bits(), acc.to_bits());
+                assert_eq!(residual[i].to_bits(), 0.0f32.to_bits());
+            } else {
+                assert_eq!(message[i].to_bits(), 0.0f32.to_bits());
+                assert_eq!(residual[i].to_bits(), acc.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_mass_reenters_later_rounds() {
+        // A small entry ignored in round 1 accumulates in the residual
+        // until it out-ranks a fresh large entry — the error-feedback
+        // property that distinguishes this from plain top-k.
+        let mut residual = vec![0.0f32; 2];
+        let mut message = vec![0.0f32; 2];
+        for _ in 0..10 {
+            let sel = sparsify_row(&[1.0, 0.3], &mut residual, &mut message, 1);
+            if sel == vec![1] {
+                assert!(message[1] >= 1.0, "banked mass ships when it wins");
+                return;
+            }
+            assert_eq!(sel, vec![0]);
+        }
+        panic!("residual feedback never promoted the small entry");
+    }
+
+    #[test]
+    fn k_equal_p_ships_everything_and_zeroes_residual() {
+        let mut rng = Rng::seed_from_u64(5);
+        let p = 100;
+        let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut residual: Vec<f32> = (0..p).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let before = residual.clone();
+        let mut message = vec![0.0f32; p];
+        sparsify_row(&row, &mut residual, &mut message, p);
+        for i in 0..p {
+            assert_eq!(message[i].to_bits(), (row[i] + before[i]).to_bits());
+            assert_eq!(residual[i].to_bits(), 0.0f32.to_bits());
+        }
+    }
+}

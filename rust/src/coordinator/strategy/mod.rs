@@ -7,9 +7,12 @@
 //! [`TopologyPolicy`] (which graph they exchange over, with its own
 //! name-keyed registry in `crate::topology::registry`), and a
 //! name-keyed [`Registry`] that constructs both, so new scenarios —
-//! a D² variance-correction update, consensus-controlled mixing, local
-//! SGD with periodic averaging — plug in without touching the session
-//! loop or this crate at all.
+//! local SGD with periodic averaging, new compression schemes — plug in
+//! without touching the session loop or this crate at all. The
+//! compressed/variance-corrected family (`compressed_gossip`, `d2`,
+//! `consensus_gossip` — see [`crate::compress`]) is built this way:
+//! three [`CombineStrategy`] implementations registered below, zero
+//! session-loop changes.
 //!
 //! ## Shape of an iteration
 //!
@@ -62,6 +65,7 @@ mod gossip;
 pub use centralized::CentralizedAverage;
 pub use gossip::{FusedGossipCombine, GossipCombine};
 
+use crate::compress::{Codec, CompressedGossip, ConsensusGossip, D2Combine};
 use crate::coordinator::LocalModel;
 use crate::data::{Dataset, ShardLoader};
 use crate::error::{AdaError, Result};
@@ -73,6 +77,7 @@ use crate::topology::{
     AdaSchedule, OnePeerExponential, StaticSchedule, TopologyPolicy, VarianceAdaptive,
 };
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::Arc;
 
 /// Everything one strategy phase may touch, borrowed from the session
@@ -192,8 +197,9 @@ pub trait CombineStrategy: Send {
 
 /// The tunable knobs a registry constructor may consume — the union of
 /// the parameters the [`crate::coordinator::SgdFlavor`] variants carry,
-/// with the CLI defaults.
-#[derive(Debug, Clone, PartialEq)]
+/// with the CLI defaults — plus an [`extra`](StrategyParams::extra)
+/// table for strategy-specific keys the flat fields don't name.
+#[derive(Clone, PartialEq)]
 pub struct StrategyParams {
     /// Training scale (graph nodes).
     pub n_workers: usize,
@@ -207,6 +213,32 @@ pub struct StrategyParams {
     pub threshold: f64,
     /// Consecutive epochs below threshold before decaying.
     pub patience: usize,
+    /// Strategy-specific keys (`codec`, `k`, `target`, `max_rounds`)
+    /// passed through verbatim; each constructor `expect_only`s its own
+    /// subset, so typos stay loud.
+    pub extra: ParamTable,
+}
+
+/// Hand-written so the `extra` table is printed **only when non-empty**:
+/// `{:?}` of a `StrategyRef::Named`'s params is part of the
+/// [`crate::dbench::fingerprint`] resume-cache key, and pre-existing
+/// cells (whose params have no extra keys) must keep their exact
+/// pre-`extra` key text. The field order and format below match what
+/// `#[derive(Debug)]` produced before the field existed.
+impl fmt::Debug for StrategyParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("StrategyParams");
+        d.field("n_workers", &self.n_workers)
+            .field("k0", &self.k0)
+            .field("gamma_k", &self.gamma_k)
+            .field("step", &self.step)
+            .field("threshold", &self.threshold)
+            .field("patience", &self.patience);
+        if !self.extra.is_empty() {
+            d.field("extra", &self.extra);
+        }
+        d.finish()
+    }
 }
 
 impl StrategyParams {
@@ -219,6 +251,7 @@ impl StrategyParams {
             step: 2,
             threshold: 0.002,
             patience: 1,
+            extra: ParamTable::new(),
         }
     }
 
@@ -232,7 +265,17 @@ impl StrategyParams {
     /// `[strategy.<name>]` sections and CLI `name:k=v,…` arguments
     /// (shared with the topology registry). Unknown keys error.
     pub fn from_table(n: usize, table: &ParamTable) -> Result<Self> {
-        table.expect_only(&["k0", "gamma_k", "step", "threshold", "patience"])?;
+        table.expect_only(&[
+            "k0",
+            "gamma_k",
+            "step",
+            "threshold",
+            "patience",
+            "codec",
+            "k",
+            "target",
+            "max_rounds",
+        ])?;
         let mut p = Self::for_n(n);
         if let Some(v) = table.get_usize("k0")? {
             p.k0 = Some(v);
@@ -241,6 +284,11 @@ impl StrategyParams {
         p.step = table.usize_or("step", p.step)?;
         p.threshold = table.f64_or("threshold", p.threshold)?;
         p.patience = table.usize_or("patience", p.patience)?;
+        for key in ["codec", "k", "target", "max_rounds"] {
+            if let Some(v) = table.get(key) {
+                p.extra = std::mem::take(&mut p.extra).set(key, v.clone());
+            }
+        }
         Ok(p)
     }
 }
@@ -409,6 +457,54 @@ pub fn registry() -> Registry {
             combine: None,
         })
     });
+    // The compressed / variance-corrected family (`crate::compress`).
+    // All three default to the exponential graph — the densest of the
+    // paper's sparse five — and accept the usual per-cell topology
+    // override; their specific knobs travel in `params.extra`.
+    reg.register("compressed_gossip", |p: &StrategyParams| {
+        p.extra.expect_only(&["codec", "k"])?;
+        let codec = Codec::parse(p.extra.get_str("codec")?.unwrap_or("bf16"))?;
+        let k = p.extra.get_usize("k")?;
+        let label = match k {
+            Some(k) => format!("compressed_gossip[{},k={k}]", codec.name()),
+            None => format!("compressed_gossip[{}]", codec.name()),
+        };
+        Ok(StrategyInstance {
+            label,
+            schedule: Some(Box::new(StaticSchedule::new(
+                GraphKind::Exponential,
+                p.n_workers,
+            )?)),
+            k_neighbors: k_exponential(p.n_workers),
+            combine: Some(Box::new(CompressedGossip::new(codec, k))),
+        })
+    });
+    reg.register("d2", |p: &StrategyParams| {
+        p.extra.expect_only(&[])?;
+        Ok(StrategyInstance {
+            label: "d2".into(),
+            schedule: Some(Box::new(StaticSchedule::new(
+                GraphKind::Exponential,
+                p.n_workers,
+            )?)),
+            k_neighbors: k_exponential(p.n_workers),
+            combine: Some(Box::new(D2Combine::new())),
+        })
+    });
+    reg.register("consensus_gossip", |p: &StrategyParams| {
+        p.extra.expect_only(&["target", "max_rounds"])?;
+        let target = p.extra.f64_or("target", 0.0)?;
+        let max_rounds = p.extra.usize_or("max_rounds", 4)?;
+        Ok(StrategyInstance {
+            label: "consensus_gossip".into(),
+            schedule: Some(Box::new(StaticSchedule::new(
+                GraphKind::Exponential,
+                p.n_workers,
+            )?)),
+            k_neighbors: k_exponential(p.n_workers),
+            combine: Some(Box::new(ConsensusGossip::new(target, max_rounds))),
+        })
+    });
     for (alias, name) in [
         ("c_complete", "C_complete"),
         ("d_complete", "D_complete"),
@@ -523,5 +619,77 @@ mod tests {
         assert_eq!(k_exponential(8), 2 + 1); // log2(7) = 2.8 → 2, +1
         assert_eq!(k_exponential(64), 5 + 1);
         assert_eq!(k_exponential(2), 1); // log2(1) = 0, +1
+    }
+
+    #[test]
+    fn params_debug_is_stable_without_extra_keys() {
+        // `{:?}` of StrategyParams feeds the resume-cache fingerprint:
+        // params without extra keys must render exactly as the derived
+        // Debug did before the `extra` field existed, so pre-existing
+        // caches stay valid.
+        let p = StrategyParams::for_n(8);
+        assert_eq!(
+            format!("{p:?}"),
+            "StrategyParams { n_workers: 8, k0: None, gamma_k: 1.0, \
+             step: 2, threshold: 0.002, patience: 1 }"
+        );
+        // Extra keys must show up (different config ⇒ different key).
+        let t = ParamTable::parse_kv("codec=bf16").unwrap();
+        let q = StrategyParams::from_table(8, &t).unwrap();
+        let text = format!("{q:?}");
+        assert!(text.contains("extra"), "{text}");
+        assert!(text.contains("codec"), "{text}");
+        assert_ne!(format!("{p:?}"), text);
+    }
+
+    #[test]
+    fn from_table_routes_compress_keys_into_extra() {
+        let t = ParamTable::parse_kv("codec=f16,k=1024,target=0.5,max_rounds=3").unwrap();
+        let p = StrategyParams::from_table(16, &t).unwrap();
+        assert_eq!(p.extra.get_str("codec").unwrap(), Some("f16"));
+        assert_eq!(p.extra.get_usize("k").unwrap(), Some(1024));
+        assert_eq!(p.extra.get_f64("target").unwrap(), Some(0.5));
+        assert_eq!(p.extra.get_usize("max_rounds").unwrap(), Some(3));
+        // The flat fields keep their defaults.
+        assert_eq!(p.k0, None);
+        assert_eq!(p.step, 2);
+    }
+
+    #[test]
+    fn compressed_family_resolves_with_labels_and_combines() {
+        let reg = registry();
+        let p = StrategyParams::for_n(8);
+        for (name, label) in [
+            ("compressed_gossip", "compressed_gossip[bf16]"),
+            ("d2", "d2"),
+            ("consensus_gossip", "consensus_gossip"),
+        ] {
+            let inst = reg.resolve(name, &p).unwrap_or_else(|e| {
+                panic!("builtin {name} must resolve: {e}")
+            });
+            assert_eq!(inst.label, label);
+            assert!(inst.schedule.is_some(), "{name} is decentralized");
+            assert!(inst.combine.is_some(), "{name} brings its own combine");
+        }
+        // Parameterized: codec + k reach the label.
+        let t = ParamTable::parse_kv("codec=f16,k=100").unwrap();
+        let p = StrategyParams::from_table(8, &t).unwrap();
+        let inst = reg.resolve("compressed_gossip", &p).unwrap();
+        assert_eq!(inst.label, "compressed_gossip[f16,k=100]");
+    }
+
+    #[test]
+    fn compressed_family_rejects_wrong_extras() {
+        let reg = registry();
+        // A codec typo fails at parse.
+        let t = ParamTable::parse_kv("codec=int8").unwrap();
+        let p = StrategyParams::from_table(8, &t).unwrap();
+        assert!(reg.resolve("compressed_gossip", &p).is_err());
+        // d2 takes no extra keys at all.
+        let t = ParamTable::parse_kv("codec=bf16").unwrap();
+        let p = StrategyParams::from_table(8, &t).unwrap();
+        assert!(reg.resolve("d2", &p).is_err());
+        // consensus_gossip doesn't take a codec either.
+        assert!(reg.resolve("consensus_gossip", &p).is_err());
     }
 }

@@ -119,6 +119,27 @@ impl StrategyRef {
         }
     }
 
+    /// Parse the CLI form `name` or `name:k=v,k2=v2` — the strategy
+    /// twin of [`TopologyRef::parse`], backing the `--strategy` flag.
+    /// `n_workers` stays 0 here; [`StrategyRef::resolve`] overrides it
+    /// with the cell's scale.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (name, rest) = match text.split_once(':') {
+            Some((name, rest)) => (name, rest),
+            None => (text, ""),
+        };
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(AdaError::Config(format!(
+                "strategy reference {text:?} is missing a name (name:k=v,…)"
+            )));
+        }
+        Ok(StrategyRef::Named {
+            name: name.to_string(),
+            params: StrategyParams::from_table(0, &ParamTable::parse_kv(rest)?)?,
+        })
+    }
+
     /// The registry key / file-naming key of this reference.
     pub fn key(&self) -> String {
         match self {
@@ -707,6 +728,25 @@ mod tests {
         assert!(bare.params.is_empty());
         assert!(TopologyRef::parse(":k=1").is_err());
         assert!(TopologyRef::parse("ada:k0").is_err());
+    }
+
+    #[test]
+    fn strategy_ref_parses_cli_syntax() {
+        let s = StrategyRef::parse("compressed_gossip:codec=f16,k=1024").unwrap();
+        match &s {
+            StrategyRef::Named { name, params } => {
+                assert_eq!(name, "compressed_gossip");
+                assert_eq!(params.extra.get_str("codec").unwrap(), Some("f16"));
+                assert_eq!(params.extra.get_usize("k").unwrap(), Some(1024));
+            }
+            other => panic!("expected Named, got {other:?}"),
+        }
+        assert_eq!(s.key(), "compressed_gossip");
+        let bare = StrategyRef::parse("d2").unwrap();
+        assert_eq!(bare.key(), "d2");
+        assert!(StrategyRef::parse(":codec=bf16").is_err());
+        // Unknown param keys fail at parse time, not resolution time.
+        assert!(StrategyRef::parse("gossip:tpyo=1").is_err());
     }
 
     #[test]

@@ -49,6 +49,7 @@
 //! ([`GossipEngine::ensure_scratch`]) so page placement follows tile
 //! ownership — the groundwork for NUMA pinning (ROADMAP §Open items).
 
+use crate::compress::Codec;
 use crate::error::Result;
 use crate::exec::pipeline::{run_overlapped, BucketTable, Progress};
 use crate::exec::{column_views, simd, ExecEngine};
@@ -964,6 +965,89 @@ impl GossipEngine {
     pub fn reset_stale(&mut self) {
         self.stale.slots.clear();
     }
+
+    /// [`GossipEngine::mix`] with peer rows travelling through a lossy
+    /// exchange [`Codec`]: every *peer* contribution is encoded+decoded
+    /// per tile right before it enters the weighted fold — modeling a
+    /// half-width wire without materializing a compressed matrix — while
+    /// the self contribution (never on the wire) stays f32.
+    ///
+    /// [`Codec::F32`] delegates to [`GossipEngine::mix`] (bit-identical,
+    /// including the uniform-complete fast path). The lossy codecs run
+    /// the general tiled path: the round-trip is elementwise and scalar,
+    /// so results stay bit-identical across thread counts and SIMD
+    /// modes.
+    pub fn mix_codec(&mut self, graph: &CommGraph, replicas: &mut ReplicaMatrix, codec: Codec) {
+        if codec == Codec::F32 {
+            return self.mix(graph, replicas);
+        }
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        if n == 0 {
+            return;
+        }
+        let p = replicas.p();
+        self.ensure_scratch(n, p);
+        self.ensure_part_ranges(p);
+        {
+            let Self { scratch, exec, part_ranges, .. } = &mut *self;
+            let reps: &ReplicaMatrix = replicas;
+            let views = column_views(scratch.rows_mut(), part_ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .zip(part_ranges.iter().cloned())
+                .map(|(chunks, range)| {
+                    move || mix_exchange_tile(graph, reps, reps, codec, chunks, range)
+                })
+                .collect();
+            exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
+
+    /// A mix round whose *peer* contributions come from a separate
+    /// message matrix (the sparsified/error-feedback exchange path):
+    /// `Θ'_i = W_ii·Θ_i + Σ_{j≠i} W_ij·codec(M_j)`. The self term reads
+    /// the live replica row — a node always has its own full-precision
+    /// parameters — while peers only see what was published into
+    /// `messages`.
+    ///
+    /// Always runs the general tiled path (no complete-graph fast path),
+    /// so `messages == replicas` with [`Codec::F32`] reproduces
+    /// [`GossipEngine::mix`]'s general path bitwise on non-complete
+    /// graphs.
+    pub fn mix_from(
+        &mut self,
+        graph: &CommGraph,
+        replicas: &mut ReplicaMatrix,
+        messages: &ReplicaMatrix,
+        codec: Codec,
+    ) {
+        let n = graph.n();
+        assert_eq!(replicas.n(), n, "replica count must match graph size");
+        assert_eq!(messages.n(), n, "message count must match graph size");
+        if n == 0 {
+            return;
+        }
+        let p = replicas.p();
+        assert_eq!(messages.p(), p, "message width must match replicas");
+        self.ensure_scratch(n, p);
+        self.ensure_part_ranges(p);
+        {
+            let Self { scratch, exec, part_ranges, .. } = &mut *self;
+            let reps: &ReplicaMatrix = replicas;
+            let views = column_views(scratch.rows_mut(), part_ranges);
+            let jobs: Vec<_> = views
+                .into_iter()
+                .zip(part_ranges.iter().cloned())
+                .map(|(chunks, range)| {
+                    move || mix_exchange_tile(graph, reps, messages, codec, chunks, range)
+                })
+                .collect();
+            exec.run_jobs(jobs);
+        }
+        self.swap_in_scratch(replicas);
+    }
 }
 
 /// One worker's share of a mix round: the blocked SpMM over its column
@@ -984,6 +1068,50 @@ fn mix_tile(
             let mut first = true;
             for (j, w) in graph.row(i) {
                 let src = &replicas.row(j)[start..end];
+                if first {
+                    simd::scale(out, src, w);
+                    first = false;
+                } else {
+                    simd::axpy(out, src, w);
+                }
+            }
+        }
+        start = end;
+    }
+}
+
+/// [`mix_tile`] with peer contributions drawn from `messages` and
+/// round-tripped through `codec` per tile (the compressed exchange
+/// path; `messages` aliases `replicas` for the dense codec route). The
+/// self contribution always reads the live replica row in f32. The
+/// decode staging buffer is per worker and per tile, but the round-trip
+/// is elementwise — value `i` depends only on value `i` — so tile and
+/// thread boundaries cannot change the produced bits.
+fn mix_exchange_tile(
+    graph: &CommGraph,
+    replicas: &ReplicaMatrix,
+    messages: &ReplicaMatrix,
+    codec: Codec,
+    mut out_rows: Vec<&mut [f32]>,
+    range: Range<usize>,
+) {
+    let mut decoded = vec![0.0f32; TILE.min(range.end - range.start)];
+    let mut start = range.start;
+    while start < range.end {
+        let end = (start + TILE).min(range.end);
+        let (lo, hi) = (start - range.start, end - range.start);
+        let width = end - start;
+        for (i, out_row) in out_rows.iter_mut().enumerate() {
+            let out = &mut out_row[lo..hi];
+            let mut first = true;
+            for (j, w) in graph.row(i) {
+                let src: &[f32] = if j == i {
+                    &replicas.row(j)[start..end]
+                } else {
+                    let d = &mut decoded[..width];
+                    codec.roundtrip_into(&messages.row(j)[start..end], d);
+                    d
+                };
                 if first {
                     simd::scale(out, src, w);
                     first = false;
@@ -1695,6 +1823,112 @@ mod tests {
         for r in reps.rows() {
             for (v, t) in r.iter().zip(&target) {
                 assert!((*v as f64 - t).abs() < 1e-3, "must reach consensus");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_codec_f32_is_mix_bitwise() {
+        // The identity codec delegates to mix() — including the
+        // uniform-complete fast path — so results are bit-identical.
+        for kind in [GraphKind::Ring, GraphKind::Exponential, GraphKind::Complete] {
+            let n = 12;
+            let g = CommGraph::build(kind, n).unwrap();
+            let mut dense = replicas(n, 301, 7);
+            let mut coded = replicas(n, 301, 7);
+            GossipEngine::new().mix(&g, &mut dense);
+            GossipEngine::new().mix_codec(&g, &mut coded, Codec::F32);
+            for i in 0..n {
+                for k in 0..301 {
+                    assert_eq!(dense[i][k].to_bits(), coded[i][k].to_bits(), "{kind} [{i}][{k}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mix_from_full_messages_f32_is_mix_bitwise() {
+        // messages == replicas with the identity codec reproduces the
+        // general mix path exactly (non-complete graphs only: mix()'s
+        // uniform-complete fast path folds in a different float order).
+        for kind in [GraphKind::Ring, GraphKind::Exponential] {
+            let n = 12;
+            let g = CommGraph::build(kind, n).unwrap();
+            let mut dense = replicas(n, 513, 3);
+            let mut sparse = replicas(n, 513, 3);
+            let messages = replicas(n, 513, 3);
+            GossipEngine::new().mix(&g, &mut dense);
+            GossipEngine::new().mix_from(&g, &mut sparse, &messages, Codec::F32);
+            for i in 0..n {
+                for k in 0..513 {
+                    assert_eq!(dense[i][k].to_bits(), sparse[i][k].to_bits(), "{kind} [{i}][{k}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mix_codec_bit_identical_across_threads() {
+        // The codec round-trip is elementwise, so tile/thread boundaries
+        // cannot change the produced bits. (The SIMD × scalar cross
+        // sweep lives in `rust/tests/compress_paths.rs` — the
+        // process-global dispatch toggle is not safe to flip inside the
+        // concurrently-running lib tests.)
+        for codec in [Codec::Bf16, Codec::F16] {
+            let n = 8;
+            let p = 10_000; // several tiles per worker at 4 threads
+            let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+            let mut reference: Option<ReplicaMatrix> = None;
+            for threads in [1usize, 4, 8] {
+                let mut reps = replicas(n, p, 77);
+                GossipEngine::with_threads(threads).mix_codec(&g, &mut reps, codec);
+                match &reference {
+                    None => reference = Some(reps),
+                    Some(want) => {
+                        for i in 0..n {
+                            for k in 0..p {
+                                assert_eq!(
+                                    want[i][k].to_bits(),
+                                    reps[i][k].to_bits(),
+                                    "{codec:?} threads={threads} [{i}][{k}]"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mix_codec_quantizes_peers_but_not_self() {
+        // One round on a ring: the output must equal the scalar
+        // reference fold with peer rows round-tripped and the self row
+        // kept in f32.
+        let n = 6;
+        let p = 257;
+        let g = CommGraph::build(GraphKind::Ring, n).unwrap();
+        let before = replicas(n, p, 21);
+        let mut reps = replicas(n, p, 21);
+        GossipEngine::new().mix_codec(&g, &mut reps, Codec::Bf16);
+        for i in 0..n {
+            let mut want = vec![0.0f32; p];
+            let mut first = true;
+            for (j, w) in g.row(i) {
+                let src: Vec<f32> = if j == i {
+                    before[j].to_vec()
+                } else {
+                    before[j].iter().map(|&v| Codec::Bf16.roundtrip(v)).collect()
+                };
+                if first {
+                    simd::scale(&mut want, &src, w);
+                    first = false;
+                } else {
+                    simd::axpy(&mut want, &src, w);
+                }
+            }
+            for k in 0..p {
+                assert_eq!(want[k].to_bits(), reps[i][k].to_bits(), "[{i}][{k}]");
             }
         }
     }

@@ -11,7 +11,9 @@
 //! * **L3 (this crate)** — the coordinator: communication graphs and mixing
 //!   matrices ([`graph`]), adaptive topology policies with their own
 //!   name registry ([`topology`]), the
-//!   gossip mixing engine ([`gossip`]) fanned out over the deterministic
+//!   gossip mixing engine ([`gossip`]) — with a compressed exchange
+//!   path (bf16/f16 codecs, top-k error feedback, [`compress`]) —
+//!   fanned out over the deterministic
 //!   thread-pool execution engine ([`exec`]), the n-worker decentralized
 //!   training loop ([`coordinator`]) — a `TrainSession` builder over an
 //!   open strategy registry (`coordinator::strategy`) and observer hooks
@@ -47,6 +49,7 @@
 //! assert!(g0.degree() > g9.degree());
 //! ```
 
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

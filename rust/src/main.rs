@@ -12,7 +12,7 @@
 
 use ada_dist::config::LauncherConfig;
 use ada_dist::coordinator::SgdFlavor;
-use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, TopologyRef, Workload};
+use ada_dist::dbench::{format_table, ExperimentSpec, SessionPlan, StrategyRef, TopologyRef, Workload};
 use ada_dist::graph::{CommGraph, GraphKind};
 use ada_dist::simnet::{ClusterSpec, SimNet};
 use ada_dist::util::cli::Args;
@@ -28,6 +28,10 @@ ada <command> [options]
     --topology name[:k=v,...]   override the flavor's communication-graph
                      policy with one from the topology registry (see
                      `ada topologies`); decentralized flavors only
+    --strategy name[:k=v,...]   train a registry strategy instead of a
+                     flavor (see `ada strategies`), e.g.
+                     compressed_gossip:codec=bf16,k=65536 — overrides
+                     --flavor
     --threads N      persistent worker-pool fan-out for the gossip/fused
                      kernels and metric capture (0 = all cores; default
                      from launcher config; bit-identical results)
@@ -156,6 +160,12 @@ fn cmd_run(args: &Args, cfg: &LauncherConfig) -> CliResult {
         // Resolved by name through the topology registry; `ada
         // topologies` lists the choices. C_complete stays centralized.
         spec.topology = Some(TopologyRef::parse(t)?);
+    }
+    if let Some(s) = args.get("strategy") {
+        // Resolved by name through the strategy registry; `ada
+        // strategies` lists the choices. Replaces the flavor.
+        spec.strategies = vec![StrategyRef::parse(s)?];
+        spec.flavors = vec![];
     }
     let mut plan = SessionPlan::from_spec(&spec);
     plan.cells[0].config.record_path = args.get("record").map(std::path::PathBuf::from);

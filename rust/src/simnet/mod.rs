@@ -102,7 +102,24 @@ impl SimNet {
         param_count: usize,
         link_scale: impl Fn(usize, usize) -> f64,
     ) -> CommCost {
-        let bytes_per_msg = 4 * param_count as u64;
+        self.round_with_bytes(graph, 4 * param_count as u64, link_scale)
+    }
+
+    /// Cost of one gossip round with an **explicit message size** — the
+    /// compressed-exchange hook: a bf16/f16 path ships
+    /// `codec.bytes_per_value() · p` bytes per message, a top-k path
+    /// `k · (4 + bytes_per_value)` (index + payload), and this model
+    /// prices either without assuming 4-byte values.
+    pub fn gossip_round_bytes(&self, graph: &CommGraph, bytes_per_msg: u64) -> CommCost {
+        self.round_with_bytes(graph, bytes_per_msg, |_, _| 1.0)
+    }
+
+    fn round_with_bytes(
+        &self,
+        graph: &CommGraph,
+        bytes_per_msg: u64,
+        link_scale: impl Fn(usize, usize) -> f64,
+    ) -> CommCost {
         let mut worst = 0.0f64;
         let mut inter = 0u64;
         let mut total = 0u64;
@@ -301,6 +318,24 @@ mod tests {
         // A unit scale is exactly the plain round.
         let unit = net.gossip_round_with(&g, 1000, |_, _| 1.0);
         assert_eq!(unit, base);
+    }
+
+    #[test]
+    fn explicit_message_size_prices_compressed_rounds() {
+        let net = SimNet::new(ClusterSpec::summit());
+        let g = CommGraph::build(GraphKind::Exponential, 48).unwrap();
+        let p = 1_000_000;
+        let dense = net.gossip_round(&g, p);
+        // bf16 halves every message: exactly half the bytes, less time
+        // (the latency term doesn't shrink, so not exactly half).
+        let bf16 = net.gossip_round_bytes(&g, 2 * p as u64);
+        assert_eq!(bf16.total_bytes * 2, dense.total_bytes);
+        assert_eq!(bf16.inter_node_bytes * 2, dense.inter_node_bytes);
+        assert!(bf16.time_s < dense.time_s);
+        assert!(bf16.time_s * 2.0 > dense.time_s, "latency floor remains");
+        // The f32 message size reproduces gossip_round bit-for-bit.
+        let explicit = net.gossip_round_bytes(&g, 4 * p as u64);
+        assert_eq!(explicit, dense);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 //! Built-in policies: [`StaticSchedule`] (the fixed graphs DBench
 //! benchmarks against), [`AdaSchedule`] (Algorithm 1),
 //! [`OnePeerExponential`] (rotating one-neighbor exponential, per-epoch
-//! or per-iteration), [`VarianceAdaptive`] (gini-triggered decay,
+//! or per-iteration), [`RandomRegularSchedule`] (a fresh seeded random
+//! d-regular expander each epoch), [`VarianceAdaptive`] (gini-triggered decay,
 //! Observation 4), [`ConsensusDecay`] (consensus-distance-triggered
 //! decay in the spirit of Kong et al. 2021), [`CommBudget`] (densest
 //! lattice affordable under a bytes-per-node budget), [`StragglerAware`]
@@ -40,6 +41,7 @@ mod ada;
 mod comm_budget;
 mod consensus_decay;
 mod one_peer;
+mod random_regular;
 mod registry;
 mod straggler_aware;
 mod variance_adaptive;
@@ -48,6 +50,7 @@ pub use ada::AdaSchedule;
 pub use comm_budget::CommBudget;
 pub use consensus_decay::ConsensusDecay;
 pub use one_peer::OnePeerExponential;
+pub use random_regular::RandomRegularSchedule;
 pub use registry::{registry, PolicyCtor, TopologyRegistry};
 pub use straggler_aware::StragglerAware;
 pub use variance_adaptive::VarianceAdaptive;

@@ -17,6 +17,7 @@
 //! | `static`          | `graph` (= `ring`), or `k` for an Ada lattice          |
 //! | `ada`             | `k0` (= n−1), `gamma_k` (= 1.0)                        |
 //! | `one_peer`        | `per_iter` (= false)                                   |
+//! | `random_regular`  | `d` (= 4, even), `seed` (= 0) — a fresh random d-regular expander each epoch |
 //! | `var_adaptive`    | `k0` (= n−1), `step` (= 2), `threshold` (= 0.002), `patience` (= 1) |
 //! | `consensus_decay` | `k0` (= n/2 — a complete lattice would zero the post-averaging signal), `step` (= 2), `threshold` (= 0.25), `patience` (= 1) |
 //! | `comm_budget`     | `budget_mb` (required), `k0` (= n−1)                   |
@@ -155,6 +156,12 @@ pub fn registry() -> TopologyRegistry {
             OnePeerExponential::new(n)?
         }))
     });
+    reg.register("random_regular", |n, t| {
+        t.expect_only(&["d", "seed"])?;
+        let d = t.usize_or("d", 4)?;
+        let seed = t.usize_or("seed", 0)? as u64;
+        Ok(Box::new(super::RandomRegularSchedule::new(n, d, seed)?))
+    });
     reg.register("var_adaptive", |n, t| {
         t.expect_only(&["k0", "step", "threshold", "patience"])?;
         Ok(Box::new(VarianceAdaptive::new(
@@ -218,6 +225,7 @@ mod tests {
             "static",
             "ada",
             "one_peer",
+            "random_regular",
             "var_adaptive",
             "consensus_decay",
             "straggler_aware",

@@ -69,6 +69,12 @@ impl ParamTable {
         self.entries.is_empty()
     }
 
+    /// The raw value under `key`, if present — for callers that forward
+    /// a subset of keys into another table ([`ParamTable::set`]).
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
     /// All keys, sorted.
     pub fn keys(&self) -> Vec<&str> {
         self.entries.keys().map(String::as_str).collect()

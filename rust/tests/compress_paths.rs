@@ -1,0 +1,325 @@
+//! Integration tests for the compressed & variance-corrected gossip
+//! subsystem: the degenerate bitwise equivalences the compression
+//! contract promises (top-k with `k = p` ≡ dense gossip, `consensus
+//! gossip` with `max_rounds = 1` ≡ one mix, `codec = f32` ≡ the f32
+//! kernel), thread-count × SIMD-mode bit-identity of the codec
+//! kernels, the D² transform against an all-f64 reference, and the
+//! three strategies running end-to-end from spec TOML through
+//! [`SessionPlan`] with reduced modeled wire bytes.
+//!
+//! This binary may flip `simd::force_scalar` freely: every kernel under
+//! test is bitwise mode-invariant (the repo's determinism contract), so
+//! concurrent tests observing a flipped mode still see identical
+//! floats. The same sweep is unsafe in the library tests, where
+//! `exec::simd` asserts on the dispatch mode itself.
+
+use ada_dist::compress::{d2_transform, Codec};
+use ada_dist::compress::topk::sparsify_row;
+use ada_dist::dbench::{ExperimentSpec, SessionPlan, StrategyRef};
+use ada_dist::exec::simd;
+use ada_dist::gossip::GossipEngine;
+use ada_dist::graph::{CommGraph, GraphKind};
+use ada_dist::util::rng::Rng;
+use ada_dist::ReplicaMatrix;
+
+fn seeded_replicas(n: usize, p: usize, seed: u64) -> ReplicaMatrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut m = ReplicaMatrix::zeros(n, p);
+    for w in 0..n {
+        for v in m.row_mut(w) {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+    }
+    m
+}
+
+fn bits(m: &ReplicaMatrix) -> Vec<Vec<u32>> {
+    (0..m.n())
+        .map(|w| m.row(w).iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn top_k_equal_p_with_zero_residuals_is_dense_gossip_bitwise() {
+    // The error-feedback path with k = p promotes every entry and
+    // leaves the residual at zero, so mix_from over the messages must
+    // reproduce engine.mix bit-for-bit. Non-complete graphs only: the
+    // uniform-complete fast path folds in a different float order.
+    let (n, p) = (8, 1003);
+    for kind in [GraphKind::Ring, GraphKind::Exponential] {
+        let g = CommGraph::build(kind, n).unwrap();
+        for threads in [1, 4] {
+            let mut dense = seeded_replicas(n, p, 11);
+            let mut engine = GossipEngine::with_threads(threads);
+            engine.mix(&g, &mut dense);
+
+            let mut sparse = seeded_replicas(n, p, 11);
+            let mut residuals = ReplicaMatrix::zeros(n, p);
+            let mut messages = ReplicaMatrix::zeros(n, p);
+            for w in 0..n {
+                let idx = sparsify_row(
+                    sparse.row(w),
+                    residuals.row_mut(w),
+                    messages.row_mut(w),
+                    p,
+                );
+                assert_eq!(idx.len(), p, "k = p selects everything");
+            }
+            assert!(
+                residuals.rows().all(|r| r.iter().all(|&x| x == 0.0)),
+                "k = p leaves no residual"
+            );
+            let mut engine = GossipEngine::with_threads(threads);
+            engine.mix_from(&g, &mut sparse, &messages, Codec::F32);
+            assert_eq!(
+                bits(&dense),
+                bits(&sparse),
+                "{kind:?} @ {threads} threads: k=p must equal dense gossip"
+            );
+        }
+    }
+}
+
+#[test]
+fn codec_kernels_are_bit_identical_across_threads_and_simd_modes() {
+    let (n, p) = (8, 10_000);
+    let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+    for codec in [Codec::Bf16, Codec::F16] {
+        let mut reference = seeded_replicas(n, p, 23);
+        GossipEngine::with_threads(1).mix_codec(&g, &mut reference, codec);
+        let want = bits(&reference);
+        for threads in [1, 4, 8] {
+            for scalar in [false, true] {
+                simd::force_scalar(scalar);
+                let mut m = seeded_replicas(n, p, 23);
+                GossipEngine::with_threads(threads).mix_codec(&g, &mut m, codec);
+                simd::force_scalar(false);
+                assert_eq!(
+                    want,
+                    bits(&m),
+                    "{codec:?} @ {threads} threads, scalar={scalar}"
+                );
+            }
+        }
+        // And the codec actually engaged: quantized peers change bits
+        // vs the f32 round.
+        let mut f32_round = seeded_replicas(n, p, 23);
+        GossipEngine::with_threads(1).mix(&g, &mut f32_round);
+        assert_ne!(want, bits(&f32_round), "{codec:?} must quantize");
+    }
+}
+
+#[test]
+fn d2_transform_then_mix_matches_an_f64_reference() {
+    // Two D² iterations (first uses the z = x − γg branch, second the
+    // previous-iterate correction) followed by a gossip round, checked
+    // against the same recurrence computed entirely in f64. Small
+    // values keep the f32 rounding budget under the 1e-6 bar.
+    let (n, p) = (8, 257);
+    let lr = 0.01f32;
+    let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+    let w = g.dense_mixing();
+
+    let mut x = seeded_replicas(n, p, 5);
+    let mut px = ReplicaMatrix::zeros(n, p);
+    let mut pg = ReplicaMatrix::zeros(n, p);
+    let grads0 = {
+        let mut m = seeded_replicas(n, p, 6);
+        m.rows_mut().into_iter().for_each(|r| r.iter_mut().for_each(|v| *v *= 0.5));
+        m
+    };
+    let grads1 = {
+        let mut m = seeded_replicas(n, p, 7);
+        m.rows_mut().into_iter().for_each(|r| r.iter_mut().for_each(|v| *v *= 0.5));
+        m
+    };
+
+    // f64 shadow state, seeded from the same f32 values.
+    let tof64 = |m: &ReplicaMatrix| -> Vec<Vec<f64>> {
+        (0..n).map(|i| m.row(i).iter().map(|&v| v as f64).collect()).collect()
+    };
+    let mix64 = |rows: &[Vec<f64>]| -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| {
+                (0..p)
+                    .map(|c| (0..n).map(|j| w[i * n + j] as f64 * rows[j][c]).sum())
+                    .collect()
+            })
+            .collect()
+    };
+    let mut x64 = tof64(&x);
+    let (mut px64, mut pg64) = (tof64(&px), tof64(&pg));
+    let (g064, g164) = (tof64(&grads0), tof64(&grads1));
+    let lr64 = lr as f64;
+
+    for (iter, grads, g64) in [(0usize, &grads0, &g064), (1, &grads1, &g164)] {
+        d2_transform(&mut x, &mut px, &mut pg, grads, lr, iter == 0);
+        let mut engine = GossipEngine::with_threads(1);
+        engine.mix(&g, &mut x);
+
+        let z64: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                (0..p)
+                    .map(|c| {
+                        if iter == 0 {
+                            x64[i][c] - lr64 * g64[i][c]
+                        } else {
+                            2.0 * x64[i][c] - px64[i][c] - lr64 * g64[i][c]
+                                + lr64 * pg64[i][c]
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        px64 = x64;
+        pg64 = g64.clone();
+        x64 = mix64(&z64);
+    }
+    for i in 0..n {
+        for c in 0..p {
+            let err = (x.row(i)[c] as f64 - x64[i][c]).abs();
+            assert!(err <= 1e-6, "replica {i} param {c}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn consensus_gossip_single_round_matches_plain_gossip_end_to_end() {
+    // max_rounds = 1 must be bitwise-identical to the D_exponential
+    // flavor: same local step, same graph, exactly one mix, same bytes.
+    // codec = f32 dense compressed_gossip joins the same equivalence
+    // class — mix_codec(F32) delegates to mix.
+    let mut spec = ExperimentSpec::resnet20_analog();
+    spec.scales = vec![8];
+    spec.epochs = 2;
+    spec.max_iters_per_epoch = Some(4);
+    spec.threads = 1;
+    spec.flavors = vec![ada_dist::coordinator::SgdFlavor::DecentralizedExponential];
+    spec.strategies = vec![
+        StrategyRef::parse("consensus_gossip:max_rounds=1").unwrap(),
+        StrategyRef::parse("compressed_gossip:codec=f32").unwrap(),
+    ];
+    let cells = SessionPlan::from_spec(&spec).run().unwrap();
+    assert_eq!(cells.len(), 3);
+    let losses = |i: usize| -> Vec<f64> {
+        cells[i].recorder.records().iter().map(|r| r.train_loss).collect()
+    };
+    assert_eq!(cells[0].flavor, "D_exponential");
+    assert_eq!(cells[1].flavor, "consensus_gossip");
+    assert_eq!(cells[2].flavor, "compressed_gossip[f32]");
+    for i in [1, 2] {
+        assert_eq!(losses(0), losses(i), "{}: loss series", cells[i].flavor);
+        assert_eq!(
+            cells[0].summary.final_eval.metric, cells[i].summary.final_eval.metric,
+            "{}: final metric",
+            cells[i].flavor
+        );
+        assert_eq!(
+            cells[0].summary.bytes_per_node, cells[i].summary.bytes_per_node,
+            "{}: bytes",
+            cells[i].flavor
+        );
+    }
+}
+
+#[test]
+fn compressed_family_runs_from_spec_toml_and_reports_reduced_bytes() {
+    let spec = ExperimentSpec::from_toml_str(
+        r#"
+        base = "resnet20"
+        scales = [8]
+        epochs = 2
+        max_iters_per_epoch = 4
+        threads = 1
+        flavors = ["d_exponential"]
+        strategies = ["compressed_gossip", "d2", "consensus_gossip"]
+
+        [strategy.compressed_gossip]
+        codec = "bf16"
+
+        [strategy.consensus_gossip]
+        target = 0.0
+        max_rounds = 3
+        "#,
+    )
+    .unwrap();
+    let cells = SessionPlan::from_spec(&spec).run().unwrap();
+    assert_eq!(cells.len(), 4);
+    assert_eq!(cells[1].flavor, "compressed_gossip[bf16]");
+    assert_eq!(cells[2].flavor, "d2");
+    assert_eq!(cells[3].flavor, "consensus_gossip");
+    for c in &cells {
+        assert!(!c.summary.diverged, "{} diverged", c.flavor);
+        assert!(!c.recorder.records().is_empty(), "{}: no records", c.flavor);
+        assert!(c.summary.bytes_per_node > 0, "{}: no bytes", c.flavor);
+    }
+    let dense = cells[0].summary.bytes_per_node;
+    // bf16 ships 2 of every 4 bytes.
+    assert_eq!(cells[1].summary.bytes_per_node * 2, dense);
+    // d2 sends full f32 rows — same wire cost as dense gossip.
+    assert_eq!(cells[2].summary.bytes_per_node, dense);
+    // target = 0 never undershoots, so consensus gossip spends all 3
+    // rounds every iteration.
+    assert_eq!(cells[3].summary.bytes_per_node, dense * 3);
+
+    // A top-k cell through the plan API: degree · k · (4 + 2) bytes per
+    // round beats even the bf16 dense path at k = p/8.
+    let mut spec2 = ExperimentSpec::resnet20_analog();
+    spec2.scales = vec![8];
+    spec2.epochs = 2;
+    spec2.max_iters_per_epoch = Some(4);
+    spec2.threads = 1;
+    spec2.flavors = vec![];
+    let mut plan = SessionPlan::from_spec(&spec2);
+    plan.push_cell(
+        8,
+        spec2.seed,
+        StrategyRef::parse("compressed_gossip:codec=bf16,k=41").unwrap(),
+        spec2.train_config(8),
+    );
+    let sparse = plan.run().unwrap();
+    assert_eq!(sparse[0].flavor, "compressed_gossip[bf16,k=41]");
+    assert!(!sparse[0].summary.diverged);
+    assert!(
+        sparse[0].summary.bytes_per_node < cells[1].summary.bytes_per_node,
+        "top-k ({}) must undercut dense bf16 ({})",
+        sparse[0].summary.bytes_per_node,
+        cells[1].summary.bytes_per_node
+    );
+}
+
+#[test]
+fn error_feedback_recovers_dense_accuracy_over_rounds() {
+    // Pure mixing (no gradients): repeated sparsified gossip with error
+    // feedback must drive replicas toward the same consensus mean the
+    // dense rounds reach, because dropped mass re-enters via residuals.
+    let (n, p) = (8, 512);
+    let g = CommGraph::build(GraphKind::Exponential, n).unwrap();
+    let init = seeded_replicas(n, p, 99);
+    let mean: Vec<f32> =
+        (0..p).map(|c| (0..n).map(|w| init.row(w)[c]).sum::<f32>() / n as f32).collect();
+
+    let spread = |m: &ReplicaMatrix| -> f64 {
+        (0..n)
+            .flat_map(|w| {
+                (0..p).map(move |c| (m.row(w)[c] as f64 - mean[c] as f64).powi(2))
+            })
+            .sum::<f64>()
+    };
+    let mut m = init.clone();
+    let mut residuals = ReplicaMatrix::zeros(n, p);
+    let mut messages = ReplicaMatrix::zeros(n, p);
+    let mut engine = GossipEngine::with_threads(1);
+    let before = spread(&m);
+    for _ in 0..40 {
+        for w in 0..n {
+            sparsify_row(m.row(w), residuals.row_mut(w), messages.row_mut(w), p / 4);
+        }
+        engine.mix_from(&g, &mut m, &messages, Codec::Bf16);
+    }
+    let after = spread(&m);
+    assert!(
+        after < before / 50.0,
+        "sparse gossip must still contract toward consensus: {before} → {after}"
+    );
+}
